@@ -1,0 +1,78 @@
+//! Design-space exploration (paper §8.3 / Fig 13 style, interactive).
+//!
+//! Sweeps stream counts and unit counts for one model/dataset and prints
+//! normalized latencies — the workflow an architect would run before
+//! committing to a configuration.
+//!
+//! ```bash
+//! cargo run --release --example design_space -- gat CP
+//! ```
+
+use zipper::config::{ArchConfig, RunConfig};
+use zipper::coordinator::Session;
+use zipper::area;
+use zipper::metrics::Table;
+
+fn main() -> Result<(), String> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let model = argv.first().cloned().unwrap_or_else(|| "gat".into());
+    let dataset = argv.get(1).cloned().unwrap_or_else(|| "CP".into());
+
+    let run = RunConfig {
+        model: model.clone(),
+        dataset: dataset.clone(),
+        scale: 512,
+        feat_in: 64,
+        feat_out: 64,
+        ..Default::default()
+    };
+    let session = Session::prepare(&run)?;
+    println!(
+        "DSE for {model} on {dataset} (1/{} scale: |V|={} |E|={})\n",
+        run.scale,
+        session.graph.num_vertices(),
+        session.graph.num_edges()
+    );
+
+    // stream sweep at 1 MU / 2 VU
+    let mut t = Table::new(&["s/e streams", "cycles", "norm", "MU busy %", "VU busy %"]);
+    let mut base = None;
+    for streams in [1u32, 2, 4, 8, 16] {
+        let mut arch = ArchConfig::default();
+        arch.s_streams = streams;
+        arch.e_streams = streams;
+        let res = session.simulate(&arch, false, None, 0)?;
+        let b = *base.get_or_insert(res.cycles as f64);
+        t.row(&[
+            streams.to_string(),
+            res.cycles.to_string(),
+            format!("{:.3}", res.cycles as f64 / b),
+            format!("{:.1}", 100.0 * res.mu_busy as f64 / res.cycles as f64),
+            format!(
+                "{:.1}",
+                100.0 * res.vu_busy as f64 / (res.cycles as f64 * arch.vu_count as f64)
+            ),
+        ]);
+    }
+    println!("stream sweep (1 MU, 2 VU):\n{}", t.render());
+
+    // unit sweep at 4/4 streams
+    let mut t = Table::new(&["MU", "VU", "cycles", "norm", "area mm²"]);
+    let mut base = None;
+    for (mu, vu) in [(1u32, 1u32), (1, 2), (1, 4), (2, 2), (2, 4), (4, 4)] {
+        let mut arch = ArchConfig::default();
+        arch.mu_count = mu;
+        arch.vu_count = vu;
+        let res = session.simulate(&arch, false, None, 0)?;
+        let b = *base.get_or_insert(res.cycles as f64);
+        t.row(&[
+            mu.to_string(),
+            vu.to_string(),
+            res.cycles.to_string(),
+            format!("{:.3}", res.cycles as f64 / b),
+            format!("{:.2}", area::area(&arch).total_mm2()),
+        ]);
+    }
+    println!("unit sweep (4 s/eStreams):\n{}", t.render());
+    Ok(())
+}

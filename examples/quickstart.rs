@@ -1,0 +1,61 @@
+//! Quickstart: compile a GCN, tile a graph, simulate, read the numbers.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use zipper::config::{ArchConfig, RunConfig};
+use zipper::coordinator::Session;
+use zipper::energy::EnergyModel;
+use zipper::util;
+
+fn main() -> Result<(), String> {
+    // 1. Architecture: the paper's Table 4 configuration.
+    let arch = ArchConfig::default();
+
+    // 2. A run: GCN over a scaled soc-LiveJournal1 stand-in.
+    let run = RunConfig {
+        model: "gcn".into(),
+        dataset: "SL".into(),
+        scale: 256,
+        feat_in: 64,
+        feat_out: 64,
+        functional: true,
+        ..Default::default()
+    };
+
+    // 3. Session = graph + tiling + compiled SDE program + weights.
+    let session = Session::prepare(&run)?;
+    println!(
+        "graph |V|={} |E|={}, {} tiles across {} partitions",
+        session.graph.num_vertices(),
+        session.graph.num_edges(),
+        session.tiling.num_tiles(),
+        session.tiling.partitions.len()
+    );
+    println!("{}", session.program.disassemble());
+
+    // 4. Simulate (cycle-level + functional).
+    let x = session.make_input(run.seed);
+    let res = session.simulate(&arch, true, Some(&x), 0)?;
+    let energy = EnergyModel::default().evaluate(&res.counters, arch.freq_hz);
+
+    println!(
+        "latency: {} cycles = {}",
+        res.cycles,
+        util::fmt_time_at(res.cycles, arch.freq_hz)
+    );
+    println!(
+        "off-chip: read {}, write {}",
+        util::fmt_bytes(res.dram_read_bytes),
+        util::fmt_bytes(res.dram_write_bytes)
+    );
+    println!("energy: {:.6} J", energy.total_j());
+    let out = res.output.expect("functional output");
+    println!(
+        "output: {} embeddings, checksum {:.6}",
+        out.len() / run.feat_out as usize,
+        out.iter().map(|&v| v as f64).sum::<f64>()
+    );
+    Ok(())
+}

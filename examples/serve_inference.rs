@@ -1,0 +1,118 @@
+//! End-to-end serving driver (the DESIGN.md headline example).
+//!
+//! Proves all three layers compose on a real small workload:
+//!   1. loads the AOT HLO artifacts (L2 JAX models calling L1 Pallas
+//!      kernels) into a PJRT CPU client,
+//!   2. cross-validates every GNN model's simulator functional output
+//!      against the PJRT oracle,
+//!   3. serves a batched stream of inference requests (all 5 models ×
+//!      citation-graph stand-ins) through the multi-threaded coordinator
+//!      with functional execution on,
+//!   4. reports per-request simulated latency/energy plus host-side
+//!      serving latency and throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_inference
+//! ```
+//!
+//! Results recorded in EXPERIMENTS.md §End-to-end.
+
+use std::path::Path;
+use std::time::Instant;
+use zipper::config::{ArchConfig, RunConfig};
+use zipper::coordinator::{validate, Coordinator, InferenceRequest};
+use zipper::metrics::Table;
+use zipper::runtime::{Runtime, TileShape};
+use zipper::tiling::{Reorder, TilingConfig, TilingMode};
+use zipper::util::stats::{percentile, Summary};
+
+fn main() -> Result<(), String> {
+    let arch = ArchConfig::default();
+
+    // ---- phase 1: PJRT oracle cross-validation --------------------------
+    println!("== phase 1: three-layer validation (sim vs PJRT artifacts) ==");
+    let mut rt = Runtime::new(Path::new("artifacts")).map_err(|e| e.to_string())?;
+    println!("PJRT platform: {}", rt.platform());
+    let shape = TileShape { num_src: 64, num_dst: 64, num_edges: 256, feat_in: 32, feat_out: 32 };
+    let reports = validate::validate_all(&mut rt, &shape, 23).map_err(|e| e.to_string())?;
+    let mut t = Table::new(&["model", "max err", "pass"]);
+    for r in &reports {
+        if !r.pass {
+            return Err(format!("{} failed validation: {}", r.model, r.max_abs_err));
+        }
+        t.row(&[r.model.clone(), format!("{:.2e}", r.max_abs_err), "ok".into()]);
+    }
+    print!("{}", t.render());
+
+    // ---- phase 2: batched serving ---------------------------------------
+    println!("\n== phase 2: batched inference serving ==");
+    let models = ["gcn", "gat", "sage", "ggnn", "rgcn"];
+    let datasets = ["CR", "CS", "PB"];
+    let n_requests = 30u64;
+    let workers = 4usize;
+    let mut c = Coordinator::new(arch, workers);
+    let t0 = Instant::now();
+    for i in 0..n_requests {
+        let run = RunConfig {
+            model: models[i as usize % models.len()].into(),
+            dataset: datasets[i as usize % datasets.len()].into(),
+            scale: 4,
+            feat_in: 32,
+            feat_out: 32,
+            tiling: TilingConfig {
+                dst_part: 256,
+                src_part: 256,
+                mode: TilingMode::Sparse,
+                reorder: Reorder::InDegree,
+            },
+            e2v: true,
+            functional: true,
+            seed: 7,
+        };
+        c.submit(InferenceRequest { id: i, run, input_seed: i });
+    }
+    let mut resp = c.drain();
+    let wall = t0.elapsed().as_secs_f64();
+    resp.sort_by_key(|r| r.id);
+
+    let mut table = Table::new(&["model", "dataset", "sim latency", "energy", "host wall"]);
+    let mut sim_lat = Summary::new();
+    let mut host_lat: Vec<f64> = Vec::new();
+    for r in &resp {
+        if let Some(e) = &r.error {
+            return Err(format!("request {} failed: {e}", r.id));
+        }
+        assert!(r.output_checksum.is_some(), "functional output expected");
+        sim_lat.push(r.sim_seconds);
+        host_lat.push(r.wall_seconds);
+        if r.id < 10 {
+            table.row(&[
+                r.model.clone(),
+                r.dataset.clone(),
+                format!("{:.3} ms", r.sim_seconds * 1e3),
+                format!("{:.3} mJ", r.energy_j * 1e3),
+                format!("{:.1} ms", r.wall_seconds * 1e3),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    println!("(first 10 of {n_requests} shown)");
+    println!(
+        "\nthroughput: {:.1} req/s on {workers} workers ({n_requests} requests in {:.2}s)",
+        n_requests as f64 / wall,
+        wall
+    );
+    println!(
+        "simulated accelerator latency: mean {:.3} ms, min {:.3} ms, max {:.3} ms",
+        sim_lat.mean * 1e3,
+        sim_lat.min * 1e3,
+        sim_lat.max * 1e3
+    );
+    println!(
+        "host serving latency: p50 {:.1} ms, p95 {:.1} ms",
+        percentile(&host_lat, 50.0) * 1e3,
+        percentile(&host_lat, 95.0) * 1e3
+    );
+    println!("\nall layers composed: artifacts -> PJRT oracle == simulator functional output");
+    Ok(())
+}

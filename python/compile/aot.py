@@ -1,0 +1,114 @@
+"""AOT pipeline: lower every (model, tile-shape) to HLO *text* artifacts.
+
+HLO text — NOT `HloModuleProto.serialize()` — is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+bundled xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids, so text round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  <model>__<shapetag>.hlo.txt   one per registry entry
+  manifest.json                 shapes + argument order for the Rust runtime
+
+`make artifacts` invokes this once at build time; Python never runs on the
+request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(name: str, ts: M.TileShape) -> tuple[str, dict]:
+    """Lower one registry model at one tile shape; returns (hlo, meta)."""
+    spec = M.MODELS[name]
+    fn = spec.bind(ts)
+    args = spec.example_args(ts)
+    lowered = jax.jit(lambda *a: (fn(*a),)).lower(*args)
+    text = to_hlo_text(lowered)
+    meta = {
+        "model": name,
+        "tile": {
+            "num_src": ts.num_src,
+            "num_dst": ts.num_dst,
+            "num_edges": ts.num_edges,
+            "feat_in": ts.feat_in,
+            "feat_out": ts.feat_out,
+        },
+        "args": [
+            {"name": n, "shape": list(a.shape), "dtype": str(a.dtype)}
+            for n, a in zip(spec.arg_names, args)
+        ],
+        "output": {
+            "shape": [ts.num_dst, ts.feat_out],
+            "dtype": "float32",
+        },
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, meta
+
+
+DEFAULT_SHAPES = [
+    M.TileShape(num_src=256, num_dst=256, num_edges=1024, feat_in=128,
+                feat_out=128),
+    # A small shape for fast integration tests on the Rust side.
+    M.TileShape(num_src=64, num_dst=64, num_edges=256, feat_in=32,
+                feat_out=32),
+]
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default=None,
+                   help="artifact directory (default <repo>/artifacts)")
+    p.add_argument("--out", default=None,
+                   help="also write the gcn/default-shape HLO to this path "
+                        "(Makefile stamp file)")
+    p.add_argument("--models", nargs="*", default=sorted(M.MODELS),
+                   help="subset of models to lower")
+    args = p.parse_args(argv)
+
+    repo = pathlib.Path(__file__).resolve().parents[2]
+    out_dir = pathlib.Path(args.out_dir) if args.out_dir else repo / "artifacts"
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "entries": []}
+    for name in args.models:
+        for ts in DEFAULT_SHAPES:
+            text, meta = lower_model(name, ts)
+            fname = f"{name}__{ts.tag()}.hlo.txt"
+            (out_dir / fname).write_text(text)
+            meta["file"] = fname
+            manifest["entries"].append(meta)
+            print(f"  {fname}: {len(text)} chars", file=sys.stderr)
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {len(manifest['entries'])} artifacts to {out_dir}",
+          file=sys.stderr)
+
+    if args.out:
+        # Makefile stamp: the default-shape GCN module.
+        stamp = out_dir / f"gcn__{DEFAULT_SHAPES[0].tag()}.hlo.txt"
+        pathlib.Path(args.out).write_text(stamp.read_text())
+
+
+if __name__ == "__main__":
+    main()

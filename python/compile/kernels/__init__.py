@@ -1,0 +1,10 @@
+"""ZIPPER L1 Pallas kernels (build-time only; lowered AOT into HLO text).
+
+Modules:
+  gemm — MU-tiled matmul (32×128 output-stationary blocks)
+  spmm — GOP scatter / gather(sum|max) over tile COO edge lists
+  elw  — VU-striped element-wise ops and fused chains
+  ref  — pure-jnp oracles for all of the above
+"""
+
+from . import elw, gemm, ref, spmm  # noqa: F401

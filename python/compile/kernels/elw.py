@@ -1,0 +1,135 @@
+"""L1 Pallas kernels: fused element-wise (ELW) blocks.
+
+Software analog of ZIPPER's Vector Unit running ELW instructions (paper
+Table 2: ADD, SUB, MUL, DIV, EXP, RELU). The VU is 8 × SIMD32 = 256 lanes;
+we block the flattened element stream into (8, 256)-element stripes so one
+program instance corresponds to one VU issue group.
+
+GNN models interleave many small ELWs (paper §2); fusing chains of them
+into a single kernel is the L1-side counterpart of ZIPPER's operator-level
+pipelining — one VMEM round-trip instead of one per op.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 8 SIMD32 cores × 32 lanes = 256 lanes per VU; stripe 8 rows deep.
+LANES = 256
+ROWS = 8
+BLOCK = ROWS * LANES
+
+_UNARY = {
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "exp": jnp.exp,
+    "sigmoid": lambda x: 1.0 / (1.0 + jnp.exp(-x)),
+    "tanh": jnp.tanh,
+    "leaky_relu": lambda x: jnp.where(x >= 0.0, x, 0.2 * x),
+    "neg": lambda x: -x,
+}
+
+_BINARY = {
+    "add": lambda a, b: a + b,
+    "sub": lambda a, b: a - b,
+    "mul": lambda a, b: a * b,
+    "div": lambda a, b: a / b,
+    "max": jnp.maximum,
+}
+
+
+def _unary_kernel(x_ref, o_ref, *, op: str):
+    o_ref[...] = _UNARY[op](x_ref[...])
+
+
+def _binary_kernel(a_ref, b_ref, o_ref, *, op: str):
+    o_ref[...] = _BINARY[op](a_ref[...], b_ref[...])
+
+
+def _blocked(x: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+    """Flatten to (n_blocks * ROWS, LANES), zero-padded."""
+    n = x.size
+    nblk = -(-n // BLOCK)
+    flat = jnp.pad(x.reshape(-1), (0, nblk * BLOCK - n))
+    return flat.reshape(nblk * ROWS, LANES), n
+
+
+def unary(op: str, x: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """Apply a unary ELW op through the VU-striped Pallas kernel."""
+    xb, n = _blocked(x)
+    grid = (xb.shape[0] // ROWS,)
+    out = pl.pallas_call(
+        functools.partial(_unary_kernel, op=op),
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xb.shape, x.dtype),
+        interpret=interpret,
+    )(xb)
+    return out.reshape(-1)[:n].reshape(x.shape)
+
+
+def binary(op: str, a: jnp.ndarray, b: jnp.ndarray,
+           interpret: bool = True) -> jnp.ndarray:
+    """Apply a binary ELW op (same-shape operands) through the VU kernel."""
+    assert a.shape == b.shape, (a.shape, b.shape)
+    ab, n = _blocked(a)
+    bb, _ = _blocked(b)
+    grid = (ab.shape[0] // ROWS,)
+    out = pl.pallas_call(
+        functools.partial(_binary_kernel, op=op),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(ab.shape, a.dtype),
+        interpret=interpret,
+    )(ab, bb)
+    return out.reshape(-1)[:n].reshape(a.shape)
+
+
+# ---------------------------------------------------------------------------
+# Fused GRU tail (GGNN hot ELW chain): one kernel, one VMEM round-trip
+# ---------------------------------------------------------------------------
+
+def _gru_fuse_kernel(zi_ref, ci_ref, x_ref, o_ref):
+    """Fused GRU output stage given the GEMM partial products.
+
+    zi = aW_z + xU_z (pre-sigmoid update gate), ci = aW_h + (r⊙x)U_h
+    (pre-tanh candidate; the r gate is applied upstream because it feeds a
+    GEMM). out = (1−σ(zi)) ⊙ x + σ(zi) ⊙ tanh(ci). Naively this is five
+    VU instructions with four intermediate VMEM round-trips; fused it is
+    one (paper §6.2's operator-fusion optimization at the kernel level).
+    """
+    z = 1.0 / (1.0 + jnp.exp(-zi_ref[...]))
+    h_t = jnp.tanh(ci_ref[...])
+    x = x_ref[...]
+    o_ref[...] = (1.0 - z) * x + z * h_t
+
+
+def gru_fuse(zi, ci, x, interpret: bool = True):
+    """Fused GRU output stage over (V, F) operands. All shapes identical."""
+    assert zi.shape == ci.shape == x.shape
+    v, f = zi.shape
+    blocks = [_blocked(t)[0] for t in (zi, ci, x)]
+    n = zi.size
+    grid = (blocks[0].shape[0] // ROWS,)
+    out = pl.pallas_call(
+        _gru_fuse_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS, LANES), lambda i: (i, 0))] * 3,
+        out_specs=pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(blocks[0].shape, zi.dtype),
+        interpret=interpret,
+    )(*blocks)
+    return out.reshape(-1)[:n].reshape(v, f)
+
+
+def vmem_bytes() -> int:
+    """Static VMEM footprint of one ELW program instance."""
+    return 4 * 3 * BLOCK

@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: MU-tiled GEMM.
+
+This is the software analog of ZIPPER's Matrix Unit — a 32×128
+output-stationary systolic array (paper §7.1, Table 4). The Pallas grid
+iterates over (M/32, N/128, K/K_BLK) output tiles; each program instance
+accumulates one 32×128 output block, mirroring the MU's output-stationary
+dataflow where the partial sum stays resident while inputs stream through.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the (32, 128) block is
+both the paper's MU shape and a multiple of the TPU f32 tile (8, 128), so
+the same BlockSpec targets the MXU on real hardware. Here kernels run under
+`interpret=True` (CPU PJRT cannot execute Mosaic custom-calls); structure,
+not wallclock, is the TPU-perf claim.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The MU geometry from paper Table 4: one 32×128 systolic array.
+MU_ROWS = 32
+MU_COLS = 128
+K_BLOCK = 128
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref):
+    """One (32, 128) output-stationary block, accumulated over the K axis.
+
+    The out BlockSpec maps (i, j) independent of k, so `o_ref` stays
+    resident across the (fastest-varying) k grid axis — the Pallas
+    expression of the MU's output-stationary dataflow.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x: jnp.ndarray, m: int, axis: int) -> jnp.ndarray:
+    rem = x.shape[axis] % m
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, m - rem)
+    return jnp.pad(x, pad)
+
+
+def gemm(x: jnp.ndarray, w: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """Tiled matmul `x @ w` through the MU-shaped Pallas kernel.
+
+    Arbitrary (M, K) × (K, N) f32; inputs are zero-padded up to the MU
+    block geometry and the result is sliced back.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    xp = _pad_to(_pad_to(x, MU_ROWS, 0), K_BLOCK, 1)
+    wp = _pad_to(_pad_to(w, K_BLOCK, 0), MU_COLS, 1)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // MU_ROWS, np_ // MU_COLS, kp // K_BLOCK)
+
+    out = pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((MU_ROWS, K_BLOCK), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((K_BLOCK, MU_COLS), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((MU_ROWS, MU_COLS), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def gemm_bias(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+              interpret: bool = True) -> jnp.ndarray:
+    """GEMM followed by a broadcast bias add (fused on the MU output side)."""
+    return gemm(x, w, interpret=interpret) + b[None, :]
+
+
+def vmem_bytes() -> int:
+    """Static VMEM footprint estimate of one program instance (DESIGN.md §7).
+
+    x block + w block + resident output block, f32.
+    """
+    return 4 * (MU_ROWS * K_BLOCK + K_BLOCK * MU_COLS + MU_ROWS * MU_COLS)
+
+
+def mxu_utilization(m: int, k: int, n: int) -> float:
+    """Fraction of MXU-issued MACs that are useful (non-padding) work."""
+    mp = math.ceil(m / MU_ROWS) * MU_ROWS
+    kp = math.ceil(k / K_BLOCK) * K_BLOCK
+    np_ = math.ceil(n / MU_COLS) * MU_COLS
+    return (m * k * n) / (mp * kp * np_)

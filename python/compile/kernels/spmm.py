@@ -1,0 +1,163 @@
+"""L1 Pallas kernels: GOP (Scatter / Gather) over one graph tile.
+
+These are the software analog of ZIPPER's Vector Unit executing GOP
+instructions (paper §7.1): each SIMD core scatters or gathers one vertex
+at a time, guided by the tile's COO edge list held in the Tile Hub.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): TPUs have no native
+scatter-add, so Gather(sum) is expressed as a one-hot selection matmul —
+`onehotᵀ(dst) @ edge_feats` — which runs on the MXU. This is exactly the
+hardware insight inverted: the paper routes GOPs to SIMD lanes because its
+MU is busy with GEMMs; on a TPU the MXU *is* the efficient reduction
+engine, so the selection matmul is the idiomatic mapping. The F dimension
+is blocked at 128 lanes so each program instance works on one (E, 128)
+stripe of edge features resident in VMEM.
+
+Edge lists are padded to a static length with a 0/1 `valid` mask
+(convention shared with `ref.py` and the Rust `tiling::TileData`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VPU lane width: one stripe of the embedding dimension per program.
+F_BLOCK = 128
+
+
+def _pad_f(x: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+    f = x.shape[1]
+    rem = f % F_BLOCK
+    if rem:
+        x = jnp.pad(x, ((0, 0), (0, F_BLOCK - rem)))
+    return x, f
+
+
+# ---------------------------------------------------------------------------
+# Scatter: vertex → edge (SCTR.OUTE / SCTR.INE)
+# ---------------------------------------------------------------------------
+
+def _scatter_kernel(x_ref, idx_ref, o_ref):
+    # One (S, F_BLOCK) stripe of vertex features; gather rows by edge index.
+    o_ref[...] = x_ref[...][idx_ref[...]]
+
+
+def scatter(x: jnp.ndarray, idx: jnp.ndarray, interpret: bool = True
+            ) -> jnp.ndarray:
+    """Distribute vertex embeddings onto edges: `out[e] = x[idx[e]]`.
+
+    x: (V, F) f32; idx: (E,) int32 → (E, F) f32.
+    """
+    xp, f = _pad_f(x)
+    e = idx.shape[0]
+    grid = (xp.shape[1] // F_BLOCK,)
+    out = pl.pallas_call(
+        _scatter_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((xp.shape[0], F_BLOCK), lambda j: (0, j)),
+            pl.BlockSpec((e,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((e, F_BLOCK), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((e, xp.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(xp, idx)
+    return out[:, :f]
+
+
+# ---------------------------------------------------------------------------
+# Gather(sum): edge → vertex (GTHR.DST.SUM) as a one-hot MXU matmul
+# ---------------------------------------------------------------------------
+
+def _gather_sum_kernel(edge_ref, dst_ref, valid_ref, o_ref, *, num_dst: int):
+    edge = edge_ref[...]                      # (E, F_BLOCK)
+    dst = dst_ref[...]                        # (E,)
+    maskf = valid_ref[...].astype(edge.dtype)[:, None]
+    sel = (dst[:, None] == jnp.arange(num_dst)[None, :]).astype(edge.dtype)
+    sel = sel * maskf                         # (E, D) one-hot selection
+    o_ref[...] = jax.lax.dot_general(
+        sel, edge * maskf,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def gather_sum(edge_feat: jnp.ndarray, dst: jnp.ndarray, valid: jnp.ndarray,
+               num_dst: int, interpret: bool = True) -> jnp.ndarray:
+    """Segment-sum per-edge features into destination rows via one-hot matmul.
+
+    edge_feat: (E, F); dst, valid: (E,) → (num_dst, F).
+    """
+    ep, f = _pad_f(edge_feat)
+    e = ep.shape[0]
+    grid = (ep.shape[1] // F_BLOCK,)
+    out = pl.pallas_call(
+        functools.partial(_gather_sum_kernel, num_dst=num_dst),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((e, F_BLOCK), lambda j: (0, j)),
+            pl.BlockSpec((e,), lambda j: (0,)),
+            pl.BlockSpec((e,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((num_dst, F_BLOCK), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((num_dst, ep.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(ep, dst, valid)
+    return out[:, :f]
+
+
+# ---------------------------------------------------------------------------
+# Gather(max): edge → vertex (GTHR.DST.MAX), SAGE maxpool
+# ---------------------------------------------------------------------------
+
+def _gather_max_kernel(edge_ref, dst_ref, valid_ref, o_ref, *, num_dst: int):
+    edge = edge_ref[...]                      # (E, F_BLOCK)
+    dst = dst_ref[...]
+    valid = valid_ref[...]
+    neg = jnp.asarray(-3.0e38, edge.dtype)
+
+    def body(d, out):
+        member = (dst == d) & (valid != 0)    # (E,)
+        col = jnp.where(member[:, None], edge, neg)
+        mx = jnp.max(col, axis=0)
+        mx = jnp.where(member.any(), mx, 0.0)
+        return out.at[d].set(mx)
+
+    o_ref[...] = jax.lax.fori_loop(
+        0, num_dst, body, jnp.zeros_like(o_ref)
+    )
+
+
+def gather_max(edge_feat: jnp.ndarray, dst: jnp.ndarray, valid: jnp.ndarray,
+               num_dst: int, interpret: bool = True) -> jnp.ndarray:
+    """Segment-max per-edge features into destination rows.
+
+    Each loop iteration plays one VU SIMD core reducing one destination
+    vertex (paper §7.1: "each core is responsible for ... one vertex in
+    the tile at a time"). Empty segments yield 0.
+    """
+    ep, f = _pad_f(edge_feat)
+    e = ep.shape[0]
+    grid = (ep.shape[1] // F_BLOCK,)
+    out = pl.pallas_call(
+        functools.partial(_gather_max_kernel, num_dst=num_dst),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((e, F_BLOCK), lambda j: (0, j)),
+            pl.BlockSpec((e,), lambda j: (0,)),
+            pl.BlockSpec((e,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((num_dst, F_BLOCK), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((num_dst, ep.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(ep, dst, valid)
+    return out[:, :f]
+
+
+def vmem_bytes(e: int, num_dst: int) -> int:
+    """Static VMEM footprint of one gather program instance (DESIGN.md §7)."""
+    return 4 * (e * F_BLOCK + 2 * e + e * num_dst + num_dst * F_BLOCK)

@@ -1,0 +1,233 @@
+"""L2: tile-level GNN model forward passes in JAX, calling the L1 kernels.
+
+One function per (model, variant). Each takes a *tile context* — the
+source-partition embeddings, destination-partition embeddings, the tile's
+padded COO edge list, and the model weights — and returns the tile's
+contribution to the destination partition, exactly the unit of work one
+ZIPPER stream triple (sStream → eStream → dStream) processes.
+
+These functions are:
+  * the AOT lowering targets (`aot.py` lowers each to HLO text; the Rust
+    runtime executes them via PJRT as the numerical oracle for the
+    cycle-level simulator's functional mode), and
+  * validated against `kernels.ref` by pytest.
+
+All shapes are static (AOT requirement): a tile context is (S, D, E, F)
+= (#source vertices, #destination vertices, padded edge count, embedding
+width). Padded edges have src = dst = 0 and valid = 0.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import elw, gemm, spmm
+
+
+@dataclasses.dataclass(frozen=True)
+class TileShape:
+    """Static tile geometry: the AOT specialization key."""
+
+    num_src: int = 256
+    num_dst: int = 256
+    num_edges: int = 1024
+    feat_in: int = 128
+    feat_out: int = 128
+
+    def tag(self) -> str:
+        return (f"s{self.num_src}_d{self.num_dst}_e{self.num_edges}"
+                f"_f{self.feat_in}x{self.feat_out}")
+
+
+# Number of relations for R-GCN (paper §8.1: "We set the type number to 3").
+NUM_RELATIONS = 3
+
+
+# ---------------------------------------------------------------------------
+# Model forward passes (per tile)
+# ---------------------------------------------------------------------------
+
+def gcn_e2v(x_src, src, dst, valid, w, *, num_dst: int):
+    """GCN with E2V applied: GEMM on source vertices, then Scatter→Gather.
+
+    The paper-Fig-1a order (Scatter→Gather→GEMM) is `gcn_naive`; both are
+    lowered so the Fig 12 compiler-opt experiment can execute either
+    schedule.
+    """
+    h = gemm.gemm(x_src, w)
+    edge = spmm.scatter(h, src)
+    return spmm.gather_sum(edge, dst, valid, num_dst=num_dst)
+
+
+def gcn_naive(x_src, src, dst, valid, w, *, num_dst: int):
+    edge = spmm.scatter(x_src, src)
+    agg = spmm.gather_sum(edge, dst, valid, num_dst=num_dst)
+    return gemm.gemm(agg, w)
+
+
+def gat(x_src, x_dst, src, dst, valid, w, a_src, a_dst, *, num_dst: int):
+    """Single-head GAT (paper Fig 1b), E2V-optimized: z = xW on vertices."""
+    z_src = gemm.gemm(x_src, w)
+    z_dst = gemm.gemm(x_dst, w)
+    s_src = gemm.gemm(z_src, a_src[:, None])[:, 0]
+    s_dst = gemm.gemm(z_dst, a_dst[:, None])[:, 0]
+    e = elw.unary("leaky_relu",
+                  elw.binary("add", s_src[src], s_dst[dst]))
+    # segment softmax over destinations (GOP + ELW mix)
+    from .kernels import ref
+    alpha = ref.segment_softmax(e, dst, valid, num_dst)
+    edge = spmm.scatter(z_src, src) * alpha[:, None]
+    return spmm.gather_sum(edge, dst, valid, num_dst=num_dst)
+
+
+def gat_naive(x_src, x_dst, src, dst, valid, w, a_src, a_dst, *,
+              num_dst: int):
+    """GAT without E2V: the xW GEMM is applied per *edge* after scatter.
+
+    This is the straightforward DGL-style formulation the paper's Fig 12
+    compares against — same numerics, redundant per-edge GEMMs.
+    """
+    from .kernels import ref
+    edge_x_src = spmm.scatter(x_src, src)                 # (E, F)
+    z_edge_src = gemm.gemm(edge_x_src, w)                 # redundant per-edge
+    edge_x_dst = spmm.scatter(x_dst, dst)
+    z_edge_dst = gemm.gemm(edge_x_dst, w)
+    s_src = gemm.gemm(z_edge_src, a_src[:, None])[:, 0]
+    s_dst = gemm.gemm(z_edge_dst, a_dst[:, None])[:, 0]
+    e = elw.unary("leaky_relu", elw.binary("add", s_src, s_dst))
+    alpha = ref.segment_softmax(e, dst, valid, num_dst)
+    edge = z_edge_src * alpha[:, None]
+    return spmm.gather_sum(edge, dst, valid, num_dst=num_dst)
+
+
+def sage(x_src, x_dst, src, dst, valid, w_pool, b_pool, w_self, w_neigh, *,
+         num_dst: int):
+    """GraphSAGE-maxpool (paper §8.1), E2V-optimized: pool GEMM on vertices."""
+    pooled = elw.unary("relu", gemm.gemm_bias(x_src, w_pool, b_pool))
+    edge = spmm.scatter(pooled, src)
+    h_n = spmm.gather_max(edge, dst, valid, num_dst=num_dst)
+    return elw.binary("add", gemm.gemm(x_dst, w_self),
+                      gemm.gemm(h_n, w_neigh))
+
+
+def sage_naive(x_src, x_dst, src, dst, valid, w_pool, b_pool, w_self,
+               w_neigh, *, num_dst: int):
+    """SAGE without E2V: pool transform applied per edge after scatter."""
+    edge_x = spmm.scatter(x_src, src)
+    pooled = elw.unary("relu", gemm.gemm_bias(edge_x, w_pool, b_pool))
+    h_n = spmm.gather_max(pooled, dst, valid, num_dst=num_dst)
+    return elw.binary("add", gemm.gemm(x_dst, w_self),
+                      gemm.gemm(h_n, w_neigh))
+
+
+def ggnn(x_src, x_dst, src, dst, valid, w_msg, w_z, u_z, w_r, u_r, w_h, u_h,
+         *, num_dst: int):
+    """GGNN: message GEMM + Gather(sum) + GRU as separate GEMM/ELW ops."""
+    msg = gemm.gemm(x_src, w_msg)
+    edge = spmm.scatter(msg, src)
+    a = spmm.gather_sum(edge, dst, valid, num_dst=num_dst)
+    zi = elw.binary("add", gemm.gemm(a, w_z), gemm.gemm(x_dst, u_z))
+    ri = elw.binary("add", gemm.gemm(a, w_r), gemm.gemm(x_dst, u_r))
+    r = elw.unary("sigmoid", ri)
+    ci = elw.binary("add", gemm.gemm(a, w_h),
+                    gemm.gemm(elw.binary("mul", r, x_dst), u_h))
+    return elw.gru_fuse(zi, ci, x_dst)
+
+
+def rgcn(x_src, src, dst, etype, valid, weights, *, num_dst: int):
+    """R-GCN with 3 relation types; per-relation GEMM + masked gather.
+
+    The index-guided BMM (paper ISA) is realized as R dense GEMMs over the
+    source partition plus relation-masked gathers — the E2V-hoisted form
+    (regular MXU work instead of per-edge matmuls).
+    """
+    out = None
+    for r in range(NUM_RELATIONS):
+        h_r = gemm.gemm(x_src, weights[r])
+        edge = spmm.scatter(h_r, src)
+        mask_r = valid * (etype == r).astype(valid.dtype)
+        part = spmm.gather_sum(edge, dst, mask_r, num_dst=num_dst)
+        out = part if out is None else elw.binary("add", out, part)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Registry: model name → (builder, weight synthesizer)
+# ---------------------------------------------------------------------------
+
+def _rng_weights(key, shapes):
+    ks = jax.random.split(key, len(shapes))
+    return [jax.random.normal(k, s, jnp.float32) * 0.1 for k, s in zip(ks, shapes)]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """A lowering target: closed-over-tile-shape callable + example args."""
+
+    name: str
+    fn: Callable
+    arg_names: tuple[str, ...]
+
+    def example_args(self, ts: TileShape, seed: int = 0):
+        """Concrete example arrays for `jax.jit(...).lower(...)`."""
+        key = jax.random.PRNGKey(seed)
+        kx, kd, kw, ke = jax.random.split(key, 4)
+        fi, fo = ts.feat_in, ts.feat_out
+        x_src = jax.random.normal(kx, (ts.num_src, fi), jnp.float32)
+        x_dst = jax.random.normal(kd, (ts.num_dst, fi), jnp.float32)
+        src = jax.random.randint(ke, (ts.num_edges,), 0, ts.num_src, jnp.int32)
+        dst = jax.random.randint(kd, (ts.num_edges,), 0, ts.num_dst, jnp.int32)
+        valid = (jnp.arange(ts.num_edges) < (ts.num_edges * 3) // 4).astype(jnp.int32)
+        etype = jax.random.randint(kw, (ts.num_edges,), 0, NUM_RELATIONS, jnp.int32)
+        pool = {
+            "x_src": x_src, "x_dst": x_dst, "src": src, "dst": dst,
+            "valid": valid, "etype": etype,
+            "w": _rng_weights(kw, [(fi, fo)])[0],
+            "a_src": jax.random.normal(kw, (fo,), jnp.float32) * 0.1,
+            "a_dst": jax.random.normal(kd, (fo,), jnp.float32) * 0.1,
+            "w_pool": _rng_weights(kw, [(fi, fo)])[0],
+            "b_pool": jnp.zeros((fo,), jnp.float32),
+            "w_self": _rng_weights(kd, [(fi, fo)])[0],
+            "w_neigh": _rng_weights(ke, [(fo, fo)])[0],
+            "w_msg": _rng_weights(kw, [(fi, fi)])[0],
+            "w_z": _rng_weights(kw, [(fi, fi)])[0],
+            "u_z": _rng_weights(kd, [(fi, fi)])[0],
+            "w_r": _rng_weights(ke, [(fi, fi)])[0],
+            "u_r": _rng_weights(kx, [(fi, fi)])[0],
+            "w_h": _rng_weights(kw, [(fi, fi)])[0],
+            "u_h": _rng_weights(kd, [(fi, fi)])[0],
+            "weights": jax.random.normal(kw, (NUM_RELATIONS, fi, fo),
+                                         jnp.float32) * 0.1,
+        }
+        return [pool[a] for a in self.arg_names]
+
+    def bind(self, ts: TileShape) -> Callable:
+        """Close the tile shape over the model fn (num_dst is static)."""
+        import functools
+        return functools.partial(self.fn, num_dst=ts.num_dst)
+
+
+MODELS: dict[str, ModelSpec] = {
+    "gcn": ModelSpec("gcn", gcn_e2v, ("x_src", "src", "dst", "valid", "w")),
+    "gcn_naive": ModelSpec("gcn_naive", gcn_naive,
+                           ("x_src", "src", "dst", "valid", "w")),
+    "gat": ModelSpec("gat", gat, ("x_src", "x_dst", "src", "dst", "valid",
+                                  "w", "a_src", "a_dst")),
+    "gat_naive": ModelSpec("gat_naive", gat_naive,
+                           ("x_src", "x_dst", "src", "dst", "valid",
+                            "w", "a_src", "a_dst")),
+    "sage": ModelSpec("sage", sage, ("x_src", "x_dst", "src", "dst", "valid",
+                                     "w_pool", "b_pool", "w_self", "w_neigh")),
+    "sage_naive": ModelSpec("sage_naive", sage_naive,
+                            ("x_src", "x_dst", "src", "dst", "valid",
+                             "w_pool", "b_pool", "w_self", "w_neigh")),
+    "ggnn": ModelSpec("ggnn", ggnn, ("x_src", "x_dst", "src", "dst", "valid",
+                                     "w_msg", "w_z", "u_z", "w_r", "u_r",
+                                     "w_h", "u_h")),
+    "rgcn": ModelSpec("rgcn", rgcn, ("x_src", "src", "dst", "etype", "valid",
+                                     "weights")),
+}

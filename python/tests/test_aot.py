@@ -1,0 +1,51 @@
+"""AOT pipeline tests: lowering produces parseable, entry-complete HLO text.
+
+Executing the artifacts is the Rust runtime's job (rust/tests); here we
+verify the text is well-formed, deterministic, and the manifest matches.
+"""
+
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+SMALL = M.TileShape(num_src=32, num_dst=32, num_edges=64, feat_in=16,
+                    feat_out=16)
+
+
+@pytest.mark.parametrize("name", ["gcn", "gat", "sage", "ggnn", "rgcn"])
+def test_lower_model_produces_hlo_text(name):
+    text, meta = aot.lower_model(name, SMALL)
+    assert "ENTRY" in text and "ROOT" in text
+    assert meta["model"] == name
+    assert meta["output"]["shape"] == [SMALL.num_dst, SMALL.feat_out]
+    # every declared arg appears as a parameter
+    assert text.count("parameter(") >= len(meta["args"])
+
+
+def test_lowering_is_deterministic():
+    t1, m1 = aot.lower_model("gcn", SMALL)
+    t2, m2 = aot.lower_model("gcn", SMALL)
+    assert m1["sha256"] == m2["sha256"]
+    assert t1 == t2
+
+
+def test_main_writes_manifest(tmp_path):
+    aot.main(["--out-dir", str(tmp_path), "--models", "gcn"])
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["format"] == "hlo-text"
+    assert len(manifest["entries"]) == len(aot.DEFAULT_SHAPES)
+    for e in manifest["entries"]:
+        assert (tmp_path / e["file"]).exists()
+        assert e["tile"]["feat_in"] > 0
+
+
+def test_no_mosaic_custom_calls():
+    """interpret=True must lower Pallas to plain HLO (CPU-executable)."""
+    text, _ = aot.lower_model("gcn", SMALL)
+    assert "tpu_custom_call" not in text
+    assert "mosaic" not in text.lower()

@@ -1,0 +1,224 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the int ranges of edge indices); every case
+asserts allclose against `kernels.ref`. This is the core correctness
+signal for the AOT artifacts the Rust runtime executes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import elw, gemm, ref, spmm
+
+jax.config.update("jax_platform_name", "cpu")
+
+ATOL = 2e-4
+RTOL = 2e-4
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _tile(rng, s, d, e):
+    src = rng.integers(0, s, size=e).astype(np.int32)
+    dst = rng.integers(0, d, size=e).astype(np.int32)
+    valid = (rng.random(e) < 0.8).astype(np.int32)
+    # pad convention: invalid edges point at vertex 0
+    src = np.where(valid == 1, src, 0).astype(np.int32)
+    dst = np.where(valid == 1, dst, 0).astype(np.int32)
+    return src, dst, valid
+
+
+# ---------------------------------------------------------------------------
+# GEMM
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 150),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_matches_ref(m, k, n, seed):
+    rng = _rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    got = gemm.gemm(jnp.asarray(x), jnp.asarray(w))
+    want = ref.gemm(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(got, want, atol=ATOL * k, rtol=RTOL)
+
+
+def test_gemm_exact_mu_shape():
+    """(32, 128, 128): exactly one MU block, no padding waste."""
+    rng = _rng(0)
+    x = rng.normal(size=(32, 128)).astype(np.float32)
+    w = rng.normal(size=(128, 128)).astype(np.float32)
+    got = gemm.gemm(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(got, x @ w, atol=1e-2, rtol=1e-4)
+    assert gemm.mxu_utilization(32, 128, 128) == 1.0
+
+
+def test_gemm_bias():
+    rng = _rng(1)
+    x = rng.normal(size=(33, 60)).astype(np.float32)
+    w = rng.normal(size=(60, 40)).astype(np.float32)
+    b = rng.normal(size=(40,)).astype(np.float32)
+    got = gemm.gemm_bias(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    np.testing.assert_allclose(got, x @ w + b, atol=1e-2, rtol=1e-4)
+
+
+def test_gemm_mxu_utilization_penalizes_padding():
+    assert gemm.mxu_utilization(1, 1, 1) < 0.01
+    assert gemm.mxu_utilization(64, 256, 256) == 1.0
+
+
+def test_gemm_vmem_fits():
+    """One program instance must fit comfortably in 16 MiB of VMEM."""
+    assert gemm.vmem_bytes() < 16 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# Scatter / Gather (GOP)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s=st.integers(1, 64),
+    d=st.integers(1, 64),
+    e=st.integers(1, 256),
+    f=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_scatter_matches_ref(s, d, e, f, seed):
+    rng = _rng(seed)
+    x = rng.normal(size=(s, f)).astype(np.float32)
+    src, _, _ = _tile(rng, s, d, e)
+    got = spmm.scatter(jnp.asarray(x), jnp.asarray(src))
+    want = ref.scatter_src(jnp.asarray(x), jnp.asarray(src))
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(1, 48),
+    e=st.integers(1, 200),
+    f=st.integers(1, 140),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gather_sum_matches_ref(d, e, f, seed):
+    rng = _rng(seed)
+    feat = rng.normal(size=(e, f)).astype(np.float32)
+    _, dst, valid = _tile(rng, 8, d, e)
+    got = spmm.gather_sum(jnp.asarray(feat), jnp.asarray(dst),
+                          jnp.asarray(valid), num_dst=d)
+    want = ref.gather_sum(jnp.asarray(feat), jnp.asarray(dst),
+                          jnp.asarray(valid), d)
+    np.testing.assert_allclose(got, want, atol=ATOL * 4, rtol=RTOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.integers(1, 32),
+    e=st.integers(1, 128),
+    f=st.integers(1, 140),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gather_max_matches_ref(d, e, f, seed):
+    rng = _rng(seed)
+    feat = rng.normal(size=(e, f)).astype(np.float32)
+    _, dst, valid = _tile(rng, 8, d, e)
+    got = spmm.gather_max(jnp.asarray(feat), jnp.asarray(dst),
+                          jnp.asarray(valid), num_dst=d)
+    want = ref.gather_max(jnp.asarray(feat), jnp.asarray(dst),
+                          jnp.asarray(valid), d)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+def test_gather_sum_all_invalid_is_zero():
+    feat = np.ones((16, 8), np.float32)
+    dst = np.zeros(16, np.int32)
+    valid = np.zeros(16, np.int32)
+    got = spmm.gather_sum(jnp.asarray(feat), jnp.asarray(dst),
+                          jnp.asarray(valid), num_dst=4)
+    np.testing.assert_array_equal(np.asarray(got), 0.0)
+
+
+def test_gather_max_empty_segment_is_zero():
+    feat = -np.ones((4, 8), np.float32)
+    dst = np.zeros(4, np.int32)  # everything lands on dst 0
+    valid = np.ones(4, np.int32)
+    got = np.asarray(spmm.gather_max(jnp.asarray(feat), jnp.asarray(dst),
+                                     jnp.asarray(valid), num_dst=3))
+    np.testing.assert_array_equal(got[1:], 0.0)   # empty segments
+    np.testing.assert_array_equal(got[0], -1.0)   # real max may be negative
+
+
+def test_scatter_roundtrip_identity():
+    """scatter with identity index returns the input."""
+    x = np.arange(12, dtype=np.float32).reshape(3, 4)
+    idx = np.arange(3, dtype=np.int32)
+    got = spmm.scatter(jnp.asarray(x), jnp.asarray(idx))
+    np.testing.assert_array_equal(np.asarray(got), x)
+
+
+# ---------------------------------------------------------------------------
+# ELW
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op", sorted(elw._UNARY))
+@settings(max_examples=8, deadline=None)
+@given(
+    r=st.integers(1, 40),
+    c=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_unary_matches_numpy(op, r, c, seed):
+    rng = _rng(seed)
+    x = rng.normal(size=(r, c)).astype(np.float32)
+    got = np.asarray(elw.unary(op, jnp.asarray(x)))
+    want = np.asarray(elw._UNARY[op](jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+@pytest.mark.parametrize("op", sorted(elw._BINARY))
+@settings(max_examples=8, deadline=None)
+@given(
+    r=st.integers(1, 40),
+    c=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_binary_matches_numpy(op, r, c, seed):
+    rng = _rng(seed)
+    a = rng.normal(size=(r, c)).astype(np.float32)
+    b = rng.normal(size=(r, c)).astype(np.float32) + 3.0  # avoid div-by-~0
+    got = np.asarray(elw.binary(op, jnp.asarray(a), jnp.asarray(b)))
+    want = np.asarray(elw._BINARY[op](jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+def test_gru_fuse_matches_unfused():
+    rng = _rng(7)
+    v, f = 40, 48
+    zi = rng.normal(size=(v, f)).astype(np.float32)
+    ci = rng.normal(size=(v, f)).astype(np.float32)
+    x = rng.normal(size=(v, f)).astype(np.float32)
+    got = np.asarray(elw.gru_fuse(jnp.asarray(zi), jnp.asarray(ci),
+                                  jnp.asarray(x)))
+    z = 1.0 / (1.0 + np.exp(-zi))
+    want = (1.0 - z) * x + z * np.tanh(ci)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+def test_unary_preserves_shape_odd_sizes():
+    for shape in [(1,), (1, 1), (7, 13), (2049,), (3, 5, 7)]:
+        x = np.full(shape, -2.0, np.float32)
+        got = np.asarray(elw.unary("relu", jnp.asarray(x)))
+        assert got.shape == shape
+        np.testing.assert_array_equal(got, 0.0)

@@ -1,0 +1,114 @@
+"""L2 correctness: tile-level model forwards vs the pure-jnp oracles.
+
+Also checks the E2V-optimization invariant the paper's Fig 12 relies on:
+the optimized and naive schedules produce identical numerics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TS = M.TileShape(num_src=48, num_dst=40, num_edges=160, feat_in=24,
+                 feat_out=36)
+TS_SQ = M.TileShape(num_src=48, num_dst=40, num_edges=160, feat_in=24,
+                    feat_out=24)  # GGNN needs feat_in == feat_out
+
+
+def _args(name, ts):
+    return M.MODELS[name].example_args(ts, seed=3)
+
+
+def _run(name, ts):
+    spec = M.MODELS[name]
+    return np.asarray(spec.bind(ts)(*_args(name, ts)))
+
+
+def test_gcn_matches_ref():
+    x_src, src, dst, valid, w = _args("gcn", TS)
+    got = _run("gcn", TS)
+    want = np.asarray(ref.gcn_tile_e2v(x_src, src, dst, valid, w, TS.num_dst))
+    np.testing.assert_allclose(got, want, atol=5e-3, rtol=1e-4)
+
+
+def test_gcn_e2v_equals_naive():
+    """E2V motion must be numerics-preserving (paper §6.2)."""
+    got_opt = _run("gcn", TS)
+    got_naive = _run("gcn_naive", TS)
+    np.testing.assert_allclose(got_opt, got_naive, atol=5e-3, rtol=1e-4)
+
+
+def test_gat_matches_ref():
+    x_src, x_dst, src, dst, valid, w, a_src, a_dst = _args("gat", TS)
+    got = _run("gat", TS)
+    want = np.asarray(ref.gat_tile(x_src, x_dst, src, dst, valid, w,
+                                   a_src, a_dst, TS.num_dst))
+    np.testing.assert_allclose(got, want, atol=5e-3, rtol=1e-3)
+
+
+def test_gat_e2v_equals_naive():
+    got_opt = _run("gat", TS)
+    got_naive = _run("gat_naive", TS)
+    np.testing.assert_allclose(got_opt, got_naive, atol=5e-3, rtol=1e-3)
+
+
+def test_sage_matches_ref():
+    x_src, x_dst, src, dst, valid, w_pool, b_pool, w_self, w_neigh = \
+        _args("sage", TS)
+    got = _run("sage", TS)
+    want = np.asarray(ref.sage_tile(x_src, x_dst, src, dst, valid, w_pool,
+                                    b_pool, w_self, w_neigh, TS.num_dst))
+    np.testing.assert_allclose(got, want, atol=5e-3, rtol=1e-3)
+
+
+def test_sage_e2v_equals_naive():
+    got_opt = _run("sage", TS)
+    got_naive = _run("sage_naive", TS)
+    np.testing.assert_allclose(got_opt, got_naive, atol=5e-3, rtol=1e-3)
+
+
+def test_ggnn_matches_ref():
+    args = _args("ggnn", TS_SQ)
+    (x_src, x_dst, src, dst, valid, w_msg, w_z, u_z, w_r, u_r, w_h, u_h) = args
+    got = _run("ggnn", TS_SQ)
+    want = np.asarray(ref.ggnn_tile(x_src, x_dst, src, dst, valid, w_msg,
+                                    w_z, u_z, w_r, u_r, w_h, u_h,
+                                    TS_SQ.num_dst))
+    np.testing.assert_allclose(got, want, atol=5e-3, rtol=1e-3)
+
+
+def test_rgcn_matches_ref():
+    x_src, src, dst, etype, valid, weights = _args("rgcn", TS)
+    got = _run("rgcn", TS)
+    want = np.asarray(ref.rgcn_tile(x_src, src, dst, etype, valid, weights,
+                                    TS.num_dst))
+    np.testing.assert_allclose(got, want, atol=5e-3, rtol=1e-3)
+
+
+def test_rgcn_e2v_ref_equivalence():
+    x_src, src, dst, etype, valid, weights = _args("rgcn", TS)
+    a = np.asarray(ref.rgcn_tile(x_src, src, dst, etype, valid, weights,
+                                 TS.num_dst))
+    b = np.asarray(ref.rgcn_tile_e2v(x_src, src, dst, etype, valid, weights,
+                                     TS.num_dst))
+    np.testing.assert_allclose(a, b, atol=5e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("name", sorted(M.MODELS))
+def test_output_shape(name):
+    ts = TS_SQ if name == "ggnn" else TS
+    got = _run(name, ts)
+    assert got.shape == (ts.num_dst, ts.feat_out)
+    assert np.isfinite(got).all()
+
+
+def test_tile_shape_tag_roundtrip():
+    ts = M.TileShape(1, 2, 3, 4, 5)
+    assert ts.tag() == "s1_d2_e3_f4x5"

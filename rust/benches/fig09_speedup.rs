@@ -1,0 +1,86 @@
+//! Fig 9 reproduction: ZIPPER speedup over DGL-CPU and DGL-GPU across
+//! 5 models × 6 datasets (single layer, F = 128).
+//!
+//! Paper headline: 93.6× over CPU and 1.56× over GPU on average, with
+//! limited speedup / slowdown for GAT (DGL's fused softmax) and the GPU
+//! OOM'ing on EO while ZIPPER runs it (tiling).
+//!
+//! Graphs are 1/1024-scale synthetics with matched degree shape
+//! (DESIGN.md §5): speedup *ratios* survive scaling since ZIPPER and the
+//! baselines process the same operator volumes.
+
+use zipper::baselines::{memory_footprint, whole_graph_ops, DeviceModel};
+use zipper::config::{ArchConfig, RunConfig};
+use zipper::coordinator::Session;
+use zipper::graph::datasets::TABLE3;
+use zipper::metrics::Table;
+use zipper::models::ModelKind;
+use zipper::util::stats::geomean;
+
+/// DGL's hand-fused softmax kernel for GAT (paper §8.2: "DGL has their
+/// special operation support for the softmax attention") — the baseline
+/// runs fewer/better-fused edge ops than our ISA program. Model that as
+/// a fixed efficiency credit on the GAT baselines.
+const DGL_GAT_SOFTMAX_CREDIT: f64 = 0.45;
+
+fn main() {
+    println!("== Fig 9: speedup over DGL-CPU / DGL-GPU (F=128, 1 layer) ==");
+    println!("paper: avg 93.6x vs CPU, 1.56x vs GPU; GAT weakest; GPU OOM on EO\n");
+    let arch = ArchConfig::default();
+    let scale = 1024u64;
+    let mut t = Table::new(&["model", "dataset", "ZIPPER ms", "CPU x", "GPU x"]);
+    let mut cpu_all = Vec::new();
+    let mut gpu_all = Vec::new();
+
+    for model in ModelKind::ALL {
+        for spec in &TABLE3 {
+            let run = RunConfig {
+                model: model.name().into(),
+                dataset: spec.id.into(),
+                scale,
+                feat_in: 128,
+                feat_out: 128,
+                ..Default::default()
+            };
+            let session = Session::prepare(&run).expect("session");
+            let res = session.simulate(&arch, false, None, 0).expect("simulate");
+            let zipper_s = res.seconds(&arch);
+            let (v, e) = (session.graph.num_vertices() as u64, session.graph.num_edges());
+            let ops = whole_graph_ops(&model.build(), v, e, 128, 128);
+            let mut cpu_s = DeviceModel::cpu_dgl().run(&ops, 0).seconds;
+            let mb = memory_footprint(&model.build(), spec.vertices, spec.edges, 128, 128);
+            let gpu_res = DeviceModel::gpu_dgl().run(&ops, 0);
+            let mut gpu_s = gpu_res.seconds;
+            if model == ModelKind::Gat {
+                cpu_s *= DGL_GAT_SOFTMAX_CREDIT;
+                gpu_s *= DGL_GAT_SOFTMAX_CREDIT;
+            }
+            // full-size footprint decides OOM (Fig 2 model)
+            let gpu_oom = mb.total() > 32 * 1024 * 1024 * 1024;
+            let cpu_x = cpu_s / zipper_s;
+            let gpu_x = gpu_s / zipper_s;
+            cpu_all.push(cpu_x);
+            if !gpu_oom {
+                gpu_all.push(gpu_x);
+            }
+            t.row(&[
+                model.name().into(),
+                spec.id.into(),
+                format!("{:.3}", zipper_s * 1e3),
+                format!("{cpu_x:.1}"),
+                if gpu_oom { "OOM".into() } else { format!("{gpu_x:.2}") },
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    let cpu_avg = geomean(&cpu_all);
+    let gpu_avg = geomean(&gpu_all);
+    println!("\ngeomean speedup vs CPU: {cpu_avg:.1}x (paper 93.6x)");
+    println!("geomean speedup vs GPU: {gpu_avg:.2}x (paper 1.56x)");
+    assert!(cpu_avg > 10.0, "ZIPPER must dominate the CPU");
+    assert!(gpu_avg > 1.0, "ZIPPER must edge out the GPU on average");
+    assert!(
+        gpu_avg < cpu_avg / 5.0,
+        "GPU gap must be far smaller than CPU gap (shape of Fig 9)"
+    );
+}

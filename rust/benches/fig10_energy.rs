@@ -1,0 +1,63 @@
+//! Fig 10 reproduction: energy reduction over DGL-CPU / DGL-GPU.
+//!
+//! Paper headline: CPU consumes 147× and GPU 4.85× ZIPPER's energy on
+//! average — dedicated units + tiling-reduced memory traffic vs
+//! general-purpose silicon at 170–300 W.
+
+use zipper::baselines::{whole_graph_ops, DeviceModel};
+use zipper::config::{ArchConfig, RunConfig};
+use zipper::coordinator::Session;
+use zipper::energy::EnergyModel;
+use zipper::graph::datasets::TABLE3;
+use zipper::metrics::Table;
+use zipper::models::ModelKind;
+use zipper::util::stats::geomean;
+
+fn main() {
+    println!("== Fig 10: energy reduction vs DGL-CPU / DGL-GPU ==");
+    println!("paper: CPU 147x, GPU 4.85x ZIPPER's energy on average\n");
+    let arch = ArchConfig::default();
+    let scale = 1024u64;
+    let mut t = Table::new(&["model", "dataset", "ZIPPER mJ", "CPU x", "GPU x"]);
+    let mut cpu_all = Vec::new();
+    let mut gpu_all = Vec::new();
+
+    for model in ModelKind::ALL {
+        for spec in &TABLE3 {
+            let run = RunConfig {
+                model: model.name().into(),
+                dataset: spec.id.into(),
+                scale,
+                feat_in: 128,
+                feat_out: 128,
+                ..Default::default()
+            };
+            let session = Session::prepare(&run).expect("session");
+            let res = session.simulate(&arch, false, None, 0).expect("simulate");
+            let zipper_j = EnergyModel::default()
+                .evaluate(&res.counters, arch.freq_hz)
+                .total_j();
+            let (v, e) = (session.graph.num_vertices() as u64, session.graph.num_edges());
+            let ops = whole_graph_ops(&model.build(), v, e, 128, 128);
+            let cpu_j = DeviceModel::cpu_dgl().run(&ops, 0).energy_j;
+            let gpu_j = DeviceModel::gpu_dgl().run(&ops, 0).energy_j;
+            cpu_all.push(cpu_j / zipper_j);
+            gpu_all.push(gpu_j / zipper_j);
+            t.row(&[
+                model.name().into(),
+                spec.id.into(),
+                format!("{:.4}", zipper_j * 1e3),
+                format!("{:.0}", cpu_j / zipper_j),
+                format!("{:.2}", gpu_j / zipper_j),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    let cpu_avg = geomean(&cpu_all);
+    let gpu_avg = geomean(&gpu_all);
+    println!("\ngeomean energy ratio CPU/ZIPPER: {cpu_avg:.0}x (paper 147x)");
+    println!("geomean energy ratio GPU/ZIPPER: {gpu_avg:.2}x (paper 4.85x)");
+    assert!(cpu_avg > 20.0);
+    assert!(gpu_avg > 1.0);
+    assert!(cpu_avg > 5.0 * gpu_avg, "CPU gap >> GPU gap (shape of Fig 10)");
+}

@@ -1,0 +1,92 @@
+//! Perf microbenches for the L3 hot paths (EXPERIMENTS.md §Perf).
+//!
+//! Measures, with wall-clock timing over repeated runs:
+//!   * simulator engine throughput (simulated instructions / host second)
+//!   * functional-mode throughput (instructions/s with tensor execution)
+//!   * tiling construction throughput (edges / second)
+//!   * functional GEMM kernel (MFLOP/s of the tensor executor)
+//!
+//! Run before/after each optimization; keep if >5% better.
+
+use std::time::Instant;
+use zipper::config::{ArchConfig, RunConfig};
+use zipper::coordinator::Session;
+use zipper::graph::generators;
+use zipper::metrics::Table;
+use zipper::sim::tensor::{matmul, Tensor};
+use zipper::tiling::{tile, TilingConfig};
+
+fn time<R>(mut f: impl FnMut() -> R, reps: u32) -> (f64, R) {
+    // warmup
+    let mut out = f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        out = f();
+    }
+    (t0.elapsed().as_secs_f64() / reps as f64, out)
+}
+
+fn main() {
+    let arch = ArchConfig::default();
+    let mut t = Table::new(&["bench", "time/iter", "throughput"]);
+
+    // -- simulator timing-only throughput ---------------------------------
+    let run = RunConfig {
+        model: "gat".into(),
+        dataset: "CP".into(),
+        scale: 512,
+        feat_in: 128,
+        feat_out: 128,
+        ..Default::default()
+    };
+    let session = Session::prepare(&run).expect("session");
+    let (dt, res) = time(|| session.simulate(&arch, false, None, 0).unwrap(), 5);
+    t.row(&[
+        "sim engine (GAT/CP 1/512, timing)".into(),
+        format!("{:.1} ms", dt * 1e3),
+        format!("{:.2} M instr/s", res.instructions as f64 / dt / 1e6),
+    ]);
+
+    // -- functional simulation ---------------------------------------------
+    let mut frun = run.clone();
+    frun.scale = 2048;
+    frun.feat_in = 64;
+    frun.feat_out = 64;
+    let fsession = Session::prepare(&frun).expect("session");
+    let x = fsession.make_input(1);
+    let (dt, res) = time(|| fsession.simulate(&arch, true, Some(&x), 0).unwrap(), 3);
+    t.row(&[
+        "sim engine (GAT/CP 1/2048, functional)".into(),
+        format!("{:.1} ms", dt * 1e3),
+        format!("{:.2} M instr/s", res.instructions as f64 / dt / 1e6),
+    ]);
+
+    // -- tiling construction -------------------------------------------------
+    let g = generators::power_law(40_000, 400_000, 1.1, 1.1, 0, 3);
+    let (dt, tl) = time(|| tile(&g, TilingConfig::default()), 5);
+    t.row(&[
+        "tiling (40k V / 400k E, sparse+reorder)".into(),
+        format!("{:.1} ms", dt * 1e3),
+        format!("{:.1} M edges/s", tl.num_edges as f64 / dt / 1e6),
+    ]);
+
+    // -- functional GEMM ------------------------------------------------------
+    let a = Tensor::filled(256, 128, 1.5);
+    let w = vec![0.5f32; 128 * 128];
+    let mut out = Tensor::zeros(256, 128);
+    let (dt, _) = time(
+        || {
+            matmul(&a, &w, 128, 128, &mut out, false);
+            out.data[0]
+        },
+        50,
+    );
+    let flops = 2.0 * 256.0 * 128.0 * 128.0;
+    t.row(&[
+        "functional GEMM 256x128x128".into(),
+        format!("{:.1} us", dt * 1e6),
+        format!("{:.2} GFLOP/s", flops / dt / 1e9),
+    ]);
+
+    print!("{}", t.render());
+}

@@ -1,0 +1,47 @@
+//! Table 5 reproduction: ZIPPER area breakdown at 16 nm.
+//!
+//! Paper: MU 1.00 mm², VU 0.06 mm² each, embedding memory 52.31 mm²,
+//! tile hub 0.15 mm², total 53.58 mm² = 6.57% of the V100 die; on-chip
+//! memory is 97.91% of the accelerator.
+
+use zipper::area::{area, V100_DIE_MM2};
+use zipper::config::ArchConfig;
+use zipper::metrics::Table;
+
+fn main() {
+    println!("== Table 5: area breakdown ==\n");
+    let arch = ArchConfig::default();
+    let a = area(&arch);
+    let mut t = Table::new(&["component", "mm^2", "% of total", "paper mm^2"]);
+    let total = a.total_mm2();
+    for (name, mm2, paper) in [
+        ("1x MU (32x128)", a.mu_mm2, "1.00"),
+        ("2x VU (8xSIMD32)", a.vu_mm2, "0.12"),
+        ("Embedding Mem (21MB eDRAM)", a.uem_mm2, "52.31"),
+        ("Tile Hub (256KB SRAM)", a.tile_hub_mm2, "0.15"),
+    ] {
+        t.row(&[
+            name.into(),
+            format!("{mm2:.2}"),
+            format!("{:.2}%", 100.0 * mm2 / total),
+            paper.into(),
+        ]);
+    }
+    t.row(&[
+        "TOTAL".into(),
+        format!("{total:.2}"),
+        "100%".into(),
+        "53.58".into(),
+    ]);
+    print!("{}", t.render());
+    println!(
+        "\nmemory fraction: {:.2}% (paper 97.91%)",
+        100.0 * a.memory_fraction()
+    );
+    println!(
+        "vs V100 die ({V100_DIE_MM2} mm^2): {:.2}% (paper 6.57%)",
+        100.0 * total / V100_DIE_MM2
+    );
+    assert!((total - 53.58).abs() < 0.05);
+    assert!((a.memory_fraction() - 0.979).abs() < 0.005);
+}

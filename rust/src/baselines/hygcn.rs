@@ -1,0 +1,112 @@
+//! HyGCN baseline (paper §8.4, Fig 14): a fixed two-stage pipeline
+//! accelerator specialized for GCN-shaped models.
+//!
+//! HyGCN couples an *Aggregation* engine (SIMD cores walking edges) to a
+//! *Combination* engine (systolic arrays for the dense transform) through
+//! a one-directional pipeline. Per the published configuration: 32 SIMD16
+//! cores (aggregation), 8 systolic modules of 16×16 (combination),
+//! 128 GB/s HBM @ 1 GHz, 22 MB on-chip buffers.
+//!
+//! The model: a GCN layer is processed in vertex chunks; chunk i's
+//! combination overlaps chunk i+1's aggregation (two-stage pipelining),
+//! so layer time ≈ max(T_agg, T_comb) + min-stage startup. Because the
+//! pipeline is *fixed*, non-GCN interleavings (GAT's edge ELWs between
+//! GOPs) cannot be mapped — which is the flexibility argument ZIPPER
+//! makes. We only evaluate it on GCN, as the paper does.
+
+/// HyGCN published configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct HygcnConfig {
+    pub freq_hz: f64,
+    /// Aggregation SIMD lanes total (32 cores × 16 lanes).
+    pub agg_lanes: u64,
+    /// Combination MACs/cycle (8 × 16×16 systolic).
+    pub comb_macs: u64,
+    pub mem_bw: f64,
+    pub power_w: f64,
+}
+
+impl Default for HygcnConfig {
+    fn default() -> Self {
+        HygcnConfig {
+            freq_hz: 1.0e9,
+            agg_lanes: 32 * 16,
+            comb_macs: 8 * 16 * 16,
+            mem_bw: 128.0e9,
+            // Platform power under OUR §8.1 energy methodology (same
+            // eDRAM/refresh/HBM-device constants as ZIPPER's model, for
+            // 24 MB of buffers + wider aggregation SIMD) — NOT the 6.7 W
+            // core-only figure HyGCN published. Consistent accounting is
+            // what makes the Fig 14 cross-accelerator energy ratio
+            // meaningful.
+            power_w: 120.0,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct HygcnResult {
+    pub seconds: f64,
+    pub energy_j: f64,
+}
+
+/// Run a `layers`-deep GCN on the HyGCN model.
+///
+/// Per layer: aggregation touches every edge once per feature element
+/// (edge-centric sliding window, ~85% window efficiency published);
+/// combination is a dense (V × F × F') matmul at ~92% systolic
+/// utilization. Off-chip traffic: features once in + once out per layer
+/// (their shard cache keeps reuse high on citation graphs).
+pub fn run_gcn(
+    cfg: &HygcnConfig,
+    num_vertices: u64,
+    num_edges: u64,
+    feats: &[u64], // per-layer widths, len = layers + 1
+) -> HygcnResult {
+    let mut total = 0.0f64;
+    for l in 0..feats.len() - 1 {
+        let (f_in, _f_out) = (feats[l] as f64, feats[l + 1] as f64);
+        let agg_ops = num_edges as f64 * f_in;
+        let t_agg_compute = agg_ops / (cfg.agg_lanes as f64 * 0.85) / cfg.freq_hz;
+        let agg_bytes = num_edges as f64 * (4.0 * f_in + 8.0);
+        let t_agg_mem = agg_bytes / cfg.mem_bw;
+        let t_agg = t_agg_compute.max(t_agg_mem);
+
+        let comb_macs = num_vertices as f64 * f_in * _f_out;
+        let t_comb = comb_macs / (cfg.comb_macs as f64 * 0.92) / cfg.freq_hz;
+
+        // two-stage pipeline over chunks: bounded by the slower stage
+        let t_layer = t_agg.max(t_comb) + t_agg.min(t_comb) * 0.05;
+        total += t_layer;
+    }
+    HygcnResult { seconds: total, energy_j: total * cfg.power_w }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_layer_gcn_runs() {
+        let r = run_gcn(&HygcnConfig::default(), 2_708, 10_556, &[1433, 16, 7]);
+        assert!(r.seconds > 0.0 && r.seconds < 1.0);
+        assert!(r.energy_j > 0.0);
+    }
+
+    #[test]
+    fn pipeline_bounded_by_slower_stage() {
+        let cfg = HygcnConfig::default();
+        // agg-dominated graph (many edges, tiny combination)
+        let dense = run_gcn(&cfg, 1_000, 10_000_000, &[64, 64]);
+        let sparse = run_gcn(&cfg, 1_000, 1_000, &[64, 64]);
+        assert!(dense.seconds > 10.0 * sparse.seconds);
+    }
+
+    #[test]
+    fn energy_tracks_time() {
+        let cfg = HygcnConfig::default();
+        let a = run_gcn(&cfg, 10_000, 100_000, &[128, 128]);
+        let b = run_gcn(&cfg, 20_000, 200_000, &[128, 128]);
+        assert!((b.energy_j / a.energy_j - b.seconds / a.seconds).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,316 @@
+//! Configuration system: architecture + run parameters (paper Table 4),
+//! loadable from an INI/TOML-lite file and overridable from the CLI.
+
+use std::fmt;
+
+/// ZIPPER architecture parameters (defaults = paper Table 4).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ArchConfig {
+    /// Clock frequency in Hz (1 GHz).
+    pub freq_hz: f64,
+    /// Matrix Units: 32×128 output-stationary systolic arrays.
+    pub mu_count: u32,
+    pub mu_rows: u32,
+    pub mu_cols: u32,
+    /// Vector Units: each 8 SIMD cores × 32 lanes.
+    pub vu_count: u32,
+    pub vu_cores: u32,
+    pub vu_lanes: u32,
+    /// Unified embedding memory (eDRAM), bytes. Paper: 21 MB.
+    pub uem_bytes: u64,
+    /// eDRAM banks (multi-banked so units can stream concurrently).
+    pub uem_banks: u32,
+    /// Tile hub (SRAM) bytes. Paper: 256 KB.
+    pub tile_hub_bytes: u64,
+    /// Off-chip bandwidth, bytes/s. Paper: HBM-1.0, 256 GB/s.
+    pub hbm_bytes_per_sec: f64,
+    /// Average HBM access latency in cycles (row activation + burst).
+    pub hbm_latency_cycles: u64,
+    /// Stream counts (paper: 1 dStream, 4 sStreams, 4 eStreams).
+    pub s_streams: u32,
+    pub e_streams: u32,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        ArchConfig {
+            freq_hz: 1.0e9,
+            mu_count: 1,
+            mu_rows: 32,
+            mu_cols: 128,
+            vu_count: 2,
+            vu_cores: 8,
+            vu_lanes: 32,
+            uem_bytes: 21 * 1024 * 1024,
+            uem_banks: 16,
+            tile_hub_bytes: 256 * 1024,
+            hbm_bytes_per_sec: 256.0e9,
+            hbm_latency_cycles: 64,
+            s_streams: 4,
+            e_streams: 4,
+        }
+    }
+}
+
+impl ArchConfig {
+    /// Peak MACs/cycle of one MU.
+    pub fn mu_macs_per_cycle(&self) -> u64 {
+        (self.mu_rows * self.mu_cols) as u64
+    }
+
+    /// SIMD lanes of one VU.
+    pub fn vu_width(&self) -> u64 {
+        (self.vu_cores * self.vu_lanes) as u64
+    }
+
+    /// Off-chip bytes per cycle.
+    pub fn hbm_bytes_per_cycle(&self) -> f64 {
+        self.hbm_bytes_per_sec / self.freq_hz
+    }
+
+    /// Peak FLOP/s (MACs count as 2 FLOPs) across MUs + VUs.
+    pub fn peak_flops(&self) -> f64 {
+        let mu = self.mu_count as f64 * self.mu_macs_per_cycle() as f64 * 2.0;
+        let vu = self.vu_count as f64 * self.vu_width() as f64;
+        (mu + vu) * self.freq_hz
+    }
+}
+
+/// Run parameters: model, dataset, tiling, optimization toggles.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    pub model: String,
+    pub dataset: String,
+    /// Dataset scale divisor (DESIGN.md §5): 1 = published size.
+    pub scale: u64,
+    pub feat_in: u32,
+    pub feat_out: u32,
+    pub tiling: crate::tiling::TilingConfig,
+    /// Compiler optimization level.
+    pub e2v: bool,
+    /// Execute functionally (compute embeddings) as well as timing.
+    pub functional: bool,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "gcn".into(),
+            dataset: "AK".into(),
+            scale: 64,
+            feat_in: 128,
+            feat_out: 128,
+            tiling: crate::tiling::TilingConfig::default(),
+            e2v: true,
+            functional: false,
+            seed: 42,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Parse an INI/TOML-lite document: `[section]` headers and
+/// `key = value` lines; `#`/`;` comments. Returns (section, key, value)
+/// triples in file order.
+pub fn parse_ini(text: &str) -> Result<Vec<(String, String, String)>, ConfigError> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| {
+                ConfigError(format!("line {}: unterminated section", lineno + 1))
+            })?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or_else(|| {
+            ConfigError(format!("line {}: expected key = value", lineno + 1))
+        })?;
+        let v = v.trim().trim_matches('"');
+        out.push((section.clone(), k.trim().to_string(), v.to_string()));
+    }
+    Ok(out)
+}
+
+/// Apply a config document to (arch, run). Unknown keys error loudly.
+pub fn apply(
+    text: &str,
+    arch: &mut ArchConfig,
+    run: &mut RunConfig,
+) -> Result<(), ConfigError> {
+    use crate::tiling::{Reorder, TilingMode};
+    for (section, key, value) in parse_ini(text)? {
+        let num = || -> Result<f64, ConfigError> {
+            value
+                .parse::<f64>()
+                .map_err(|_| ConfigError(format!("{section}.{key}: not a number: {value}")))
+        };
+        let boolean = || -> Result<bool, ConfigError> {
+            match value.as_str() {
+                "true" | "1" | "yes" => Ok(true),
+                "false" | "0" | "no" => Ok(false),
+                _ => Err(ConfigError(format!("{section}.{key}: not a bool: {value}"))),
+            }
+        };
+        match (section.as_str(), key.as_str()) {
+            ("arch", "freq_hz") => arch.freq_hz = num()?,
+            ("arch", "mu_count") => arch.mu_count = num()? as u32,
+            ("arch", "mu_rows") => arch.mu_rows = num()? as u32,
+            ("arch", "mu_cols") => arch.mu_cols = num()? as u32,
+            ("arch", "vu_count") => arch.vu_count = num()? as u32,
+            ("arch", "vu_cores") => arch.vu_cores = num()? as u32,
+            ("arch", "vu_lanes") => arch.vu_lanes = num()? as u32,
+            ("arch", "uem_mb") => arch.uem_bytes = (num()? * 1024.0 * 1024.0) as u64,
+            ("arch", "uem_banks") => arch.uem_banks = num()? as u32,
+            ("arch", "tile_hub_kb") => arch.tile_hub_bytes = (num()? * 1024.0) as u64,
+            ("arch", "hbm_gbps") => arch.hbm_bytes_per_sec = num()? * 1.0e9,
+            ("arch", "hbm_latency_cycles") => arch.hbm_latency_cycles = num()? as u64,
+            ("arch", "s_streams") => arch.s_streams = num()? as u32,
+            ("arch", "e_streams") => arch.e_streams = num()? as u32,
+            ("run", "model") => run.model = value.clone(),
+            ("run", "dataset") => run.dataset = value.clone(),
+            ("run", "scale") => run.scale = num()? as u64,
+            ("run", "feat_in") => run.feat_in = num()? as u32,
+            ("run", "feat_out") => run.feat_out = num()? as u32,
+            ("run", "e2v") => run.e2v = boolean()?,
+            ("run", "functional") => run.functional = boolean()?,
+            ("run", "seed") => run.seed = num()? as u64,
+            ("tiling", "dst_part") => run.tiling.dst_part = num()? as u32,
+            ("tiling", "src_part") => run.tiling.src_part = num()? as u32,
+            ("tiling", "mode") => {
+                run.tiling.mode = match value.as_str() {
+                    "regular" => TilingMode::Regular,
+                    "sparse" => TilingMode::Sparse,
+                    _ => return Err(ConfigError(format!("unknown tiling mode {value}"))),
+                }
+            }
+            ("tiling", "reorder") => {
+                run.tiling.reorder = match value.as_str() {
+                    "none" => Reorder::None,
+                    "in_degree" => Reorder::InDegree,
+                    "out_degree" => Reorder::OutDegree,
+                    _ => return Err(ConfigError(format!("unknown reorder {value}"))),
+                }
+            }
+            _ => {
+                return Err(ConfigError(format!(
+                    "unknown config key [{section}] {key}"
+                )))
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Render the effective configuration (for `zipper config --show`).
+pub fn show(arch: &ArchConfig, run: &RunConfig) -> String {
+    format!(
+        "[arch]\nfreq_hz = {}\nmu_count = {} ({}x{})\nvu_count = {} ({}x{} lanes)\n\
+         uem = {} ({} banks)\ntile_hub = {}\nhbm = {:.0} GB/s (latency {} cyc)\n\
+         streams = 1d/{}s/{}e\npeak = {:.2} TFLOP/s\n\n\
+         [run]\nmodel = {}\ndataset = {}\nscale = 1/{}\nfeat = {}x{}\n\
+         e2v = {}\nfunctional = {}\nseed = {}\n\n\
+         [tiling]\ndst_part = {}\nsrc_part = {}\nmode = {:?}\nreorder = {:?}\n",
+        arch.freq_hz,
+        arch.mu_count,
+        arch.mu_rows,
+        arch.mu_cols,
+        arch.vu_count,
+        arch.vu_cores,
+        arch.vu_lanes,
+        crate::util::fmt_bytes(arch.uem_bytes),
+        arch.uem_banks,
+        crate::util::fmt_bytes(arch.tile_hub_bytes),
+        arch.hbm_bytes_per_sec / 1.0e9,
+        arch.hbm_latency_cycles,
+        arch.s_streams,
+        arch.e_streams,
+        arch.peak_flops() / 1.0e12,
+        run.model,
+        run.dataset,
+        run.scale,
+        run.feat_in,
+        run.feat_out,
+        run.e2v,
+        run.functional,
+        run.seed,
+        run.tiling.dst_part,
+        run.tiling.src_part,
+        run.tiling.mode,
+        run.tiling.reorder,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table4() {
+        let a = ArchConfig::default();
+        assert_eq!(a.mu_rows * a.mu_cols, 32 * 128);
+        assert_eq!(a.vu_count, 2);
+        assert_eq!(a.vu_cores * a.vu_lanes, 256);
+        assert_eq!(a.uem_bytes, 21 * 1024 * 1024);
+        assert_eq!(a.tile_hub_bytes, 256 * 1024);
+        assert_eq!(a.s_streams, 4);
+        assert_eq!(a.e_streams, 4);
+        // 1 MU × 4096 MACs × 2 × 1 GHz + 2 VU × 256 × 1 GHz ≈ 8.7 TFLOPs
+        assert!((a.peak_flops() - 8.704e12).abs() / 8.704e12 < 1e-9);
+    }
+
+    #[test]
+    fn ini_parse_and_apply() {
+        let doc = r#"
+            # comment
+            [arch]
+            mu_count = 2
+            hbm_gbps = 512
+            [run]
+            model = "gat"
+            scale = 16
+            [tiling]
+            mode = regular
+            reorder = none
+        "#;
+        let mut arch = ArchConfig::default();
+        let mut run = RunConfig::default();
+        apply(doc, &mut arch, &mut run).unwrap();
+        assert_eq!(arch.mu_count, 2);
+        assert_eq!(arch.hbm_bytes_per_sec, 512.0e9);
+        assert_eq!(run.model, "gat");
+        assert_eq!(run.scale, 16);
+        assert_eq!(run.tiling.mode, crate::tiling::TilingMode::Regular);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut arch = ArchConfig::default();
+        let mut run = RunConfig::default();
+        assert!(apply("[arch]\nwarp_size = 32\n", &mut arch, &mut run).is_err());
+        assert!(apply("[arch\nx=1", &mut arch, &mut run).is_err());
+        assert!(apply("[arch]\nmu_count three\n", &mut arch, &mut run).is_err());
+    }
+
+    #[test]
+    fn show_roundtrips_key_facts() {
+        let s = show(&ArchConfig::default(), &RunConfig::default());
+        assert!(s.contains("mu_count = 1 (32x128)"));
+        assert!(s.contains("21.00 MB"));
+    }
+}

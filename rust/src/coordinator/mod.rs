@@ -1,0 +1,340 @@
+//! L3 coordinator: the serving front-end over the ZIPPER stack.
+//!
+//! Responsibilities:
+//!   * **Sessions** — prepare-once bundles: dataset → graph → tiling →
+//!     compiled SDE program → weights, cached per request key.
+//!   * **Serving** — a worker pool consuming inference requests from a
+//!     queue; each request runs the cycle-level simulator (timing +
+//!     energy) and optionally functional execution.
+//!   * **Validation** — the three-layer glue: execute the same tiles
+//!     through the PJRT-loaded JAX artifacts and compare against the
+//!     simulator's functional output (paper §8.1: "validate ... the
+//!     functionality of each operation and the tiling-based execution
+//!     against DGL" — our DGL is the L2 JAX model).
+
+pub mod validate;
+
+use crate::compiler::{compile, OptLevel, Program};
+use crate::config::{ArchConfig, RunConfig};
+use crate::energy::{EnergyCounters, EnergyModel};
+use crate::graph::{datasets, Graph};
+use crate::models::{ModelKind, WeightStore, NUM_RELATIONS};
+use crate::sim::{SimOptions, SimResult, Simulator, Workload};
+use crate::tiling::{tile, Tiling};
+use crate::util::Rng;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// A prepared inference session: everything reusable across requests.
+pub struct Session {
+    pub model: ModelKind,
+    pub graph: Graph,
+    pub tiling: Tiling,
+    pub program: Program,
+    pub weights: WeightStore,
+    pub feat_in: u32,
+    pub feat_out: u32,
+}
+
+impl Session {
+    /// Build a session from a run config (dataset registry + compiler).
+    pub fn prepare(run: &RunConfig) -> Result<Session, String> {
+        let model = ModelKind::parse(&run.model)
+            .ok_or_else(|| format!("unknown model {}", run.model))?;
+        let spec = datasets::by_id(&run.dataset)
+            .ok_or_else(|| format!("unknown dataset {}", run.dataset))?;
+        let etypes = if model.uses_etypes() { NUM_RELATIONS } else { 0 };
+        let graph = spec.instantiate_typed(run.scale, etypes, run.seed);
+        Self::from_graph(model, graph, run)
+    }
+
+    /// Build a session around an explicit graph (tests, examples).
+    pub fn from_graph(
+        model: ModelKind,
+        graph: Graph,
+        run: &RunConfig,
+    ) -> Result<Session, String> {
+        let feat_out = if model.requires_square() { run.feat_in } else { run.feat_out };
+        let tiling = tile(&graph, run.tiling);
+        let opt = if run.e2v { OptLevel::E2v } else { OptLevel::None };
+        let program = compile(&model.build(), opt).map_err(|e| e.to_string())?;
+        let weights = WeightStore::synthesize(&model.build(), run.feat_in, feat_out, run.seed);
+        Ok(Session { model, graph, tiling, program, weights, feat_in: run.feat_in, feat_out })
+    }
+
+    /// Deterministic input embeddings for this session's graph.
+    pub fn make_input(&self, seed: u64) -> Vec<f32> {
+        let n = self.graph.num_vertices() as usize * self.feat_in as usize;
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.next_f32_sym() * 0.5).collect()
+    }
+
+    /// Run the cycle-level simulation (optionally functional).
+    pub fn simulate(
+        &self,
+        arch: &ArchConfig,
+        functional: bool,
+        x: Option<&[f32]>,
+        trace_window: u64,
+    ) -> Result<SimResult, String> {
+        let wl = Workload {
+            program: &self.program,
+            tiling: &self.tiling,
+            weights: &self.weights,
+            feat_in: self.feat_in,
+            feat_out: self.feat_out,
+            x,
+        };
+        Simulator::new(arch, &wl, SimOptions { functional, trace_window }).run()
+    }
+}
+
+/// One inference request handled by the serving loop.
+#[derive(Clone, Debug)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub run: RunConfig,
+    /// Seed for the request's input embeddings.
+    pub input_seed: u64,
+}
+
+/// The response: simulated device time + host-side serving latency.
+#[derive(Clone, Debug)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub model: String,
+    pub dataset: String,
+    /// Simulated accelerator latency (cycles / seconds @ arch clock).
+    pub sim_cycles: u64,
+    pub sim_seconds: f64,
+    pub energy_j: f64,
+    /// Wall-clock serving latency (queue + prepare + simulate).
+    pub wall_seconds: f64,
+    /// Checksum of the output embeddings (functional runs).
+    pub output_checksum: Option<f64>,
+    pub error: Option<String>,
+}
+
+/// Session cache key.
+fn session_key(run: &RunConfig) -> String {
+    format!(
+        "{}|{}|{}|{}x{}|{:?}|{}",
+        run.model, run.dataset, run.scale, run.feat_in, run.feat_out, run.tiling, run.e2v
+    )
+}
+
+/// Multi-threaded serving coordinator.
+pub struct Coordinator {
+    tx: Option<mpsc::Sender<InferenceRequest>>,
+    rx_resp: mpsc::Receiver<InferenceResponse>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    submitted: u64,
+}
+
+impl Coordinator {
+    pub fn new(arch: ArchConfig, num_workers: usize) -> Coordinator {
+        let (tx, rx) = mpsc::channel::<InferenceRequest>();
+        let (tx_resp, rx_resp) = mpsc::channel::<InferenceResponse>();
+        let rx = Arc::new(Mutex::new(rx));
+        let sessions: Arc<Mutex<HashMap<String, Arc<Session>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let mut workers = Vec::new();
+        for _ in 0..num_workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let tx_resp = tx_resp.clone();
+            let sessions = Arc::clone(&sessions);
+            workers.push(std::thread::spawn(move || loop {
+                let req = {
+                    let guard = rx.lock().expect("queue lock");
+                    guard.recv()
+                };
+                let Ok(req) = req else { break };
+                let t0 = Instant::now();
+                let resp = handle(&arch, &sessions, &req, t0);
+                if tx_resp.send(resp).is_err() {
+                    break;
+                }
+            }));
+        }
+        Coordinator { tx: Some(tx), rx_resp, workers, submitted: 0 }
+    }
+
+    pub fn submit(&mut self, req: InferenceRequest) {
+        self.submitted += 1;
+        self.tx
+            .as_ref()
+            .expect("coordinator already drained")
+            .send(req)
+            .expect("worker pool alive");
+    }
+
+    /// Close the queue and collect all responses (arrival order).
+    pub fn drain(mut self) -> Vec<InferenceResponse> {
+        drop(self.tx.take());
+        let mut out = Vec::with_capacity(self.submitted as usize);
+        for _ in 0..self.submitted {
+            match self.rx_resp.recv() {
+                Ok(r) => out.push(r),
+                Err(_) => break,
+            }
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        out
+    }
+}
+
+fn handle(
+    arch: &ArchConfig,
+    sessions: &Mutex<HashMap<String, Arc<Session>>>,
+    req: &InferenceRequest,
+    t0: Instant,
+) -> InferenceResponse {
+    let key = session_key(&req.run);
+    let session = {
+        let mut cache = sessions.lock().expect("session lock");
+        match cache.get(&key) {
+            Some(s) => Ok(Arc::clone(s)),
+            None => match Session::prepare(&req.run) {
+                Ok(s) => {
+                    let s = Arc::new(s);
+                    cache.insert(key.clone(), Arc::clone(&s));
+                    Ok(s)
+                }
+                Err(e) => Err(e),
+            },
+        }
+    };
+    let base = InferenceResponse {
+        id: req.id,
+        model: req.run.model.clone(),
+        dataset: req.run.dataset.clone(),
+        sim_cycles: 0,
+        sim_seconds: 0.0,
+        energy_j: 0.0,
+        wall_seconds: 0.0,
+        output_checksum: None,
+        error: None,
+    };
+    let session = match session {
+        Ok(s) => s,
+        Err(e) => {
+            return InferenceResponse {
+                error: Some(e),
+                wall_seconds: t0.elapsed().as_secs_f64(),
+                ..base
+            }
+        }
+    };
+    let x;
+    let input = if req.run.functional {
+        x = session.make_input(req.input_seed);
+        Some(x)
+    } else {
+        None
+    };
+    match session.simulate(arch, req.run.functional, input.as_deref(), 0) {
+        Ok(res) => {
+            let energy = EnergyModel::default()
+                .evaluate(&counters_of(&res), arch.freq_hz)
+                .total_j();
+            InferenceResponse {
+                sim_cycles: res.cycles,
+                sim_seconds: res.seconds(arch),
+                energy_j: energy,
+                wall_seconds: t0.elapsed().as_secs_f64(),
+                output_checksum: res.output.map(|o| o.iter().map(|&v| v as f64).sum::<f64>()),
+                ..base
+            }
+        }
+        Err(e) => InferenceResponse {
+            error: Some(e),
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            ..base
+        },
+    }
+}
+
+fn counters_of(res: &SimResult) -> EnergyCounters {
+    res.counters
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tiling::{Reorder, TilingConfig, TilingMode};
+
+    fn small_run(model: &str, functional: bool) -> RunConfig {
+        RunConfig {
+            model: model.into(),
+            dataset: "CR".into(),
+            scale: 16,
+            feat_in: 16,
+            feat_out: 16,
+            tiling: TilingConfig {
+                dst_part: 64,
+                src_part: 64,
+                mode: TilingMode::Sparse,
+                reorder: Reorder::InDegree,
+            },
+            e2v: true,
+            functional,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn session_prepare_and_simulate() {
+        let run = small_run("gcn", true);
+        let s = Session::prepare(&run).unwrap();
+        let x = s.make_input(1);
+        let res = s.simulate(&ArchConfig::default(), true, Some(&x), 0).unwrap();
+        assert!(res.cycles > 0);
+        assert!(res.output.unwrap().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn coordinator_serves_batch() {
+        let mut c = Coordinator::new(ArchConfig::default(), 2);
+        for (i, m) in ["gcn", "gat", "sage"].iter().enumerate() {
+            c.submit(InferenceRequest {
+                id: i as u64,
+                run: small_run(m, false),
+                input_seed: i as u64,
+            });
+        }
+        let mut resp = c.drain();
+        assert_eq!(resp.len(), 3);
+        resp.sort_by_key(|r| r.id);
+        for r in &resp {
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert!(r.sim_cycles > 0);
+            assert!(r.energy_j > 0.0);
+        }
+    }
+
+    #[test]
+    fn session_cache_reused_across_requests() {
+        // identical keys → same dataset instantiation → same cycles
+        let mut c = Coordinator::new(ArchConfig::default(), 2);
+        for i in 0..4 {
+            c.submit(InferenceRequest { id: i, run: small_run("gcn", false), input_seed: i });
+        }
+        let resp = c.drain();
+        let cycles: Vec<u64> = resp.iter().map(|r| r.sim_cycles).collect();
+        assert!(cycles.windows(2).all(|w| w[0] == w[1]), "{cycles:?}");
+    }
+
+    #[test]
+    fn bad_model_reports_error() {
+        let mut c = Coordinator::new(ArchConfig::default(), 1);
+        let mut run = small_run("gcn", false);
+        run.model = "transformer".into();
+        c.submit(InferenceRequest { id: 0, run, input_seed: 0 });
+        let resp = c.drain();
+        assert!(resp[0].error.is_some());
+    }
+}

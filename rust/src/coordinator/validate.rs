@@ -1,0 +1,192 @@
+//! Three-layer cross-validation: simulator functional output vs the
+//! PJRT-executed JAX/Pallas artifacts (paper §8.1's DGL validation).
+//!
+//! Setup: a small graph tiled so each destination partition has exactly
+//! one tile (src_part ≥ |V|), padded to the artifact's static tile shape.
+//! For every partition we pack the tile's COO edges + embeddings into the
+//! artifact's argument layout, execute via PJRT, and compare against the
+//! simulator's functional output row-by-row.
+//!
+//! Numerics note: GAT's per-destination softmax is max-stabilized in the
+//! JAX oracle but algebraically unstabilized in the ISA program
+//! (DESIGN.md §6); with the test-scale weights the difference is ≪ 1e-3.
+
+use super::Session;
+use crate::config::{ArchConfig, RunConfig};
+use crate::graph::generators;
+use crate::models::ModelKind;
+use crate::runtime::{pack, ArgValue, Runtime, TileShape};
+use crate::tiling::{Reorder, TilingConfig, TilingMode};
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct ValidationReport {
+    pub model: String,
+    pub partitions: usize,
+    pub rows_compared: usize,
+    pub max_abs_err: f32,
+    pub mean_abs_err: f32,
+    pub tol: f32,
+    pub pass: bool,
+}
+
+/// Validate one model end-to-end against the artifact at `shape`.
+pub fn validate_model(
+    rt: &mut Runtime,
+    model: ModelKind,
+    shape: &TileShape,
+    seed: u64,
+) -> Result<ValidationReport> {
+    // graph sized to fit the artifact: one tile per partition
+    let v = shape.num_src.min(200);
+    let e = (shape.num_edges / 2).min(600) as u64;
+    let etypes = if model.uses_etypes() { crate::models::NUM_RELATIONS } else { 0 };
+    let graph = generators::power_law(v, e, 0.9, 0.9, etypes, seed);
+    let dst_part = shape.num_dst.min(64);
+    let run = RunConfig {
+        model: model.name().into(),
+        dataset: "synthetic".into(),
+        scale: 1,
+        feat_in: shape.feat_in,
+        feat_out: shape.feat_out,
+        tiling: TilingConfig {
+            dst_part,
+            src_part: v, // one source block ⇒ one tile per partition
+            mode: TilingMode::Sparse,
+            reorder: Reorder::None,
+        },
+        e2v: true,
+        functional: true,
+        seed,
+    };
+    let session = Session::from_graph(model, graph, &run)
+        .map_err(|e| anyhow!("session: {e}"))?;
+    let x = session.make_input(seed ^ 0x5eed);
+    let sim = session
+        .simulate(&ArchConfig::default(), true, Some(&x), 0)
+        .map_err(|e| anyhow!("simulate: {e}"))?;
+    let sim_out = sim.output.ok_or_else(|| anyhow!("no functional output"))?;
+
+    // Oracle path: per-partition PJRT execution.
+    let fi = shape.feat_in as usize;
+    let fo = shape.feat_out as usize;
+    let n = session.graph.num_vertices() as usize;
+    // permuted input (tiling may relabel; Reorder::None ⇒ identity, but
+    // keep the general path)
+    let mut x_tiled = vec![0.0f32; n * fi];
+    for old in 0..n {
+        let new = session.tiling.perm[old] as usize;
+        x_tiled[new * fi..(new + 1) * fi].copy_from_slice(&x[old * fi..(old + 1) * fi]);
+    }
+    let mut oracle_tiled = vec![0.0f32; n * fo];
+    for part in &session.tiling.partitions {
+        if part.tiles.is_empty() {
+            continue;
+        }
+        if part.tiles.len() != 1 {
+            bail!("validation tiling must give one tile per partition");
+        }
+        let tile = &part.tiles[0];
+        if tile.num_src() > shape.num_src || tile.num_edges() > shape.num_edges {
+            bail!(
+                "tile exceeds artifact shape: src {} edges {}",
+                tile.num_src(),
+                tile.num_edges()
+            );
+        }
+        // pack x_src rows (tile source vertices, tiled ids)
+        let mut xs = vec![0.0f32; tile.num_src() as usize * fi];
+        for (i, &gv) in tile.src_vertices.iter().enumerate() {
+            xs[i * fi..(i + 1) * fi]
+                .copy_from_slice(&x_tiled[gv as usize * fi..(gv as usize + 1) * fi]);
+        }
+        let x_src = pack::features(&xs, shape.num_src as usize, fi);
+        // pack x_dst rows (partition destinations)
+        let mut xd = vec![0.0f32; part.num_dst() as usize * fi];
+        for (i, gv) in (part.dst_start..part.dst_end).enumerate() {
+            xd[i * fi..(i + 1) * fi]
+                .copy_from_slice(&x_tiled[gv as usize * fi..(gv as usize + 1) * fi]);
+        }
+        let x_dst = pack::features(&xd, shape.num_dst as usize, fi);
+        let (src, dst, valid) = pack::edges(&tile.edges, shape.num_edges as usize);
+        let et = pack::etypes(
+            tile.etypes.as_deref().unwrap_or(&[]),
+            shape.num_edges as usize,
+        );
+
+        // weights in the artifact's argument order
+        let w = |name: &str| -> Result<ArgValue> {
+            let t = session
+                .weights
+                .tensors
+                .iter()
+                .find(|t| t.name == name)
+                .ok_or_else(|| anyhow!("weight {name} missing"))?;
+            let shape_v = if t.count > 1 {
+                vec![t.count as usize, t.rows as usize, t.cols as usize]
+            } else if t.cols == 1 {
+                vec![t.rows as usize]
+            } else {
+                vec![t.rows as usize, t.cols as usize]
+            };
+            Ok(ArgValue::F32 { data: t.data.clone(), shape: shape_v })
+        };
+        let zeros_bias = ArgValue::F32 { data: vec![0.0; fo], shape: vec![fo] };
+
+        let args: Vec<ArgValue> = match model {
+            ModelKind::Gcn => vec![x_src, src, dst, valid, w("w")?],
+            ModelKind::Gat => vec![
+                x_src, x_dst, src, dst, valid, w("w")?, w("a_src")?, w("a_dst")?,
+            ],
+            ModelKind::Sage => vec![
+                x_src, x_dst, src, dst, valid, w("w_pool")?, zeros_bias,
+                w("w_self")?, w("w_neigh")?,
+            ],
+            ModelKind::Ggnn => vec![
+                x_src, x_dst, src, dst, valid, w("w_msg")?, w("w_z")?, w("u_z")?,
+                w("w_r")?, w("u_r")?, w("w_h")?, w("u_h")?,
+            ],
+            ModelKind::Rgcn => vec![x_src, src, dst, et, valid, w("w_rel")?],
+        };
+        let out = rt.execute(model.name(), shape, &args)?;
+        // rows 0..num_dst are the real partition rows
+        for (i, gv) in (part.dst_start..part.dst_end).enumerate() {
+            oracle_tiled[gv as usize * fo..(gv as usize + 1) * fo]
+                .copy_from_slice(&out[i * fo..(i + 1) * fo]);
+        }
+    }
+    // un-permute the oracle output
+    let mut oracle = vec![0.0f32; n * fo];
+    for new in 0..n {
+        let old = session.tiling.inv_perm[new] as usize;
+        oracle[old * fo..(old + 1) * fo]
+            .copy_from_slice(&oracle_tiled[new * fo..(new + 1) * fo]);
+    }
+
+    let mut max_err = 0.0f32;
+    let mut sum_err = 0.0f64;
+    for (a, b) in sim_out.iter().zip(&oracle) {
+        let e = (a - b).abs();
+        max_err = max_err.max(e);
+        sum_err += e as f64;
+    }
+    let tol = 2e-3;
+    Ok(ValidationReport {
+        model: model.name().into(),
+        partitions: session.tiling.partitions.len(),
+        rows_compared: n,
+        max_abs_err: max_err,
+        mean_abs_err: (sum_err / sim_out.len() as f64) as f32,
+        tol,
+        pass: max_err < tol,
+    })
+}
+
+/// Validate every model that has an artifact at `shape`.
+pub fn validate_all(rt: &mut Runtime, shape: &TileShape, seed: u64) -> Result<Vec<ValidationReport>> {
+    let mut reports = Vec::new();
+    for m in ModelKind::ALL {
+        reports.push(validate_model(rt, m, shape, seed)?);
+    }
+    Ok(reports)
+}

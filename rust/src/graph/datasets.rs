@@ -1,0 +1,204 @@
+//! Dataset registry: paper Table 3 plus the HyGCN comparison sets.
+//!
+//! Each entry records the *published* vertex/edge counts and the
+//! generator family that matches its degree shape. `instantiate(scale)`
+//! builds a synthetic stand-in at `1/scale` of the published size
+//! (DESIGN.md §5: speedup ratios survive scaling; absolute cycles don't,
+//! and we only claim ratios). `scale = 1` gives the full published size.
+
+use super::{generators, Graph};
+
+/// Degree-shape family for the generator (see `generators`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Family {
+    /// Heavy-tailed: social/collaboration/citation networks.
+    PowerLaw { alpha_in: f64, alpha_out: f64 },
+    /// Near-uniform tiny degree: street networks.
+    StreetMesh,
+    /// Uniform random.
+    Uniform,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetSpec {
+    /// Short id used in benches and the paper's figures ("AK", "SL", ...).
+    pub id: &'static str,
+    pub name: &'static str,
+    pub vertices: u64,
+    pub edges: u64,
+    pub family: Family,
+    /// Paper Table 3 "Type" column.
+    pub kind: &'static str,
+}
+
+impl DatasetSpec {
+    /// Build the synthetic stand-in at 1/scale of the published size.
+    /// Vertex and edge counts are divided together so mean degree — and
+    /// with a Zipf family, the degree *shape* — is preserved.
+    pub fn instantiate(&self, scale: u64, seed: u64) -> Graph {
+        self.instantiate_typed(scale, 0, seed)
+    }
+
+    /// Same, with `num_etypes` random relation types (R-GCN; paper §8.1
+    /// "randomly generate the edge type for each benchmark graph").
+    pub fn instantiate_typed(&self, scale: u64, num_etypes: u8, seed: u64) -> Graph {
+        assert!(scale >= 1);
+        let v = (self.vertices / scale).max(64) as u32;
+        let e = (self.edges / scale).max(128);
+        match self.family {
+            Family::PowerLaw { alpha_in, alpha_out } => {
+                generators::power_law(v, e, alpha_in, alpha_out, num_etypes, seed)
+            }
+            Family::StreetMesh => generators::street_mesh_typed(v, e, num_etypes, seed),
+            Family::Uniform => generators::uniform_typed(v, e, num_etypes, seed),
+        }
+    }
+
+    /// Published mean degree (drives the analytic baseline models even
+    /// when the instantiated graph is scaled).
+    pub fn mean_degree(&self) -> f64 {
+        self.edges as f64 / self.vertices as f64
+    }
+}
+
+/// Paper Table 3.
+pub const TABLE3: [DatasetSpec; 6] = [
+    DatasetSpec {
+        id: "AK",
+        name: "ak2010",
+        vertices: 45_293,
+        edges: 108_549,
+        family: Family::Uniform,
+        kind: "Redistrict Set",
+    },
+    DatasetSpec {
+        id: "AD",
+        name: "coAuthorsDBLP",
+        vertices: 299_068,
+        edges: 977_676,
+        family: Family::PowerLaw { alpha_in: 0.9, alpha_out: 0.9 },
+        kind: "Citation Networks",
+    },
+    DatasetSpec {
+        id: "HW",
+        name: "hollywood-2009",
+        vertices: 1_139_905,
+        edges: 57_515_616,
+        family: Family::PowerLaw { alpha_in: 1.1, alpha_out: 1.1 },
+        kind: "Collaboration Networks",
+    },
+    DatasetSpec {
+        id: "CP",
+        name: "cit-Patents",
+        vertices: 3_774_768,
+        edges: 16_518_948,
+        family: Family::PowerLaw { alpha_in: 0.8, alpha_out: 0.8 },
+        kind: "Patent Networks",
+    },
+    DatasetSpec {
+        id: "SL",
+        name: "soc-LiveJournal1",
+        vertices: 4_847_571,
+        edges: 43_369_619,
+        family: Family::PowerLaw { alpha_in: 1.1, alpha_out: 1.1 },
+        kind: "Social Networks",
+    },
+    DatasetSpec {
+        id: "EO",
+        name: "europe-osm",
+        vertices: 50_912_018,
+        edges: 54_054_660,
+        family: Family::StreetMesh,
+        kind: "Street Networks",
+    },
+];
+
+/// HyGCN-comparison citation graphs (paper §8.4).
+pub const HYGCN_SETS: [DatasetSpec; 4] = [
+    DatasetSpec {
+        id: "CR",
+        name: "Cora",
+        vertices: 2_708,
+        edges: 10_556,
+        family: Family::PowerLaw { alpha_in: 0.7, alpha_out: 0.7 },
+        kind: "Citation",
+    },
+    DatasetSpec {
+        id: "CS",
+        name: "Citeseer",
+        vertices: 3_327,
+        edges: 9_104,
+        family: Family::PowerLaw { alpha_in: 0.7, alpha_out: 0.7 },
+        kind: "Citation",
+    },
+    DatasetSpec {
+        id: "PB",
+        name: "Pubmed",
+        vertices: 19_717,
+        edges: 88_648,
+        family: Family::PowerLaw { alpha_in: 0.8, alpha_out: 0.8 },
+        kind: "Citation",
+    },
+    DatasetSpec {
+        id: "RD",
+        name: "Reddit",
+        vertices: 232_965,
+        edges: 114_615_892,
+        family: Family::PowerLaw { alpha_in: 1.2, alpha_out: 1.2 },
+        kind: "Social",
+    },
+];
+
+pub fn by_id(id: &str) -> Option<&'static DatasetSpec> {
+    TABLE3
+        .iter()
+        .chain(HYGCN_SETS.iter())
+        .find(|d| d.id.eq_ignore_ascii_case(id) || d.name.eq_ignore_ascii_case(id))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_lookup() {
+        assert_eq!(by_id("SL").unwrap().name, "soc-LiveJournal1");
+        assert_eq!(by_id("cora").unwrap().id, "CR");
+        assert!(by_id("nope").is_none());
+    }
+
+    #[test]
+    fn instantiate_scales_counts() {
+        let spec = by_id("AD").unwrap();
+        let g = spec.instantiate(64, 1);
+        let v = g.num_vertices() as u64;
+        let e = g.num_edges();
+        assert!((v as i64 - (spec.vertices / 64) as i64).abs() <= 1);
+        assert!((e as i64 - (spec.edges / 64) as i64).abs() <= 1);
+        // mean degree preserved within 5%
+        let md = e as f64 / v as f64;
+        assert!((md - spec.mean_degree()).abs() / spec.mean_degree() < 0.05);
+    }
+
+    #[test]
+    fn street_vs_social_shape() {
+        let eo = by_id("EO").unwrap().instantiate(4096, 7);
+        let sl = by_id("SL").unwrap().instantiate(4096, 7);
+        assert!(sl.degree_stats().in_degree_gini > eo.degree_stats().in_degree_gini + 0.2);
+    }
+
+    #[test]
+    fn typed_instantiation() {
+        let g = by_id("AK").unwrap().instantiate_typed(16, 3, 9);
+        assert!(g.has_etypes());
+        assert!(g.etypes().unwrap().iter().all(|&t| t < 3));
+    }
+
+    #[test]
+    fn tiny_floor_respected() {
+        // extreme scale still yields a usable graph
+        let g = by_id("CR").unwrap().instantiate(1_000_000, 1);
+        assert!(g.num_vertices() >= 64);
+        assert!(g.num_edges() >= 128);
+    }
+}

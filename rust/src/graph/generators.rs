@@ -1,0 +1,175 @@
+//! Synthetic graph generators matched to the paper's dataset families.
+//!
+//! Three degree shapes cover Table 3 (DESIGN.md §5 substitution table):
+//!   * `power_law`  — RMAT-flavoured preferential attachment for the
+//!     social/collaboration/citation graphs (SL, HW, CP, AD, plus the
+//!     HyGCN citation sets). Heavy-tailed in- and out-degrees.
+//!   * `street_mesh` — near-uniform degree ≈ 1–3 lattice with local
+//!     shortcuts for europe-osm (EO): huge V, E ≈ V, almost no skew.
+//!   * `uniform`    — Erdős–Rényi-style for small control graphs (AK).
+//!
+//! All generators are deterministic in (shape parameters, seed).
+
+use super::{Graph, GraphBuilder};
+use crate::util::Rng;
+
+/// RMAT-style power-law digraph: vertices get Zipf-ranked endpoint
+/// probabilities on both sides, with a skew knob per side.
+///
+/// `alpha_in` / `alpha_out` ≈ 1.0–1.4 give social-network-like tails.
+pub fn power_law(
+    num_vertices: u32,
+    num_edges: u64,
+    alpha_in: f64,
+    alpha_out: f64,
+    num_etypes: u8,
+    seed: u64,
+) -> Graph {
+    assert!(num_vertices > 0);
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::with_capacity(num_vertices, num_edges as usize);
+    if num_etypes > 0 {
+        b.with_etypes();
+    }
+    // Random rank→vertex maps so the heavy hitters aren't ids 0..k —
+    // vertex ids carry no degree information until reordering (§5.3),
+    // exactly the situation the paper's Degree Sorting exploits.
+    let mut rank_to_v_in: Vec<u32> = (0..num_vertices).collect();
+    let mut rank_to_v_out: Vec<u32> = (0..num_vertices).collect();
+    rng.shuffle(&mut rank_to_v_in);
+    rng.shuffle(&mut rank_to_v_out);
+    for _ in 0..num_edges {
+        let s = rank_to_v_out[rng.zipf(num_vertices as u64, alpha_out) as usize];
+        let d = rank_to_v_in[rng.zipf(num_vertices as u64, alpha_in) as usize];
+        let t = if num_etypes > 0 {
+            rng.below(num_etypes as u64) as u8
+        } else {
+            0
+        };
+        b.add_edge_typed(s, d, t);
+    }
+    b.build()
+}
+
+/// Street-network-like mesh: a ring + nearest-neighbour lattice with a
+/// small fraction of short-range chords. Degree is nearly uniform and
+/// tiny (europe-osm has mean degree ≈ 1.06).
+pub fn street_mesh(num_vertices: u32, num_edges: u64, seed: u64) -> Graph {
+    street_mesh_typed(num_vertices, num_edges, 0, seed)
+}
+
+pub fn street_mesh_typed(
+    num_vertices: u32,
+    num_edges: u64,
+    num_etypes: u8,
+    seed: u64,
+) -> Graph {
+    assert!(num_vertices > 1);
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::with_capacity(num_vertices, num_edges as usize);
+    if num_etypes > 0 {
+        b.with_etypes();
+    }
+    let etype = |rng: &mut Rng| {
+        if num_etypes > 0 {
+            rng.below(num_etypes as u64) as u8
+        } else {
+            0
+        }
+    };
+    let n = num_vertices as u64;
+    let mut added = 0u64;
+    // ring backbone first (up to num_edges)
+    let backbone = n.min(num_edges);
+    for v in 0..backbone {
+        let t = etype(&mut rng);
+        b.add_edge_typed(v as u32, ((v + 1) % n) as u32, t);
+        added += 1;
+    }
+    // local chords: distance ≤ 8 hops, uniform endpoints
+    while added < num_edges {
+        let v = rng.below(n);
+        let hop = 2 + rng.below(7);
+        let t = etype(&mut rng);
+        b.add_edge_typed(v as u32, ((v + hop) % n) as u32, t);
+        added += 1;
+    }
+    b.build()
+}
+
+/// Erdős–Rényi-style uniform digraph (fixed edge count).
+pub fn uniform(num_vertices: u32, num_edges: u64, seed: u64) -> Graph {
+    uniform_typed(num_vertices, num_edges, 0, seed)
+}
+
+pub fn uniform_typed(
+    num_vertices: u32,
+    num_edges: u64,
+    num_etypes: u8,
+    seed: u64,
+) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::with_capacity(num_vertices, num_edges as usize);
+    if num_etypes > 0 {
+        b.with_etypes();
+    }
+    for _ in 0..num_edges {
+        let s = rng.below(num_vertices as u64) as u32;
+        let d = rng.below(num_vertices as u64) as u32;
+        let t = if num_etypes > 0 { rng.below(num_etypes as u64) as u8 } else { 0 };
+        b.add_edge_typed(s, d, t);
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_law_counts_and_skew() {
+        let g = power_law(2_000, 20_000, 1.2, 1.2, 0, 1);
+        assert_eq!(g.num_vertices(), 2_000);
+        assert_eq!(g.num_edges(), 20_000);
+        let s = g.degree_stats();
+        assert!(s.in_degree_gini > 0.45, "gini {}", s.in_degree_gini);
+        assert!(s.max_in_degree > 100, "max {}", s.max_in_degree);
+    }
+
+    #[test]
+    fn street_mesh_is_flat() {
+        let g = street_mesh(5_000, 5_300, 2);
+        assert_eq!(g.num_edges(), 5_300);
+        let s = g.degree_stats();
+        assert!(s.in_degree_gini < 0.25, "gini {}", s.in_degree_gini);
+        assert!(s.max_in_degree <= 6, "max {}", s.max_in_degree);
+    }
+
+    #[test]
+    fn uniform_is_between() {
+        let g = uniform(2_000, 20_000, 3);
+        let s = g.degree_stats();
+        assert!(s.in_degree_gini < 0.45, "gini {}", s.in_degree_gini);
+    }
+
+    #[test]
+    fn power_law_deterministic() {
+        let a = power_law(500, 2_000, 1.1, 1.1, 3, 42);
+        let b = power_law(500, 2_000, 1.1, 1.1, 3, 42);
+        assert_eq!(a.in_degrees(), b.in_degrees());
+        assert_eq!(a.etypes().unwrap(), b.etypes().unwrap());
+    }
+
+    #[test]
+    fn power_law_seeds_differ() {
+        let a = power_law(500, 2_000, 1.1, 1.1, 0, 1);
+        let b = power_law(500, 2_000, 1.1, 1.1, 0, 2);
+        assert_ne!(a.in_degrees(), b.in_degrees());
+    }
+
+    #[test]
+    fn etypes_within_bound() {
+        let g = power_law(200, 1_000, 1.0, 1.0, 3, 5);
+        assert!(g.etypes().unwrap().iter().all(|&t| t < 3));
+    }
+}

@@ -1,0 +1,86 @@
+//! Graph substrate: storage, builders, generators, and the dataset registry.
+//!
+//! The paper evaluates on six Gunrock graphs (Table 3) plus four citation
+//! graphs for the HyGCN comparison. Dataset files aren't available in this
+//! environment, so `datasets` provides synthetic generators matched to
+//! each graph's vertex/edge counts and degree *shape* (DESIGN.md §5 —
+//! tiling/pipelining behaviour depends on |V|, |E| and degree skew, which
+//! we match; absolute cycle counts scale with graph size, ratios don't).
+
+mod csr;
+pub mod datasets;
+pub mod generators;
+
+pub use csr::{Graph, GraphBuilder};
+
+/// Degree-distribution summary used to sanity-check generated graphs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DegreeStats {
+    pub num_vertices: u64,
+    pub num_edges: u64,
+    pub max_in_degree: u64,
+    pub mean_in_degree: f64,
+    /// Gini coefficient of the in-degree distribution: 0 = uniform,
+    /// → 1 = maximally skewed. Power-law graphs land well above street
+    /// meshes; the generators are tested against expected bands.
+    pub in_degree_gini: f64,
+}
+
+impl Graph {
+    pub fn degree_stats(&self) -> DegreeStats {
+        let n = self.num_vertices() as usize;
+        let mut degs: Vec<u64> = (0..n)
+            .map(|v| self.in_degree(v as u32) as u64)
+            .collect();
+        degs.sort_unstable();
+        let total: u64 = degs.iter().sum();
+        let max = degs.last().copied().unwrap_or(0);
+        // Gini over sorted degrees: (2 Σ i·x_i)/(n Σ x_i) − (n+1)/n
+        let gini = if total == 0 || n == 0 {
+            0.0
+        } else {
+            let weighted: f64 = degs
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| (i as f64 + 1.0) * d as f64)
+                .sum();
+            (2.0 * weighted) / (n as f64 * total as f64) - (n as f64 + 1.0) / n as f64
+        };
+        DegreeStats {
+            num_vertices: self.num_vertices() as u64,
+            num_edges: self.num_edges(),
+            max_in_degree: max,
+            mean_in_degree: total as f64 / n.max(1) as f64,
+            in_degree_gini: gini,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degree_stats_triangle() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(2, 0);
+        let g = b.build();
+        let s = g.degree_stats();
+        assert_eq!(s.num_edges, 3);
+        assert_eq!(s.max_in_degree, 1);
+        assert!((s.mean_in_degree - 1.0).abs() < 1e-12);
+        assert!(s.in_degree_gini.abs() < 1e-9); // perfectly uniform
+    }
+
+    #[test]
+    fn gini_detects_skew() {
+        let mut b = GraphBuilder::new(10);
+        for s in 0..9u32 {
+            b.add_edge(s, 9); // star: everything points at vertex 9
+        }
+        let g = b.build();
+        assert!(g.degree_stats().in_degree_gini > 0.8);
+    }
+}

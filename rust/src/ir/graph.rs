@@ -1,0 +1,440 @@
+//! The tensor-level model DAG and its builder / validator.
+
+use crate::isa::{ElwBinary, ElwUnary};
+use std::fmt;
+
+/// Symbolic feature dimension of a tensor's second axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FDim {
+    /// Model input embedding width (F).
+    In,
+    /// Model output embedding width (F').
+    Out,
+    /// Scalar column (attention scores, softmax denominators).
+    One,
+}
+
+/// What a tensor spans: all vertices, all edges, or parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Span {
+    Vertex,
+    Edge,
+    Param,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+/// Tensor-level operations — the vocabulary of the classic GNN
+/// programming model (paper Fig 5) plus explicit GOPs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    /// Vertex-spanning input embedding matrix (V, F).
+    InputV { name: &'static str },
+    /// Learned parameter. `rows`/`cols` are symbolic feature dims;
+    /// `count` > 1 is a stacked weight set (R-GCN relations).
+    Weight { name: &'static str, rows: FDim, cols: FDim, count: u8 },
+    /// Per-item matmul: (*, rows) @ (rows, cols).
+    Gemm { x: NodeId, w: NodeId },
+    /// Per-item matrix-vector: (*, rows) @ (rows, 1) → (*, 1).
+    Gemv { x: NodeId, w: NodeId },
+    ElwU { op: ElwUnary, x: NodeId },
+    ElwB { op: ElwBinary, a: NodeId, b: NodeId },
+    /// Broadcast a (*, 1) column over a (*, F) operand.
+    ElwBcast { op: ElwBinary, a: NodeId, vec: NodeId },
+    /// GOP: distribute source-vertex data onto out-edges (sendOutEdge-recvSrc).
+    ScatterOut { v: NodeId },
+    /// GOP: distribute destination-vertex data onto in-edges (sendInEdge-recvDst).
+    ScatterIn { v: NodeId },
+    /// GOP: reduce in-edge data per destination vertex (sendDstSum-recvInEdge).
+    GatherSum { e: NodeId },
+    GatherMax { e: NodeId },
+    /// Index-guided batched matmul over edges: per-edge weight from a
+    /// stacked set, selected by the edge's relation type (R-GCN).
+    BmmByType { e: NodeId, wset: NodeId },
+    /// Model output (vertex-spanning).
+    OutputV { x: NodeId, name: &'static str },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Node {
+    pub id: NodeId,
+    pub op: Op,
+}
+
+/// The model DAG. Nodes are append-only; `NodeId` indexes `nodes`.
+#[derive(Clone, Debug, Default)]
+pub struct ModelGraph {
+    pub nodes: Vec<Node>,
+    pub name: String,
+}
+
+#[derive(Debug)]
+pub struct IrError(pub String);
+
+impl fmt::Display for IrError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "IR error: {}", self.0)
+    }
+}
+
+impl std::error::Error for IrError {}
+
+impl ModelGraph {
+    pub fn new(name: &str) -> Self {
+        ModelGraph { nodes: Vec::new(), name: name.to_string() }
+    }
+
+    pub fn push(&mut self, op: Op) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(Node { id, op });
+        id
+    }
+
+    // -- builder sugar -----------------------------------------------------
+
+    pub fn input_v(&mut self, name: &'static str) -> NodeId {
+        self.push(Op::InputV { name })
+    }
+
+    pub fn weight(&mut self, name: &'static str, rows: FDim, cols: FDim) -> NodeId {
+        self.push(Op::Weight { name, rows, cols, count: 1 })
+    }
+
+    pub fn weight_set(
+        &mut self,
+        name: &'static str,
+        rows: FDim,
+        cols: FDim,
+        count: u8,
+    ) -> NodeId {
+        self.push(Op::Weight { name, rows, cols, count })
+    }
+
+    pub fn gemm(&mut self, x: NodeId, w: NodeId) -> NodeId {
+        self.push(Op::Gemm { x, w })
+    }
+
+    pub fn gemv(&mut self, x: NodeId, w: NodeId) -> NodeId {
+        self.push(Op::Gemv { x, w })
+    }
+
+    pub fn unary(&mut self, op: ElwUnary, x: NodeId) -> NodeId {
+        self.push(Op::ElwU { op, x })
+    }
+
+    pub fn binary(&mut self, op: ElwBinary, a: NodeId, b: NodeId) -> NodeId {
+        self.push(Op::ElwB { op, a, b })
+    }
+
+    pub fn bcast(&mut self, op: ElwBinary, a: NodeId, vec: NodeId) -> NodeId {
+        self.push(Op::ElwBcast { op, a, vec })
+    }
+
+    pub fn scatter_out(&mut self, v: NodeId) -> NodeId {
+        self.push(Op::ScatterOut { v })
+    }
+
+    pub fn scatter_in(&mut self, v: NodeId) -> NodeId {
+        self.push(Op::ScatterIn { v })
+    }
+
+    pub fn gather_sum(&mut self, e: NodeId) -> NodeId {
+        self.push(Op::GatherSum { e })
+    }
+
+    pub fn gather_max(&mut self, e: NodeId) -> NodeId {
+        self.push(Op::GatherMax { e })
+    }
+
+    pub fn bmm_by_type(&mut self, e: NodeId, wset: NodeId) -> NodeId {
+        self.push(Op::BmmByType { e, wset })
+    }
+
+    pub fn output_v(&mut self, x: NodeId, name: &'static str) -> NodeId {
+        self.push(Op::OutputV { x, name })
+    }
+
+    // -- structure ----------------------------------------------------------
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0 as usize]
+    }
+
+    pub fn inputs_of(&self, id: NodeId) -> Vec<NodeId> {
+        match self.node(id).op {
+            Op::InputV { .. } | Op::Weight { .. } => vec![],
+            Op::Gemm { x, w } | Op::Gemv { x, w } => vec![x, w],
+            Op::ElwU { x, .. } => vec![x],
+            Op::ElwB { a, b, .. } => vec![a, b],
+            Op::ElwBcast { a, vec, .. } => vec![a, vec],
+            Op::ScatterOut { v } | Op::ScatterIn { v } => vec![v],
+            Op::GatherSum { e } | Op::GatherMax { e } => vec![e],
+            Op::BmmByType { e, wset } => vec![e, wset],
+            Op::OutputV { x, .. } => vec![x],
+        }
+    }
+
+    pub fn outputs(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::OutputV { .. }))
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Span (vertex / edge / param) of every node, or a type error.
+    /// Enforces the §6.1 invariant: only GOPs change the span.
+    /// Handles forward references (E2V appends hoisted nodes at the end).
+    pub fn spans(&self) -> Result<Vec<Span>, IrError> {
+        let mut spans: Vec<Option<Span>> = vec![None; self.nodes.len()];
+        // resolve in dependency order via an explicit worklist
+        let mut order: Vec<NodeId> = Vec::with_capacity(self.nodes.len());
+        {
+            let mut state = vec![0u8; self.nodes.len()]; // 0=unseen 1=open 2=done
+            for start in 0..self.nodes.len() as u32 {
+                let mut stack = vec![(NodeId(start), false)];
+                while let Some((id, expanded)) = stack.pop() {
+                    let i = id.0 as usize;
+                    if state[i] == 2 {
+                        continue;
+                    }
+                    if expanded {
+                        state[i] = 2;
+                        order.push(id);
+                        continue;
+                    }
+                    if state[i] == 1 {
+                        return Err(IrError(format!("cycle through node {:?}", id)));
+                    }
+                    state[i] = 1;
+                    stack.push((id, true));
+                    for inp in self.inputs_of(id) {
+                        if state[inp.0 as usize] != 2 {
+                            stack.push((inp, false));
+                        }
+                    }
+                }
+            }
+        }
+        for id in order {
+            let n = &self.nodes[id.0 as usize];
+            let get = |x: NodeId| -> Span { spans[x.0 as usize].expect("topo order") };
+            let s = match &n.op {
+                Op::InputV { .. } => Span::Vertex,
+                Op::Weight { .. } => Span::Param,
+                Op::Gemm { x, w } | Op::Gemv { x, w } => {
+                    if get(*w) != Span::Param {
+                        return Err(IrError(format!(
+                            "node {:?}: GEMM weight operand must be a parameter",
+                            n.id
+                        )));
+                    }
+                    get(*x)
+                }
+                Op::ElwU { x, .. } => get(*x),
+                Op::ElwB { a, b, .. } => {
+                    if get(*a) != get(*b) {
+                        return Err(IrError(format!(
+                            "node {:?}: ELW operands span {:?} vs {:?}",
+                            n.id, get(*a), get(*b)
+                        )));
+                    }
+                    get(*a)
+                }
+                Op::ElwBcast { a, vec, .. } => {
+                    if get(*a) != get(*vec) {
+                        return Err(IrError(format!(
+                            "node {:?}: broadcast operands span {:?} vs {:?}",
+                            n.id, get(*a), get(*vec)
+                        )));
+                    }
+                    get(*a)
+                }
+                Op::ScatterOut { v } | Op::ScatterIn { v } => {
+                    if get(*v) != Span::Vertex {
+                        return Err(IrError(format!(
+                            "node {:?}: scatter input must span vertices",
+                            n.id
+                        )));
+                    }
+                    Span::Edge
+                }
+                Op::GatherSum { e } | Op::GatherMax { e } => {
+                    if get(*e) != Span::Edge {
+                        return Err(IrError(format!(
+                            "node {:?}: gather input must span edges",
+                            n.id
+                        )));
+                    }
+                    Span::Vertex
+                }
+                Op::BmmByType { e, wset } => {
+                    if get(*e) != Span::Edge || get(*wset) != Span::Param {
+                        return Err(IrError(format!(
+                            "node {:?}: BMM needs edge data and a weight set",
+                            n.id
+                        )));
+                    }
+                    Span::Edge
+                }
+                Op::OutputV { x, .. } => {
+                    if get(*x) != Span::Vertex {
+                        return Err(IrError(format!(
+                            "node {:?}: output must span vertices",
+                            n.id
+                        )));
+                    }
+                    Span::Vertex
+                }
+            };
+            spans[id.0 as usize] = Some(s);
+        }
+        Ok(spans.into_iter().map(|s| s.expect("all nodes visited")).collect())
+    }
+
+    /// Feature width (symbolic) of every node's second axis.
+    /// Handles forward references like `spans()`.
+    pub fn fdims(&self) -> Vec<FDim> {
+        let mut out: Vec<Option<FDim>> = vec![None; self.nodes.len()];
+        fn resolve(g: &ModelGraph, id: NodeId, out: &mut Vec<Option<FDim>>) -> FDim {
+            if let Some(d) = out[id.0 as usize] {
+                return d;
+            }
+            let d = match &g.nodes[id.0 as usize].op {
+                Op::InputV { .. } => FDim::In,
+                Op::Weight { cols, .. } => *cols,
+                Op::Gemm { w, .. } => resolve(g, *w, out),
+                Op::Gemv { .. } => FDim::One,
+                Op::ElwU { x, .. } => resolve(g, *x, out),
+                Op::ElwB { a, .. } => resolve(g, *a, out),
+                Op::ElwBcast { a, .. } => resolve(g, *a, out),
+                Op::ScatterOut { v } | Op::ScatterIn { v } => resolve(g, *v, out),
+                Op::GatherSum { e } | Op::GatherMax { e } => resolve(g, *e, out),
+                Op::BmmByType { wset, .. } => resolve(g, *wset, out),
+                Op::OutputV { x, .. } => resolve(g, *x, out),
+            };
+            out[id.0 as usize] = Some(d);
+            d
+        }
+        for i in 0..self.nodes.len() as u32 {
+            resolve(self, NodeId(i), &mut out);
+        }
+        out.into_iter().map(|d| d.expect("resolved")).collect()
+    }
+
+    /// Nodes reachable (backwards) from any output — the live set.
+    pub fn live_set(&self) -> Vec<bool> {
+        let mut live = vec![false; self.nodes.len()];
+        let mut stack = self.outputs();
+        while let Some(id) = stack.pop() {
+            if live[id.0 as usize] {
+                continue;
+            }
+            live[id.0 as usize] = true;
+            stack.extend(self.inputs_of(id));
+        }
+        live
+    }
+
+    /// Count of live operations by coarse class (GOP / GEMM / ELW) — the
+    /// paper's §2 primitive-op taxonomy, used by workload characterization.
+    pub fn op_mix(&self) -> OpMix {
+        let live = self.live_set();
+        let mut mix = OpMix::default();
+        for n in &self.nodes {
+            if !live[n.id.0 as usize] {
+                continue;
+            }
+            match n.op {
+                Op::Gemm { .. } | Op::Gemv { .. } | Op::BmmByType { .. } => {
+                    mix.gemm += 1
+                }
+                Op::ElwU { .. } | Op::ElwB { .. } | Op::ElwBcast { .. } => {
+                    mix.elw += 1
+                }
+                Op::ScatterOut { .. }
+                | Op::ScatterIn { .. }
+                | Op::GatherSum { .. }
+                | Op::GatherMax { .. } => mix.gop += 1,
+                _ => {}
+            }
+        }
+        mix
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpMix {
+    pub gemm: u32,
+    pub elw: u32,
+    pub gop: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gcn() -> ModelGraph {
+        let mut g = ModelGraph::new("gcn");
+        let x = g.input_v("x");
+        let e = g.scatter_out(x);
+        let agg = g.gather_sum(e);
+        let w = g.weight("w", FDim::In, FDim::Out);
+        let h = g.gemm(agg, w);
+        g.output_v(h, "h");
+        g
+    }
+
+    #[test]
+    fn gcn_spans() {
+        let g = gcn();
+        let spans = g.spans().unwrap();
+        assert_eq!(spans[0], Span::Vertex); // x
+        assert_eq!(spans[1], Span::Edge); // scatter
+        assert_eq!(spans[2], Span::Vertex); // gather
+        assert_eq!(spans[3], Span::Param); // w
+        assert_eq!(spans[4], Span::Vertex); // gemm
+    }
+
+    #[test]
+    fn gcn_op_mix() {
+        let mix = gcn().op_mix();
+        assert_eq!(mix, OpMix { gemm: 1, elw: 0, gop: 2 });
+    }
+
+    #[test]
+    fn span_mismatch_rejected() {
+        let mut g = ModelGraph::new("bad");
+        let x = g.input_v("x");
+        let e = g.scatter_out(x);
+        // ELW between a vertex tensor and an edge tensor is ill-typed
+        g.binary(ElwBinary::Add, x, e);
+        assert!(g.spans().is_err());
+    }
+
+    #[test]
+    fn gather_of_vertex_rejected() {
+        let mut g = ModelGraph::new("bad2");
+        let x = g.input_v("x");
+        g.push(Op::GatherSum { e: x });
+        assert!(g.spans().is_err());
+    }
+
+    #[test]
+    fn dead_nodes_detected() {
+        let mut g = gcn();
+        let dead = g.input_v("unused");
+        let live = g.live_set();
+        assert!(!live[dead.0 as usize]);
+        assert!(live[0]);
+    }
+
+    #[test]
+    fn fdims_track_weights() {
+        let g = gcn();
+        let d = g.fdims();
+        assert_eq!(d[0], FDim::In);
+        assert_eq!(d[4], FDim::Out); // gemm output takes weight cols
+    }
+}

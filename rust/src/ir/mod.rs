@@ -1,0 +1,24 @@
+//! Graph-native GNN IR (paper §6, Table 1).
+//!
+//! A GNN model enters as a *tensor-level DAG* — the shape a user writes in
+//! DGL/PyG, where vertex and edge sets are whole tensors and GOPs
+//! (scatter/gather) move data between them. The IR machinery:
+//!
+//!   * type-checks the DAG (vertex/edge span consistency — the "tensor
+//!     types are changed only by the GOPs" invariant of paper §6.1),
+//!   * runs the **E2V (edge-to-vertex) optimization** (§6.2): operations
+//!     on edges whose inputs derive from a single scatter are commuted
+//!     before the scatter, eliminating per-edge recomputation,
+//!   * eliminates dead operations,
+//!   * splits the DAG at GOPs into **segments** labeled `IR.v.x` /
+//!     `IR.e.x` (§6.1 step 1) for inspection and codegen.
+//!
+//! The compiler (`crate::compiler`) lowers the optimized DAG into SDE
+//! functions of ZIPPER ISA instructions.
+
+pub mod e2v;
+pub mod graph;
+pub mod segment;
+
+pub use graph::{FDim, ModelGraph, Node, NodeId, Op, Span};
+pub use segment::{split_segments, Segment, SegmentKind};

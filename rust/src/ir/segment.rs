@@ -1,0 +1,215 @@
+//! Segment split (paper §6.1 step 1): cut the DAG at GOPs into
+//! disconnected vertex/edge segments, each a DAG of single-item
+//! operations with send/recv markers at the cut points.
+//!
+//! Segments are the unit the paper's Fig 8b shows (`IR.v.x` / `IR.e.x`)
+//! and what the codegen walks. A GOP `ScatterOut{v}` becomes a
+//! `sendOutEdge` exit in v's (vertex) segment and a `recvSrc` entry in
+//! the consuming (edge) segment; gathers analogously.
+
+use super::graph::{ModelGraph, NodeId, Op, Span};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SegmentKind {
+    Vertex,
+    Edge,
+}
+
+/// Communication port created by splitting a GOP.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Port {
+    /// The GOP node in the original DAG this port came from.
+    pub gop: NodeId,
+    /// e.g. "sendOutEdge", "recvSrc", "sendDstSum", "recvInEdge".
+    pub role: &'static str,
+    /// The data node flowing through the port (producer side) or the
+    /// GOP node standing in for received data (consumer side).
+    pub data: NodeId,
+}
+
+#[derive(Clone, Debug)]
+pub struct Segment {
+    /// Label like "IR.v.0" / "IR.e.1" (paper notation).
+    pub label: String,
+    pub kind: SegmentKind,
+    /// Member (non-GOP) nodes, in original id order.
+    pub nodes: Vec<NodeId>,
+    pub sends: Vec<Port>,
+    pub recvs: Vec<Port>,
+}
+
+/// Split a (well-typed) model DAG into segments.
+pub fn split_segments(g: &ModelGraph) -> Vec<Segment> {
+    let spans = g.spans().expect("split_segments requires a well-typed DAG");
+    let live = g.live_set();
+
+    // union-find over live non-GOP, non-param nodes; edges of the DAG
+    // that don't cross a GOP keep nodes in the same segment
+    let n = g.nodes.len();
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    fn find(parent: &mut [u32], x: u32) -> u32 {
+        let mut r = x;
+        while parent[r as usize] != r {
+            r = parent[r as usize];
+        }
+        let mut c = x;
+        while parent[c as usize] != r {
+            let next = parent[c as usize];
+            parent[c as usize] = r;
+            c = next;
+        }
+        r
+    }
+    let is_gop = |id: NodeId| {
+        matches!(
+            g.node(id).op,
+            Op::ScatterOut { .. }
+                | Op::ScatterIn { .. }
+                | Op::GatherSum { .. }
+                | Op::GatherMax { .. }
+        )
+    };
+    let is_member = |id: NodeId| {
+        live[id.0 as usize]
+            && !is_gop(id)
+            && spans[id.0 as usize] != Span::Param
+            && !matches!(g.node(id).op, Op::Weight { .. })
+    };
+
+    for node in &g.nodes {
+        if !is_member(node.id) {
+            continue;
+        }
+        for inp in g.inputs_of(node.id) {
+            if is_member(inp) && spans[inp.0 as usize] == spans[node.id.0 as usize] {
+                let (a, b) = (find(&mut parent, node.id.0), find(&mut parent, inp.0));
+                parent[a as usize] = b;
+            }
+        }
+    }
+
+    // group members by root
+    let mut groups: BTreeMap<u32, Vec<NodeId>> = BTreeMap::new();
+    for node in &g.nodes {
+        if is_member(node.id) {
+            let r = find(&mut parent, node.id.0);
+            groups.entry(r).or_default().push(node.id);
+        }
+    }
+
+    // attach send/recv ports from GOPs
+    let mut segments: Vec<Segment> = Vec::new();
+    let mut v_count = 0;
+    let mut e_count = 0;
+    for (_, nodes) in groups {
+        let kind = match spans[nodes[0].0 as usize] {
+            Span::Vertex => SegmentKind::Vertex,
+            Span::Edge => SegmentKind::Edge,
+            Span::Param => unreachable!("params excluded"),
+        };
+        let label = match kind {
+            SegmentKind::Vertex => {
+                v_count += 1;
+                format!("IR.v.{}", v_count - 1)
+            }
+            SegmentKind::Edge => {
+                e_count += 1;
+                format!("IR.e.{}", e_count - 1)
+            }
+        };
+        let mut sends = Vec::new();
+        let mut recvs = Vec::new();
+        let in_seg =
+            |id: NodeId| nodes.binary_search(&id).is_ok();
+        for gop in g.nodes.iter().filter(|x| live[x.id.0 as usize] && is_gop(x.id)) {
+            let (producer, send_role, recv_role) = match gop.op {
+                Op::ScatterOut { v } => (v, "sendOutEdge", "recvSrc"),
+                Op::ScatterIn { v } => (v, "sendInEdge", "recvDst"),
+                Op::GatherSum { e } => (e, "sendDstSum", "recvInEdge"),
+                Op::GatherMax { e } => (e, "sendDstMax", "recvInEdge"),
+                _ => unreachable!(),
+            };
+            // producer side: the feeding node lives in this segment
+            if in_seg(producer) {
+                sends.push(Port { gop: gop.id, role: send_role, data: producer });
+            }
+            // consumer side: some member consumes the GOP node
+            let consumed_here = nodes.iter().any(|&m| {
+                g.inputs_of(m).contains(&gop.id)
+            });
+            if consumed_here {
+                recvs.push(Port { gop: gop.id, role: recv_role, data: gop.id });
+            }
+        }
+        segments.push(Segment { label, kind, nodes, sends, recvs });
+    }
+    segments
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::graph::FDim;
+    use crate::isa::ElwBinary;
+
+    fn gcn() -> ModelGraph {
+        let mut g = ModelGraph::new("gcn");
+        let x = g.input_v("x");
+        let e = g.scatter_out(x);
+        let agg = g.gather_sum(e);
+        let w = g.weight("w", FDim::In, FDim::Out);
+        let h = g.gemm(agg, w);
+        g.output_v(h, "h");
+        g
+    }
+
+    #[test]
+    fn gcn_splits_into_three_segments() {
+        // vertex(x) | edge(identity pass-through has no member ops!) |
+        // vertex(gemm+output). The edge segment vanishes because GCN
+        // applies no edge computation — gather consumes scatter directly.
+        let segs = split_segments(&gcn());
+        let v: Vec<_> = segs.iter().filter(|s| s.kind == SegmentKind::Vertex).collect();
+        assert_eq!(v.len(), 2);
+        // producer vertex segment sends out-edge data
+        assert!(v[0].sends.iter().any(|p| p.role == "sendOutEdge"));
+        // consumer vertex segment receives gathered data
+        assert!(v[1].recvs.iter().any(|p| p.role == "recvInEdge"));
+    }
+
+    #[test]
+    fn edge_segment_appears_with_edge_ops() {
+        let mut g = ModelGraph::new("m");
+        let x = g.input_v("x");
+        let a = g.scatter_out(x);
+        let b = g.scatter_in(x);
+        let e = g.binary(ElwBinary::Add, a, b); // real edge op
+        let out = g.gather_sum(e);
+        g.output_v(out, "h");
+        let segs = split_segments(&g);
+        let edges: Vec<_> = segs.iter().filter(|s| s.kind == SegmentKind::Edge).collect();
+        assert_eq!(edges.len(), 1);
+        assert_eq!(edges[0].label, "IR.e.0");
+        let roles: Vec<_> = edges[0].recvs.iter().map(|p| p.role).collect();
+        assert!(roles.contains(&"recvSrc"));
+        assert!(roles.contains(&"recvDst"));
+        assert!(edges[0].sends.iter().any(|p| p.role == "sendDstSum"));
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        let segs = split_segments(&gcn());
+        let labels: Vec<_> = segs.iter().map(|s| s.label.as_str()).collect();
+        assert_eq!(labels, vec!["IR.v.0", "IR.v.1"]);
+    }
+
+    #[test]
+    fn dead_branches_excluded() {
+        let mut g = gcn();
+        let dead = g.input_v("dead");
+        let _dead2 = g.scatter_out(dead);
+        let segs = split_segments(&g);
+        assert_eq!(segs.len(), 2); // unchanged
+    }
+}

@@ -1,0 +1,441 @@
+//! ZIPPER ISA (paper Table 2): computational, data-transfer, and
+//! synchronization instructions.
+//!
+//! Instructions are *coarse-grained* — one instruction operates on all
+//! edges or vertices of a tile (paper §6.1) — and live in SDE functions
+//! shared by every tile. Tile-dependent operand sizes are therefore
+//! symbolic (`Dim`): a stream binds a concrete tile at `FCH.TILE` and the
+//! dims resolve against that tile's metadata, exactly how the hardware's
+//! tile-id operand works.
+//!
+//! Buffer operands (`BufId`) name slots in the unified embedding memory;
+//! the compiler performs the (static) slot assignment per function.
+
+use std::fmt;
+
+/// Embedding-memory buffer slot (compiler-assigned, frame-local).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BufId(pub u16);
+
+/// Model-weight table index (weights are resident in the MU weight buffer
+/// / UEM for the whole run; paper §7.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct WeightId(pub u16);
+
+/// Symbolic dimension, resolved against the bound tile / partition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dim {
+    Const(u32),
+    /// Source vertices of the bound tile.
+    TileSrc,
+    /// Edges of the bound tile.
+    TileEdges,
+    /// Destination vertices of the bound partition.
+    PartDst,
+    FeatIn,
+    FeatOut,
+}
+
+/// Concrete tile geometry a stream binds at FCH.TILE (plus model feats).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DimCtx {
+    pub tile_src: u32,
+    pub tile_edges: u32,
+    pub part_dst: u32,
+    pub feat_in: u32,
+    pub feat_out: u32,
+}
+
+impl Dim {
+    pub fn resolve(self, ctx: &DimCtx) -> u32 {
+        match self {
+            Dim::Const(c) => c,
+            Dim::TileSrc => ctx.tile_src,
+            Dim::TileEdges => ctx.tile_edges,
+            Dim::PartDst => ctx.part_dst,
+            Dim::FeatIn => ctx.feat_in,
+            Dim::FeatOut => ctx.feat_out,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ElwUnary {
+    Exp,
+    Relu,
+    LeakyRelu,
+    Sigmoid,
+    Tanh,
+    Neg,
+    /// 1 − x (GRU update-gate complement; counts as one VU op).
+    OneMinus,
+    /// 1 / x.
+    Recip,
+    /// 1 / x with a zero guard: 0 → 0. The VU's divider returns the
+    /// additive identity for empty-gather denominators (destinations
+    /// with no in-edges), matching the Gather unit's empty-segment
+    /// convention.
+    Recip0,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ElwBinary {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Reduce {
+    Sum,
+    Max,
+}
+
+/// Scatter direction (paper: SCTR.OUTE distributes source-vertex data to
+/// out-edges; SCTR.INE distributes destination-vertex data to in-edges).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SctrDir {
+    OutEdge,
+    InEdge,
+}
+
+/// LD target (paper: LD.DST / LD.SRC / LD.EDGE).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LdTarget {
+    /// Destination-partition embeddings (one per partition).
+    Dst,
+    /// Tile source-vertex embeddings (per tile; sparse-tiling sensitive).
+    Src,
+    /// Tile edge list into the Tile Hub (per tile).
+    Edge,
+}
+
+/// Which stream class a SIGNAL wakes (the paper's SIGNAL.E generalized:
+/// our protocol needs d→s, s→e, and e→d wakeups; see compiler docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StreamClass {
+    S,
+    E,
+    D,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Instr {
+    // ---- computational: ELW (VU) ------------------------------------
+    ElwU {
+        op: ElwUnary,
+        src: BufId,
+        dst: BufId,
+        rows: Dim,
+        cols: Dim,
+    },
+    ElwB {
+        op: ElwBinary,
+        a: BufId,
+        b: BufId,
+        dst: BufId,
+        rows: Dim,
+        cols: Dim,
+    },
+    /// Broadcast a column vector (rows×1) over a (rows×cols) operand.
+    ElwBcast {
+        op: ElwBinary,
+        a: BufId,
+        vec: BufId,
+        dst: BufId,
+        rows: Dim,
+        cols: Dim,
+    },
+    /// Matrix-vector product: (rows×cols) @ weight(cols×1) → (rows×1).
+    Gemv {
+        src: BufId,
+        weight: WeightId,
+        dst: BufId,
+        rows: Dim,
+        cols: Dim,
+    },
+    // ---- computational: GEMM (MU) -----------------------------------
+    Gemm {
+        src: BufId,
+        weight: WeightId,
+        dst: BufId,
+        m: Dim,
+        k: Dim,
+        n: Dim,
+        /// Accumulate into dst instead of overwrite (partition acc).
+        accumulate: bool,
+    },
+    /// Index-guided batched matmul (R-GCN): per-edge weight selected by
+    /// the tile's edge-type array; src is per-edge features.
+    Bmm {
+        src: BufId,
+        weights: WeightId,
+        dst: BufId,
+        m: Dim,
+        k: Dim,
+        n: Dim,
+    },
+    // ---- computational: GOP (VU, edge-list guided) ------------------
+    Sctr {
+        dir: SctrDir,
+        src: BufId,
+        dst: BufId,
+        cols: Dim,
+    },
+    Gthr {
+        reduce: Reduce,
+        src: BufId,
+        dst: BufId,
+        cols: Dim,
+        /// Accumulate into the partition accumulator across tiles.
+        accumulate: bool,
+    },
+    // ---- data transfer ----------------------------------------------
+    Ld {
+        target: LdTarget,
+        dst: BufId,
+        rows: Dim,
+        cols: Dim,
+    },
+    St {
+        src: BufId,
+        rows: Dim,
+        cols: Dim,
+    },
+    // ---- synchronization ---------------------------------------------
+    /// Wake one idle stream of the class (paper SIGNAL.E).
+    Signal { class: StreamClass },
+    /// Block until `count` signals addressed to this stream arrive.
+    Wait { count: Dim },
+    /// Bind the next tile of the current partition; None left → branch
+    /// to `on_empty` offset (relative jump within the function).
+    FchTile { on_empty: i32 },
+    /// Bind the next partition; none left → halt the stream.
+    FchPtt,
+    /// Publish partition results / advance partition bookkeeping.
+    UpdPtt,
+    /// Check whether all tiles of the bound partition completed; if so,
+    /// signal the dStream (paper CHK.PTT).
+    ChkPtt,
+    /// Unconditional relative jump (loop closing; implicit in the
+    /// paper's stream semantics, explicit in our encoding).
+    Jump(i32),
+    Halt,
+}
+
+/// Execution resource an instruction occupies (dispatcher routing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum UnitClass {
+    Mu,
+    Vu,
+    Mem,
+    Sync,
+}
+
+impl Instr {
+    pub fn unit(&self) -> UnitClass {
+        match self {
+            Instr::Gemm { .. } | Instr::Bmm { .. } => UnitClass::Mu,
+            Instr::ElwU { .. }
+            | Instr::ElwB { .. }
+            | Instr::ElwBcast { .. }
+            | Instr::Gemv { .. }
+            | Instr::Sctr { .. }
+            | Instr::Gthr { .. } => UnitClass::Vu,
+            Instr::Ld { .. } | Instr::St { .. } => UnitClass::Mem,
+            _ => UnitClass::Sync,
+        }
+    }
+
+    /// Useful FLOPs of this instruction under `ctx` (energy + baselines).
+    pub fn flops(&self, ctx: &DimCtx) -> u64 {
+        let r = |d: Dim| d.resolve(ctx) as u64;
+        match self {
+            Instr::ElwU { rows, cols, .. } => r(*rows) * r(*cols),
+            Instr::ElwB { rows, cols, .. } | Instr::ElwBcast { rows, cols, .. } => {
+                r(*rows) * r(*cols)
+            }
+            Instr::Gemv { rows, cols, .. } => 2 * r(*rows) * r(*cols),
+            Instr::Gemm { m, k, n, .. } | Instr::Bmm { m, k, n, .. } => {
+                2 * r(*m) * r(*k) * r(*n)
+            }
+            Instr::Sctr { cols, .. } => r(Dim::TileEdges) * r(*cols),
+            Instr::Gthr { cols, .. } => r(Dim::TileEdges) * r(*cols),
+            _ => 0,
+        }
+    }
+
+    /// Off-chip bytes moved (data-transfer instructions only).
+    pub fn dram_bytes(&self, ctx: &DimCtx) -> u64 {
+        let r = |d: Dim| d.resolve(ctx) as u64;
+        match self {
+            Instr::Ld { target: LdTarget::Edge, .. } => {
+                // COO pair per edge (paper stores tiles in COO/CSC)
+                r(Dim::TileEdges) * 8
+            }
+            Instr::Ld { rows, cols, .. } | Instr::St { rows, cols, .. } => {
+                r(*rows) * r(*cols) * 4
+            }
+            _ => 0,
+        }
+    }
+}
+
+impl fmt::Display for Instr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fn d(x: Dim) -> String {
+            match x {
+                Dim::Const(c) => c.to_string(),
+                Dim::TileSrc => "S".into(),
+                Dim::TileEdges => "E".into(),
+                Dim::PartDst => "D".into(),
+                Dim::FeatIn => "Fi".into(),
+                Dim::FeatOut => "Fo".into(),
+            }
+        }
+        match self {
+            Instr::ElwU { op, src, dst, rows, cols } => write!(
+                f,
+                "ELW.{op:?} b{} -> b{} [{}x{}]",
+                src.0, dst.0, d(*rows), d(*cols)
+            ),
+            Instr::ElwB { op, a, b, dst, rows, cols } => write!(
+                f,
+                "ELW.{op:?} b{} b{} -> b{} [{}x{}]",
+                a.0, b.0, dst.0, d(*rows), d(*cols)
+            ),
+            Instr::ElwBcast { op, a, vec, dst, rows, cols } => write!(
+                f,
+                "ELW.{op:?}.BCAST b{} v:b{} -> b{} [{}x{}]",
+                a.0, vec.0, dst.0, d(*rows), d(*cols)
+            ),
+            Instr::Gemv { src, weight, dst, rows, cols } => write!(
+                f,
+                "GEMV b{} w{} -> b{} [{}x{}]",
+                src.0, weight.0, dst.0, d(*rows), d(*cols)
+            ),
+            Instr::Gemm { src, weight, dst, m, k, n, accumulate } => write!(
+                f,
+                "GEMM{} b{} w{} -> b{} [{}x{}x{}]",
+                if *accumulate { ".ACC" } else { "" },
+                src.0, weight.0, dst.0, d(*m), d(*k), d(*n)
+            ),
+            Instr::Bmm { src, weights, dst, m, k, n } => write!(
+                f,
+                "BMM b{} w{} -> b{} [{}x{}x{}]",
+                src.0, weights.0, dst.0, d(*m), d(*k), d(*n)
+            ),
+            Instr::Sctr { dir, src, dst, cols } => write!(
+                f,
+                "SCTR.{} b{} -> b{} [Ex{}]",
+                match dir { SctrDir::OutEdge => "OUTE", SctrDir::InEdge => "INE" },
+                src.0, dst.0, d(*cols)
+            ),
+            Instr::Gthr { reduce, src, dst, cols, accumulate } => write!(
+                f,
+                "GTHR.DST.{}{} b{} -> b{} [Dx{}]",
+                match reduce { Reduce::Sum => "SUM", Reduce::Max => "MAX" },
+                if *accumulate { ".ACC" } else { "" },
+                src.0, dst.0, d(*cols)
+            ),
+            Instr::Ld { target, dst, rows, cols } => write!(
+                f,
+                "LD.{} -> b{} [{}x{}]",
+                match target {
+                    LdTarget::Dst => "DST",
+                    LdTarget::Src => "SRC",
+                    LdTarget::Edge => "EDGE",
+                },
+                dst.0, d(*rows), d(*cols)
+            ),
+            Instr::St { src, rows, cols } => {
+                write!(f, "ST.DST b{} [{}x{}]", src.0, d(*rows), d(*cols))
+            }
+            Instr::Signal { class } => write!(f, "SIGNAL.{class:?}"),
+            Instr::Wait { count } => write!(f, "WAIT [{}]", d(*count)),
+            Instr::FchTile { on_empty } => write!(f, "FCH.TILE (empty->{on_empty:+})"),
+            Instr::FchPtt => write!(f, "FCH.PTT"),
+            Instr::UpdPtt => write!(f, "UPD.PTT"),
+            Instr::ChkPtt => write!(f, "CHK.PTT"),
+            Instr::Jump(off) => write!(f, "JUMP {off:+}"),
+            Instr::Halt => write!(f, "HALT"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> DimCtx {
+        DimCtx { tile_src: 100, tile_edges: 400, part_dst: 64, feat_in: 128, feat_out: 32 }
+    }
+
+    #[test]
+    fn dims_resolve() {
+        let c = ctx();
+        assert_eq!(Dim::Const(7).resolve(&c), 7);
+        assert_eq!(Dim::TileSrc.resolve(&c), 100);
+        assert_eq!(Dim::TileEdges.resolve(&c), 400);
+        assert_eq!(Dim::PartDst.resolve(&c), 64);
+        assert_eq!(Dim::FeatIn.resolve(&c), 128);
+        assert_eq!(Dim::FeatOut.resolve(&c), 32);
+    }
+
+    #[test]
+    fn unit_routing_matches_table2() {
+        // GEMM class → MU; ELW + GOP → VU (paper §7.1 routes GOPs to VU);
+        // LD/ST → memory controller; sync → scheduler.
+        let gemm = Instr::Gemm {
+            src: BufId(0), weight: WeightId(0), dst: BufId(1),
+            m: Dim::TileSrc, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+        };
+        assert_eq!(gemm.unit(), UnitClass::Mu);
+        let gthr = Instr::Gthr {
+            reduce: Reduce::Sum, src: BufId(0), dst: BufId(1),
+            cols: Dim::FeatOut, accumulate: true,
+        };
+        assert_eq!(gthr.unit(), UnitClass::Vu);
+        let ld = Instr::Ld {
+            target: LdTarget::Src, dst: BufId(0),
+            rows: Dim::TileSrc, cols: Dim::FeatIn,
+        };
+        assert_eq!(ld.unit(), UnitClass::Mem);
+        assert_eq!(Instr::FchPtt.unit(), UnitClass::Sync);
+    }
+
+    #[test]
+    fn gemm_flops() {
+        let c = ctx();
+        let gemm = Instr::Gemm {
+            src: BufId(0), weight: WeightId(0), dst: BufId(1),
+            m: Dim::TileSrc, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+        };
+        assert_eq!(gemm.flops(&c), 2 * 100 * 128 * 32);
+    }
+
+    #[test]
+    fn ld_bytes() {
+        let c = ctx();
+        let ld = Instr::Ld {
+            target: LdTarget::Src, dst: BufId(0),
+            rows: Dim::TileSrc, cols: Dim::FeatIn,
+        };
+        assert_eq!(ld.dram_bytes(&c), 100 * 128 * 4);
+        let lde = Instr::Ld {
+            target: LdTarget::Edge, dst: BufId(0),
+            rows: Dim::TileEdges, cols: Dim::Const(1),
+        };
+        assert_eq!(lde.dram_bytes(&c), 400 * 8);
+    }
+
+    #[test]
+    fn display_is_readable() {
+        let i = Instr::Sctr {
+            dir: SctrDir::OutEdge, src: BufId(2), dst: BufId(3), cols: Dim::FeatOut,
+        };
+        assert_eq!(format!("{i}"), "SCTR.OUTE b2 -> b3 [ExFo]");
+    }
+}

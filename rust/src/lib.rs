@@ -1,0 +1,36 @@
+//! # ZIPPER — tile- and operator-level parallel GNN acceleration
+//!
+//! A production-quality reproduction of *ZIPPER: Exploiting Tile- and
+//! Operator-level Parallelism for General and Scalable Graph Neural
+//! Network Acceleration* (Zhang et al., 2021) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's full system: graph substrate,
+//!   tiling engine, graph-native GNN IR + compiler, ZIPPER ISA,
+//!   cycle-level accelerator simulator with functional execution, energy
+//!   and area models, analytic CPU/GPU/HyGCN baselines, and a serving
+//!   coordinator.
+//! * **L2 (python/compile)** — the five GNN models in JAX, AOT-lowered
+//!   once to HLO text artifacts executed via PJRT (`runtime`) as the
+//!   numerical oracle.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the compute
+//!   hot-spots (MU-tiled GEMM, GOP scatter/gather, fused ELW).
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod area;
+pub mod baselines;
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod graph;
+pub mod ir;
+pub mod isa;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod sim;
+pub mod tiling;
+pub mod util;

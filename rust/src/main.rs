@@ -1,0 +1,302 @@
+//! `zipper` CLI — leader entrypoint for the ZIPPER reproduction.
+//!
+//! Subcommands:
+//!   config    show the effective architecture/run configuration
+//!   compile   compile a model to SDE functions and print the listing
+//!   run       tile + simulate one (model, dataset) and print metrics
+//!   serve     serve a batch of inference requests via the coordinator
+//!   validate  cross-validate simulator vs PJRT artifacts (all models)
+//!   datasets  list the dataset registry
+//!
+//! Arguments are `--key value` pairs (dependency-free parser; see
+//! `Args`). `--config FILE` loads an INI/TOML-lite document first; CLI
+//! flags override it.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::process::ExitCode;
+
+use zipper::compiler::{compile, OptLevel};
+use zipper::config::{self, ArchConfig, RunConfig};
+use zipper::coordinator::{validate, Coordinator, InferenceRequest, Session};
+use zipper::energy::EnergyModel;
+use zipper::graph::datasets;
+use zipper::metrics::Table;
+use zipper::models::ModelKind;
+use zipper::runtime::{Runtime, TileShape};
+use zipper::util;
+
+/// Minimal `--key value` / `--flag` argument parser.
+struct Args {
+    positional: Vec<String>,
+    named: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut named = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let next_is_value =
+                    argv.get(i + 1).map(|v| !v.starts_with("--")).unwrap_or(false);
+                if next_is_value {
+                    named.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    named.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, named }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.named.get(key).map(|s| s.as_str())
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+fn build_configs(args: &Args) -> Result<(ArchConfig, RunConfig), String> {
+    let mut arch = ArchConfig::default();
+    let mut run = RunConfig::default();
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        config::apply(&text, &mut arch, &mut run).map_err(|e| e.to_string())?;
+    }
+    if let Some(v) = args.get("model") {
+        run.model = v.to_string();
+    }
+    if let Some(v) = args.get("dataset") {
+        run.dataset = v.to_string();
+    }
+    if let Some(v) = args.get("scale") {
+        run.scale = v.parse().map_err(|_| "bad --scale")?;
+    }
+    if let Some(v) = args.get("feat") {
+        let f: u32 = v.parse().map_err(|_| "bad --feat")?;
+        run.feat_in = f;
+        run.feat_out = f;
+    }
+    if let Some(v) = args.get("s-streams") {
+        arch.s_streams = v.parse().map_err(|_| "bad --s-streams")?;
+    }
+    if let Some(v) = args.get("e-streams") {
+        arch.e_streams = v.parse().map_err(|_| "bad --e-streams")?;
+    }
+    if let Some(v) = args.get("mu") {
+        arch.mu_count = v.parse().map_err(|_| "bad --mu")?;
+    }
+    if let Some(v) = args.get("vu") {
+        arch.vu_count = v.parse().map_err(|_| "bad --vu")?;
+    }
+    if args.flag("no-e2v") {
+        run.e2v = false;
+    }
+    if args.flag("functional") {
+        run.functional = true;
+    }
+    Ok((arch, run))
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match real_main(&argv) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn real_main(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "config" => {
+            let (arch, run) = build_configs(&args)?;
+            print!("{}", config::show(&arch, &run));
+            Ok(())
+        }
+        "datasets" => {
+            let mut t = Table::new(&["id", "name", "|V|", "|E|", "type"]);
+            for d in datasets::TABLE3.iter().chain(datasets::HYGCN_SETS.iter()) {
+                t.row(&[
+                    d.id.into(),
+                    d.name.into(),
+                    d.vertices.to_string(),
+                    d.edges.to_string(),
+                    d.kind.into(),
+                ]);
+            }
+            print!("{}", t.render());
+            Ok(())
+        }
+        "compile" => {
+            let (_, run) = build_configs(&args)?;
+            let model = ModelKind::parse(&run.model)
+                .ok_or_else(|| format!("unknown model {}", run.model))?;
+            let opt = if run.e2v { OptLevel::E2v } else { OptLevel::None };
+            let p = compile(&model.build(), opt).map_err(|e| e.to_string())?;
+            println!("{}", p.disassemble());
+            if let Some(stats) = p.e2v {
+                println!("; e2v: hoisted {} ops in {} rounds", stats.hoisted, stats.rounds);
+            }
+            Ok(())
+        }
+        "run" => {
+            let (arch, run) = build_configs(&args)?;
+            let session = Session::prepare(&run)?;
+            let x;
+            let input = if run.functional {
+                x = session.make_input(run.seed);
+                Some(x.as_slice())
+            } else {
+                None
+            };
+            let t0 = std::time::Instant::now();
+            let res = session.simulate(&arch, run.functional, input, 0)?;
+            let wall = t0.elapsed().as_secs_f64();
+            let e = EnergyModel::default().evaluate(&res.counters, arch.freq_hz);
+            println!("model={} dataset={} scale=1/{}", run.model, run.dataset, run.scale);
+            println!(
+                "graph: |V|={} |E|={}  tiles={} (mode {:?}, reorder {:?})",
+                session.graph.num_vertices(),
+                session.graph.num_edges(),
+                session.tiling.num_tiles(),
+                run.tiling.mode,
+                run.tiling.reorder,
+            );
+            println!(
+                "cycles={} ({})  instructions={}",
+                res.cycles,
+                util::fmt_time_at(res.cycles, arch.freq_hz),
+                res.instructions
+            );
+            println!(
+                "busy: MU {:.1}%  VU {:.1}%  MEM {:.1}%",
+                100.0 * res.mu_busy as f64 / (res.cycles.max(1) as f64 * arch.mu_count as f64),
+                100.0 * res.vu_busy as f64 / (res.cycles.max(1) as f64 * arch.vu_count as f64),
+                100.0 * res.mem_busy as f64 / res.cycles.max(1) as f64,
+            );
+            println!(
+                "dram: read {} write {}",
+                util::fmt_bytes(res.dram_read_bytes),
+                util::fmt_bytes(res.dram_write_bytes)
+            );
+            println!(
+                "energy: {:.6} J (hbm {:.1}%)",
+                e.total_j(),
+                100.0 * e.hbm_j / e.total_j()
+            );
+            if let Some(out) = res.output {
+                let sum: f64 = out.iter().map(|&v| v as f64).sum();
+                println!("output checksum: {sum:.6}");
+            }
+            println!("host wall time: {wall:.3}s");
+            Ok(())
+        }
+        "serve" => {
+            let (arch, run) = build_configs(&args)?;
+            let n: u64 = args
+                .get("requests")
+                .unwrap_or("16")
+                .parse()
+                .map_err(|_| "bad --requests")?;
+            let workers: usize = args
+                .get("workers")
+                .unwrap_or("4")
+                .parse()
+                .map_err(|_| "bad --workers")?;
+            let models = ["gcn", "gat", "sage", "ggnn", "rgcn"];
+            let mut c = Coordinator::new(arch, workers);
+            let t0 = std::time::Instant::now();
+            for i in 0..n {
+                let mut r = run.clone();
+                r.model = models[i as usize % models.len()].to_string();
+                c.submit(InferenceRequest { id: i, run: r, input_seed: i });
+            }
+            let mut resp = c.drain();
+            let wall = t0.elapsed().as_secs_f64();
+            resp.sort_by_key(|r| r.id);
+            let mut t = Table::new(&["id", "model", "sim cycles", "sim time", "energy", "wall"]);
+            for r in &resp {
+                t.row(&[
+                    r.id.to_string(),
+                    r.model.clone(),
+                    r.sim_cycles.to_string(),
+                    format!("{:.3} ms", r.sim_seconds * 1e3),
+                    format!("{:.3} mJ", r.energy_j * 1e3),
+                    format!("{:.1} ms", r.wall_seconds * 1e3),
+                ]);
+            }
+            print!("{}", t.render());
+            let errors = resp.iter().filter(|r| r.error.is_some()).count();
+            println!(
+                "served {n} requests on {workers} workers in {wall:.3}s \
+                 ({:.1} req/s), {errors} errors",
+                n as f64 / wall
+            );
+            Ok(())
+        }
+        "validate" => {
+            let dir = args.get("artifacts").unwrap_or("artifacts");
+            let mut rt = Runtime::new(Path::new(dir)).map_err(|e| e.to_string())?;
+            println!("PJRT platform: {}", rt.platform());
+            let shape = TileShape {
+                num_src: 64,
+                num_dst: 64,
+                num_edges: 256,
+                feat_in: 32,
+                feat_out: 32,
+            };
+            let reports =
+                validate::validate_all(&mut rt, &shape, 17).map_err(|e| e.to_string())?;
+            let mut t =
+                Table::new(&["model", "partitions", "rows", "max err", "mean err", "pass"]);
+            let mut all_pass = true;
+            for r in &reports {
+                all_pass &= r.pass;
+                t.row(&[
+                    r.model.clone(),
+                    r.partitions.to_string(),
+                    r.rows_compared.to_string(),
+                    format!("{:.2e}", r.max_abs_err),
+                    format!("{:.2e}", r.mean_abs_err),
+                    if r.pass { "ok".into() } else { "FAIL".into() },
+                ]);
+            }
+            print!("{}", t.render());
+            if all_pass {
+                println!("all models match the PJRT oracle");
+                Ok(())
+            } else {
+                Err("validation failed".into())
+            }
+        }
+        _ => {
+            println!(
+                "zipper — tile- and operator-level parallel GNN acceleration\n\n\
+                 usage: zipper <command> [--key value ...]\n\n\
+                 commands:\n  \
+                 config    show effective configuration (--config FILE to load)\n  \
+                 datasets  list the dataset registry (paper Table 3 + HyGCN sets)\n  \
+                 compile   print SDE functions (--model gat [--no-e2v])\n  \
+                 run       simulate (--model gcn --dataset SL --scale 64 [--functional])\n  \
+                 serve     batch serving demo (--requests 16 --workers 4)\n  \
+                 validate  cross-validate simulator vs PJRT artifacts"
+            );
+            Ok(())
+        }
+    }
+}

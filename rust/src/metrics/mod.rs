@@ -1,0 +1,209 @@
+//! Metrics: per-unit utilization counters, phase traces (Fig 3-style),
+//! and tabular emitters shared by the benches.
+
+use std::fmt::Write as _;
+
+/// Phase label for trace samples (the paper's Fig 3 annotations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Gemm,
+    Elw,
+    Gop,
+    Mem,
+    Idle,
+}
+
+impl Phase {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Phase::Gemm => "GEMM",
+            Phase::Elw => "ELW",
+            Phase::Gop => "GOP",
+            Phase::Mem => "MEM",
+            Phase::Idle => "idle",
+        }
+    }
+}
+
+/// One windowed sample of the execution trace.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSample {
+    pub cycle: u64,
+    /// FLOP efficiency in the window: useful FLOPs / peak FLOPs.
+    pub flop_eff: f64,
+    /// DRAM bandwidth utilization in the window.
+    pub dram_util: f64,
+    /// Dominant primitive in the window.
+    pub phase: Phase,
+}
+
+/// Windowed trace recorder. The simulator adds (cycle, flops, bytes,
+/// phase-weight) events; samples are aggregated per window.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    window: u64,
+    peak_flops_per_cycle: f64,
+    peak_bytes_per_cycle: f64,
+    // accumulation for the open window
+    cur_start: u64,
+    cur_flops: f64,
+    cur_bytes: f64,
+    cur_phase_w: [f64; 4], // Gemm, Elw, Gop, Mem
+    pub samples: Vec<TraceSample>,
+}
+
+impl Trace {
+    pub fn new(window: u64, peak_flops_per_cycle: f64, peak_bytes_per_cycle: f64) -> Self {
+        Trace {
+            window: window.max(1),
+            peak_flops_per_cycle,
+            peak_bytes_per_cycle,
+            cur_start: 0,
+            cur_flops: 0.0,
+            cur_bytes: 0.0,
+            cur_phase_w: [0.0; 4],
+            samples: Vec::new(),
+        }
+    }
+
+    /// Record `flops` and `bytes` of work occupying [start, end) cycles.
+    pub fn record(&mut self, start: u64, end: u64, flops: u64, bytes: u64, phase: Phase) {
+        // flush completed windows
+        while start >= self.cur_start + self.window {
+            self.flush();
+        }
+        let dur = (end - start).max(1) as f64;
+        self.cur_flops += flops as f64;
+        self.cur_bytes += bytes as f64;
+        let idx = match phase {
+            Phase::Gemm => 0,
+            Phase::Elw => 1,
+            Phase::Gop => 2,
+            Phase::Mem => 3,
+            Phase::Idle => return,
+        };
+        self.cur_phase_w[idx] += dur;
+    }
+
+    fn flush(&mut self) {
+        let w = self.window as f64;
+        let dominant = {
+            let m = self
+                .cur_phase_w
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            if *m.1 == 0.0 {
+                Phase::Idle
+            } else {
+                [Phase::Gemm, Phase::Elw, Phase::Gop, Phase::Mem][m.0]
+            }
+        };
+        self.samples.push(TraceSample {
+            cycle: self.cur_start,
+            flop_eff: (self.cur_flops / (w * self.peak_flops_per_cycle)).min(1.0),
+            dram_util: (self.cur_bytes / (w * self.peak_bytes_per_cycle)).min(1.0),
+            phase: dominant,
+        });
+        self.cur_start += self.window;
+        self.cur_flops = 0.0;
+        self.cur_bytes = 0.0;
+        self.cur_phase_w = [0.0; 4];
+    }
+
+    /// Flush the trailing window and return the samples.
+    pub fn finish(mut self) -> Vec<TraceSample> {
+        self.flush();
+        self.samples
+    }
+}
+
+/// Fixed-width table printer used by every bench (stable, diffable rows).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "{:<w$}  ", c, w = widths[i]);
+            }
+            out.push('\n');
+        };
+        fmt_row(&mut out, &self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            fmt_row(&mut out, r);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_windows_and_dominance() {
+        let mut t = Trace::new(100, 10.0, 8.0);
+        t.record(0, 50, 500, 0, Phase::Gemm); // window 0: 50% flop eff
+        t.record(50, 90, 10, 100, Phase::Gop);
+        t.record(150, 200, 0, 400, Phase::Mem); // window 1: 50% dram util
+        let s = t.finish();
+        assert_eq!(s.len(), 2);
+        assert!((s[0].flop_eff - 0.51).abs() < 0.01);
+        assert_eq!(s[0].phase, Phase::Gemm);
+        assert_eq!(s[1].phase, Phase::Mem);
+        assert!((s[1].dram_util - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_clamps_to_one() {
+        let mut t = Trace::new(10, 1.0, 1.0);
+        t.record(0, 10, 1_000, 1_000, Phase::Gemm);
+        let s = t.finish();
+        assert_eq!(s[0].flop_eff, 1.0);
+        assert_eq!(s[0].dram_util, 1.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "speedup"]);
+        t.row(&["gcn".into(), "93.6x".into()]);
+        t.row(&["gat".into(), "1.2x".into()]);
+        let r = t.render();
+        assert!(r.contains("model"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x".into()]);
+    }
+}

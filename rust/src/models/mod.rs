@@ -1,0 +1,303 @@
+//! GNN model zoo (paper §8.1): GCN, GAT, SAGE-maxpool, GGNN, R-GCN.
+//!
+//! Models are defined in their *naive* tensor-level form — the direct
+//! transcription of the DGL/PyG code a user writes (paper Fig 5), with
+//! per-edge operations where the textbook formulation puts them. The
+//! compiler's E2V pass then hoists what can be hoisted; Fig 12 measures
+//! exactly that delta (naive vs compiler-optimized schedules).
+//!
+//! GAT softmax note: under tiled execution a per-destination softmax
+//! needs all tiles of a partition before normalizing. We use the exact
+//! algebraic rewrite out_j = (Σ exp(e_ij)·z_i) / (Σ exp(e_ij)) — both
+//! sums are tile-accumulable gathers, and the division happens once per
+//! partition in the dStream (DESIGN.md §6). Numerics match the
+//! unstabilized softmax; the AOT oracle uses the max-stabilized form and
+//! the integration tests compare under a small-magnitude tolerance.
+
+use crate::ir::{FDim, ModelGraph};
+use crate::isa::{ElwBinary, ElwUnary};
+use crate::util::Rng;
+
+/// Number of R-GCN relation types (paper §8.1 sets 3).
+pub const NUM_RELATIONS: u8 = 3;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Gcn,
+    Gat,
+    Sage,
+    Ggnn,
+    Rgcn,
+}
+
+impl ModelKind {
+    pub const ALL: [ModelKind; 5] = [
+        ModelKind::Gcn,
+        ModelKind::Gat,
+        ModelKind::Sage,
+        ModelKind::Ggnn,
+        ModelKind::Rgcn,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Gcn => "gcn",
+            ModelKind::Gat => "gat",
+            ModelKind::Sage => "sage",
+            ModelKind::Ggnn => "ggnn",
+            ModelKind::Rgcn => "rgcn",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        Self::ALL.iter().copied().find(|m| m.name() == s.to_ascii_lowercase())
+    }
+
+    /// Whether the model reads destination-vertex embeddings (GAT's
+    /// attention, SAGE's self path, GGNN's GRU state). Models that don't
+    /// skip LD.DST entirely — the Fig 11 note about GAT/SAGE/GGNN
+    /// accessing destination embeddings "which cannot be reduced".
+    pub fn uses_dst_input(self) -> bool {
+        matches!(self, ModelKind::Gat | ModelKind::Sage | ModelKind::Ggnn)
+    }
+
+    /// GGNN's GRU needs feat_in == feat_out.
+    pub fn requires_square(self) -> bool {
+        matches!(self, ModelKind::Ggnn)
+    }
+
+    /// Whether tiles must carry per-edge relation types.
+    pub fn uses_etypes(self) -> bool {
+        matches!(self, ModelKind::Rgcn)
+    }
+
+    /// Build the naive tensor-level DAG.
+    pub fn build(self) -> ModelGraph {
+        match self {
+            ModelKind::Gcn => gcn(),
+            ModelKind::Gat => gat(),
+            ModelKind::Sage => sage(),
+            ModelKind::Ggnn => ggnn(),
+            ModelKind::Rgcn => rgcn(),
+        }
+    }
+}
+
+/// GCN (paper Fig 1a): SpMM (Scatter+Gather) then GEMM.
+pub fn gcn() -> ModelGraph {
+    let mut g = ModelGraph::new("gcn");
+    let x = g.input_v("x");
+    let w = g.weight("w", FDim::In, FDim::Out);
+    let ex = g.scatter_out(x);
+    let agg = g.gather_sum(ex);
+    let h = g.gemm(agg, w);
+    g.output_v(h, "h");
+    g
+}
+
+/// GAT single head (paper Fig 1b), naive: per-edge GEMMs before E2V.
+pub fn gat() -> ModelGraph {
+    let mut g = ModelGraph::new("gat");
+    let x = g.input_v("x");
+    let w = g.weight("w", FDim::In, FDim::Out);
+    let a_s = g.weight("a_src", FDim::Out, FDim::One);
+    let a_d = g.weight("a_dst", FDim::Out, FDim::One);
+    let ex_s = g.scatter_out(x);
+    let ex_d = g.scatter_in(x);
+    let z_es = g.gemm(ex_s, w); // per-edge transform (E2V hoists)
+    let z_ed = g.gemm(ex_d, w);
+    let s_s = g.gemv(z_es, a_s);
+    let s_d = g.gemv(z_ed, a_d);
+    let e = g.binary(ElwBinary::Add, s_s, s_d);
+    let e = g.unary(ElwUnary::LeakyRelu, e);
+    let e = g.unary(ElwUnary::Exp, e);
+    let num_e = g.bcast(ElwBinary::Mul, z_es, e);
+    let num = g.gather_sum(num_e);
+    let den = g.gather_sum(e);
+    // zero-guarded normalize: empty destinations yield 0, not 0/0
+    let den_r = g.unary(ElwUnary::Recip0, den);
+    let out = g.bcast(ElwBinary::Mul, num, den_r);
+    g.output_v(out, "h");
+    g
+}
+
+/// GraphSAGE-maxpool (paper §8.1), naive: pool transform on edges.
+pub fn sage() -> ModelGraph {
+    let mut g = ModelGraph::new("sage");
+    let x = g.input_v("x");
+    let w_pool = g.weight("w_pool", FDim::In, FDim::Out);
+    let w_self = g.weight("w_self", FDim::In, FDim::Out);
+    let w_neigh = g.weight("w_neigh", FDim::Out, FDim::Out);
+    let ex = g.scatter_out(x);
+    let pe = g.gemm(ex, w_pool); // per-edge transform (E2V hoists)
+    let pe = g.unary(ElwUnary::Relu, pe);
+    let h_n = g.gather_max(pe);
+    let hn_t = g.gemm(h_n, w_neigh);
+    let self_t = g.gemm(x, w_self);
+    let out = g.binary(ElwBinary::Add, self_t, hn_t);
+    g.output_v(out, "h");
+    g
+}
+
+/// GGNN (paper §8.1): gathered message + GRU in explicit GEMM/ELW ops.
+pub fn ggnn() -> ModelGraph {
+    let mut g = ModelGraph::new("ggnn");
+    let x = g.input_v("x");
+    let w_msg = g.weight("w_msg", FDim::In, FDim::In);
+    let w_z = g.weight("w_z", FDim::In, FDim::In);
+    let u_z = g.weight("u_z", FDim::In, FDim::In);
+    let w_r = g.weight("w_r", FDim::In, FDim::In);
+    let u_r = g.weight("u_r", FDim::In, FDim::In);
+    let w_h = g.weight("w_h", FDim::In, FDim::In);
+    let u_h = g.weight("u_h", FDim::In, FDim::In);
+    let ex = g.scatter_out(x);
+    let me = g.gemm(ex, w_msg); // per-edge message transform (E2V hoists)
+    let a = g.gather_sum(me);
+    // GRU: z = σ(aW_z + xU_z); r = σ(aW_r + xU_r);
+    //      h̃ = tanh(aW_h + (r⊙x)U_h); h' = (1−z)⊙x + z⊙h̃
+    let az = g.gemm(a, w_z);
+    let xz = g.gemm(x, u_z);
+    let zi = g.binary(ElwBinary::Add, az, xz);
+    let z = g.unary(ElwUnary::Sigmoid, zi);
+    let ar = g.gemm(a, w_r);
+    let xr = g.gemm(x, u_r);
+    let ri = g.binary(ElwBinary::Add, ar, xr);
+    let r = g.unary(ElwUnary::Sigmoid, ri);
+    let rx = g.binary(ElwBinary::Mul, r, x);
+    let ah = g.gemm(a, w_h);
+    let rxh = g.gemm(rx, u_h);
+    let ci = g.binary(ElwBinary::Add, ah, rxh);
+    let h_t = g.unary(ElwUnary::Tanh, ci);
+    let zc = g.unary(ElwUnary::OneMinus, z);
+    let keep = g.binary(ElwBinary::Mul, zc, x);
+    let new = g.binary(ElwBinary::Mul, z, h_t);
+    let out = g.binary(ElwBinary::Add, keep, new);
+    g.output_v(out, "h");
+    g
+}
+
+/// R-GCN with NUM_RELATIONS edge types: index-guided BMM stays per-edge.
+pub fn rgcn() -> ModelGraph {
+    let mut g = ModelGraph::new("rgcn");
+    let x = g.input_v("x");
+    let wset = g.weight_set("w_rel", FDim::In, FDim::Out, NUM_RELATIONS);
+    let ex = g.scatter_out(x);
+    let te = g.bmm_by_type(ex, wset); // genuinely per-edge; E2V leaves it
+    let agg = g.gather_sum(te);
+    g.output_v(agg, "h");
+    g
+}
+
+/// Deterministic weight synthesis for functional execution: one f32
+/// matrix per `Weight` node, 0.1-scaled normal entries, keyed by the
+/// model name + weight name so Rust and bench runs agree.
+pub struct WeightStore {
+    /// (rows, cols, data) per WeightId in declaration order; stacked
+    /// weight sets hold `count` matrices back-to-back.
+    pub tensors: Vec<WeightTensor>,
+}
+
+pub struct WeightTensor {
+    pub name: &'static str,
+    pub rows: u32,
+    pub cols: u32,
+    pub count: u8,
+    /// count × rows × cols, row-major per matrix.
+    pub data: Vec<f32>,
+}
+
+impl WeightStore {
+    pub fn synthesize(model: &ModelGraph, feat_in: u32, feat_out: u32, seed: u64) -> Self {
+        let mut tensors = Vec::new();
+        for n in &model.nodes {
+            if let crate::ir::Op::Weight { name, rows, cols, count } = n.op {
+                let r = dim(rows, feat_in, feat_out);
+                let c = dim(cols, feat_in, feat_out);
+                let mut rng = Rng::new(seed ^ fxhash(name));
+                let len = count as usize * r as usize * c as usize;
+                let data = (0..len).map(|_| (rng.normal() * 0.1) as f32).collect();
+                tensors.push(WeightTensor { name, rows: r, cols: c, count, data });
+            }
+        }
+        WeightStore { tensors }
+    }
+}
+
+fn dim(d: FDim, feat_in: u32, feat_out: u32) -> u32 {
+    match d {
+        FDim::In => feat_in,
+        FDim::Out => feat_out,
+        FDim::One => 1,
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::e2v;
+
+    #[test]
+    fn all_models_are_well_typed() {
+        for m in ModelKind::ALL {
+            let g = m.build();
+            g.spans().unwrap_or_else(|e| panic!("{}: {e}", m.name()));
+        }
+    }
+
+    #[test]
+    fn op_mix_matches_paper_taxonomy() {
+        // GCN: 1 GEMM, 2 GOPs, 0 ELW (paper Fig 1a)
+        let mix = gcn().op_mix();
+        assert_eq!((mix.gemm, mix.gop, mix.elw), (1, 2, 0));
+        // GAT mixes all three classes heavily (paper Fig 1b)
+        let mix = gat().op_mix();
+        assert!(mix.gemm >= 2 && mix.gop >= 4 && mix.elw >= 4);
+    }
+
+    #[test]
+    fn e2v_improves_gat_and_sage_not_gcn_rgcn() {
+        for (m, expect_hoist) in [
+            (ModelKind::Gcn, false),
+            (ModelKind::Gat, true),
+            (ModelKind::Sage, true),
+            (ModelKind::Ggnn, true),
+            (ModelKind::Rgcn, false),
+        ] {
+            let (_, stats) = e2v::optimize(&m.build());
+            assert_eq!(stats.hoisted > 0, expect_hoist, "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn weight_store_shapes() {
+        let ws = WeightStore::synthesize(&rgcn(), 64, 32, 1);
+        assert_eq!(ws.tensors.len(), 1);
+        let t = &ws.tensors[0];
+        assert_eq!((t.rows, t.cols, t.count), (64, 32, NUM_RELATIONS));
+        assert_eq!(t.data.len(), 3 * 64 * 32);
+    }
+
+    #[test]
+    fn weight_store_deterministic_and_name_keyed() {
+        let a = WeightStore::synthesize(&gat(), 16, 16, 7);
+        let b = WeightStore::synthesize(&gat(), 16, 16, 7);
+        assert_eq!(a.tensors[0].data, b.tensors[0].data);
+        // different weights differ
+        assert_ne!(a.tensors[0].data, a.tensors[1].data[..a.tensors[0].data.len().min(a.tensors[1].data.len())].to_vec());
+    }
+
+    #[test]
+    fn model_kind_parse() {
+        assert_eq!(ModelKind::parse("GAT"), Some(ModelKind::Gat));
+        assert_eq!(ModelKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,312 @@
+//! PJRT runtime: load the AOT-compiled HLO text artifacts and execute
+//! them from Rust — the oracle path for validating the simulator's
+//! functional mode (the role DGL played in the paper's §8.1 validation).
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py and
+//! /opt/xla-example/README.md): jax ≥ 0.5 emits protos with 64-bit ids
+//! that the crate's bundled xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids and round-trips cleanly. Python runs only at `make
+//! artifacts` time; this module is pure Rust + PJRT at run time.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Tile geometry key matching `python/compile/model.py::TileShape`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TileShape {
+    pub num_src: u32,
+    pub num_dst: u32,
+    pub num_edges: u32,
+    pub feat_in: u32,
+    pub feat_out: u32,
+}
+
+impl TileShape {
+    pub fn tag(&self) -> String {
+        format!(
+            "s{}_d{}_e{}_f{}x{}",
+            self.num_src, self.num_dst, self.num_edges, self.feat_in, self.feat_out
+        )
+    }
+}
+
+/// One manifest entry: a lowered (model, tile-shape) module.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub model: String,
+    pub tile: TileShape,
+    pub file: String,
+    /// Argument order: (name, shape, dtype), as lowered.
+    pub args: Vec<(String, Vec<usize>, String)>,
+}
+
+/// The artifact manifest written by `python -m compile.aot`.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+            format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        if j.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("unexpected manifest format");
+        }
+        let mut entries = Vec::new();
+        for e in j.get("entries").and_then(Json::as_arr).unwrap_or(&[]) {
+            let tile = e.get("tile").ok_or_else(|| anyhow!("entry missing tile"))?;
+            let g = |k: &str| -> Result<u32> {
+                tile.get(k)
+                    .and_then(Json::as_u64)
+                    .map(|v| v as u32)
+                    .ok_or_else(|| anyhow!("tile missing {k}"))
+            };
+            let mut args = Vec::new();
+            for a in e.get("args").and_then(Json::as_arr).unwrap_or(&[]) {
+                let name = a.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+                let shape: Vec<usize> = a
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|x| x.as_u64().map(|v| v as usize))
+                    .collect();
+                let dtype =
+                    a.get("dtype").and_then(Json::as_str).unwrap_or("float32").to_string();
+                args.push((name, shape, dtype));
+            }
+            entries.push(ArtifactMeta {
+                model: e
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing model"))?
+                    .to_string(),
+                tile: TileShape {
+                    num_src: g("num_src")?,
+                    num_dst: g("num_dst")?,
+                    num_edges: g("num_edges")?,
+                    feat_in: g("feat_in")?,
+                    feat_out: g("feat_out")?,
+                },
+                file: e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing file"))?
+                    .to_string(),
+                args,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn find(&self, model: &str, tile: &TileShape) -> Option<&ArtifactMeta> {
+        self.entries.iter().find(|e| e.model == model && &e.tile == tile)
+    }
+
+    pub fn shapes_for(&self, model: &str) -> Vec<TileShape> {
+        self.entries.iter().filter(|e| e.model == model).map(|e| e.tile).collect()
+    }
+}
+
+/// Typed input to an executable: f32 matrix or i32 vector.
+#[derive(Clone, Debug)]
+pub enum ArgValue {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+/// A PJRT client with a cache of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<(String, TileShape), xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let manifest = Manifest::load(artifact_dir)?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the module for (model, tile shape).
+    pub fn prepare(&mut self, model: &str, tile: &TileShape) -> Result<()> {
+        let key = (model.to_string(), *tile);
+        if self.cache.contains_key(&key) {
+            return Ok(());
+        }
+        let meta = self
+            .manifest
+            .find(model, tile)
+            .ok_or_else(|| anyhow!("no artifact for {model} @ {}", tile.tag()))?;
+        let path = self.manifest.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        self.cache.insert(key, exe);
+        Ok(())
+    }
+
+    /// Execute the module for (model, tile) with positional args.
+    /// Returns the (num_dst × feat_out) output row-major.
+    pub fn execute(
+        &mut self,
+        model: &str,
+        tile: &TileShape,
+        args: &[ArgValue],
+    ) -> Result<Vec<f32>> {
+        self.prepare(model, tile)?;
+        let exe = &self.cache[&(model.to_string(), *tile)];
+        let mut literals = Vec::with_capacity(args.len());
+        for a in args {
+            let lit = match a {
+                ArgValue::F32 { data, shape } => {
+                    let l = xla::Literal::vec1(data);
+                    if shape.len() > 1 {
+                        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                        l.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))?
+                    } else {
+                        l
+                    }
+                }
+                ArgValue::I32 { data, shape } => {
+                    let l = xla::Literal::vec1(data);
+                    if shape.len() > 1 {
+                        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                        l.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))?
+                    } else {
+                        l
+                    }
+                }
+            };
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → 1-tuple
+        let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+/// Helpers to build `ArgValue`s from a simulator-style tile context.
+pub mod pack {
+    use super::ArgValue;
+    use crate::util::Rng;
+
+    /// Pad/truncate a COO edge list to the artifact's static edge count.
+    /// Padded entries point at vertex 0 with valid = 0 (ref.py convention).
+    pub fn edges(coo: &[(u32, u32)], num_edges: usize) -> (ArgValue, ArgValue, ArgValue) {
+        let mut src = vec![0i32; num_edges];
+        let mut dst = vec![0i32; num_edges];
+        let mut valid = vec![0i32; num_edges];
+        for (i, &(s, d)) in coo.iter().take(num_edges).enumerate() {
+            src[i] = s as i32;
+            dst[i] = d as i32;
+            valid[i] = 1;
+        }
+        (
+            ArgValue::I32 { data: src, shape: vec![num_edges] },
+            ArgValue::I32 { data: dst, shape: vec![num_edges] },
+            ArgValue::I32 { data: valid, shape: vec![num_edges] },
+        )
+    }
+
+    pub fn etypes(types: &[u8], num_edges: usize) -> ArgValue {
+        let mut t = vec![0i32; num_edges];
+        for (i, &x) in types.iter().take(num_edges).enumerate() {
+            t[i] = x as i32;
+        }
+        ArgValue::I32 { data: t, shape: vec![num_edges] }
+    }
+
+    /// Embedding block zero-padded to `rows × cols`.
+    pub fn features(x: &[f32], rows: usize, cols: usize) -> ArgValue {
+        let mut data = vec![0.0f32; rows * cols];
+        let n = x.len().min(rows * cols);
+        data[..n].copy_from_slice(&x[..n]);
+        ArgValue::F32 { data, shape: vec![rows, cols] }
+    }
+
+    /// Deterministic random weights (seeded) in artifact layout.
+    pub fn random_weight(rows: usize, cols: usize, seed: u64) -> ArgValue {
+        let mut rng = Rng::new(seed);
+        let data = (0..rows * cols).map(|_| (rng.normal() * 0.1) as f32).collect();
+        ArgValue::F32 { data, shape: vec![rows, cols] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_shape_tag_matches_python() {
+        let t = TileShape {
+            num_src: 256, num_dst: 256, num_edges: 1024, feat_in: 128, feat_out: 128,
+        };
+        assert_eq!(t.tag(), "s256_d256_e1024_f128x128");
+    }
+
+    #[test]
+    fn manifest_parse_minimal() {
+        let dir = std::env::temp_dir().join(format!("zipper_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":"hlo-text","entries":[{"model":"gcn","file":"f.hlo.txt",
+                "tile":{"num_src":64,"num_dst":64,"num_edges":256,"feat_in":32,"feat_out":32},
+                "args":[{"name":"x_src","shape":[64,32],"dtype":"float32"}],
+                "output":{"shape":[64,32],"dtype":"float32"}}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let t = TileShape { num_src: 64, num_dst: 64, num_edges: 256, feat_in: 32, feat_out: 32 };
+        assert!(m.find("gcn", &t).is_some());
+        assert_eq!(m.entries[0].args[0].0, "x_src");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pack_edges_pads_with_invalid() {
+        let (s, d, v) = pack::edges(&[(3, 1), (2, 0)], 4);
+        let (ArgValue::I32 { data: s, .. }, ArgValue::I32 { data: d, .. },
+             ArgValue::I32 { data: v, .. }) = (s, d, v) else { panic!() };
+        assert_eq!(s, vec![3, 2, 0, 0]);
+        assert_eq!(d, vec![1, 0, 0, 0]);
+        assert_eq!(v, vec![1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn pack_features_pads_rows() {
+        let ArgValue::F32 { data, shape } = pack::features(&[1.0, 2.0], 2, 2) else {
+            panic!()
+        };
+        assert_eq!(shape, vec![2, 2]);
+        assert_eq!(data, vec![1.0, 2.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,184 @@
+//! Banked HBM memory-controller model — the Ramulator stand-in
+//! (DESIGN.md §5).
+//!
+//! Each `access` is one contiguous run (the engine coalesces consecutive
+//! vertex rows into runs, so regular tiles issue a few large runs and
+//! sparse tiles many embedding-sized ones). Timing is analytic per run —
+//! O(1) instead of per-burst, which keeps the simulator fast — but
+//! preserves the two behaviours that matter to ZIPPER:
+//!
+//!   * **row-buffer locality**: one activation per (channel, row) of the
+//!     run; hit/miss counters feed the energy model and the §5.3
+//!     sparse-vs-regular analysis;
+//!   * **bandwidth & pipelining**: the data bus is the shared resource —
+//!     queued runs stream back-to-back with activations hidden under
+//!     previous transfers (`bus_free` chaining), while an un-queued run
+//!     pays its leading activation latency. Embedding-sized (≥512 B)
+//!     random runs therefore sustain near-sequential bandwidth, exactly
+//!     the property the paper's sparse tiling relies on.
+
+use crate::util::ceil_div;
+
+/// HBM-1.0-ish geometry and timing (cycles at the accelerator clock).
+#[derive(Clone, Copy, Debug)]
+pub struct HbmConfig {
+    pub channels: u32,
+    pub banks_per_channel: u32,
+    /// Row (page) size in bytes.
+    pub row_bytes: u32,
+    /// Burst granularity in bytes (one transaction on one channel).
+    pub burst_bytes: u32,
+    /// Cycles one burst occupies its channel (8 ch × 32 B / cyc ≈
+    /// 256 GB/s @ 1 GHz).
+    pub burst_cycles: u64,
+    /// Row activation (tRCD) and precharge (tRP) penalties.
+    pub act_cycles: u64,
+    pub pre_cycles: u64,
+    /// Controller pipeline latency added to every access.
+    pub ctrl_latency: u64,
+}
+
+impl Default for HbmConfig {
+    fn default() -> Self {
+        HbmConfig {
+            channels: 8,
+            banks_per_channel: 16,
+            row_bytes: 2048,
+            burst_bytes: 32,
+            burst_cycles: 1,
+            act_cycles: 14,
+            pre_cycles: 14,
+            ctrl_latency: 20,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Hbm {
+    cfg: HbmConfig,
+    /// Completion time of the last queued transfer (bus backlog).
+    bus_free: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub bursts: u64,
+}
+
+impl Hbm {
+    pub fn new(cfg: HbmConfig) -> Self {
+        Hbm { cfg, bus_free: 0, row_hits: 0, row_misses: 0, bursts: 0 }
+    }
+
+    /// Issue a contiguous transfer of `bytes` at `addr`, no earlier than
+    /// `now`; returns the completion cycle.
+    pub fn access(&mut self, now: u64, addr: u64, bytes: u64) -> u64 {
+        let cfg = &self.cfg;
+        if bytes == 0 {
+            return now + cfg.ctrl_latency;
+        }
+        let bursts = ceil_div(bytes, cfg.burst_bytes as u64);
+        let first_row = addr / cfg.row_bytes as u64;
+        let last_row = (addr + bytes - 1) / cfg.row_bytes as u64;
+        let rows = last_row - first_row + 1;
+        // one activation per channel that touches each row
+        let bursts_per_row = (cfg.row_bytes / cfg.burst_bytes) as u64;
+        let act_per_row = (cfg.channels as u64).min(bursts.min(bursts_per_row));
+        let misses = (rows * act_per_row).min(bursts);
+        self.row_misses += misses;
+        self.row_hits += bursts - misses;
+        self.bursts += bursts;
+
+        let xfer = ceil_div(bursts, cfg.channels as u64) * cfg.burst_cycles;
+        // idle bus: pay the leading activation; backlogged bus: the
+        // activation is hidden under the in-flight transfer
+        let done = (now + cfg.act_cycles + xfer).max(self.bus_free.max(now) + xfer);
+        self.bus_free = done;
+        done + cfg.ctrl_latency
+    }
+
+    /// Observed row-hit rate so far.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.row_hits + self.row_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / total as f64
+        }
+    }
+
+    /// Bytes/cycle ceiling of the configuration.
+    pub fn peak_bytes_per_cycle(&self) -> f64 {
+        self.cfg.channels as f64 * self.cfg.burst_bytes as f64
+            / self.cfg.burst_cycles as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_stream_mostly_hits() {
+        // one activation per (channel, row); 64 bursts/row on 8 channels
+        // → 7/8 of bursts hit the open row
+        let mut h = Hbm::new(HbmConfig::default());
+        h.access(0, 0, 64 * 1024);
+        assert!(h.hit_rate() > 0.8, "hit rate {}", h.hit_rate());
+    }
+
+    #[test]
+    fn random_small_reads_mostly_miss() {
+        let mut h = Hbm::new(HbmConfig::default());
+        let mut t = 0;
+        for i in 0..512u64 {
+            t = h.access(t, i * 1_000_003, 32);
+        }
+        assert!(h.hit_rate() < 0.2, "hit rate {}", h.hit_rate());
+    }
+
+    #[test]
+    fn bandwidth_cap_respected() {
+        let mut h = Hbm::new(HbmConfig::default());
+        let bytes = 1_000_000u64;
+        let done = h.access(0, 0, bytes);
+        let min_cycles = bytes as f64 / h.peak_bytes_per_cycle();
+        assert!((done as f64) >= min_cycles, "done {done} < cap {min_cycles:.0}");
+        assert!((done as f64) < 1.2 * min_cycles + 100.0, "done {done}");
+    }
+
+    #[test]
+    fn embedding_sized_random_runs_sustain_bandwidth() {
+        // the §5.3 claim: 512 B random runs ≈ sequential bandwidth when
+        // the bus is backlogged (activations hidden)
+        let mut h = Hbm::new(HbmConfig::default());
+        let mut done = 0;
+        let runs = 2_000u64;
+        for i in 0..runs {
+            done = done.max(h.access(0, i * 1_000_003, 512));
+        }
+        let eff = (runs * 512) as f64 / done as f64 / h.peak_bytes_per_cycle();
+        assert!(eff > 0.8, "efficiency {eff}");
+    }
+
+    #[test]
+    fn unqueued_access_pays_activation_latency() {
+        let mut h = Hbm::new(HbmConfig::default());
+        let cfg = HbmConfig::default();
+        let done = h.access(1_000, 0, 32);
+        assert_eq!(done, 1_000 + cfg.act_cycles + 1 + cfg.ctrl_latency);
+    }
+
+    #[test]
+    fn zero_byte_access_is_latency_only() {
+        let mut h = Hbm::new(HbmConfig::default());
+        assert_eq!(h.access(10, 0, 0), 10 + HbmConfig::default().ctrl_latency);
+        assert_eq!(h.bursts, 0);
+    }
+
+    #[test]
+    fn contention_serializes_on_the_bus() {
+        let mut h = Hbm::new(HbmConfig { channels: 1, ..Default::default() });
+        let a = h.access(0, 0, 1024);
+        let b = h.access(0, 1 << 20, 1024);
+        assert!(b > a, "second transfer must queue behind the first");
+    }
+}

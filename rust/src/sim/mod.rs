@@ -1,0 +1,21 @@
+//! Cycle-level ZIPPER architecture simulator (paper §7, §8.1).
+//!
+//! Discrete-event simulation of the two-level scheduler: streams (1
+//! dStream + N sStreams + N eStreams) execute SDE functions; the
+//! dispatcher routes each instruction to a free unit instance (MU / VU /
+//! memory controller) and the stream blocks until it completes. Signals
+//! implement the paper's §5.2 inter-stream protocol. Alongside timing,
+//! every instruction executes *functionally* on f32 embeddings so the
+//! final output validates against the PJRT oracle.
+//!
+//! Stand-ins vs the paper (DESIGN.md §5): Ramulator is replaced by a
+//! latency+bandwidth memory-controller queue; eDRAM bank conflicts are
+//! folded into per-access byte accounting.
+
+mod engine;
+pub mod hbm;
+pub mod tensor;
+pub mod timing;
+
+pub use engine::{SimOptions, SimResult, Simulator, Workload};
+pub use tensor::Tensor;

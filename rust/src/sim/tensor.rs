@@ -1,0 +1,231 @@
+//! Dense f32 tensors + the functional semantics of every ISA instruction.
+//!
+//! The simulator executes programs *functionally* as well as temporally:
+//! each instruction updates real embedding data so end-of-run outputs can
+//! be validated against the PJRT-executed JAX artifacts (the role DGL
+//! played for the paper's simulator validation, §8.1).
+
+use crate::isa::{ElwBinary, ElwUnary};
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub rows: u32,
+    pub cols: u32,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(rows: u32, cols: u32) -> Self {
+        Tensor { rows, cols, data: vec![0.0; rows as usize * cols as usize] }
+    }
+
+    pub fn filled(rows: u32, cols: u32, v: f32) -> Self {
+        Tensor { rows, cols, data: vec![v; rows as usize * cols as usize] }
+    }
+
+    pub fn from_rows(rows: u32, cols: u32, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows as usize * cols as usize);
+        Tensor { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: u32) -> &[f32] {
+        let c = self.cols as usize;
+        &self.data[r as usize * c..(r as usize + 1) * c]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: u32) -> &mut [f32] {
+        let c = self.cols as usize;
+        &mut self.data[r as usize * c..(r as usize + 1) * c]
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.data.len() as u64 * 4
+    }
+}
+
+pub fn apply_unary(op: ElwUnary, x: &Tensor) -> Tensor {
+    let f: fn(f32) -> f32 = match op {
+        ElwUnary::Exp => |v| v.exp(),
+        ElwUnary::Relu => |v| v.max(0.0),
+        ElwUnary::LeakyRelu => |v| if v >= 0.0 { v } else { 0.2 * v },
+        ElwUnary::Sigmoid => |v| 1.0 / (1.0 + (-v).exp()),
+        ElwUnary::Tanh => |v| v.tanh(),
+        ElwUnary::Neg => |v| -v,
+        ElwUnary::OneMinus => |v| 1.0 - v,
+        ElwUnary::Recip => |v| 1.0 / v,
+        ElwUnary::Recip0 => |v| if v == 0.0 { 0.0 } else { 1.0 / v },
+    };
+    Tensor {
+        rows: x.rows,
+        cols: x.cols,
+        data: x.data.iter().map(|&v| f(v)).collect(),
+    }
+}
+
+pub fn apply_binary(op: ElwBinary, a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "ELW shape mismatch");
+    let f: fn(f32, f32) -> f32 = binop(op);
+    Tensor {
+        rows: a.rows,
+        cols: a.cols,
+        data: a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect(),
+    }
+}
+
+/// Broadcast a (rows × 1) column over a (rows × cols) operand.
+pub fn apply_bcast(op: ElwBinary, a: &Tensor, vec: &Tensor) -> Tensor {
+    assert_eq!(a.rows, vec.rows, "broadcast rows mismatch");
+    assert_eq!(vec.cols, 1, "broadcast vector must be a column");
+    let f = binop(op);
+    let mut out = Tensor::zeros(a.rows, a.cols);
+    for r in 0..a.rows {
+        let v = vec.data[r as usize];
+        let src = a.row(r);
+        let dst = out.row_mut(r);
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = f(s, v);
+        }
+    }
+    out
+}
+
+fn binop(op: ElwBinary) -> fn(f32, f32) -> f32 {
+    match op {
+        ElwBinary::Add => |x, y| x + y,
+        ElwBinary::Sub => |x, y| x - y,
+        ElwBinary::Mul => |x, y| x * y,
+        ElwBinary::Div => |x, y| x / y,
+        ElwBinary::Max => |x, y| x.max(y),
+    }
+}
+
+/// `x (m×k) @ w (k×n)`, optionally accumulating into `out`.
+///
+/// Hot path of the functional simulator (EXPERIMENTS.md §Perf): ikj
+/// order with a 4-way unroll over k so the inner j-loop is a clean
+/// multiply-add chain the compiler vectorizes (AVX2/512 with the
+/// project's `target-cpu=native` rustflag).
+pub fn matmul(x: &Tensor, w: &[f32], k: u32, n: u32, out: &mut Tensor, accumulate: bool) {
+    assert_eq!(x.cols, k, "GEMM inner dim");
+    assert_eq!((out.rows, out.cols), (x.rows, n), "GEMM out shape");
+    if !accumulate {
+        out.data.fill(0.0);
+    }
+    let (k, n) = (k as usize, n as usize);
+    for r in 0..x.rows as usize {
+        let xrow = &x.data[r * k..(r + 1) * k];
+        let orow = &mut out.data[r * n..(r + 1) * n];
+        let mut kk = 0;
+        while kk + 4 <= k {
+            let (x0, x1, x2, x3) = (xrow[kk], xrow[kk + 1], xrow[kk + 2], xrow[kk + 3]);
+            let w0 = &w[kk * n..kk * n + n];
+            let w1 = &w[(kk + 1) * n..(kk + 1) * n + n];
+            let w2 = &w[(kk + 2) * n..(kk + 2) * n + n];
+            let w3 = &w[(kk + 3) * n..(kk + 3) * n + n];
+            for j in 0..n {
+                orow[j] += x0 * w0[j] + x1 * w1[j] + x2 * w2[j] + x3 * w3[j];
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let xv = xrow[kk];
+            let wrow = &w[kk * n..kk * n + n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+            kk += 1;
+        }
+    }
+}
+
+/// Per-edge typed matmul: edge r uses weight matrix `etypes[r]`.
+pub fn bmm_by_type(
+    x: &Tensor,
+    wset: &[f32],
+    k: u32,
+    n: u32,
+    etypes: &[u8],
+    out: &mut Tensor,
+) {
+    assert_eq!(x.cols, k);
+    assert_eq!(etypes.len(), x.rows as usize);
+    assert_eq!((out.rows, out.cols), (x.rows, n));
+    let mat = (k * n) as usize;
+    out.data.fill(0.0);
+    for r in 0..x.rows as usize {
+        let w = &wset[etypes[r] as usize * mat..(etypes[r] as usize + 1) * mat];
+        let xrow = &x.data[r * k as usize..(r + 1) * k as usize];
+        let orow = &mut out.data[r * n as usize..(r + 1) * n as usize];
+        for (kk, &xv) in xrow.iter().enumerate() {
+            let wrow = &w[kk * n as usize..(kk + 1) * n as usize];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+/// GEMV: `x (rows×cols) @ w (cols×1)` → (rows×1).
+pub fn gemv(x: &Tensor, w: &[f32], out: &mut Tensor) {
+    assert_eq!((out.rows, out.cols), (x.rows, 1));
+    assert_eq!(w.len(), x.cols as usize);
+    for r in 0..x.rows {
+        out.data[r as usize] = x.row(r).iter().zip(w).map(|(&a, &b)| a * b).sum();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let x = Tensor::from_rows(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let w = vec![1.0, 0.0, 0.0, 1.0]; // identity
+        let mut out = Tensor::zeros(2, 2);
+        matmul(&x, &w, 2, 2, &mut out, false);
+        assert_eq!(out.data, x.data);
+        // accumulate doubles
+        matmul(&x, &w, 2, 2, &mut out, true);
+        assert_eq!(out.data, vec![2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn unary_ops() {
+        let x = Tensor::from_rows(1, 3, vec![-1.0, 0.0, 2.0]);
+        assert_eq!(apply_unary(ElwUnary::Relu, &x).data, vec![0.0, 0.0, 2.0]);
+        assert_eq!(apply_unary(ElwUnary::OneMinus, &x).data, vec![2.0, 1.0, -1.0]);
+        let lr = apply_unary(ElwUnary::LeakyRelu, &x).data;
+        assert!((lr[0] + 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bcast_divide() {
+        let a = Tensor::from_rows(2, 2, vec![2.0, 4.0, 9.0, 12.0]);
+        let v = Tensor::from_rows(2, 1, vec![2.0, 3.0]);
+        let out = apply_bcast(ElwBinary::Div, &a, &v);
+        assert_eq!(out.data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn bmm_selects_weights() {
+        // two 1x1 "matrices": w0 = [10], w1 = [100]
+        let x = Tensor::from_rows(3, 1, vec![1.0, 2.0, 3.0]);
+        let wset = vec![10.0, 100.0];
+        let mut out = Tensor::zeros(3, 1);
+        bmm_by_type(&x, &wset, 1, 1, &[0, 1, 0], &mut out);
+        assert_eq!(out.data, vec![10.0, 200.0, 30.0]);
+    }
+
+    #[test]
+    fn gemv_matches_manual() {
+        let x = Tensor::from_rows(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let w = vec![1.0, 0.5, 2.0];
+        let mut out = Tensor::zeros(2, 1);
+        gemv(&x, &w, &mut out);
+        assert_eq!(out.data, vec![8.0, 18.5]);
+    }
+}

@@ -1,0 +1,196 @@
+//! Instruction timing model (DESIGN.md §6).
+//!
+//! Cycle counts per instruction class, parameterized by `ArchConfig`:
+//!
+//! * **MU GEMM** — output-stationary systolic array: each (mu_rows ×
+//!   mu_cols) output block streams K operand columns through the array
+//!   (K cycles), plus a pipeline fill of (mu_rows + mu_cols) per call.
+//! * **BMM** — same dataflow but the weight is re-fetched per edge group,
+//!   modeled as a constant slowdown (`BMM_PENALTY`; paper §8.3: "suffers
+//!   from a longer latency of on-chip memory access").
+//! * **VU ELW/GEMV** — elems / (cores × lanes) cycles.
+//! * **VU GOP** — each core walks one vertex/edge at a time guided by the
+//!   tile-hub edge list: ceil(E / cores) × ceil(F / lanes) cycles.
+//! * **LD/ST** — HBM latency + bytes / (bytes per cycle), serialized on
+//!   the memory controller (bandwidth sharing emerges from the queue).
+
+use crate::config::ArchConfig;
+use crate::isa::{DimCtx, Instr};
+use crate::util::ceil_div;
+
+/// Extra factor for index-guided BMM weight traffic.
+pub const BMM_PENALTY_NUM: u64 = 3;
+pub const BMM_PENALTY_DEN: u64 = 2;
+
+/// Cycles a compute instruction occupies its unit.
+pub fn compute_cycles(arch: &ArchConfig, instr: &Instr, ctx: &DimCtx) -> u64 {
+    let r = |d: crate::isa::Dim| d.resolve(ctx) as u64;
+    match instr {
+        Instr::Gemm { m, k, n, .. } => {
+            let blocks = ceil_div(r(*m), arch.mu_rows as u64)
+                * ceil_div(r(*n), arch.mu_cols as u64);
+            let fill = (arch.mu_rows + arch.mu_cols) as u64;
+            fill + blocks * r(*k).max(1)
+        }
+        Instr::Bmm { m, k, n, .. } => {
+            let blocks = ceil_div(r(*m), arch.mu_rows as u64)
+                * ceil_div(r(*n), arch.mu_cols as u64);
+            let fill = (arch.mu_rows + arch.mu_cols) as u64;
+            (fill + blocks * r(*k).max(1)) * BMM_PENALTY_NUM / BMM_PENALTY_DEN
+        }
+        Instr::Gemv { rows, cols, .. } => {
+            ceil_div(r(*rows) * r(*cols), arch.vu_width()).max(1)
+        }
+        Instr::ElwU { rows, cols, .. }
+        | Instr::ElwB { rows, cols, .. }
+        | Instr::ElwBcast { rows, cols, .. } => {
+            ceil_div(r(*rows) * r(*cols), arch.vu_width()).max(1)
+        }
+        Instr::Sctr { cols, .. } | Instr::Gthr { cols, .. } => {
+            let per_core_items = ceil_div(r(crate::isa::Dim::TileEdges), arch.vu_cores as u64);
+            per_core_items.max(1) * ceil_div(r(*cols), arch.vu_lanes as u64).max(1)
+        }
+        _ => 1,
+    }
+}
+
+/// Cycles a data-transfer instruction occupies the memory controller.
+pub fn mem_cycles(arch: &ArchConfig, bytes: u64) -> u64 {
+    arch.hbm_latency_cycles + (bytes as f64 / arch.hbm_bytes_per_cycle()).ceil() as u64
+}
+
+/// MAC count of MU instructions (energy accounting).
+pub fn macs(instr: &Instr, ctx: &DimCtx) -> u64 {
+    let r = |d: crate::isa::Dim| d.resolve(ctx) as u64;
+    match instr {
+        Instr::Gemm { m, k, n, .. } | Instr::Bmm { m, k, n, .. } => r(*m) * r(*k) * r(*n),
+        _ => 0,
+    }
+}
+
+/// VU lane-op count (energy accounting).
+pub fn vu_ops(instr: &Instr, ctx: &DimCtx) -> u64 {
+    let r = |d: crate::isa::Dim| d.resolve(ctx) as u64;
+    match instr {
+        Instr::Gemv { rows, cols, .. } => r(*rows) * r(*cols),
+        Instr::ElwU { rows, cols, .. }
+        | Instr::ElwB { rows, cols, .. }
+        | Instr::ElwBcast { rows, cols, .. } => r(*rows) * r(*cols),
+        Instr::Sctr { cols, .. } | Instr::Gthr { cols, .. } => {
+            r(crate::isa::Dim::TileEdges) * r(*cols)
+        }
+        _ => 0,
+    }
+}
+
+/// UEM bytes touched by a compute instruction (reads + writes).
+pub fn uem_bytes(instr: &Instr, ctx: &DimCtx) -> u64 {
+    let r = |d: crate::isa::Dim| d.resolve(ctx) as u64;
+    match instr {
+        Instr::Gemm { m, k, n, .. } => 4 * (r(*m) * r(*k) + r(*m) * r(*n)),
+        Instr::Bmm { m, k, n, .. } => 4 * (r(*m) * r(*k) + r(*m) * r(*n) + r(*m) * r(*k) * r(*n) / 8),
+        Instr::Gemv { rows, cols, .. } => 4 * (r(*rows) * r(*cols) + r(*rows)),
+        Instr::ElwU { rows, cols, .. } => 4 * 2 * r(*rows) * r(*cols),
+        Instr::ElwB { rows, cols, .. } => 4 * 3 * r(*rows) * r(*cols),
+        Instr::ElwBcast { rows, cols, .. } => 4 * (2 * r(*rows) * r(*cols) + r(*rows)),
+        Instr::Sctr { cols, .. } => 4 * 2 * r(crate::isa::Dim::TileEdges) * r(*cols),
+        Instr::Gthr { cols, .. } => 4 * 3 * r(crate::isa::Dim::TileEdges) * r(*cols),
+        // LD writes into UEM; ST reads out of it
+        Instr::Ld { rows, cols, .. } | Instr::St { rows, cols, .. } => {
+            4 * r(*rows) * r(*cols)
+        }
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{BufId, Dim, LdTarget, WeightId};
+
+    fn arch() -> ArchConfig {
+        ArchConfig::default()
+    }
+
+    fn ctx() -> DimCtx {
+        DimCtx { tile_src: 256, tile_edges: 1024, part_dst: 256, feat_in: 128, feat_out: 128 }
+    }
+
+    #[test]
+    fn gemm_timing_exact_block() {
+        // (32 x 128 x 128): 1 block × 128 K-cycles + 160 fill
+        let i = Instr::Gemm {
+            src: BufId(0), weight: WeightId(0), dst: BufId(1),
+            m: Dim::Const(32), k: Dim::FeatIn, n: Dim::Const(128), accumulate: false,
+        };
+        assert_eq!(compute_cycles(&arch(), &i, &ctx()), 160 + 128);
+    }
+
+    #[test]
+    fn gemm_timing_scales_with_blocks() {
+        let i = Instr::Gemm {
+            src: BufId(0), weight: WeightId(0), dst: BufId(1),
+            m: Dim::Const(64), k: Dim::FeatIn, n: Dim::Const(256), accumulate: false,
+        };
+        assert_eq!(compute_cycles(&arch(), &i, &ctx()), 160 + 4 * 128);
+    }
+
+    #[test]
+    fn bmm_slower_than_gemm() {
+        let g = Instr::Gemm {
+            src: BufId(0), weight: WeightId(0), dst: BufId(1),
+            m: Dim::TileEdges, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+        };
+        let b = Instr::Bmm {
+            src: BufId(0), weights: WeightId(0), dst: BufId(1),
+            m: Dim::TileEdges, k: Dim::FeatIn, n: Dim::FeatOut,
+        };
+        assert!(compute_cycles(&arch(), &b, &ctx()) > compute_cycles(&arch(), &g, &ctx()));
+    }
+
+    #[test]
+    fn elw_uses_full_vu_width() {
+        let i = Instr::ElwU {
+            op: crate::isa::ElwUnary::Relu,
+            src: BufId(0), dst: BufId(1),
+            rows: Dim::Const(256), cols: Dim::Const(256),
+        };
+        // 65536 elems / 256 lanes = 256 cycles
+        assert_eq!(compute_cycles(&arch(), &i, &ctx()), 256);
+    }
+
+    #[test]
+    fn gop_walks_edges_per_core() {
+        let i = Instr::Gthr {
+            reduce: crate::isa::Reduce::Sum,
+            src: BufId(0), dst: BufId(0x100),
+            cols: Dim::FeatIn, accumulate: true,
+        };
+        // ceil(1024/8)=128 groups × ceil(128/32)=4 = 512 cycles
+        assert_eq!(compute_cycles(&arch(), &i, &ctx()), 512);
+    }
+
+    #[test]
+    fn mem_cycles_latency_plus_bandwidth() {
+        let a = arch();
+        // 256 B/cycle at defaults
+        assert_eq!(mem_cycles(&a, 0), a.hbm_latency_cycles);
+        assert_eq!(mem_cycles(&a, 256 * 100), a.hbm_latency_cycles + 100);
+    }
+
+    #[test]
+    fn energy_counters_positive_for_compute() {
+        let c = ctx();
+        let g = Instr::Gemm {
+            src: BufId(0), weight: WeightId(0), dst: BufId(1),
+            m: Dim::TileSrc, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+        };
+        assert_eq!(macs(&g, &c), 256 * 128 * 128);
+        assert_eq!(vu_ops(&g, &c), 0);
+        assert!(uem_bytes(&g, &c) > 0);
+        let ld = Instr::Ld {
+            target: LdTarget::Src, dst: BufId(0), rows: Dim::TileSrc, cols: Dim::FeatIn,
+        };
+        assert_eq!(uem_bytes(&ld, &c), 256 * 128 * 4);
+    }
+}

@@ -1,0 +1,74 @@
+//! Dependency-free utilities: deterministic RNG, minimal JSON, stats.
+//!
+//! This repo builds fully offline with `xla` + `anyhow` as the only
+//! external crates, so the usual ecosystem helpers (rand, serde_json,
+//! proptest) are implemented in-tree at the size this project needs.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+
+/// Ceiling division for unsigned integers.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Human-readable byte count (for logs and bench tables).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Human-readable cycle/time count given a clock frequency.
+pub fn fmt_time_at(cycles: u64, freq_hz: f64) -> String {
+    let s = cycles as f64 / freq_hz;
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KB");
+        assert!(fmt_bytes(3 * 1024 * 1024).starts_with("3.00 MB"));
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time_at(1_000_000_000, 1e9).contains("s"));
+        assert!(fmt_time_at(1_000, 1e9).contains("us"));
+    }
+}

@@ -1,0 +1,335 @@
+//! Integration tests: the full pipeline (dataset → tiling → compiler →
+//! simulator → energy) across models, plus the three-layer PJRT
+//! validation when artifacts are present.
+
+use zipper::baselines::{self, DeviceModel};
+use zipper::config::{ArchConfig, RunConfig};
+use zipper::coordinator::{Coordinator, InferenceRequest, Session};
+use zipper::energy::EnergyModel;
+use zipper::models::ModelKind;
+use zipper::tiling::{Reorder, TilingConfig, TilingMode};
+
+fn run_cfg(model: &str, dataset: &str) -> RunConfig {
+    RunConfig {
+        model: model.into(),
+        dataset: dataset.into(),
+        scale: 64,
+        feat_in: 32,
+        feat_out: 32,
+        tiling: TilingConfig {
+            dst_part: 512,
+            src_part: 512,
+            mode: TilingMode::Sparse,
+            reorder: Reorder::InDegree,
+        },
+        e2v: true,
+        functional: false,
+        seed: 11,
+    }
+}
+
+#[test]
+fn every_model_on_every_table3_dataset() {
+    let arch = ArchConfig::default();
+    for m in ModelKind::ALL {
+        for ds in ["AK", "AD", "CP"] {
+            let mut cfg = run_cfg(m.name(), ds);
+            cfg.scale = 128;
+            let session = Session::prepare(&cfg)
+                .unwrap_or_else(|e| panic!("{}/{ds}: {e}", m.name()));
+            let res = session
+                .simulate(&arch, false, None, 0)
+                .unwrap_or_else(|e| panic!("{}/{ds}: {e}", m.name()));
+            assert!(res.cycles > 0);
+            // energy total must be positive and HBM-dominated-or-comparable
+            let e = EnergyModel::default().evaluate(&res.counters, arch.freq_hz);
+            assert!(e.total_j() > 0.0);
+        }
+    }
+}
+
+#[test]
+fn zipper_beats_cpu_baseline_on_all_models() {
+    // Fig 9's CPU-side ordering: ZIPPER simulated latency must be far
+    // below the analytic DGL-CPU latency on the same (scaled) workload.
+    let arch = ArchConfig::default();
+    for m in ModelKind::ALL {
+        let cfg = run_cfg(m.name(), "AD");
+        let session = Session::prepare(&cfg).unwrap();
+        let res = session.simulate(&arch, false, None, 0).unwrap();
+        let zipper_s = res.seconds(&arch);
+        let ops = baselines::whole_graph_ops(
+            &m.build(),
+            session.graph.num_vertices() as u64,
+            session.graph.num_edges(),
+            cfg.feat_in as u64,
+            cfg.feat_out as u64,
+        );
+        let cpu = DeviceModel::cpu_dgl().run(&ops, 0);
+        assert!(
+            cpu.seconds > 5.0 * zipper_s,
+            "{}: cpu {} vs zipper {}",
+            m.name(),
+            cpu.seconds,
+            zipper_s
+        );
+    }
+}
+
+#[test]
+fn sparse_tiling_reduces_dram_reads_end_to_end() {
+    // Fig 11 mechanism check at integration level.
+    let arch = ArchConfig::default();
+    let mk = |mode, reorder| {
+        let mut cfg = run_cfg("gcn", "CP");
+        cfg.tiling.mode = mode;
+        cfg.tiling.reorder = reorder;
+        cfg.tiling.dst_part = 256;
+        cfg.tiling.src_part = 256;
+        let session = Session::prepare(&cfg).unwrap();
+        session.simulate(&arch, false, None, 0).unwrap().dram_read_bytes
+    };
+    let regular = mk(TilingMode::Regular, Reorder::None);
+    let sparse = mk(TilingMode::Sparse, Reorder::None);
+    let sorted = mk(TilingMode::Sparse, Reorder::InDegree);
+    assert!(sparse < regular, "sparse {sparse} !< regular {regular}");
+    assert!(sorted <= sparse, "sorted {sorted} !<= sparse {sparse}");
+}
+
+#[test]
+fn coordinator_parallel_serving_is_deterministic() {
+    let mut c = Coordinator::new(ArchConfig::default(), 4);
+    for i in 0..8 {
+        let mut cfg = run_cfg("gat", "CR");
+        cfg.scale = 8;
+        cfg.functional = true;
+        c.submit(InferenceRequest { id: i, run: cfg, input_seed: 5 });
+    }
+    let resp = c.drain();
+    assert_eq!(resp.len(), 8);
+    let sums: Vec<f64> = resp.iter().map(|r| r.output_checksum.unwrap()).collect();
+    for s in &sums {
+        assert!((s - sums[0]).abs() < 1e-6, "nondeterministic outputs: {sums:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property-based tests (in-tree deterministic RNG; proptest is not
+// available offline). Each property runs over N seeded random cases.
+// ---------------------------------------------------------------------------
+
+mod properties {
+    use super::*;
+    use zipper::graph::generators;
+    use zipper::tiling::tile;
+    use zipper::util::Rng;
+
+    /// Tiling conserves edges and keeps local indices in range for any
+    /// (graph, partition-size, mode, reorder) combination.
+    #[test]
+    fn prop_tiling_conserves_edges() {
+        let mut rng = Rng::new(0xF00D);
+        for case in 0..40 {
+            let v = 16 + rng.below(500) as u32;
+            let e = 1 + rng.below(4_000);
+            let g = generators::power_law(v, e, 0.6 + rng.next_f64(), 0.6 + rng.next_f64(), 0, case);
+            let dst_part = 1 + rng.below(v as u64) as u32;
+            let src_part = 1 + rng.below(v as u64) as u32;
+            let mode = if rng.chance(0.5) { TilingMode::Sparse } else { TilingMode::Regular };
+            let reorder = match rng.below(3) {
+                0 => Reorder::None,
+                1 => Reorder::InDegree,
+                _ => Reorder::OutDegree,
+            };
+            let t = tile(&g, TilingConfig { dst_part, src_part, mode, reorder });
+            let total: u64 = t
+                .partitions
+                .iter()
+                .flat_map(|p| p.tiles.iter())
+                .map(|x| x.num_edges() as u64)
+                .sum();
+            assert_eq!(total, g.num_edges(), "case {case}: v={v} e={e}");
+            for p in &t.partitions {
+                for tl in &p.tiles {
+                    for &(ls, ld) in &tl.edges {
+                        assert!(ls < tl.num_src());
+                        assert!(ld < p.num_dst());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Functional simulation is invariant to tiling parameters, stream
+    /// counts, and reordering: same graph + weights ⇒ same output.
+    #[test]
+    fn prop_functional_output_invariant_to_schedule() {
+        let mut rng = Rng::new(0xBEEF);
+        for case in 0..6 {
+            let v = 64 + rng.below(150) as u32;
+            let e = 200 + rng.below(800);
+            let g = generators::power_law(v, e, 1.0, 1.0, 0, 100 + case);
+            let mk = |dst_part: u32, src_part: u32, streams: u32, reorder| {
+                let cfg = RunConfig {
+                    model: "gcn".into(),
+                    dataset: "unused".into(),
+                    scale: 1,
+                    feat_in: 16,
+                    feat_out: 16,
+                    tiling: TilingConfig {
+                        dst_part,
+                        src_part,
+                        mode: TilingMode::Sparse,
+                        reorder,
+                    },
+                    e2v: true,
+                    functional: true,
+                    seed: 9,
+                };
+                let session =
+                    Session::from_graph(ModelKind::Gcn, g.clone(), &cfg).unwrap();
+                let x = session.make_input(33);
+                let mut arch = ArchConfig::default();
+                arch.s_streams = streams;
+                arch.e_streams = streams;
+                session.simulate(&arch, true, Some(&x), 0).unwrap().output.unwrap()
+            };
+            let a = mk(32, 32, 2, Reorder::None);
+            let b = mk(64, 16, 4, Reorder::InDegree);
+            let c = mk(v, v, 8, Reorder::OutDegree);
+            for (i, ((x, y), z)) in a.iter().zip(&b).zip(&c).enumerate() {
+                assert!(
+                    (x - y).abs() < 1e-3 && (x - z).abs() < 1e-3,
+                    "case {case} row {i}: {x} {y} {z}"
+                );
+            }
+        }
+    }
+
+    /// E2V never changes functional results (any model, random graphs).
+    #[test]
+    fn prop_e2v_preserves_numerics() {
+        let mut rng = Rng::new(0xCAFE);
+        for case in 0..4 {
+            let v = 50 + rng.below(100) as u32;
+            let e = 100 + rng.below(500);
+            for m in [ModelKind::Gat, ModelKind::Sage, ModelKind::Ggnn] {
+                let g = generators::power_law(v, e, 1.0, 1.0, 0, 7 * case + 1);
+                let mk = |e2v: bool| {
+                    let cfg = RunConfig {
+                        model: m.name().into(),
+                        dataset: "unused".into(),
+                        scale: 1,
+                        feat_in: 8,
+                        feat_out: 8,
+                        tiling: TilingConfig {
+                            dst_part: 32,
+                            src_part: 32,
+                            mode: TilingMode::Sparse,
+                            reorder: Reorder::None,
+                        },
+                        e2v,
+                        functional: true,
+                        seed: 3,
+                    };
+                    let s = Session::from_graph(m, g.clone(), &cfg).unwrap();
+                    let x = s.make_input(21);
+                    s.simulate(&ArchConfig::default(), true, Some(&x), 0)
+                        .unwrap()
+                        .output
+                        .unwrap()
+                };
+                let naive = mk(false);
+                let opt = mk(true);
+                for (a, b) in naive.iter().zip(&opt) {
+                    assert!((a - b).abs() < 1e-3, "{}: {a} vs {b}", m.name());
+                }
+            }
+        }
+    }
+
+    /// Degree-sort reordering never increases total source loads on
+    /// skewed graphs (the §5.3 claim).
+    #[test]
+    fn prop_reorder_never_hurts_much() {
+        let mut rng = Rng::new(0xD1CE);
+        for case in 0..20 {
+            let v = 200 + rng.below(2_000) as u32;
+            let e = (v as u64) * (2 + rng.below(8));
+            let g = generators::power_law(v, e, 1.1, 1.1, 0, case + 500);
+            let cfg = |reorder| TilingConfig {
+                dst_part: 128,
+                src_part: 128,
+                mode: TilingMode::Sparse,
+                reorder,
+            };
+            let plain = tile(&g, cfg(Reorder::None)).total_src_loads();
+            let sorted = tile(&g, cfg(Reorder::InDegree)).total_src_loads();
+            // allow 5% noise on small graphs, but no systematic regression
+            assert!(
+                (sorted as f64) < (plain as f64) * 1.05,
+                "case {case}: sorted {sorted} vs plain {plain}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT three-layer validation (requires `make artifacts`).
+// ---------------------------------------------------------------------------
+
+mod pjrt {
+    use std::path::Path;
+    use zipper::coordinator::validate;
+    use zipper::models::ModelKind;
+    use zipper::runtime::{Runtime, TileShape};
+
+    fn artifacts_dir() -> Option<&'static Path> {
+        let p = Path::new("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn all_models_match_pjrt_oracle() {
+        let Some(dir) = artifacts_dir() else {
+            panic!("artifacts/manifest.json missing — run `make artifacts` first");
+        };
+        let mut rt = Runtime::new(dir).expect("PJRT runtime");
+        let shape = TileShape {
+            num_src: 64,
+            num_dst: 64,
+            num_edges: 256,
+            feat_in: 32,
+            feat_out: 32,
+        };
+        for m in ModelKind::ALL {
+            let r = validate::validate_model(&mut rt, m, &shape, 41)
+                .unwrap_or_else(|e| panic!("{}: {e}", m.name()));
+            assert!(
+                r.pass,
+                "{}: max err {} over {} rows",
+                r.model, r.max_abs_err, r.rows_compared
+            );
+            assert!(r.mean_abs_err.is_finite());
+        }
+    }
+
+    #[test]
+    fn validation_is_seed_robust() {
+        let Some(dir) = artifacts_dir() else {
+            panic!("artifacts missing — run `make artifacts`");
+        };
+        let mut rt = Runtime::new(dir).expect("PJRT runtime");
+        let shape = TileShape {
+            num_src: 64,
+            num_dst: 64,
+            num_edges: 256,
+            feat_in: 32,
+            feat_out: 32,
+        };
+        for seed in [1u64, 2, 3] {
+            let r = validate::validate_model(&mut rt, ModelKind::Gat, &shape, seed).unwrap();
+            assert!(r.pass, "seed {seed}: {}", r.max_abs_err);
+        }
+    }
+}
