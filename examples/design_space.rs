@@ -30,8 +30,8 @@ fn main() -> Result<(), String> {
     println!(
         "DSE for {model} on {dataset} (1/{} scale: |V|={} |E|={})\n",
         run.scale,
-        session.graph.num_vertices(),
-        session.graph.num_edges()
+        session.graph().num_vertices(),
+        session.graph().num_edges()
     );
 
     // stream sweep at 1 MU / 2 VU

@@ -24,16 +24,17 @@ fn main() -> Result<(), String> {
         ..Default::default()
     };
 
-    // 3. Session = graph + tiling + compiled SDE program + weights.
+    // 3. Session = shared handle over a compile-once ExecPlan
+    //    (graph + tiling + compiled SDE program + weights).
     let session = Session::prepare(&run)?;
     println!(
         "graph |V|={} |E|={}, {} tiles across {} partitions",
-        session.graph.num_vertices(),
-        session.graph.num_edges(),
-        session.tiling.num_tiles(),
-        session.tiling.partitions.len()
+        session.graph().num_vertices(),
+        session.graph().num_edges(),
+        session.tiling().num_tiles(),
+        session.tiling().partitions.len()
     );
-    println!("{}", session.program.disassemble());
+    println!("{}", session.program().disassemble());
 
     // 4. Simulate (cycle-level + functional).
     let x = session.make_input(run.seed);

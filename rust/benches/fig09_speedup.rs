@@ -45,7 +45,7 @@ fn main() {
             let session = Session::prepare(&run).expect("session");
             let res = session.simulate(&arch, false, None, 0).expect("simulate");
             let zipper_s = res.seconds(&arch);
-            let (v, e) = (session.graph.num_vertices() as u64, session.graph.num_edges());
+            let (v, e) = (session.graph().num_vertices() as u64, session.graph().num_edges());
             let ops = whole_graph_ops(&model.build(), v, e, 128, 128);
             let mut cpu_s = DeviceModel::cpu_dgl().run(&ops, 0).seconds;
             let mb = memory_footprint(&model.build(), spec.vertices, spec.edges, 128, 128);

@@ -37,7 +37,7 @@ fn main() {
             let zipper_j = EnergyModel::default()
                 .evaluate(&res.counters, arch.freq_hz)
                 .total_j();
-            let (v, e) = (session.graph.num_vertices() as u64, session.graph.num_edges());
+            let (v, e) = (session.graph().num_vertices() as u64, session.graph().num_edges());
             let ops = whole_graph_ops(&model.build(), v, e, 128, 128);
             let cpu_j = DeviceModel::cpu_dgl().run(&ops, 0).energy_j;
             let gpu_j = DeviceModel::gpu_dgl().run(&ops, 0).energy_j;

@@ -31,7 +31,7 @@ fn main() {
         let mk = |mode, reorder| {
             // Larger graph + paper-proportioned tiles: the blank-row
             // waste regular tiling pays grows with |V| / src_part, so
-            // the reduction factor is scale-dependent (EXPERIMENTS.md).
+            // the reduction factor is scale-dependent (see DESIGN.md §6).
             let mut run = RunConfig {
                 model: model.name().into(),
                 dataset: "CP".into(),

@@ -31,7 +31,7 @@ fn main() {
             };
             let session = Session::prepare(&run).expect("session");
             let res = session.simulate(&arch, false, None, 0).expect("simulate");
-            (res.seconds(&arch), session.graph.num_vertices() as u64, session.graph.num_edges())
+            (res.seconds(&arch), session.graph().num_vertices() as u64, session.graph().num_edges())
         };
         let (naive_s, v, e) = mk(false);
         let (opt_s, _, _) = mk(true);

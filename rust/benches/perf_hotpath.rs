@@ -1,4 +1,4 @@
-//! Perf microbenches for the L3 hot paths (EXPERIMENTS.md §Perf).
+//! Perf microbenches for the L3 hot paths.
 //!
 //! Measures, with wall-clock timing over repeated runs:
 //!   * simulator engine throughput (simulated instructions / host second)

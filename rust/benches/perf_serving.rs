@@ -1,0 +1,138 @@
+//! Serving-throughput bench for the compile-once hot path.
+//!
+//! Measures requests/sec through the coordinator with a **cold** plan
+//! cache (every request may compile a plan) vs a **warm** cache (every
+//! request reuses a shared `Arc<ExecPlan>` and a per-worker scratch),
+//! across worker counts. Also times plan compilation vs cache lookup
+//! directly. Emits `BENCH_serving.json` so future PRs have a trajectory
+//! for the serving hot path.
+//!
+//! ```bash
+//! cargo bench --bench perf_serving
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+use zipper::config::{ArchConfig, RunConfig};
+use zipper::coordinator::{Coordinator, InferenceRequest};
+use zipper::metrics::Table;
+use zipper::plan::PlanCache;
+use zipper::tiling::{Reorder, TilingConfig, TilingMode};
+use zipper::util::json::Json;
+
+const N_REQUESTS: u64 = 60;
+
+fn request(i: u64) -> InferenceRequest {
+    let models = ["gcn", "gat", "sage", "ggnn", "rgcn"];
+    let datasets = ["CR", "CS", "PB"];
+    let run = RunConfig {
+        model: models[i as usize % models.len()].into(),
+        dataset: datasets[i as usize % datasets.len()].into(),
+        scale: 4,
+        feat_in: 32,
+        feat_out: 32,
+        tiling: TilingConfig {
+            dst_part: 256,
+            src_part: 256,
+            mode: TilingMode::Sparse,
+            reorder: Reorder::InDegree,
+        },
+        e2v: true,
+        // timing-only: the serving hot path benches the scheduler +
+        // plan reuse, not the functional executor
+        functional: false,
+        seed: 7,
+    };
+    InferenceRequest { id: i, run, input_seed: i }
+}
+
+/// Serve one batch; returns (wall seconds, error count, warm hits).
+fn serve(arch: ArchConfig, workers: usize, cache: &Arc<PlanCache>) -> (f64, usize, usize) {
+    let mut c = Coordinator::with_cache(arch, workers, Arc::clone(cache));
+    let t0 = Instant::now();
+    for i in 0..N_REQUESTS {
+        c.submit(request(i));
+    }
+    let resp = c.drain();
+    let wall = t0.elapsed().as_secs_f64();
+    let errors = resp.iter().filter(|r| r.error.is_some()).count();
+    let warm = resp.iter().filter(|r| r.plan_cache_hit).count();
+    (wall, errors, warm)
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn main() {
+    let arch = ArchConfig::default();
+    let mut table = Table::new(&[
+        "workers", "cold req/s", "warm req/s", "speedup", "warm hits",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+
+    for workers in [1usize, 2, 4, 8] {
+        let cache = Arc::new(PlanCache::new());
+        let (cold_wall, cold_err, _) = serve(arch, workers, &cache);
+        assert_eq!(cold_err, 0, "cold pass had errors");
+        // warm pass: same requests, plans already compiled
+        let (warm_wall, warm_err, warm_hits) = serve(arch, workers, &cache);
+        assert_eq!(warm_err, 0, "warm pass had errors");
+        assert_eq!(
+            warm_hits as u64, N_REQUESTS,
+            "warm pass must hit the plan cache on every request"
+        );
+        let cold_rps = N_REQUESTS as f64 / cold_wall;
+        let warm_rps = N_REQUESTS as f64 / warm_wall;
+        table.row(&[
+            workers.to_string(),
+            format!("{cold_rps:.1}"),
+            format!("{warm_rps:.1}"),
+            format!("{:.2}x", warm_rps / cold_rps),
+            format!("{warm_hits}/{N_REQUESTS}"),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("workers".to_string(), num(workers as f64));
+        row.insert("requests".to_string(), num(N_REQUESTS as f64));
+        row.insert("cold_wall_s".to_string(), num(cold_wall));
+        row.insert("warm_wall_s".to_string(), num(warm_wall));
+        row.insert("cold_req_per_s".to_string(), num(cold_rps));
+        row.insert("warm_req_per_s".to_string(), num(warm_rps));
+        row.insert("warm_speedup".to_string(), num(warm_rps / cold_rps));
+        row.insert("plan_entries".to_string(), num(cache.stats().entries as f64));
+        rows.push(Json::Obj(row));
+    }
+
+    // direct cost of the decisions the cache skips: compile vs lookup
+    let cache = PlanCache::new();
+    let cfg = request(0).run;
+    let t0 = Instant::now();
+    cache.get_or_compile(&cfg).expect("compile");
+    let compile_s = t0.elapsed().as_secs_f64();
+    let lookups = 1_000u32;
+    let t0 = Instant::now();
+    for _ in 0..lookups {
+        cache.get_or_compile(&cfg).expect("lookup");
+    }
+    let lookup_s = t0.elapsed().as_secs_f64() / lookups as f64;
+
+    println!("== serving throughput: cold vs warm plan cache ({N_REQUESTS} requests) ==");
+    print!("{}", table.render());
+    println!(
+        "\nplan compile (tile+compile+weights): {:.3} ms; cache lookup: {:.3} us \
+         ({:.0}x cheaper)",
+        compile_s * 1e3,
+        lookup_s * 1e6,
+        compile_s / lookup_s.max(1e-12)
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("perf_serving".to_string()));
+    root.insert("sweep".to_string(), Json::Arr(rows));
+    root.insert("plan_compile_s".to_string(), num(compile_s));
+    root.insert("plan_lookup_s".to_string(), num(lookup_s));
+    let path = "BENCH_serving.json";
+    std::fs::write(path, Json::Obj(root).to_string_pretty()).expect("write BENCH_serving.json");
+    println!("wrote {path}");
+}

@@ -1,11 +1,12 @@
 //! L3 coordinator: the serving front-end over the ZIPPER stack.
 //!
 //! Responsibilities:
-//!   * **Sessions** — prepare-once bundles: dataset → graph → tiling →
-//!     compiled SDE program → weights, cached per request key.
+//!   * **Plans** — compile-once bundles (`plan::ExecPlan`): dataset →
+//!     graph → tiling → compiled SDE program → weights, cached per
+//!     structured `PlanKey` and shared across workers as `Arc`s.
 //!   * **Serving** — a worker pool consuming inference requests from a
-//!     queue; each request runs the cycle-level simulator (timing +
-//!     energy) and optionally functional execution.
+//!     queue; each worker reuses one `ExecScratch`, so a warm request
+//!     does zero recompile/retile work and almost no allocation.
 //!   * **Validation** — the three-layer glue: execute the same tiles
 //!     through the PJRT-loaded JAX artifacts and compare against the
 //!     simulator's functional output (paper §8.1: "validate ... the
@@ -14,61 +15,78 @@
 
 pub mod validate;
 
-use crate::compiler::{compile, OptLevel, Program};
+use crate::compiler::Program;
 use crate::config::{ArchConfig, RunConfig};
-use crate::energy::{EnergyCounters, EnergyModel};
-use crate::graph::{datasets, Graph};
-use crate::models::{ModelKind, WeightStore, NUM_RELATIONS};
-use crate::sim::{SimOptions, SimResult, Simulator, Workload};
-use crate::tiling::{tile, Tiling};
-use crate::util::Rng;
-use std::collections::HashMap;
+use crate::energy::EnergyModel;
+use crate::graph::Graph;
+use crate::models::{ModelKind, WeightStore};
+use crate::plan::{CacheStats, ExecPlan, PlanCache};
+use crate::sim::{ExecScratch, SimResult};
+use crate::tiling::Tiling;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// A prepared inference session: everything reusable across requests.
+/// A prepared inference session: a thin handle over a shared, immutable
+/// [`ExecPlan`]. Cheap to clone; all per-run state lives in the caller's
+/// scratch. Kept as the stable front-door API for benches and examples.
+#[derive(Clone)]
 pub struct Session {
-    pub model: ModelKind,
-    pub graph: Graph,
-    pub tiling: Tiling,
-    pub program: Program,
-    pub weights: WeightStore,
-    pub feat_in: u32,
-    pub feat_out: u32,
+    plan: Arc<ExecPlan>,
 }
 
 impl Session {
-    /// Build a session from a run config (dataset registry + compiler).
+    /// Compile a session from a run config (dataset registry + compiler).
     pub fn prepare(run: &RunConfig) -> Result<Session, String> {
-        let model = ModelKind::parse(&run.model)
-            .ok_or_else(|| format!("unknown model {}", run.model))?;
-        let spec = datasets::by_id(&run.dataset)
-            .ok_or_else(|| format!("unknown dataset {}", run.dataset))?;
-        let etypes = if model.uses_etypes() { NUM_RELATIONS } else { 0 };
-        let graph = spec.instantiate_typed(run.scale, etypes, run.seed);
-        Self::from_graph(model, graph, run)
+        Ok(Session { plan: Arc::new(ExecPlan::compile(run)?) })
     }
 
     /// Build a session around an explicit graph (tests, examples).
-    pub fn from_graph(
-        model: ModelKind,
-        graph: Graph,
-        run: &RunConfig,
-    ) -> Result<Session, String> {
-        let feat_out = if model.requires_square() { run.feat_in } else { run.feat_out };
-        let tiling = tile(&graph, run.tiling);
-        let opt = if run.e2v { OptLevel::E2v } else { OptLevel::None };
-        let program = compile(&model.build(), opt).map_err(|e| e.to_string())?;
-        let weights = WeightStore::synthesize(&model.build(), run.feat_in, feat_out, run.seed);
-        Ok(Session { model, graph, tiling, program, weights, feat_in: run.feat_in, feat_out })
+    pub fn from_graph(model: ModelKind, graph: Graph, run: &RunConfig) -> Result<Session, String> {
+        Ok(Session { plan: Arc::new(ExecPlan::from_graph(model, graph, run)?) })
+    }
+
+    /// Wrap an already-compiled shared plan (plan-cache hit path).
+    pub fn from_plan(plan: Arc<ExecPlan>) -> Session {
+        Session { plan }
+    }
+
+    pub fn plan(&self) -> &Arc<ExecPlan> {
+        &self.plan
+    }
+
+    pub fn model(&self) -> ModelKind {
+        self.plan.model
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.plan.graph
+    }
+
+    pub fn tiling(&self) -> &Tiling {
+        &self.plan.tiling
+    }
+
+    pub fn program(&self) -> &Program {
+        &self.plan.program
+    }
+
+    pub fn weights(&self) -> &WeightStore {
+        &self.plan.weights
+    }
+
+    pub fn feat_in(&self) -> u32 {
+        self.plan.feat_in
+    }
+
+    pub fn feat_out(&self) -> u32 {
+        self.plan.feat_out
     }
 
     /// Deterministic input embeddings for this session's graph.
     pub fn make_input(&self, seed: u64) -> Vec<f32> {
-        let n = self.graph.num_vertices() as usize * self.feat_in as usize;
-        let mut rng = Rng::new(seed);
-        (0..n).map(|_| rng.next_f32_sym() * 0.5).collect()
+        self.plan.make_input(seed)
     }
 
     /// Run the cycle-level simulation (optionally functional).
@@ -79,15 +97,19 @@ impl Session {
         x: Option<&[f32]>,
         trace_window: u64,
     ) -> Result<SimResult, String> {
-        let wl = Workload {
-            program: &self.program,
-            tiling: &self.tiling,
-            weights: &self.weights,
-            feat_in: self.feat_in,
-            feat_out: self.feat_out,
-            x,
-        };
-        Simulator::new(arch, &wl, SimOptions { functional, trace_window }).run()
+        self.plan.simulate(arch, functional, x, trace_window)
+    }
+
+    /// Re-entrant variant reusing a caller-owned scratch (hot path).
+    pub fn simulate_with(
+        &self,
+        arch: &ArchConfig,
+        functional: bool,
+        x: Option<&[f32]>,
+        trace_window: u64,
+        scratch: &mut ExecScratch,
+    ) -> Result<SimResult, String> {
+        self.plan.simulate_with(arch, functional, x, trace_window, scratch)
     }
 }
 
@@ -112,115 +134,210 @@ pub struct InferenceResponse {
     pub energy_j: f64,
     /// Wall-clock serving latency (queue + prepare + simulate).
     pub wall_seconds: f64,
+    /// Whether the execution plan came from the cache (warm request).
+    pub plan_cache_hit: bool,
+    /// Host seconds spent compiling the plan (0 on a warm request).
+    pub prepare_seconds: f64,
     /// Checksum of the output embeddings (functional runs).
     pub output_checksum: Option<f64>,
     pub error: Option<String>,
 }
 
-/// Session cache key.
-fn session_key(run: &RunConfig) -> String {
-    format!(
-        "{}|{}|{}|{}x{}|{:?}|{}",
-        run.model, run.dataset, run.scale, run.feat_in, run.feat_out, run.tiling, run.e2v
-    )
+impl InferenceResponse {
+    fn empty(id: u64, model: &str, dataset: &str) -> InferenceResponse {
+        InferenceResponse {
+            id,
+            model: model.to_string(),
+            dataset: dataset.to_string(),
+            sim_cycles: 0,
+            sim_seconds: 0.0,
+            energy_j: 0.0,
+            wall_seconds: 0.0,
+            plan_cache_hit: false,
+            prepare_seconds: 0.0,
+            output_checksum: None,
+            error: None,
+        }
+    }
+
+    fn failed(id: u64, model: &str, dataset: &str, error: String) -> InferenceResponse {
+        InferenceResponse { error: Some(error), ..Self::empty(id, model, dataset) }
+    }
 }
 
-/// Multi-threaded serving coordinator.
+/// Multi-threaded serving coordinator over a shared [`PlanCache`].
 pub struct Coordinator {
     tx: Option<mpsc::Sender<InferenceRequest>>,
     rx_resp: mpsc::Receiver<InferenceResponse>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    submitted: u64,
+    /// (id, model, dataset) per submitted request, so drain can report
+    /// losses instead of silently truncating.
+    submitted: Vec<(u64, String, String)>,
+    /// Responses synthesized locally (e.g. when the queue is gone).
+    local: Vec<InferenceResponse>,
+    cache: Arc<PlanCache>,
 }
 
 impl Coordinator {
     pub fn new(arch: ArchConfig, num_workers: usize) -> Coordinator {
+        Self::with_cache(arch, num_workers, Arc::new(PlanCache::new()))
+    }
+
+    /// Share an existing plan cache (warm restarts, cold/warm benches).
+    pub fn with_cache(arch: ArchConfig, num_workers: usize, cache: Arc<PlanCache>) -> Coordinator {
         let (tx, rx) = mpsc::channel::<InferenceRequest>();
         let (tx_resp, rx_resp) = mpsc::channel::<InferenceResponse>();
         let rx = Arc::new(Mutex::new(rx));
-        let sessions: Arc<Mutex<HashMap<String, Arc<Session>>>> =
-            Arc::new(Mutex::new(HashMap::new()));
         let mut workers = Vec::new();
         for _ in 0..num_workers.max(1) {
             let rx = Arc::clone(&rx);
             let tx_resp = tx_resp.clone();
-            let sessions = Arc::clone(&sessions);
-            workers.push(std::thread::spawn(move || loop {
-                let req = {
-                    let guard = rx.lock().expect("queue lock");
-                    guard.recv()
-                };
-                let Ok(req) = req else { break };
-                let t0 = Instant::now();
-                let resp = handle(&arch, &sessions, &req, t0);
-                if tx_resp.send(resp).is_err() {
-                    break;
+            let cache = Arc::clone(&cache);
+            workers.push(std::thread::spawn(move || {
+                // per-worker scratch: reused across every request this
+                // worker serves (the allocation-light hot path)
+                let mut scratch = ExecScratch::new();
+                loop {
+                    let req = {
+                        let guard = match rx.lock() {
+                            Ok(g) => g,
+                            // a peer panicked while holding the queue
+                            // lock; the queue itself is still sound
+                            Err(poisoned) => poisoned.into_inner(),
+                        };
+                        guard.recv()
+                    };
+                    let Ok(req) = req else { break };
+                    let t0 = Instant::now();
+                    let resp = catch_unwind(AssertUnwindSafe(|| {
+                        handle(&arch, &cache, &req, t0, &mut scratch)
+                    }))
+                    .unwrap_or_else(|panic| {
+                        InferenceResponse::failed(
+                            req.id,
+                            &req.run.model,
+                            &req.run.dataset,
+                            format!("worker panicked: {}", panic_message(panic.as_ref())),
+                        )
+                    });
+                    if tx_resp.send(resp).is_err() {
+                        break;
+                    }
                 }
             }));
         }
-        Coordinator { tx: Some(tx), rx_resp, workers, submitted: 0 }
+        Coordinator {
+            tx: Some(tx),
+            rx_resp,
+            workers,
+            submitted: Vec::new(),
+            local: Vec::new(),
+            cache,
+        }
     }
 
+    pub fn cache(&self) -> &Arc<PlanCache> {
+        &self.cache
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Enqueue a request. Never panics: if the worker pool is gone (all
+    /// workers exited) the failure is reported as an error response.
     pub fn submit(&mut self, req: InferenceRequest) {
-        self.submitted += 1;
-        self.tx
-            .as_ref()
-            .expect("coordinator already drained")
-            .send(req)
-            .expect("worker pool alive");
+        self.submitted.push((req.id, req.run.model.clone(), req.run.dataset.clone()));
+        let sent = match &self.tx {
+            Some(tx) => tx.send(req).map_err(|e| e.0),
+            None => Err(req),
+        };
+        if let Err(req) = sent {
+            self.local.push(InferenceResponse::failed(
+                req.id,
+                &req.run.model,
+                &req.run.dataset,
+                "worker pool unavailable (already drained or all workers exited)".into(),
+            ));
+        }
     }
 
-    /// Close the queue and collect all responses (arrival order).
-    pub fn drain(mut self) -> Vec<InferenceResponse> {
+    /// Close the queue and collect all responses (arrival order). Every
+    /// submitted request yields exactly one response: requests lost to a
+    /// worker failure come back as error responses instead of being
+    /// silently dropped.
+    pub fn drain(&mut self) -> Vec<InferenceResponse> {
         drop(self.tx.take());
-        let mut out = Vec::with_capacity(self.submitted as usize);
-        for _ in 0..self.submitted {
+        let expected = self.submitted.len();
+        let mut out = std::mem::take(&mut self.local);
+        while out.len() < expected {
             match self.rx_resp.recv() {
                 Ok(r) => out.push(r),
-                Err(_) => break,
+                Err(_) => break, // all workers gone; report losses below
             }
         }
+        let mut panics = Vec::new();
         for w in self.workers.drain(..) {
-            let _ = w.join();
+            if let Err(p) = w.join() {
+                panics.push(panic_message(p.as_ref()).to_string());
+            }
+        }
+        if out.len() < expected {
+            let detail = if panics.is_empty() {
+                "worker exited early".to_string()
+            } else {
+                format!("worker panicked: {}", panics.join("; "))
+            };
+            // per-id multiset accounting: ids are caller-chosen and may
+            // repeat, so count received responses per id instead of
+            // testing mere presence
+            let mut received: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+            for r in &out {
+                *received.entry(r.id).or_insert(0) += 1;
+            }
+            let submitted = std::mem::take(&mut self.submitted);
+            for (id, model, dataset) in submitted {
+                match received.get_mut(&id) {
+                    Some(n) if *n > 0 => *n -= 1,
+                    _ => out.push(InferenceResponse::failed(id, &model, &dataset, detail.clone())),
+                }
+            }
+        } else {
+            self.submitted.clear();
         }
         out
     }
 }
 
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
 fn handle(
     arch: &ArchConfig,
-    sessions: &Mutex<HashMap<String, Arc<Session>>>,
+    cache: &PlanCache,
     req: &InferenceRequest,
     t0: Instant,
+    scratch: &mut ExecScratch,
 ) -> InferenceResponse {
-    let key = session_key(&req.run);
-    let session = {
-        let mut cache = sessions.lock().expect("session lock");
-        match cache.get(&key) {
-            Some(s) => Ok(Arc::clone(s)),
-            None => match Session::prepare(&req.run) {
-                Ok(s) => {
-                    let s = Arc::new(s);
-                    cache.insert(key.clone(), Arc::clone(&s));
-                    Ok(s)
-                }
-                Err(e) => Err(e),
-            },
-        }
-    };
-    let base = InferenceResponse {
-        id: req.id,
-        model: req.run.model.clone(),
-        dataset: req.run.dataset.clone(),
-        sim_cycles: 0,
-        sim_seconds: 0.0,
-        energy_j: 0.0,
-        wall_seconds: 0.0,
-        output_checksum: None,
-        error: None,
-    };
-    let session = match session {
-        Ok(s) => s,
+    let base = InferenceResponse::empty(req.id, &req.run.model, &req.run.dataset);
+    let (plan, hit) = match cache.get_or_compile(&req.run) {
+        Ok(p) => p,
         Err(e) => {
             return InferenceResponse {
                 error: Some(e),
@@ -229,23 +346,26 @@ fn handle(
             }
         }
     };
+    let prepare_seconds = if hit { 0.0 } else { t0.elapsed().as_secs_f64() };
     let x;
     let input = if req.run.functional {
-        x = session.make_input(req.input_seed);
-        Some(x)
+        x = plan.make_input(req.input_seed);
+        Some(x.as_slice())
     } else {
         None
     };
-    match session.simulate(arch, req.run.functional, input.as_deref(), 0) {
+    match plan.simulate_with(arch, req.run.functional, input, 0, scratch) {
         Ok(res) => {
             let energy = EnergyModel::default()
-                .evaluate(&counters_of(&res), arch.freq_hz)
+                .evaluate(&res.counters, arch.freq_hz)
                 .total_j();
             InferenceResponse {
                 sim_cycles: res.cycles,
                 sim_seconds: res.seconds(arch),
                 energy_j: energy,
                 wall_seconds: t0.elapsed().as_secs_f64(),
+                plan_cache_hit: hit,
+                prepare_seconds,
                 output_checksum: res.output.map(|o| o.iter().map(|&v| v as f64).sum::<f64>()),
                 ..base
             }
@@ -253,13 +373,11 @@ fn handle(
         Err(e) => InferenceResponse {
             error: Some(e),
             wall_seconds: t0.elapsed().as_secs_f64(),
+            plan_cache_hit: hit,
+            prepare_seconds,
             ..base
         },
     }
-}
-
-fn counters_of(res: &SimResult) -> EnergyCounters {
-    res.counters
 }
 
 #[cfg(test)]
@@ -318,7 +436,8 @@ mod tests {
 
     #[test]
     fn session_cache_reused_across_requests() {
-        // identical keys → same dataset instantiation → same cycles
+        // identical keys → one compiled plan → identical cycles, and the
+        // repeats must be recorded as cache hits
         let mut c = Coordinator::new(ArchConfig::default(), 2);
         for i in 0..4 {
             c.submit(InferenceRequest { id: i, run: small_run("gcn", false), input_seed: i });
@@ -326,6 +445,11 @@ mod tests {
         let resp = c.drain();
         let cycles: Vec<u64> = resp.iter().map(|r| r.sim_cycles).collect();
         assert!(cycles.windows(2).all(|w| w[0] == w[1]), "{cycles:?}");
+        // with 2 workers the first two requests may race to compile, but
+        // at least the trailing requests must be warm
+        let hits = resp.iter().filter(|r| r.plan_cache_hit).count();
+        assert!(hits >= 2, "expected ≥2 warm responses, got {hits}");
+        assert_eq!(c.cache_stats().entries, 1);
     }
 
     #[test]
@@ -336,5 +460,17 @@ mod tests {
         c.submit(InferenceRequest { id: 0, run, input_seed: 0 });
         let resp = c.drain();
         assert!(resp[0].error.is_some());
+    }
+
+    #[test]
+    fn submit_after_drain_reports_error_instead_of_panicking() {
+        let mut c = Coordinator::new(ArchConfig::default(), 1);
+        c.submit(InferenceRequest { id: 0, run: small_run("gcn", false), input_seed: 0 });
+        let first = c.drain();
+        assert_eq!(first.len(), 1);
+        c.submit(InferenceRequest { id: 1, run: small_run("gcn", false), input_seed: 1 });
+        let second = c.drain();
+        assert_eq!(second.len(), 1);
+        assert!(second[0].error.as_deref().unwrap().contains("worker pool unavailable"));
     }
 }

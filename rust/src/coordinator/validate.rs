@@ -7,6 +7,10 @@
 //! artifact's argument layout, execute via PJRT, and compare against the
 //! simulator's functional output row-by-row.
 //!
+//! Requires a PJRT-backed `Runtime` (see `runtime` module docs); with
+//! the dependency-free stub, `Runtime::execute` returns an error and
+//! callers should gate on `Runtime::available`.
+//!
 //! Numerics note: GAT's per-destination softmax is max-stabilized in the
 //! JAX oracle but algebraically unstabilized in the ISA program
 //! (DESIGN.md §6); with the test-scale weights the difference is ≪ 1e-3.
@@ -17,7 +21,6 @@ use crate::graph::generators;
 use crate::models::ModelKind;
 use crate::runtime::{pack, ArgValue, Runtime, TileShape};
 use crate::tiling::{Reorder, TilingConfig, TilingMode};
-use anyhow::{anyhow, bail, Result};
 
 #[derive(Clone, Debug)]
 pub struct ValidationReport {
@@ -36,7 +39,7 @@ pub fn validate_model(
     model: ModelKind,
     shape: &TileShape,
     seed: u64,
-) -> Result<ValidationReport> {
+) -> Result<ValidationReport, String> {
     // graph sized to fit the artifact: one tile per partition
     let v = shape.num_src.min(200);
     let e = (shape.num_edges / 2).min(600) as u64;
@@ -59,40 +62,40 @@ pub fn validate_model(
         functional: true,
         seed,
     };
-    let session = Session::from_graph(model, graph, &run)
-        .map_err(|e| anyhow!("session: {e}"))?;
+    let session = Session::from_graph(model, graph, &run).map_err(|e| format!("session: {e}"))?;
     let x = session.make_input(seed ^ 0x5eed);
     let sim = session
         .simulate(&ArchConfig::default(), true, Some(&x), 0)
-        .map_err(|e| anyhow!("simulate: {e}"))?;
-    let sim_out = sim.output.ok_or_else(|| anyhow!("no functional output"))?;
+        .map_err(|e| format!("simulate: {e}"))?;
+    let sim_out = sim.output.ok_or("no functional output")?;
 
     // Oracle path: per-partition PJRT execution.
     let fi = shape.feat_in as usize;
     let fo = shape.feat_out as usize;
-    let n = session.graph.num_vertices() as usize;
+    let n = session.graph().num_vertices() as usize;
+    let tiling = session.tiling();
     // permuted input (tiling may relabel; Reorder::None ⇒ identity, but
     // keep the general path)
     let mut x_tiled = vec![0.0f32; n * fi];
     for old in 0..n {
-        let new = session.tiling.perm[old] as usize;
+        let new = tiling.perm[old] as usize;
         x_tiled[new * fi..(new + 1) * fi].copy_from_slice(&x[old * fi..(old + 1) * fi]);
     }
     let mut oracle_tiled = vec![0.0f32; n * fo];
-    for part in &session.tiling.partitions {
+    for part in &tiling.partitions {
         if part.tiles.is_empty() {
             continue;
         }
         if part.tiles.len() != 1 {
-            bail!("validation tiling must give one tile per partition");
+            return Err("validation tiling must give one tile per partition".into());
         }
         let tile = &part.tiles[0];
         if tile.num_src() > shape.num_src || tile.num_edges() > shape.num_edges {
-            bail!(
+            return Err(format!(
                 "tile exceeds artifact shape: src {} edges {}",
                 tile.num_src(),
                 tile.num_edges()
-            );
+            ));
         }
         // pack x_src rows (tile source vertices, tiled ids)
         let mut xs = vec![0.0f32; tile.num_src() as usize * fi];
@@ -115,13 +118,13 @@ pub fn validate_model(
         );
 
         // weights in the artifact's argument order
-        let w = |name: &str| -> Result<ArgValue> {
+        let w = |name: &str| -> Result<ArgValue, String> {
             let t = session
-                .weights
+                .weights()
                 .tensors
                 .iter()
                 .find(|t| t.name == name)
-                .ok_or_else(|| anyhow!("weight {name} missing"))?;
+                .ok_or_else(|| format!("weight {name} missing"))?;
             let shape_v = if t.count > 1 {
                 vec![t.count as usize, t.rows as usize, t.cols as usize]
             } else if t.cols == 1 {
@@ -148,7 +151,9 @@ pub fn validate_model(
             ],
             ModelKind::Rgcn => vec![x_src, src, dst, et, valid, w("w_rel")?],
         };
-        let out = rt.execute(model.name(), shape, &args)?;
+        let out = rt
+            .execute(model.name(), shape, &args)
+            .map_err(|e| e.to_string())?;
         // rows 0..num_dst are the real partition rows
         for (i, gv) in (part.dst_start..part.dst_end).enumerate() {
             oracle_tiled[gv as usize * fo..(gv as usize + 1) * fo]
@@ -158,7 +163,7 @@ pub fn validate_model(
     // un-permute the oracle output
     let mut oracle = vec![0.0f32; n * fo];
     for new in 0..n {
-        let old = session.tiling.inv_perm[new] as usize;
+        let old = tiling.inv_perm[new] as usize;
         oracle[old * fo..(old + 1) * fo]
             .copy_from_slice(&oracle_tiled[new * fo..(new + 1) * fo]);
     }
@@ -173,7 +178,7 @@ pub fn validate_model(
     let tol = 2e-3;
     Ok(ValidationReport {
         model: model.name().into(),
-        partitions: session.tiling.partitions.len(),
+        partitions: tiling.partitions.len(),
         rows_compared: n,
         max_abs_err: max_err,
         mean_abs_err: (sum_err / sim_out.len() as f64) as f32,
@@ -183,7 +188,11 @@ pub fn validate_model(
 }
 
 /// Validate every model that has an artifact at `shape`.
-pub fn validate_all(rt: &mut Runtime, shape: &TileShape, seed: u64) -> Result<Vec<ValidationReport>> {
+pub fn validate_all(
+    rt: &mut Runtime,
+    shape: &TileShape,
+    seed: u64,
+) -> Result<Vec<ValidationReport>, String> {
     let mut reports = Vec::new();
     for m in ModelKind::ALL {
         reports.push(validate_model(rt, m, shape, seed)?);

@@ -142,7 +142,7 @@ impl GraphBuilder {
         // counting sort by destination (O(E + V)), then sort each
         // destination's in-neighbour slice by source — O(E + Σ dᵢ log dᵢ)
         // total, ~2× faster than a comparison sort over all edges on the
-        // generator/relabel hot path (EXPERIMENTS.md §Perf).
+        // generator/relabel hot path (see perf benches).
         let n = self.num_vertices as usize;
         let m = self.edges.len();
         let mut col_ptr = vec![0u64; n + 1];

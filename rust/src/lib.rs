@@ -16,8 +16,14 @@
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the compute
 //!   hot-spots (MU-tiled GEMM, GOP scatter/gather, fused ELW).
 //!
-//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
-//! paper-vs-measured results.
+//! The serving pipeline is *compile-once*: `plan::ExecPlan` bundles the
+//! immutable artifacts (tiling + compiled program + weights) produced
+//! once per operating point, and every consumer — simulator, serving
+//! coordinator, benches — runs off a shared `Arc<ExecPlan>` with
+//! per-request state confined to a reusable `sim::ExecScratch`.
+//!
+//! See DESIGN.md for the layer and module map (including the split
+//! simulator engine and the ExecPlan pipeline).
 
 pub mod area;
 pub mod baselines;
@@ -30,6 +36,7 @@ pub mod ir;
 pub mod isa;
 pub mod metrics;
 pub mod models;
+pub mod plan;
 pub mod runtime;
 pub mod sim;
 pub mod tiling;

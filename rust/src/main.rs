@@ -171,9 +171,9 @@ fn real_main(argv: &[String]) -> Result<(), String> {
             println!("model={} dataset={} scale=1/{}", run.model, run.dataset, run.scale);
             println!(
                 "graph: |V|={} |E|={}  tiles={} (mode {:?}, reorder {:?})",
-                session.graph.num_vertices(),
-                session.graph.num_edges(),
-                session.tiling.num_tiles(),
+                session.graph().num_vertices(),
+                session.graph().num_edges(),
+                session.tiling().num_tiles(),
                 run.tiling.mode,
                 run.tiling.reorder,
             );
@@ -247,12 +247,26 @@ fn real_main(argv: &[String]) -> Result<(), String> {
                  ({:.1} req/s), {errors} errors",
                 n as f64 / wall
             );
+            let stats = c.cache_stats();
+            println!(
+                "plan cache: {} plans compiled once, {} warm hits ({:.0}% hit rate)",
+                stats.entries,
+                stats.hits,
+                100.0 * stats.hit_rate()
+            );
             Ok(())
         }
         "validate" => {
             let dir = args.get("artifacts").unwrap_or("artifacts");
             let mut rt = Runtime::new(Path::new(dir)).map_err(|e| e.to_string())?;
             println!("PJRT platform: {}", rt.platform());
+            if !rt.available() {
+                return Err(
+                    "PJRT backend not linked into this build; `validate` needs the \
+                     oracle runtime (see rust/src/runtime docs)"
+                        .into(),
+                );
+            }
             let shape = TileShape {
                 num_src: 64,
                 num_dst: 64,

@@ -1,0 +1,367 @@
+//! Compile-once execution plans (the paper's core systems claim).
+//!
+//! ZIPPER's compiler fixes the expensive decisions — tiling, operator
+//! scheduling, buffer assignment — *once* per (model, graph, arch
+//! operating point); the runtime then only maps the immutable IR program
+//! onto hardware blocks per request. [`ExecPlan`] is that artifact: an
+//! `Arc`-able bundle of compiled [`Program`] + [`Tiling`] +
+//! [`WeightStore`] + derived dimensions, produced once and shared by any
+//! number of concurrent simulation runs. Per-request state lives
+//! entirely in the caller's [`ExecScratch`], so serving is re-entrant
+//! and allocation-light.
+//!
+//! [`PlanCache`] is the serving-side cache: a concurrent map from the
+//! structured [`PlanKey`] to `Arc<ExecPlan>`, with hit/miss counters so
+//! benches can prove warm requests skip recompile/retile entirely.
+
+use crate::compiler::{compile, OptLevel, Program};
+use crate::config::{ArchConfig, RunConfig};
+use crate::graph::{datasets, Graph};
+use crate::models::{ModelKind, WeightStore, NUM_RELATIONS};
+use crate::sim::{ExecScratch, SimOptions, SimResult, Simulator, Workload};
+use crate::tiling::{tile, Reorder, Tiling, TilingConfig, TilingMode};
+use crate::util::Rng;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Structured, stable cache key: every input that changes the compiled
+/// artifact. (The old string key formatted `TilingConfig` with `{:?}`
+/// and omitted the dataset seed — two different graphs could collide.)
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub model: String,
+    pub dataset: String,
+    pub scale: u64,
+    pub feat_in: u32,
+    pub feat_out: u32,
+    pub tiling: TilingConfig,
+    pub e2v: bool,
+    pub seed: u64,
+}
+
+impl PlanKey {
+    pub fn of(run: &RunConfig) -> PlanKey {
+        PlanKey {
+            model: run.model.clone(),
+            dataset: run.dataset.clone(),
+            scale: run.scale,
+            feat_in: run.feat_in,
+            feat_out: run.feat_out,
+            tiling: run.tiling,
+            e2v: run.e2v,
+            seed: run.seed,
+        }
+    }
+}
+
+impl fmt::Display for PlanKey {
+    /// Stable structured rendering (log lines, bench JSON).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mode = match self.tiling.mode {
+            TilingMode::Regular => "regular",
+            TilingMode::Sparse => "sparse",
+        };
+        let reorder = match self.tiling.reorder {
+            Reorder::None => "none",
+            Reorder::InDegree => "in_degree",
+            Reorder::OutDegree => "out_degree",
+        };
+        write!(
+            f,
+            "model={};dataset={};scale={};feat={}x{};dst_part={};src_part={};mode={};reorder={};e2v={};seed={}",
+            self.model,
+            self.dataset,
+            self.scale,
+            self.feat_in,
+            self.feat_out,
+            self.tiling.dst_part,
+            self.tiling.src_part,
+            mode,
+            reorder,
+            self.e2v,
+            self.seed,
+        )
+    }
+}
+
+/// Dimensions derived at plan-compile time so consumers never recompute
+/// them per request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanDims {
+    pub num_vertices: u32,
+    pub num_edges: u64,
+    pub num_partitions: usize,
+    pub num_tiles: usize,
+    pub max_tile_src: u32,
+    pub max_tile_edges: u32,
+    /// Length of a flat input embedding vector (V × feat_in).
+    pub input_len: usize,
+    /// Length of a flat output embedding vector (V × feat_out).
+    pub output_len: usize,
+}
+
+/// Immutable, shareable execution plan: everything reusable across
+/// requests for one (model, graph, tiling, features) operating point.
+pub struct ExecPlan {
+    pub key: PlanKey,
+    pub model: ModelKind,
+    pub graph: Graph,
+    pub tiling: Tiling,
+    pub program: Program,
+    pub weights: WeightStore,
+    pub feat_in: u32,
+    pub feat_out: u32,
+    pub dims: PlanDims,
+}
+
+impl ExecPlan {
+    /// Compile a plan from a run config (dataset registry + compiler).
+    pub fn compile(run: &RunConfig) -> Result<ExecPlan, String> {
+        let model = ModelKind::parse(&run.model)
+            .ok_or_else(|| format!("unknown model {}", run.model))?;
+        let spec = datasets::by_id(&run.dataset)
+            .ok_or_else(|| format!("unknown dataset {}", run.dataset))?;
+        let etypes = if model.uses_etypes() { NUM_RELATIONS } else { 0 };
+        let graph = spec.instantiate_typed(run.scale, etypes, run.seed);
+        Self::from_graph(model, graph, run)
+    }
+
+    /// Compile a plan around an explicit graph (tests, examples).
+    pub fn from_graph(model: ModelKind, graph: Graph, run: &RunConfig) -> Result<ExecPlan, String> {
+        let feat_out = if model.requires_square() { run.feat_in } else { run.feat_out };
+        let tiling = tile(&graph, run.tiling);
+        let opt = if run.e2v { OptLevel::E2v } else { OptLevel::None };
+        let program = compile(&model.build(), opt).map_err(|e| e.to_string())?;
+        let weights = WeightStore::synthesize(&model.build(), run.feat_in, feat_out, run.seed);
+        let dims = PlanDims {
+            num_vertices: tiling.num_vertices,
+            num_edges: tiling.num_edges,
+            num_partitions: tiling.partitions.len(),
+            num_tiles: tiling.num_tiles(),
+            max_tile_src: tiling.max_tile_src(),
+            max_tile_edges: tiling.max_tile_edges(),
+            input_len: tiling.num_vertices as usize * run.feat_in as usize,
+            output_len: tiling.num_vertices as usize * feat_out as usize,
+        };
+        Ok(ExecPlan {
+            key: PlanKey::of(run),
+            model,
+            graph,
+            tiling,
+            program,
+            weights,
+            feat_in: run.feat_in,
+            feat_out,
+            dims,
+        })
+    }
+
+    /// Deterministic input embeddings for this plan's graph.
+    pub fn make_input(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..self.dims.input_len).map(|_| rng.next_f32_sym() * 0.5).collect()
+    }
+
+    /// Borrow this plan as a simulator workload.
+    pub fn workload<'a>(&'a self, x: Option<&'a [f32]>) -> Workload<'a> {
+        Workload {
+            program: &self.program,
+            tiling: &self.tiling,
+            weights: &self.weights,
+            feat_in: self.feat_in,
+            feat_out: self.feat_out,
+            x,
+        }
+    }
+
+    /// Run the cycle-level simulation (optionally functional), allocating
+    /// fresh scratch. Prefer [`ExecPlan::simulate_with`] on hot paths.
+    pub fn simulate(
+        &self,
+        arch: &ArchConfig,
+        functional: bool,
+        x: Option<&[f32]>,
+        trace_window: u64,
+    ) -> Result<SimResult, String> {
+        let mut scratch = ExecScratch::new();
+        self.simulate_with(arch, functional, x, trace_window, &mut scratch)
+    }
+
+    /// Re-entrant simulation: the plan is only read, all run-local state
+    /// lives in `scratch`. Any number of threads may call this on the
+    /// same `Arc<ExecPlan>` concurrently, each with its own scratch.
+    pub fn simulate_with(
+        &self,
+        arch: &ArchConfig,
+        functional: bool,
+        x: Option<&[f32]>,
+        trace_window: u64,
+        scratch: &mut ExecScratch,
+    ) -> Result<SimResult, String> {
+        let wl = self.workload(x);
+        Simulator::new(arch, &wl, SimOptions { functional, trace_window }).run_with(scratch)
+    }
+}
+
+/// Snapshot of cache effectiveness counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Concurrent plan cache: compile once per key, share `Arc<ExecPlan>`
+/// across workers. Compilation happens outside the map lock so a slow
+/// compile never blocks unrelated lookups; if two threads race on the
+/// same key the first insert wins and the loser's plan is dropped.
+pub struct PlanCache {
+    plans: Mutex<HashMap<PlanKey, Arc<ExecPlan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache {
+            plans: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Fetch the plan for `run`, compiling it on first use. Returns the
+    /// shared plan and whether this call was a cache hit.
+    pub fn get_or_compile(&self, run: &RunConfig) -> Result<(Arc<ExecPlan>, bool), String> {
+        let key = PlanKey::of(run);
+        if let Some(p) = self.lookup(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((p, true));
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let fresh = Arc::new(ExecPlan::compile(run)?);
+        let mut map = self.plans.lock().unwrap_or_else(|p| p.into_inner());
+        let entry = map.entry(key).or_insert(fresh);
+        Ok((Arc::clone(entry), false))
+    }
+
+    fn lookup(&self, key: &PlanKey) -> Option<Arc<ExecPlan>> {
+        let map = self.plans.lock().unwrap_or_else(|p| p.into_inner());
+        map.get(key).map(Arc::clone)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let entries = self.plans.lock().unwrap_or_else(|p| p.into_inner()).len();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries,
+        }
+    }
+
+    pub fn clear(&self) {
+        self.plans.lock().unwrap_or_else(|p| p.into_inner()).clear();
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tiling::{Reorder, TilingMode};
+
+    fn run_cfg(model: &str) -> RunConfig {
+        RunConfig {
+            model: model.into(),
+            dataset: "CR".into(),
+            scale: 16,
+            feat_in: 16,
+            feat_out: 16,
+            tiling: TilingConfig {
+                dst_part: 64,
+                src_part: 64,
+                mode: TilingMode::Sparse,
+                reorder: Reorder::InDegree,
+            },
+            e2v: true,
+            functional: false,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn plan_key_is_stable_and_seed_sensitive() {
+        let a = PlanKey::of(&run_cfg("gcn"));
+        let b = PlanKey::of(&run_cfg("gcn"));
+        assert_eq!(a, b);
+        let mut other = run_cfg("gcn");
+        other.seed = 4;
+        assert_ne!(a, PlanKey::of(&other));
+        let s = a.to_string();
+        assert!(s.contains("model=gcn") && s.contains("seed=3") && s.contains("mode=sparse"));
+    }
+
+    #[test]
+    fn plan_compiles_and_simulates() {
+        let plan = ExecPlan::compile(&run_cfg("gat")).unwrap();
+        assert!(plan.dims.num_tiles > 0);
+        assert_eq!(plan.dims.num_partitions, plan.tiling.partitions.len());
+        let x = plan.make_input(7);
+        assert_eq!(x.len(), plan.dims.input_len);
+        let res = plan.simulate(&ArchConfig::default(), true, Some(&x), 0).unwrap();
+        assert!(res.cycles > 0);
+        assert_eq!(res.output.unwrap().len(), plan.dims.output_len);
+    }
+
+    #[test]
+    fn cache_hit_returns_same_plan() {
+        let cache = PlanCache::new();
+        let (a, hit_a) = cache.get_or_compile(&run_cfg("gcn")).unwrap();
+        let (b, hit_b) = cache.get_or_compile(&run_cfg("gcn")).unwrap();
+        assert!(!hit_a && hit_b);
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_miss_on_different_config() {
+        let cache = PlanCache::new();
+        cache.get_or_compile(&run_cfg("gcn")).unwrap();
+        let (_, hit) = cache.get_or_compile(&run_cfg("gat")).unwrap();
+        assert!(!hit);
+        let mut seeded = run_cfg("gcn");
+        seeded.seed = 99;
+        let (_, hit) = cache.get_or_compile(&seeded).unwrap();
+        assert!(!hit, "different seed must not reuse a cached graph");
+        assert_eq!(cache.stats().entries, 3);
+    }
+
+    #[test]
+    fn cache_propagates_compile_errors() {
+        let cache = PlanCache::new();
+        let mut bad = run_cfg("gcn");
+        bad.model = "transformer".into();
+        assert!(cache.get_or_compile(&bad).is_err());
+        assert_eq!(cache.stats().entries, 0);
+    }
+}

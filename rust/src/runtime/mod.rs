@@ -2,16 +2,41 @@
 //! them from Rust — the oracle path for validating the simulator's
 //! functional mode (the role DGL played in the paper's §8.1 validation).
 //!
-//! Interchange is HLO *text* (see python/compile/aot.py and
-//! /opt/xla-example/README.md): jax ≥ 0.5 emits protos with 64-bit ids
-//! that the crate's bundled xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids and round-trips cleanly. Python runs only at `make
-//! artifacts` time; this module is pure Rust + PJRT at run time.
+//! Interchange is HLO *text* (see python/compile/aot.py): jax ≥ 0.5
+//! emits protos with 64-bit ids that older xla_extension builds reject;
+//! the text parser reassigns ids and round-trips cleanly. Python runs
+//! only at `make artifacts` time; this module is pure Rust at run time.
+//!
+//! **Backend gating:** the crate builds dependency-free, so the PJRT
+//! FFI backend (the external `xla` crate) is not linked by default.
+//! Manifest parsing, argument packing, and shape bookkeeping are fully
+//! functional either way; `Runtime::execute` reports a descriptive
+//! error when no backend is linked, and callers (CLI `validate`, the
+//! serving example, the PJRT integration tests) degrade gracefully via
+//! [`Runtime::available`].
 
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
+
+/// Runtime-layer error (dependency-free stand-in for `anyhow::Error`).
+#[derive(Debug)]
+pub struct RtError(pub String);
+
+impl fmt::Display for RtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for RtError {}
+
+pub type Result<T> = std::result::Result<T, RtError>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(RtError(msg.into()))
+}
 
 /// Tile geometry key matching `python/compile/model.py::TileShape`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -51,21 +76,26 @@ pub struct Manifest {
 
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
-        let text = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
-            format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            RtError(format!(
+                "reading {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
         })?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| RtError(format!("manifest: {e}")))?;
         if j.get("format").and_then(Json::as_str) != Some("hlo-text") {
-            bail!("unexpected manifest format");
+            return err("unexpected manifest format");
         }
         let mut entries = Vec::new();
         for e in j.get("entries").and_then(Json::as_arr).unwrap_or(&[]) {
-            let tile = e.get("tile").ok_or_else(|| anyhow!("entry missing tile"))?;
+            let tile = e
+                .get("tile")
+                .ok_or_else(|| RtError("entry missing tile".into()))?;
             let g = |k: &str| -> Result<u32> {
                 tile.get(k)
                     .and_then(Json::as_u64)
                     .map(|v| v as u32)
-                    .ok_or_else(|| anyhow!("tile missing {k}"))
+                    .ok_or_else(|| RtError(format!("tile missing {k}")))
             };
             let mut args = Vec::new();
             for a in e.get("args").and_then(Json::as_arr).unwrap_or(&[]) {
@@ -85,7 +115,7 @@ impl Manifest {
                 model: e
                     .get("model")
                     .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow!("entry missing model"))?
+                    .ok_or_else(|| RtError("entry missing model".into()))?
                     .to_string(),
                 tile: TileShape {
                     num_src: g("num_src")?,
@@ -97,7 +127,7 @@ impl Manifest {
                 file: e
                     .get("file")
                     .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow!("entry missing file"))?
+                    .ok_or_else(|| RtError("entry missing file".into()))?
                     .to_string(),
                 args,
             });
@@ -121,49 +151,57 @@ pub enum ArgValue {
     I32 { data: Vec<i32>, shape: Vec<usize> },
 }
 
-/// A PJRT client with a cache of compiled executables.
+/// A PJRT client with a cache of compiled executables. Without a linked
+/// PJRT backend this degrades to manifest/shape bookkeeping only (see
+/// the module docs); `execute` then returns a descriptive error.
 pub struct Runtime {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    cache: HashMap<(String, TileShape), xla::PjRtLoadedExecutable>,
+    /// Modules validated by `prepare` (backend builds hold compiled
+    /// executables here; the stub tracks preparedness for cache parity).
+    prepared: HashMap<(String, TileShape), ()>,
 }
 
 impl Runtime {
+    /// Whether a PJRT FFI backend is linked into this build.
+    pub const BACKEND_LINKED: bool = false;
+
     pub fn new(artifact_dir: &Path) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
         let manifest = Manifest::load(artifact_dir)?;
-        Ok(Runtime { client, manifest, cache: HashMap::new() })
+        Ok(Runtime { manifest, prepared: HashMap::new() })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        if Self::BACKEND_LINKED {
+            "cpu".to_string()
+        } else {
+            "none (PJRT backend not linked)".to_string()
+        }
+    }
+
+    /// True when `execute` can actually run modules.
+    pub fn available(&self) -> bool {
+        Self::BACKEND_LINKED
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    /// Compile (or fetch from cache) the module for (model, tile shape).
+    /// Resolve (or fetch from cache) the module for (model, tile shape).
     pub fn prepare(&mut self, model: &str, tile: &TileShape) -> Result<()> {
         let key = (model.to_string(), *tile);
-        if self.cache.contains_key(&key) {
+        if self.prepared.contains_key(&key) {
             return Ok(());
         }
         let meta = self
             .manifest
             .find(model, tile)
-            .ok_or_else(|| anyhow!("no artifact for {model} @ {}", tile.tag()))?;
+            .ok_or_else(|| RtError(format!("no artifact for {model} @ {}", tile.tag())))?;
         let path = self.manifest.dir.join(&meta.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
-        self.cache.insert(key, exe);
+        if !path.exists() {
+            return err(format!("artifact file missing: {}", path.display()));
+        }
+        self.prepared.insert(key, ());
         Ok(())
     }
 
@@ -173,42 +211,14 @@ impl Runtime {
         &mut self,
         model: &str,
         tile: &TileShape,
-        args: &[ArgValue],
+        _args: &[ArgValue],
     ) -> Result<Vec<f32>> {
         self.prepare(model, tile)?;
-        let exe = &self.cache[&(model.to_string(), *tile)];
-        let mut literals = Vec::with_capacity(args.len());
-        for a in args {
-            let lit = match a {
-                ArgValue::F32 { data, shape } => {
-                    let l = xla::Literal::vec1(data);
-                    if shape.len() > 1 {
-                        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                        l.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))?
-                    } else {
-                        l
-                    }
-                }
-                ArgValue::I32 { data, shape } => {
-                    let l = xla::Literal::vec1(data);
-                    if shape.len() > 1 {
-                        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                        l.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))?
-                    } else {
-                        l
-                    }
-                }
-            };
-            literals.push(lit);
-        }
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        // aot.py lowers with return_tuple=True → 1-tuple
-        let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
-        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+        err(format!(
+            "cannot execute {model} @ {}: no PJRT backend is linked into this build \
+             (the crate is dependency-free; link the xla backend to enable oracle runs)",
+            tile.tag()
+        ))
     }
 }
 
@@ -288,6 +298,23 @@ mod tests {
         let t = TileShape { num_src: 64, num_dst: 64, num_edges: 256, feat_in: 32, feat_out: 32 };
         assert!(m.find("gcn", &t).is_some());
         assert_eq!(m.entries[0].args[0].0, "x_src");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stub_runtime_reports_unavailable_not_panic() {
+        let dir = std::env::temp_dir().join(format!("zipper_rt_stub_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":"hlo-text","entries":[]}"#,
+        )
+        .unwrap();
+        let mut rt = Runtime::new(&dir).unwrap();
+        assert!(!rt.available());
+        let t = TileShape { num_src: 8, num_dst: 8, num_edges: 8, feat_in: 4, feat_out: 4 };
+        let e = rt.execute("gcn", &t, &[]).unwrap_err();
+        assert!(e.to_string().contains("no artifact for gcn"), "{e}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,99 +1,22 @@
-//! The discrete-event engine: streams, scheduler, dispatcher, units.
+//! The discrete-event engine: facade (`Simulator`) + event loop.
+//!
+//! The engine is deliberately thin: stream scoreboarding lives in
+//! `sim::scheduler`, unit timing in `sim::units`, and functional
+//! execution in `sim::exec`. What remains here is the ISA's control
+//! semantics (the §5.2 stream protocol) and metric accounting.
 
-use super::tensor::{self, Tensor};
+use super::exec::{Env, ExecScratch};
+use super::scheduler::{Scheduler, StreamState, TileCtx};
 use super::timing;
-use crate::compiler::{AccKind, Program};
+use super::types::{SimOptions, SimResult, Workload};
+use super::units::Units;
 use crate::config::ArchConfig;
-use crate::energy::EnergyCounters;
-use crate::isa::{
-    BufId, Dim, DimCtx, ElwUnary, Instr, LdTarget, Reduce, SctrDir, StreamClass, UnitClass,
-};
-use crate::metrics::{Phase, Trace, TraceSample};
-use crate::models::WeightStore;
-use crate::tiling::Tiling;
-use std::collections::HashMap;
+use crate::isa::{DimCtx, Instr, LdTarget, StreamClass, UnitClass};
+use crate::metrics::{Phase, Trace};
 
-/// Everything a simulation run needs.
-pub struct Workload<'a> {
-    pub program: &'a Program,
-    pub tiling: &'a Tiling,
-    pub weights: &'a WeightStore,
-    pub feat_in: u32,
-    pub feat_out: u32,
-    /// Input embeddings in ORIGINAL vertex order, (V × feat_in) row-major.
-    /// Required when `SimOptions::functional` is set.
-    pub x: Option<&'a [f32]>,
-}
-
-#[derive(Clone, Copy, Debug)]
-pub struct SimOptions {
-    pub functional: bool,
-    /// Trace window in cycles (0 = no trace).
-    pub trace_window: u64,
-}
-
-impl Default for SimOptions {
-    fn default() -> Self {
-        SimOptions { functional: false, trace_window: 0 }
-    }
-}
-
-/// Simulation result: timing, utilization, energy events, output.
-#[derive(Clone, Debug, Default)]
-pub struct SimResult {
-    pub cycles: u64,
-    pub instructions: u64,
-    pub counters: EnergyCounters,
-    pub mu_busy: u64,
-    pub vu_busy: u64,
-    pub mem_busy: u64,
-    /// Off-chip reads only (Fig 11's reduction metric).
-    pub dram_read_bytes: u64,
-    pub dram_write_bytes: u64,
-    pub trace: Vec<TraceSample>,
-    /// Output embeddings in ORIGINAL vertex order (functional runs).
-    pub output: Option<Vec<f32>>,
-    /// Peak resident UEM bytes observed (Fig 2-style footprint).
-    pub peak_uem_bytes: u64,
-}
-
-impl SimResult {
-    pub fn seconds(&self, arch: &ArchConfig) -> f64 {
-        self.cycles as f64 / arch.freq_hz
-    }
-}
-
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum StreamState {
-    Ready,
-    /// Blocked in WAIT until enough signals arrive.
-    Waiting,
-    Halted,
-}
-
-struct Stream {
-    class: StreamClass,
-    func: &'static str,
-    pc: usize,
-    state: StreamState,
-    /// Simulation time at which the stream can issue its next instruction.
-    ready_at: u64,
-    signals: u32,
-    /// Tile contexts handed over by SIGNAL.E (eStreams).
-    mailbox: Vec<TileCtx>,
-    /// Currently bound tile (s/e streams).
-    tile: Option<TileCtx>,
-}
-
-#[derive(Clone, Debug)]
-struct TileCtx {
-    part_idx: usize,
-    tile_idx: usize,
-    dims: DimCtx,
-    /// Functional tile frame id.
-    frame: usize,
-}
-
+/// Stable facade over the event loop: construct once per (arch,
+/// workload, options) and `run` any number of times. `run_with` reuses a
+/// caller-owned [`ExecScratch`] so repeat runs are allocation-light.
 pub struct Simulator<'a> {
     arch: &'a ArchConfig,
     wl: &'a Workload<'a>,
@@ -106,86 +29,51 @@ impl<'a> Simulator<'a> {
     }
 
     pub fn run(&self) -> Result<SimResult, String> {
-        Engine::new(self.arch, self.wl, self.opts).run()
+        let mut scratch = ExecScratch::new();
+        self.run_with(&mut scratch)
+    }
+
+    /// Run reusing `scratch` buffers from previous runs (re-entrant
+    /// serving hot path; one scratch per worker thread).
+    pub fn run_with(&self, scratch: &mut ExecScratch) -> Result<SimResult, String> {
+        Engine::new(self.arch, self.wl, self.opts, scratch)?.run()
     }
 }
 
-struct Engine<'a> {
+struct Engine<'a, 's> {
     arch: &'a ArchConfig,
     wl: &'a Workload<'a>,
     opts: SimOptions,
-    streams: Vec<Stream>,
-    /// busy-until per unit instance.
-    mu_free: Vec<u64>,
-    vu_free: Vec<u64>,
-    /// Banked HBM controller (Ramulator stand-in): row-buffer state,
-    /// channel occupancy. Sparse tile loads issue one run per
-    /// consecutive-vertex span, so scattered sources pay activations.
-    hbm: super::hbm::Hbm,
+    sched: Scheduler,
+    units: Units,
     // partition progress
     part_cursor: usize,
     cur_part: Option<usize>,
     tile_cursor: usize,
     tiles_done: usize,
-    // functional state
-    x_tiled: Option<Vec<f32>>, // permuted input (V × feat_in)
-    out_tiled: Vec<f32>,       // permuted output (V × feat_out)
-    part_frame: HashMap<u16, Tensor>,
-    tile_frames: Vec<HashMap<u16, Tensor>>,
-    next_frame: usize,
+    // functional state (recycled across runs)
+    scratch: &'s mut ExecScratch,
     // metrics
     res: SimResult,
     trace: Option<Trace>,
 }
 
-impl<'a> Engine<'a> {
-    fn new(arch: &'a ArchConfig, wl: &'a Workload<'a>, opts: SimOptions) -> Self {
-        let mut streams = Vec::new();
-        streams.push(Stream {
-            class: StreamClass::D,
-            func: "d",
-            pc: 0,
-            state: StreamState::Ready,
-            ready_at: 0,
-            signals: 0,
-            mailbox: Vec::new(),
-            tile: None,
-        });
-        for _ in 0..arch.s_streams {
-            streams.push(Stream {
-                class: StreamClass::S,
-                func: "s",
-                pc: 0,
-                state: StreamState::Ready,
-                ready_at: 0,
-                signals: 0,
-                mailbox: Vec::new(),
-                tile: None,
-            });
+impl<'a, 's> Engine<'a, 's> {
+    fn new(
+        arch: &'a ArchConfig,
+        wl: &'a Workload<'a>,
+        opts: SimOptions,
+        scratch: &'s mut ExecScratch,
+    ) -> Result<Self, String> {
+        scratch.func.begin_run();
+        if let Some(x) = wl.x {
+            scratch.func.init_input(wl.tiling, x, wl.feat_in)?;
         }
-        for _ in 0..arch.e_streams {
-            streams.push(Stream {
-                class: StreamClass::E,
-                func: "e",
-                pc: 0,
-                state: StreamState::Ready,
-                ready_at: 0,
-                signals: 0,
-                mailbox: Vec::new(),
-                tile: None,
-            });
+        if opts.functional {
+            // output image only exists in functional mode (perf: timing
+            // runs on large graphs shouldn't pay an O(V·F) pass)
+            scratch.func.prepare_output(wl.tiling.num_vertices, wl.feat_out);
         }
-        let n = wl.tiling.num_vertices as usize;
-        let x_tiled = wl.x.map(|x| {
-            assert_eq!(x.len(), n * wl.feat_in as usize, "input embedding size");
-            let mut t = vec![0.0f32; x.len()];
-            let f = wl.feat_in as usize;
-            for old in 0..n {
-                let new = wl.tiling.perm[old] as usize;
-                t[new * f..(new + 1) * f].copy_from_slice(&x[old * f..(old + 1) * f]);
-            }
-            t
-        });
         let trace = (opts.trace_window > 0).then(|| {
             Trace::new(
                 opts.trace_window,
@@ -194,36 +82,20 @@ impl<'a> Engine<'a> {
                 arch.hbm_bytes_per_cycle(),
             )
         });
-        Engine {
+        Ok(Engine {
             arch,
             wl,
             opts,
-            streams,
-            mu_free: vec![0; arch.mu_count as usize],
-            vu_free: vec![0; arch.vu_count as usize],
-            hbm: super::hbm::Hbm::new(super::hbm::HbmConfig {
-                channels: ((arch.hbm_bytes_per_cycle() / 32.0).round() as u32).max(1),
-                ctrl_latency: arch.hbm_latency_cycles / 2,
-                ..Default::default()
-            }),
+            sched: Scheduler::new(arch),
+            units: Units::new(arch),
             part_cursor: 0,
             cur_part: None,
             tile_cursor: 0,
             tiles_done: 0,
-            x_tiled,
-            // output image only exists in functional mode (perf: timing
-            // runs on large graphs shouldn't pay an O(V·F) allocation)
-            out_tiled: if opts.functional {
-                vec![0.0; n * wl.feat_out as usize]
-            } else {
-                Vec::new()
-            },
-            part_frame: HashMap::new(),
-            tile_frames: Vec::new(),
-            next_frame: 0,
+            scratch,
             res: SimResult::default(),
             trace,
-        }
+        })
     }
 
     fn func_of(&self, class: StreamClass) -> &'a [Instr] {
@@ -254,69 +126,42 @@ impl<'a> Engine<'a> {
                 return Err("simulation exceeded step budget".into());
             }
             // pick the runnable stream with the earliest ready time
-            let mut best: Option<(usize, u64)> = None;
-            for (i, s) in self.streams.iter().enumerate() {
-                if s.state != StreamState::Ready {
-                    continue;
-                }
-                if best.map_or(true, |(_, t)| s.ready_at < t) {
-                    best = Some((i, s.ready_at));
-                }
-            }
-            let Some((sid, _)) = best else {
+            let Some(sid) = self.sched.pick_ready() else {
                 // no runnable stream: if the dStream halted we're done;
                 // otherwise it's a deadlock (protocol bug)
-                if self.streams[0].state == StreamState::Halted {
+                if self.sched.d_halted() {
                     break;
                 }
-                return Err(format!(
-                    "deadlock: stream states {:?}",
-                    self.streams.iter().map(|s| (s.func, s.pc, s.state)).collect::<Vec<_>>()
-                ));
+                return Err(format!("deadlock: stream states {}", self.sched.state_dump()));
             };
             self.step(sid)?;
-            if self.streams[0].state == StreamState::Halted {
+            if self.sched.d_halted() {
                 break;
             }
         }
         // finish metrics
-        self.res.cycles = self
-            .streams
-            .iter()
-            .map(|s| s.ready_at)
-            .chain(self.mu_free.iter().copied())
-            .chain(self.vu_free.iter().copied())
-            .max()
-            .unwrap_or(0);
+        self.res.cycles = self.sched.max_ready_at().max(self.units.max_busy());
         self.res.counters.cycles = self.res.cycles;
         if let Some(t) = self.trace.take() {
             self.res.trace = t.finish();
         }
         if self.opts.functional {
             // un-permute output to original vertex order
-            let n = self.wl.tiling.num_vertices as usize;
-            let f = self.wl.feat_out as usize;
-            let mut out = vec![0.0f32; n * f];
-            for new in 0..n {
-                let old = self.wl.tiling.inv_perm[new] as usize;
-                out[old * f..(old + 1) * f]
-                    .copy_from_slice(&self.out_tiled[new * f..(new + 1) * f]);
-            }
-            self.res.output = Some(out);
+            self.res.output = Some(self.scratch.func.take_output(self.wl.tiling, self.wl.feat_out));
         }
         Ok(self.res)
     }
 
     /// Execute one instruction of stream `sid`.
     fn step(&mut self, sid: usize) -> Result<(), String> {
-        let class = self.streams[sid].class;
+        let class = self.sched.streams[sid].class;
         let func = self.func_of(class);
-        let pc = self.streams[sid].pc;
+        let pc = self.sched.streams[sid].pc;
         let instr = func
             .get(pc)
             .ok_or_else(|| format!("stream {sid} pc {pc} out of bounds"))?
             .clone();
-        let t0 = self.streams[sid].ready_at;
+        let t0 = self.sched.streams[sid].ready_at;
         self.res.instructions += 1;
 
         let dims = self.stream_dims(sid);
@@ -326,9 +171,18 @@ impl<'a> Engine<'a> {
             UnitClass::Mem => {
                 let bytes = instr.dram_bytes(&dims);
                 let start = t0;
-                let end = self.issue_hbm(sid, &instr, start, bytes)?;
+                let end = self.units.issue_transfer(
+                    self.wl.tiling,
+                    self.sched.streams[sid].tile.as_ref(),
+                    self.cur_part,
+                    self.wl.feat_in,
+                    self.wl.feat_out,
+                    &instr,
+                    start,
+                    bytes,
+                )?;
                 self.res.mem_busy +=
-                    (bytes as f64 / self.hbm.peak_bytes_per_cycle()).ceil() as u64;
+                    (bytes as f64 / self.units.hbm.peak_bytes_per_cycle()).ceil() as u64;
                 match instr {
                     Instr::Ld { target, .. } => {
                         self.res.dram_read_bytes += bytes;
@@ -338,7 +192,14 @@ impl<'a> Engine<'a> {
                             self.res.counters.uem_bytes += timing::uem_bytes(&instr, &dims);
                         }
                         if self.opts.functional {
-                            self.exec_load(sid, &instr)?;
+                            let env = Env::of(self.wl);
+                            let tile = self.sched.streams[sid].tile.clone();
+                            self.scratch.func.exec_load(
+                                &env,
+                                tile.as_ref(),
+                                self.cur_part,
+                                &instr,
+                            )?;
                         }
                     }
                     Instr::St { .. } => {
@@ -350,22 +211,16 @@ impl<'a> Engine<'a> {
                 }
                 self.res.counters.hbm_bytes += bytes;
                 self.record_trace(start, end, 0, bytes, Phase::Mem);
-                self.advance(sid, end, 1);
+                self.sched.advance(sid, end, 1);
             }
             UnitClass::Mu | UnitClass::Vu => {
                 let dur = timing::compute_cycles(self.arch, &instr, &dims);
                 let (start, end) = if instr.unit() == UnitClass::Mu {
-                    let (idx, free) = min_slot(&self.mu_free);
-                    let start = t0.max(free);
-                    self.mu_free[idx] = start + dur;
                     self.res.mu_busy += dur;
-                    (start, start + dur)
+                    self.units.issue_mu(t0, dur)
                 } else {
-                    let (idx, free) = min_slot(&self.vu_free);
-                    let start = t0.max(free);
-                    self.vu_free[idx] = start + dur;
                     self.res.vu_busy += dur;
-                    (start, start + dur)
+                    self.units.issue_vu(t0, dur)
                 };
                 self.res.counters.macs += timing::macs(&instr, &dims);
                 self.res.counters.vu_ops += timing::vu_ops(&instr, &dims);
@@ -381,16 +236,20 @@ impl<'a> Engine<'a> {
                 };
                 self.record_trace(start, end, instr.flops(&dims), 0, phase);
                 if self.opts.functional {
-                    self.exec_compute(sid, &instr)?;
+                    let env = Env::of(self.wl);
+                    let tile = self.sched.streams[sid].tile.clone();
+                    self.scratch
+                        .func
+                        .exec_compute(&env, tile.as_ref(), &dims, &instr)?;
                 }
-                self.advance(sid, end, 1);
+                self.sched.advance(sid, end, 1);
             }
         }
         Ok(())
     }
 
     fn stream_dims(&self, sid: usize) -> DimCtx {
-        if let Some(t) = &self.streams[sid].tile {
+        if let Some(t) = &self.sched.streams[sid].tile {
             t.dims
         } else if let Some(p) = self.cur_part {
             self.dims_for_partition(p)
@@ -399,18 +258,12 @@ impl<'a> Engine<'a> {
         }
     }
 
-    fn advance(&mut self, sid: usize, end: u64, pc_delta: i64) {
-        let s = &mut self.streams[sid];
-        s.ready_at = end;
-        s.pc = (s.pc as i64 + pc_delta) as usize;
-    }
-
     fn exec_sync(&mut self, sid: usize, instr: &Instr, t0: u64) -> Result<(), String> {
         match instr {
             Instr::FchPtt => {
-                debug_assert_eq!(self.streams[sid].class, StreamClass::D);
+                debug_assert_eq!(self.sched.streams[sid].class, StreamClass::D);
                 if self.part_cursor >= self.wl.tiling.partitions.len() {
-                    self.streams[sid].state = StreamState::Halted;
+                    self.sched.streams[sid].state = StreamState::Halted;
                     return Ok(());
                 }
                 let p = self.part_cursor;
@@ -420,124 +273,67 @@ impl<'a> Engine<'a> {
                 self.tiles_done = 0;
                 // functional: reset partition frame; init accumulators
                 if self.opts.functional {
-                    self.part_frame.clear();
                     let dims = self.dims_for_partition(p);
-                    for &(buf, kind) in &self.wl.program.accumulators {
-                        let cols = self.acc_cols(buf);
-                        let init = match kind {
-                            AccKind::Sum => 0.0,
-                            AccKind::Max => f32::NEG_INFINITY,
-                        };
-                        self.part_frame
-                            .insert(buf.0, Tensor::filled(dims.part_dst, cols, init));
-                    }
+                    let env = Env::of(self.wl);
+                    self.scratch.func.begin_partition(&env, &dims);
                 }
                 // empty partition: pre-credit the completion signal so the
                 // dStream's WAIT doesn't deadlock
                 if self.wl.tiling.partitions[p].tiles.is_empty() {
-                    self.streams[sid].signals += 1;
+                    self.sched.streams[sid].signals += 1;
                 }
-                self.advance(sid, t0 + 1, 1);
+                self.sched.advance(sid, t0 + 1, 1);
             }
             Instr::UpdPtt => {
                 // commit the partition output (functional)
                 if self.opts.functional {
                     let p = self.cur_part.ok_or("UPD.PTT without partition")?;
-                    let part = &self.wl.tiling.partitions[p];
-                    let out_buf = self.wl.program.output_buf;
-                    let t = self
-                        .part_frame
-                        .get(&out_buf.0)
-                        .ok_or("output buffer not materialized")?;
-                    let f = self.wl.feat_out as usize;
-                    for (i, d) in (part.dst_start..part.dst_end).enumerate() {
-                        self.out_tiled[d as usize * f..(d as usize + 1) * f]
-                            .copy_from_slice(t.row(i as u32));
-                    }
-                    // release tile frames of the finished partition
-                    self.tile_frames.clear();
-                    self.next_frame = 0;
+                    let env = Env::of(self.wl);
+                    self.scratch
+                        .func
+                        .commit_partition(&env, &self.wl.tiling.partitions[p])?;
                 }
-                self.advance(sid, t0 + 1, 1);
+                self.sched.advance(sid, t0 + 1, 1);
             }
             Instr::Signal { class } => {
+                let end = t0 + 1;
                 match class {
                     StreamClass::S => {
                         // broadcast: wake every sStream for this partition
-                        let end = t0 + 1;
-                        for i in 0..self.streams.len() {
-                            if self.streams[i].class == StreamClass::S {
-                                self.streams[i].signals += 1;
-                                if self.streams[i].state == StreamState::Waiting {
-                                    self.streams[i].state = StreamState::Ready;
-                                    self.streams[i].ready_at =
-                                        self.streams[i].ready_at.max(end);
-                                }
-                            }
-                        }
-                        self.advance(sid, end, 1);
+                        self.sched.signal_all_s(end);
                     }
                     StreamClass::E => {
                         // rendezvous: hand the bound tile to the least-loaded eStream
-                        let tile = self.streams[sid]
+                        let tile = self.sched.streams[sid]
                             .tile
                             .clone()
                             .ok_or("SIGNAL.E without a bound tile")?;
-                        let end = t0 + 1;
-                        let eid = self
-                            .streams
-                            .iter()
-                            .enumerate()
-                            .filter(|(_, s)| s.class == StreamClass::E)
-                            .min_by_key(|(_, s)| s.mailbox.len())
-                            .map(|(i, _)| i)
-                            .ok_or("no eStreams configured")?;
-                        self.streams[eid].mailbox.insert(0, tile);
-                        self.streams[eid].signals += 1;
-                        if self.streams[eid].state == StreamState::Waiting {
-                            self.streams[eid].state = StreamState::Ready;
-                            self.streams[eid].ready_at = self.streams[eid].ready_at.max(end);
-                        }
-                        self.advance(sid, end, 1);
+                        self.sched.deliver_tile_to_e(tile, end)?;
                     }
                     StreamClass::D => {
-                        let end = t0 + 1;
-                        self.streams[0].signals += 1;
-                        if self.streams[0].state == StreamState::Waiting {
-                            self.streams[0].state = StreamState::Ready;
-                            self.streams[0].ready_at = self.streams[0].ready_at.max(end);
-                        }
-                        self.advance(sid, end, 1);
+                        self.sched.signal(0, end);
                     }
                 }
+                self.sched.advance(sid, end, 1);
             }
             Instr::Wait { count } => {
                 let need = count.resolve(&self.stream_dims(sid)).max(1);
-                if self.streams[sid].signals >= need {
-                    self.streams[sid].signals -= need;
+                if self.sched.streams[sid].signals >= need {
+                    self.sched.streams[sid].signals -= need;
                     // eStream: bind the tile handed over by SIGNAL.E (FIFO)
-                    if self.streams[sid].class == StreamClass::E {
-                        if let Some(t) = self.streams[sid].mailbox.pop() {
-                            self.streams[sid].tile = Some(t);
+                    if self.sched.streams[sid].class == StreamClass::E {
+                        if let Some(t) = self.sched.streams[sid].mailbox.pop() {
+                            self.sched.streams[sid].tile = Some(t);
                         }
                     }
                     // dStream resuming after all tiles: fix up max accs
-                    if self.streams[sid].class == StreamClass::D && self.opts.functional {
-                        for &(buf, kind) in &self.wl.program.accumulators {
-                            if kind == AccKind::Max {
-                                if let Some(t) = self.part_frame.get_mut(&buf.0) {
-                                    for v in &mut t.data {
-                                        if *v == f32::NEG_INFINITY {
-                                            *v = 0.0;
-                                        }
-                                    }
-                                }
-                            }
-                        }
+                    if self.sched.streams[sid].class == StreamClass::D && self.opts.functional {
+                        let env = Env::of(self.wl);
+                        self.scratch.func.fixup_max_accs(&env);
                     }
-                    self.advance(sid, t0 + 1, 1);
+                    self.sched.advance(sid, t0 + 1, 1);
                 } else {
-                    self.streams[sid].state = StreamState::Waiting;
+                    self.sched.streams[sid].state = StreamState::Waiting;
                     // pc unchanged: re-execute WAIT when woken
                 }
             }
@@ -546,7 +342,7 @@ impl<'a> Engine<'a> {
                 let part = &self.wl.tiling.partitions[p];
                 if self.tile_cursor >= part.tiles.len() {
                     // no tiles left in this partition
-                    self.advance(sid, t0 + 1, *on_empty as i64);
+                    self.sched.advance(sid, t0 + 1, *on_empty as i64);
                     return Ok(());
                 }
                 let ti = self.tile_cursor;
@@ -559,20 +355,15 @@ impl<'a> Engine<'a> {
                     feat_in: self.wl.feat_in,
                     feat_out: self.wl.feat_out,
                 };
-                let frame = self.next_frame;
-                self.next_frame += 1;
-                if self.opts.functional {
-                    while self.tile_frames.len() <= frame {
-                        self.tile_frames.push(HashMap::new());
-                    }
-                }
-                self.streams[sid].tile = Some(TileCtx { part_idx: p, tile_idx: ti, dims, frame });
                 // UEM residency estimate: src tile + edge intermediates
                 let resident = (tile.num_src() as u64 * self.wl.feat_in as u64
                     + tile.num_edges() as u64 * self.wl.feat_out as u64)
                     * 4;
                 self.res.peak_uem_bytes = self.res.peak_uem_bytes.max(resident);
-                self.advance(sid, t0 + 1, 1);
+                let frame = self.scratch.func.alloc_tile_frame(self.opts.functional);
+                self.sched.streams[sid].tile =
+                    Some(TileCtx { part_idx: p, tile_idx: ti, dims, frame });
+                self.sched.advance(sid, t0 + 1, 1);
             }
             Instr::ChkPtt => {
                 self.tiles_done += 1;
@@ -580,264 +371,20 @@ impl<'a> Engine<'a> {
                 let total = self.wl.tiling.partitions[p].tiles.len();
                 let end = t0 + 1;
                 if self.tiles_done >= total {
-                    self.streams[0].signals += 1;
-                    if self.streams[0].state == StreamState::Waiting {
-                        self.streams[0].state = StreamState::Ready;
-                        self.streams[0].ready_at = self.streams[0].ready_at.max(end);
-                    }
+                    self.sched.signal(0, end);
                 }
-                self.streams[sid].tile = None;
-                self.advance(sid, end, 1);
+                self.sched.streams[sid].tile = None;
+                self.sched.advance(sid, end, 1);
             }
             Instr::Jump(off) => {
-                self.advance(sid, t0, *off as i64);
+                self.sched.advance(sid, t0, *off as i64);
             }
             Instr::Halt => {
-                self.streams[sid].state = StreamState::Halted;
+                self.sched.streams[sid].state = StreamState::Halted;
             }
             other => return Err(format!("non-sync instruction in exec_sync: {other}")),
         }
         Ok(())
-    }
-
-    fn acc_cols(&self, buf: BufId) -> u32 {
-        // find the Gthr writing this accumulator to learn its width
-        for i in &self.wl.program.e_func {
-            if let Instr::Gthr { dst, cols, .. } = i {
-                if *dst == buf {
-                    return match cols {
-                        Dim::FeatIn => self.wl.feat_in,
-                        Dim::FeatOut => self.wl.feat_out,
-                        Dim::Const(c) => *c,
-                        _ => self.wl.feat_out,
-                    };
-                }
-            }
-        }
-        self.wl.feat_out
-    }
-
-    /// Route a data-transfer instruction through the banked HBM model.
-    /// LD.SRC decomposes into one run per span of consecutive source
-    /// vertices — regular tiles stream one contiguous block (row hits),
-    /// sparse tiles pay scattered activations (the §5.3 trade-off the
-    /// paper argues is worth it at embedding granularity).
-    fn issue_hbm(
-        &mut self,
-        sid: usize,
-        instr: &Instr,
-        start: u64,
-        bytes: u64,
-    ) -> Result<u64, String> {
-        const OUT_BASE: u64 = 1 << 41;
-        const EDGE_BASE: u64 = 1 << 42;
-        let fi = self.wl.feat_in as u64 * 4;
-        let fo = self.wl.feat_out as u64 * 4;
-        match instr {
-            Instr::Ld { target: LdTarget::Src, .. } => {
-                let tc = self.streams[sid].tile.clone().ok_or("LD.SRC w/o tile")?;
-                let part = &self.wl.tiling.partitions[tc.part_idx];
-                let tile = &part.tiles[tc.tile_idx];
-                let mut end = start;
-                let vs = &tile.src_vertices;
-                let mut i = 0;
-                while i < vs.len() {
-                    // coalesce consecutive vertex ids into one run
-                    let run_start = i;
-                    while i + 1 < vs.len() && vs[i + 1] == vs[i] + 1 {
-                        i += 1;
-                    }
-                    i += 1;
-                    let addr = vs[run_start] as u64 * fi;
-                    let run_bytes = (i - run_start) as u64 * fi;
-                    end = end.max(self.hbm.access(start, addr, run_bytes));
-                }
-                Ok(end)
-            }
-            Instr::Ld { target: LdTarget::Dst, .. } => {
-                let p = self.cur_part.ok_or("LD.DST w/o partition")?;
-                let part = &self.wl.tiling.partitions[p];
-                let addr = part.dst_start as u64 * fi;
-                Ok(self.hbm.access(start, addr, bytes))
-            }
-            Instr::Ld { target: LdTarget::Edge, .. } => {
-                // edge lists stream from their own region (tile hub fill)
-                let tc = self.streams[sid].tile.as_ref().ok_or("LD.EDGE w/o tile")?;
-                let addr = EDGE_BASE
-                    + ((tc.part_idx as u64) << 28)
-                    + ((tc.tile_idx as u64) << 14);
-                Ok(self.hbm.access(start, addr, bytes))
-            }
-            Instr::St { .. } => {
-                let p = self.cur_part.ok_or("ST w/o partition")?;
-                let part = &self.wl.tiling.partitions[p];
-                let addr = OUT_BASE + part.dst_start as u64 * fo;
-                Ok(self.hbm.access(start, addr, bytes))
-            }
-            other => Err(format!("issue_hbm on non-mem instr {other}")),
-        }
-    }
-
-    // ---- functional execution --------------------------------------------
-
-    fn exec_load(&mut self, sid: usize, instr: &Instr) -> Result<(), String> {
-        let Instr::Ld { target, dst, .. } = instr else { unreachable!() };
-        match target {
-            LdTarget::Edge => Ok(()), // edge list already in Tile struct
-            LdTarget::Src => {
-                let tile_ctx = self.streams[sid].tile.clone().ok_or("LD.SRC w/o tile")?;
-                let x = self.x_tiled.as_ref().ok_or("functional run without input x")?;
-                let part = &self.wl.tiling.partitions[tile_ctx.part_idx];
-                let tile = &part.tiles[tile_ctx.tile_idx];
-                let f = self.wl.feat_in as usize;
-                let mut t = Tensor::zeros(tile.num_src(), self.wl.feat_in);
-                for (i, &v) in tile.src_vertices.iter().enumerate() {
-                    t.row_mut(i as u32)
-                        .copy_from_slice(&x[v as usize * f..(v as usize + 1) * f]);
-                }
-                self.tile_frames[tile_ctx.frame].insert(dst.0, t);
-                Ok(())
-            }
-            LdTarget::Dst => {
-                let p = self.cur_part.ok_or("LD.DST w/o partition")?;
-                let x = self.x_tiled.as_ref().ok_or("functional run without input x")?;
-                let part = &self.wl.tiling.partitions[p];
-                let f = self.wl.feat_in as usize;
-                let mut t = Tensor::zeros(part.num_dst(), self.wl.feat_in);
-                for (i, v) in (part.dst_start..part.dst_end).enumerate() {
-                    t.row_mut(i as u32)
-                        .copy_from_slice(&x[v as usize * f..(v as usize + 1) * f]);
-                }
-                self.part_frame.insert(dst.0, t);
-                Ok(())
-            }
-        }
-    }
-
-    fn get_buf(&self, sid: usize, buf: BufId) -> Result<&Tensor, String> {
-        if buf.is_partition_frame() {
-            self.part_frame
-                .get(&buf.0)
-                .ok_or_else(|| format!("partition buffer b{} unset", buf.0))
-        } else {
-            let frame = self.streams[sid].tile.as_ref().ok_or("tile buf w/o tile")?.frame;
-            self.tile_frames[frame]
-                .get(&buf.0)
-                .ok_or_else(|| format!("tile buffer b{} unset (frame {frame})", buf.0))
-        }
-    }
-
-    fn put_buf(&mut self, sid: usize, buf: BufId, t: Tensor) -> Result<(), String> {
-        if buf.is_partition_frame() {
-            self.part_frame.insert(buf.0, t);
-        } else {
-            let frame = self.streams[sid].tile.as_ref().ok_or("tile buf w/o tile")?.frame;
-            self.tile_frames[frame].insert(buf.0, t);
-        }
-        Ok(())
-    }
-
-    fn weight_slice(&self, id: crate::isa::WeightId) -> &[f32] {
-        &self.wl.weights.tensors[id.0 as usize].data
-    }
-
-    fn exec_compute(&mut self, sid: usize, instr: &Instr) -> Result<(), String> {
-        let dims = self.stream_dims(sid);
-        let rd = |d: Dim| d.resolve(&dims);
-        match instr {
-            Instr::ElwU { op, src, dst, .. } => {
-                let t = tensor::apply_unary(*op, self.get_buf(sid, *src)?);
-                self.put_buf(sid, *dst, t)
-            }
-            Instr::ElwB { op, a, b, dst, .. } => {
-                let t = tensor::apply_binary(*op, self.get_buf(sid, *a)?, self.get_buf(sid, *b)?);
-                self.put_buf(sid, *dst, t)
-            }
-            Instr::ElwBcast { op, a, vec, dst, .. } => {
-                let t = tensor::apply_bcast(*op, self.get_buf(sid, *a)?, self.get_buf(sid, *vec)?);
-                self.put_buf(sid, *dst, t)
-            }
-            Instr::Gemv { src, weight, dst, .. } => {
-                let x = self.get_buf(sid, *src)?;
-                let mut out = Tensor::zeros(x.rows, 1);
-                tensor::gemv(x, self.weight_slice(*weight), &mut out);
-                self.put_buf(sid, *dst, out)
-            }
-            Instr::Gemm { src, weight, dst, k, n, accumulate, .. } => {
-                let x = self.get_buf(sid, *src)?;
-                let mut out = Tensor::zeros(x.rows, rd(*n));
-                tensor::matmul(x, self.weight_slice(*weight), rd(*k), rd(*n), &mut out, false);
-                if *accumulate {
-                    let prev = self.get_buf(sid, *dst)?;
-                    let sum = tensor::apply_binary(crate::isa::ElwBinary::Add, prev, &out);
-                    self.put_buf(sid, *dst, sum)
-                } else {
-                    self.put_buf(sid, *dst, out)
-                }
-            }
-            Instr::Bmm { src, weights, dst, k, n, .. } => {
-                let tc = self.streams[sid].tile.clone().ok_or("BMM w/o tile")?;
-                let part = &self.wl.tiling.partitions[tc.part_idx];
-                let tile = &part.tiles[tc.tile_idx];
-                let etypes = tile
-                    .etypes
-                    .clone()
-                    .unwrap_or_else(|| vec![0; tile.edges.len()]);
-                let x = self.get_buf(sid, *src)?;
-                let mut out = Tensor::zeros(x.rows, rd(*n));
-                tensor::bmm_by_type(x, self.weight_slice(*weights), rd(*k), rd(*n), &etypes, &mut out);
-                self.put_buf(sid, *dst, out)
-            }
-            Instr::Sctr { dir, src, dst, cols } => {
-                let tc = self.streams[sid].tile.clone().ok_or("SCTR w/o tile")?;
-                let part = &self.wl.tiling.partitions[tc.part_idx];
-                let tile = &part.tiles[tc.tile_idx];
-                let v = self.get_buf(sid, *src)?;
-                let mut out = Tensor::zeros(tile.num_edges(), rd(*cols));
-                for (e, &(ls, ld)) in tile.edges.iter().enumerate() {
-                    let row = match dir {
-                        SctrDir::OutEdge => v.row(ls),
-                        SctrDir::InEdge => v.row(ld),
-                    };
-                    out.row_mut(e as u32).copy_from_slice(row);
-                }
-                self.put_buf(sid, *dst, out)
-            }
-            Instr::Gthr { reduce, src, dst, .. } => {
-                let tc = self.streams[sid].tile.clone().ok_or("GTHR w/o tile")?;
-                let part = &self.wl.tiling.partitions[tc.part_idx];
-                let tile = &part.tiles[tc.tile_idx];
-                // disjoint-field borrows: edge data lives in the tile
-                // frame, the accumulator in the partition frame — no
-                // clone needed (perf: this was the functional-mode
-                // hot-spot; see EXPERIMENTS.md §Perf)
-                let e = self.tile_frames[tc.frame]
-                    .get(&src.0)
-                    .ok_or_else(|| format!("tile buffer b{} unset", src.0))?;
-                let acc = self
-                    .part_frame
-                    .get_mut(&dst.0)
-                    .ok_or_else(|| format!("accumulator b{} unset", dst.0))?;
-                for (ei, &(_, ld)) in tile.edges.iter().enumerate() {
-                    let src_row = e.row(ei as u32);
-                    let dst_row = acc.row_mut(ld);
-                    match reduce {
-                        Reduce::Sum => {
-                            for (d, &s) in dst_row.iter_mut().zip(src_row) {
-                                *d += s;
-                            }
-                        }
-                        Reduce::Max => {
-                            for (d, &s) in dst_row.iter_mut().zip(src_row) {
-                                *d = d.max(s);
-                            }
-                        }
-                    }
-                }
-                Ok(())
-            }
-            other => Err(format!("unexpected compute instr: {other}")),
-        }
     }
 
     fn record_trace(&mut self, start: u64, end: u64, flops: u64, bytes: u64, phase: Phase) {
@@ -847,170 +394,5 @@ impl<'a> Engine<'a> {
     }
 }
 
-fn min_slot(slots: &[u64]) -> (usize, u64) {
-    slots
-        .iter()
-        .copied()
-        .enumerate()
-        .min_by_key(|&(_, t)| t)
-        .expect("at least one unit instance")
-}
-
-// Silence unused warnings for ElwUnary import used only via tensor fns.
-#[allow(unused)]
-fn _k(_: ElwUnary) {}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::compiler::{compile, OptLevel};
-    use crate::graph::generators;
-    use crate::models::{ModelKind, WeightStore};
-    use crate::tiling::{tile, Reorder, TilingConfig, TilingMode};
-    use crate::util::Rng;
-
-    fn run_model(
-        m: ModelKind,
-        opt: OptLevel,
-        functional: bool,
-    ) -> (SimResult, crate::compiler::Program) {
-        let arch = ArchConfig::default();
-        let g = generators::power_law(300, 1500, 1.0, 1.0,
-            if m.uses_etypes() { 3 } else { 0 }, 7);
-        let tl = tile(&g, TilingConfig {
-            dst_part: 64, src_part: 64,
-            mode: TilingMode::Sparse, reorder: Reorder::InDegree,
-        });
-        let prog = compile(&m.build(), opt).unwrap();
-        let (fi, fo) = if m.requires_square() { (16, 16) } else { (16, 8) };
-        let ws = WeightStore::synthesize(&m.build(), fi, fo, 5);
-        let mut rng = Rng::new(11);
-        let x: Vec<f32> = (0..300 * fi as usize).map(|_| rng.next_f32_sym() * 0.5).collect();
-        let wl = Workload {
-            program: &prog,
-            tiling: &tl,
-            weights: &ws,
-            feat_in: fi,
-            feat_out: fo,
-            x: functional.then_some(x.as_slice()),
-        };
-        let res = Simulator::new(&arch, &wl, SimOptions { functional, trace_window: 0 })
-            .run()
-            .unwrap_or_else(|e| panic!("{}: {e}", m.name()));
-        (res, prog)
-    }
-
-    #[test]
-    fn all_models_simulate_to_completion() {
-        for m in ModelKind::ALL {
-            let (res, _) = run_model(m, OptLevel::E2v, false);
-            assert!(res.cycles > 0, "{}", m.name());
-            assert!(res.instructions > 0);
-            assert!(res.dram_read_bytes > 0);
-        }
-    }
-
-    #[test]
-    fn functional_gcn_matches_direct_computation() {
-        let (res, _) = run_model(ModelKind::Gcn, OptLevel::E2v, true);
-        let out = res.output.unwrap();
-        // recompute directly: out = A^T·(x W) summed over in-edges
-        let g = generators::power_law(300, 1500, 1.0, 1.0, 0, 7);
-        let ws = WeightStore::synthesize(&crate::models::gcn(), 16, 8, 5);
-        let w = &ws.tensors[0];
-        let mut rng = Rng::new(11);
-        let x: Vec<f32> = (0..300 * 16).map(|_| rng.next_f32_sym() * 0.5).collect();
-        // h = x @ w  (E2V order); out[d] = Σ_{s∈in(d)} h[s]
-        let mut h = vec![0.0f32; 300 * 8];
-        for v in 0..300usize {
-            for kk in 0..16usize {
-                let xv = x[v * 16 + kk];
-                for n in 0..8usize {
-                    h[v * 8 + n] += xv * w.data[kk * 8 + n];
-                }
-            }
-        }
-        let mut expect = vec![0.0f32; 300 * 8];
-        for d in 0..300u32 {
-            for &s in g.in_neighbors(d) {
-                for n in 0..8usize {
-                    expect[d as usize * 8 + n] += h[s as usize * 8 + n];
-                }
-            }
-        }
-        for (a, b) in out.iter().zip(&expect) {
-            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
-        }
-    }
-
-    #[test]
-    fn naive_and_e2v_agree_functionally() {
-        for m in [ModelKind::Gat, ModelKind::Sage] {
-            let (a, _) = run_model(m, OptLevel::None, true);
-            let (b, _) = run_model(m, OptLevel::E2v, true);
-            let (oa, ob) = (a.output.unwrap(), b.output.unwrap());
-            let mut max_err = 0.0f32;
-            for (x, y) in oa.iter().zip(&ob) {
-                max_err = max_err.max((x - y).abs());
-            }
-            assert!(max_err < 1e-3, "{}: max err {max_err}", m.name());
-        }
-    }
-
-    #[test]
-    fn e2v_is_faster_for_gat() {
-        let (naive, _) = run_model(ModelKind::Gat, OptLevel::None, false);
-        let (opt, _) = run_model(ModelKind::Gat, OptLevel::E2v, false);
-        assert!(
-            opt.cycles < naive.cycles,
-            "E2V {} !< naive {}",
-            opt.cycles,
-            naive.cycles
-        );
-    }
-
-    #[test]
-    fn more_streams_dont_break_correctness() {
-        let mut arch = ArchConfig::default();
-        arch.s_streams = 8;
-        arch.e_streams = 8;
-        let g = generators::power_law(200, 1000, 1.0, 1.0, 0, 3);
-        let tl = tile(&g, TilingConfig {
-            dst_part: 32, src_part: 32,
-            mode: TilingMode::Sparse, reorder: Reorder::None,
-        });
-        let prog = compile(&crate::models::gcn(), OptLevel::E2v).unwrap();
-        let ws = WeightStore::synthesize(&crate::models::gcn(), 8, 8, 1);
-        let mut rng = Rng::new(2);
-        let x: Vec<f32> = (0..200 * 8).map(|_| rng.next_f32_sym()).collect();
-        let wl = Workload {
-            program: &prog, tiling: &tl, weights: &ws,
-            feat_in: 8, feat_out: 8, x: Some(&x),
-        };
-        let res = Simulator::new(&arch, &wl, SimOptions { functional: true, trace_window: 0 })
-            .run()
-            .unwrap();
-        assert!(res.output.unwrap().iter().all(|v| v.is_finite()));
-    }
-
-    #[test]
-    fn trace_produces_samples() {
-        let arch = ArchConfig::default();
-        let g = generators::power_law(300, 3000, 1.1, 1.1, 0, 9);
-        let tl = tile(&g, TilingConfig::default());
-        let prog = compile(&crate::models::gat(), OptLevel::E2v).unwrap();
-        let ws = WeightStore::synthesize(&crate::models::gat(), 32, 32, 1);
-        let wl = Workload {
-            program: &prog, tiling: &tl, weights: &ws,
-            feat_in: 32, feat_out: 32, x: None,
-        };
-        let res = Simulator::new(&arch, &wl, SimOptions { functional: false, trace_window: 256 })
-            .run()
-            .unwrap();
-        assert!(!res.trace.is_empty());
-        // GAT must show multiple phases
-        let phases: std::collections::HashSet<&str> =
-            res.trace.iter().map(|s| s.phase.tag()).collect();
-        assert!(phases.len() >= 2, "phases: {phases:?}");
-    }
-}
+// Engine behaviour is exercised end-to-end in `rust/tests/sim_engine.rs`
+// through the public facade (Workload / Simulator / ExecScratch).

@@ -1,0 +1,447 @@
+//! Functional execution: every ISA instruction also runs on real f32
+//! embeddings so end-of-run outputs validate against the PJRT oracle.
+//!
+//! All run-local state lives in [`ExecScratch`], a reusable arena the
+//! caller owns: a serving worker allocates one scratch and reuses it for
+//! every request, so repeat simulations pay no per-run `HashMap`/`Vec`
+//! churn. Buffer frames are flat slot vectors indexed by `BufId` (the
+//! compiler assigns dense ids per frame), which also removes the hashing
+//! the old engine paid on every operand access.
+
+use super::scheduler::TileCtx;
+use super::tensor::{self, Tensor};
+use crate::compiler::{AccKind, Program, PART_FRAME_BASE};
+use crate::isa::{BufId, Dim, DimCtx, Instr, LdTarget, Reduce, SctrDir};
+use crate::models::WeightStore;
+use crate::tiling::Tiling;
+
+/// Borrow bundle of the plan pieces the executor reads.
+pub(crate) struct Env<'a> {
+    pub program: &'a Program,
+    pub tiling: &'a Tiling,
+    pub weights: &'a WeightStore,
+    pub feat_in: u32,
+    pub feat_out: u32,
+}
+
+impl<'a> Env<'a> {
+    pub fn of(wl: &super::types::Workload<'a>) -> Env<'a> {
+        Env {
+            program: wl.program,
+            tiling: wl.tiling,
+            weights: wl.weights,
+            feat_in: wl.feat_in,
+            feat_out: wl.feat_out,
+        }
+    }
+}
+
+/// Reusable per-worker scratch for simulation runs. Create once, pass to
+/// `Simulator::run_with` (or `ExecPlan::simulate_with`) for every run;
+/// buffers are recycled between runs instead of reallocated.
+pub struct ExecScratch {
+    pub(crate) func: FuncState,
+}
+
+impl ExecScratch {
+    pub fn new() -> ExecScratch {
+        ExecScratch {
+            func: FuncState {
+                x_tiled: Vec::new(),
+                out_tiled: Vec::new(),
+                part_frame: Frame::new(),
+                tile_frames: Vec::new(),
+                next_frame: 0,
+                has_input: false,
+            },
+        }
+    }
+}
+
+impl Default for ExecScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One buffer frame: dense `BufId` → tensor slots.
+pub(crate) struct Frame {
+    slots: Vec<Option<Tensor>>,
+}
+
+impl Frame {
+    fn new() -> Frame {
+        Frame { slots: Vec::new() }
+    }
+
+    fn clear(&mut self) {
+        for s in &mut self.slots {
+            *s = None;
+        }
+    }
+
+    fn get(&self, i: usize) -> Option<&Tensor> {
+        self.slots.get(i).and_then(|s| s.as_ref())
+    }
+
+    fn get_mut(&mut self, i: usize) -> Option<&mut Tensor> {
+        self.slots.get_mut(i).and_then(|s| s.as_mut())
+    }
+
+    fn put(&mut self, i: usize, t: Tensor) {
+        if self.slots.len() <= i {
+            self.slots.resize_with(i + 1, || None);
+        }
+        self.slots[i] = Some(t);
+    }
+}
+
+fn part_slot(buf: BufId) -> usize {
+    (buf.0 - PART_FRAME_BASE) as usize
+}
+
+/// Functional state of one run, recycled across runs via `ExecScratch`.
+pub(crate) struct FuncState {
+    /// Permuted input (V × feat_in), tiled vertex order.
+    pub x_tiled: Vec<f32>,
+    /// Permuted output (V × feat_out), tiled vertex order.
+    pub out_tiled: Vec<f32>,
+    part_frame: Frame,
+    tile_frames: Vec<Frame>,
+    pub next_frame: usize,
+    pub has_input: bool,
+}
+
+impl FuncState {
+    /// Reset per-run state; retains buffer capacity from prior runs.
+    pub fn begin_run(&mut self) {
+        self.part_frame.clear();
+        for f in &mut self.tile_frames {
+            f.clear();
+        }
+        self.next_frame = 0;
+        self.has_input = false;
+    }
+
+    /// Permute the caller's input embeddings into tiled vertex order.
+    pub fn init_input(&mut self, tiling: &Tiling, x: &[f32], feat_in: u32) -> Result<(), String> {
+        let n = tiling.num_vertices as usize;
+        let f = feat_in as usize;
+        if x.len() != n * f {
+            return Err(format!(
+                "input embedding size {} != |V|*feat_in = {}",
+                x.len(),
+                n * f
+            ));
+        }
+        self.x_tiled.resize(n * f, 0.0);
+        for old in 0..n {
+            let new = tiling.perm[old] as usize;
+            self.x_tiled[new * f..(new + 1) * f].copy_from_slice(&x[old * f..(old + 1) * f]);
+        }
+        self.has_input = true;
+        Ok(())
+    }
+
+    /// Size (and zero) the tiled output image for a functional run.
+    pub fn prepare_output(&mut self, num_vertices: u32, feat_out: u32) {
+        let len = num_vertices as usize * feat_out as usize;
+        self.out_tiled.clear();
+        self.out_tiled.resize(len, 0.0);
+    }
+
+    /// Column width of a partition accumulator (learned from the Gthr
+    /// that writes it).
+    fn acc_cols(&self, env: &Env, buf: BufId) -> u32 {
+        for i in &env.program.e_func {
+            if let Instr::Gthr { dst, cols, .. } = i {
+                if *dst == buf {
+                    return match cols {
+                        Dim::FeatIn => env.feat_in,
+                        Dim::FeatOut => env.feat_out,
+                        Dim::Const(c) => *c,
+                        _ => env.feat_out,
+                    };
+                }
+            }
+        }
+        env.feat_out
+    }
+
+    /// FCH.PTT: reset the partition frame and init accumulators.
+    pub fn begin_partition(&mut self, env: &Env, dims: &DimCtx) {
+        self.part_frame.clear();
+        for &(buf, kind) in &env.program.accumulators {
+            let cols = self.acc_cols(env, buf);
+            let init = match kind {
+                AccKind::Sum => 0.0,
+                AccKind::Max => f32::NEG_INFINITY,
+            };
+            self.part_frame
+                .put(part_slot(buf), Tensor::filled(dims.part_dst, cols, init));
+        }
+    }
+
+    /// dStream wait boundary: neutralize untouched Max accumulators.
+    pub fn fixup_max_accs(&mut self, env: &Env) {
+        for &(buf, kind) in &env.program.accumulators {
+            if kind == AccKind::Max {
+                if let Some(t) = self.part_frame.get_mut(part_slot(buf)) {
+                    for v in &mut t.data {
+                        if *v == f32::NEG_INFINITY {
+                            *v = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// UPD.PTT: commit the partition output rows and recycle tile frames.
+    pub fn commit_partition(
+        &mut self,
+        env: &Env,
+        part: &crate::tiling::Partition,
+    ) -> Result<(), String> {
+        let out_buf = env.program.output_buf;
+        let t = self
+            .part_frame
+            .get(part_slot(out_buf))
+            .ok_or("output buffer not materialized")?;
+        let f = env.feat_out as usize;
+        for (i, d) in (part.dst_start..part.dst_end).enumerate() {
+            self.out_tiled[d as usize * f..(d as usize + 1) * f].copy_from_slice(t.row(i as u32));
+        }
+        for fr in &mut self.tile_frames {
+            fr.clear();
+        }
+        self.next_frame = 0;
+        Ok(())
+    }
+
+    /// FCH.TILE: claim the next tile-frame id (frames are recycled at
+    /// each UPD.PTT, so ids restart per partition).
+    pub fn alloc_tile_frame(&mut self, functional: bool) -> usize {
+        let frame = self.next_frame;
+        self.next_frame += 1;
+        if functional {
+            while self.tile_frames.len() <= frame {
+                self.tile_frames.push(Frame::new());
+            }
+        }
+        frame
+    }
+
+    /// Un-permute the tiled output back to original vertex order.
+    pub fn take_output(&self, tiling: &Tiling, feat_out: u32) -> Vec<f32> {
+        let n = tiling.num_vertices as usize;
+        let f = feat_out as usize;
+        let mut out = vec![0.0f32; n * f];
+        for new in 0..n {
+            let old = tiling.inv_perm[new] as usize;
+            out[old * f..(old + 1) * f].copy_from_slice(&self.out_tiled[new * f..(new + 1) * f]);
+        }
+        out
+    }
+
+    fn get_buf(&self, tile: Option<&TileCtx>, buf: BufId) -> Result<&Tensor, String> {
+        if buf.is_partition_frame() {
+            self.part_frame
+                .get(part_slot(buf))
+                .ok_or_else(|| format!("partition buffer b{} unset", buf.0))
+        } else {
+            let frame = tile.ok_or("tile buf w/o tile")?.frame;
+            self.tile_frames
+                .get(frame)
+                .and_then(|f| f.get(buf.0 as usize))
+                .ok_or_else(|| format!("tile buffer b{} unset (frame {frame})", buf.0))
+        }
+    }
+
+    fn put_buf(&mut self, tile: Option<&TileCtx>, buf: BufId, t: Tensor) -> Result<(), String> {
+        if buf.is_partition_frame() {
+            self.part_frame.put(part_slot(buf), t);
+        } else {
+            let frame = tile.ok_or("tile buf w/o tile")?.frame;
+            while self.tile_frames.len() <= frame {
+                self.tile_frames.push(Frame::new());
+            }
+            self.tile_frames[frame].put(buf.0 as usize, t);
+        }
+        Ok(())
+    }
+
+    /// Functional semantics of LD.* (the edge list lives in the Tile
+    /// struct already, so LD.EDGE is timing-only).
+    pub fn exec_load(
+        &mut self,
+        env: &Env,
+        tile: Option<&TileCtx>,
+        cur_part: Option<usize>,
+        instr: &Instr,
+    ) -> Result<(), String> {
+        let Instr::Ld { target, dst, .. } = instr else {
+            return Err(format!("exec_load on non-load instr {instr}"));
+        };
+        match target {
+            LdTarget::Edge => Ok(()),
+            LdTarget::Src => {
+                let tc = tile.ok_or("LD.SRC w/o tile")?;
+                if !self.has_input {
+                    return Err("functional run without input x".into());
+                }
+                let part = &env.tiling.partitions[tc.part_idx];
+                let t_meta = &part.tiles[tc.tile_idx];
+                let f = env.feat_in as usize;
+                let mut t = Tensor::zeros(t_meta.num_src(), env.feat_in);
+                for (i, &v) in t_meta.src_vertices.iter().enumerate() {
+                    t.row_mut(i as u32)
+                        .copy_from_slice(&self.x_tiled[v as usize * f..(v as usize + 1) * f]);
+                }
+                self.put_buf(tile, *dst, t)
+            }
+            LdTarget::Dst => {
+                let p = cur_part.ok_or("LD.DST w/o partition")?;
+                if !self.has_input {
+                    return Err("functional run without input x".into());
+                }
+                let part = &env.tiling.partitions[p];
+                let f = env.feat_in as usize;
+                let mut t = Tensor::zeros(part.num_dst(), env.feat_in);
+                for (i, v) in (part.dst_start..part.dst_end).enumerate() {
+                    t.row_mut(i as u32)
+                        .copy_from_slice(&self.x_tiled[v as usize * f..(v as usize + 1) * f]);
+                }
+                self.put_buf(tile, *dst, t)
+            }
+        }
+    }
+
+    /// Functional semantics of every compute instruction.
+    pub fn exec_compute(
+        &mut self,
+        env: &Env,
+        tile: Option<&TileCtx>,
+        dims: &DimCtx,
+        instr: &Instr,
+    ) -> Result<(), String> {
+        let rd = |d: Dim| d.resolve(dims);
+        match instr {
+            Instr::ElwU { op, src, dst, .. } => {
+                let t = tensor::apply_unary(*op, self.get_buf(tile, *src)?);
+                self.put_buf(tile, *dst, t)
+            }
+            Instr::ElwB { op, a, b, dst, .. } => {
+                let t =
+                    tensor::apply_binary(*op, self.get_buf(tile, *a)?, self.get_buf(tile, *b)?);
+                self.put_buf(tile, *dst, t)
+            }
+            Instr::ElwBcast { op, a, vec, dst, .. } => {
+                let t =
+                    tensor::apply_bcast(*op, self.get_buf(tile, *a)?, self.get_buf(tile, *vec)?);
+                self.put_buf(tile, *dst, t)
+            }
+            Instr::Gemv { src, weight: w, dst, .. } => {
+                let x = self.get_buf(tile, *src)?;
+                let mut out = Tensor::zeros(x.rows, 1);
+                tensor::gemv(x, &env.weights.tensors[w.0 as usize].data, &mut out);
+                self.put_buf(tile, *dst, out)
+            }
+            Instr::Gemm { src, weight: w, dst, k, n, accumulate, .. } => {
+                let x = self.get_buf(tile, *src)?;
+                let mut out = Tensor::zeros(x.rows, rd(*n));
+                tensor::matmul(
+                    x,
+                    &env.weights.tensors[w.0 as usize].data,
+                    rd(*k),
+                    rd(*n),
+                    &mut out,
+                    false,
+                );
+                if *accumulate {
+                    let sum = {
+                        let prev = self.get_buf(tile, *dst)?;
+                        tensor::apply_binary(crate::isa::ElwBinary::Add, prev, &out)
+                    };
+                    self.put_buf(tile, *dst, sum)
+                } else {
+                    self.put_buf(tile, *dst, out)
+                }
+            }
+            Instr::Bmm { src, weights, dst, k, n, .. } => {
+                let tc = tile.ok_or("BMM w/o tile")?;
+                let part = &env.tiling.partitions[tc.part_idx];
+                let t_meta = &part.tiles[tc.tile_idx];
+                let default_types;
+                let etypes: &[u8] = match &t_meta.etypes {
+                    Some(t) => t.as_slice(),
+                    None => {
+                        default_types = vec![0u8; t_meta.edges.len()];
+                        &default_types
+                    }
+                };
+                let x = self.get_buf(tile, *src)?;
+                let mut out = Tensor::zeros(x.rows, rd(*n));
+                tensor::bmm_by_type(
+                    x,
+                    &env.weights.tensors[weights.0 as usize].data,
+                    rd(*k),
+                    rd(*n),
+                    etypes,
+                    &mut out,
+                );
+                self.put_buf(tile, *dst, out)
+            }
+            Instr::Sctr { dir, src, dst, cols } => {
+                let tc = tile.ok_or("SCTR w/o tile")?;
+                let part = &env.tiling.partitions[tc.part_idx];
+                let t_meta = &part.tiles[tc.tile_idx];
+                let v = self.get_buf(tile, *src)?;
+                let mut out = Tensor::zeros(t_meta.num_edges(), rd(*cols));
+                for (e, &(ls, ld)) in t_meta.edges.iter().enumerate() {
+                    let row = match dir {
+                        SctrDir::OutEdge => v.row(ls),
+                        SctrDir::InEdge => v.row(ld),
+                    };
+                    out.row_mut(e as u32).copy_from_slice(row);
+                }
+                self.put_buf(tile, *dst, out)
+            }
+            Instr::Gthr { reduce, src, dst, .. } => {
+                let tc = tile.ok_or("GTHR w/o tile")?;
+                let part = &env.tiling.partitions[tc.part_idx];
+                let t_meta = &part.tiles[tc.tile_idx];
+                // disjoint-field borrows: edge data lives in a tile
+                // frame, the accumulator in the partition frame — no
+                // clone needed (functional-mode hot-spot)
+                let e = self
+                    .tile_frames
+                    .get(tc.frame)
+                    .and_then(|f| f.get(src.0 as usize))
+                    .ok_or_else(|| format!("tile buffer b{} unset", src.0))?;
+                let acc = self
+                    .part_frame
+                    .get_mut(part_slot(*dst))
+                    .ok_or_else(|| format!("accumulator b{} unset", dst.0))?;
+                for (ei, &(_, ld)) in t_meta.edges.iter().enumerate() {
+                    let src_row = e.row(ei as u32);
+                    let dst_row = acc.row_mut(ld);
+                    match reduce {
+                        Reduce::Sum => {
+                            for (d, &s) in dst_row.iter_mut().zip(src_row) {
+                                *d += s;
+                            }
+                        }
+                        Reduce::Max => {
+                            for (d, &s) in dst_row.iter_mut().zip(src_row) {
+                                *d = d.max(s);
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            }
+            other => Err(format!("unexpected compute instr: {other}")),
+        }
+    }
+}

@@ -8,14 +8,31 @@
 //! every instruction executes *functionally* on f32 embeddings so the
 //! final output validates against the PJRT oracle.
 //!
+//! Module map (see DESIGN.md):
+//!   * `engine` — the [`Simulator`] facade + discrete-event loop and the
+//!     ISA's control/protocol semantics;
+//!   * `scheduler` — stream scoreboard, SIGNAL/WAIT wakeups, issue pick;
+//!   * `units` — MU/VU busy-until scoreboards + HBM routing;
+//!   * `exec` — functional execution on f32 embeddings, with all
+//!     run-local state in the reusable [`ExecScratch`];
+//!   * [`hbm`] — banked memory-controller timing (Ramulator stand-in);
+//!   * [`timing`] — per-instruction cycle counts;
+//!   * [`tensor`] — dense f32 tensors + functional op semantics.
+//!
 //! Stand-ins vs the paper (DESIGN.md §5): Ramulator is replaced by a
 //! latency+bandwidth memory-controller queue; eDRAM bank conflicts are
 //! folded into per-access byte accounting.
 
 mod engine;
+mod exec;
 pub mod hbm;
+mod scheduler;
 pub mod tensor;
 pub mod timing;
+mod types;
+mod units;
 
-pub use engine::{SimOptions, SimResult, Simulator, Workload};
+pub use engine::Simulator;
+pub use exec::ExecScratch;
 pub use tensor::Tensor;
+pub use types::{SimOptions, SimResult, Workload};

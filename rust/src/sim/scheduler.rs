@@ -1,0 +1,153 @@
+//! Stream scoreboard and issue logic (paper §5.2's two-level scheduler,
+//! top level): one dStream plus N sStreams and N eStreams, each a
+//! program counter into its SDE function with a ready-time, a signal
+//! counter, and (for s/e streams) a bound tile context.
+//!
+//! The scheduler picks the runnable stream with the earliest ready time;
+//! SIGNAL/WAIT wakeups are implemented here so the engine's instruction
+//! semantics stay free of scoreboard bookkeeping.
+
+use crate::config::ArchConfig;
+use crate::isa::{DimCtx, StreamClass};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum StreamState {
+    Ready,
+    /// Blocked in WAIT until enough signals arrive.
+    Waiting,
+    Halted,
+}
+
+/// Tile context bound to a stream between FCH.TILE and CHK.PTT, and
+/// handed from sStreams to eStreams by SIGNAL.E.
+#[derive(Clone, Debug)]
+pub(crate) struct TileCtx {
+    pub part_idx: usize,
+    pub tile_idx: usize,
+    pub dims: DimCtx,
+    /// Functional tile-frame id (index into `ExecScratch` tile frames).
+    pub frame: usize,
+}
+
+pub(crate) struct Stream {
+    pub class: StreamClass,
+    pub func: &'static str,
+    pub pc: usize,
+    pub state: StreamState,
+    /// Simulation time at which the stream can issue its next instruction.
+    pub ready_at: u64,
+    pub signals: u32,
+    /// Tile contexts handed over by SIGNAL.E (eStreams).
+    pub mailbox: Vec<TileCtx>,
+    /// Currently bound tile (s/e streams).
+    pub tile: Option<TileCtx>,
+}
+
+impl Stream {
+    fn new(class: StreamClass, func: &'static str) -> Stream {
+        Stream {
+            class,
+            func,
+            pc: 0,
+            state: StreamState::Ready,
+            ready_at: 0,
+            signals: 0,
+            mailbox: Vec::new(),
+            tile: None,
+        }
+    }
+}
+
+/// The stream scoreboard. Stream 0 is always the dStream.
+pub(crate) struct Scheduler {
+    pub streams: Vec<Stream>,
+}
+
+impl Scheduler {
+    pub fn new(arch: &ArchConfig) -> Scheduler {
+        let mut streams = Vec::with_capacity(1 + (arch.s_streams + arch.e_streams) as usize);
+        streams.push(Stream::new(StreamClass::D, "d"));
+        for _ in 0..arch.s_streams {
+            streams.push(Stream::new(StreamClass::S, "s"));
+        }
+        for _ in 0..arch.e_streams {
+            streams.push(Stream::new(StreamClass::E, "e"));
+        }
+        Scheduler { streams }
+    }
+
+    /// Runnable stream with the earliest ready time, if any.
+    pub fn pick_ready(&self) -> Option<usize> {
+        let mut best: Option<(usize, u64)> = None;
+        for (i, s) in self.streams.iter().enumerate() {
+            if s.state != StreamState::Ready {
+                continue;
+            }
+            if best.map_or(true, |(_, t)| s.ready_at < t) {
+                best = Some((i, s.ready_at));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    pub fn d_halted(&self) -> bool {
+        self.streams[0].state == StreamState::Halted
+    }
+
+    /// Advance a stream past the instruction it just executed.
+    pub fn advance(&mut self, sid: usize, end: u64, pc_delta: i64) {
+        let s = &mut self.streams[sid];
+        s.ready_at = end;
+        s.pc = (s.pc as i64 + pc_delta) as usize;
+    }
+
+    /// Credit one signal to stream `sid`, waking it if it was waiting.
+    pub fn signal(&mut self, sid: usize, at: u64) {
+        let s = &mut self.streams[sid];
+        s.signals += 1;
+        if s.state == StreamState::Waiting {
+            s.state = StreamState::Ready;
+            s.ready_at = s.ready_at.max(at);
+        }
+    }
+
+    /// SIGNAL.S broadcast: wake every sStream for the new partition.
+    pub fn signal_all_s(&mut self, at: u64) {
+        for i in 0..self.streams.len() {
+            if self.streams[i].class == StreamClass::S {
+                self.signal(i, at);
+            }
+        }
+    }
+
+    /// SIGNAL.E rendezvous: hand `tile` to the least-loaded eStream.
+    pub fn deliver_tile_to_e(&mut self, tile: TileCtx, at: u64) -> Result<(), String> {
+        let eid = self
+            .streams
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.class == StreamClass::E)
+            .min_by_key(|(_, s)| s.mailbox.len())
+            .map(|(i, _)| i)
+            .ok_or("no eStreams configured")?;
+        self.streams[eid].mailbox.insert(0, tile);
+        self.signal(eid, at);
+        Ok(())
+    }
+
+    /// Latest ready time across all streams (end-of-run cycle count).
+    pub fn max_ready_at(&self) -> u64 {
+        self.streams.iter().map(|s| s.ready_at).max().unwrap_or(0)
+    }
+
+    /// Debug dump for deadlock diagnostics.
+    pub fn state_dump(&self) -> String {
+        format!(
+            "{:?}",
+            self.streams
+                .iter()
+                .map(|s| (s.func, s.pc, s.state))
+                .collect::<Vec<_>>()
+        )
+    }
+}

@@ -104,7 +104,7 @@ fn binop(op: ElwBinary) -> fn(f32, f32) -> f32 {
 
 /// `x (m×k) @ w (k×n)`, optionally accumulating into `out`.
 ///
-/// Hot path of the functional simulator (EXPERIMENTS.md §Perf): ikj
+/// Hot path of the functional simulator (see perf benches): ikj
 /// order with a 4-way unroll over k so the inner j-loop is a clean
 /// multiply-add chain the compiler vectorizes (AVX2/512 with the
 /// project's `target-cpu=native` rustflag).

@@ -1,0 +1,58 @@
+//! Public data types of the simulator facade: the workload borrow
+//! bundle, run options, and the result record.
+
+use crate::config::ArchConfig;
+use crate::energy::EnergyCounters;
+use crate::metrics::TraceSample;
+
+/// Everything a simulation run needs. Usually built from an
+/// `plan::ExecPlan` via `ExecPlan::workload`, but the loose-reference
+/// form is kept for tests and ad-hoc callers.
+pub struct Workload<'a> {
+    pub program: &'a crate::compiler::Program,
+    pub tiling: &'a crate::tiling::Tiling,
+    pub weights: &'a crate::models::WeightStore,
+    pub feat_in: u32,
+    pub feat_out: u32,
+    /// Input embeddings in ORIGINAL vertex order, (V × feat_in) row-major.
+    /// Required when `SimOptions::functional` is set.
+    pub x: Option<&'a [f32]>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SimOptions {
+    pub functional: bool,
+    /// Trace window in cycles (0 = no trace).
+    pub trace_window: u64,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { functional: false, trace_window: 0 }
+    }
+}
+
+/// Simulation result: timing, utilization, energy events, output.
+#[derive(Clone, Debug, Default)]
+pub struct SimResult {
+    pub cycles: u64,
+    pub instructions: u64,
+    pub counters: EnergyCounters,
+    pub mu_busy: u64,
+    pub vu_busy: u64,
+    pub mem_busy: u64,
+    /// Off-chip reads only (Fig 11's reduction metric).
+    pub dram_read_bytes: u64,
+    pub dram_write_bytes: u64,
+    pub trace: Vec<TraceSample>,
+    /// Output embeddings in ORIGINAL vertex order (functional runs).
+    pub output: Option<Vec<f32>>,
+    /// Peak resident UEM bytes observed (Fig 2-style footprint).
+    pub peak_uem_bytes: u64,
+}
+
+impl SimResult {
+    pub fn seconds(&self, arch: &ArchConfig) -> f64 {
+        self.cycles as f64 / arch.freq_hz
+    }
+}

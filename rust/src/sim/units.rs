@@ -1,0 +1,133 @@
+//! Hardware-unit timing models (the dispatcher's bottom level): per-MU
+//! and per-VU busy-until scoreboards plus the banked HBM controller.
+//!
+//! A compute instruction is routed to the free unit instance of its
+//! class that becomes available first; memory instructions go through
+//! the `Hbm` model (row-buffer state + bus backlog). Per-instruction
+//! cycle counts come from `sim::timing`.
+
+use super::hbm::{Hbm, HbmConfig};
+use super::scheduler::TileCtx;
+use crate::config::ArchConfig;
+use crate::isa::{Instr, LdTarget};
+use crate::tiling::Tiling;
+
+pub(crate) struct Units {
+    /// busy-until per unit instance.
+    mu_free: Vec<u64>,
+    vu_free: Vec<u64>,
+    /// Banked HBM controller (Ramulator stand-in): row-buffer state,
+    /// channel occupancy. Sparse tile loads issue one run per
+    /// consecutive-vertex span, so scattered sources pay activations.
+    pub hbm: Hbm,
+}
+
+impl Units {
+    pub fn new(arch: &ArchConfig) -> Units {
+        Units {
+            mu_free: vec![0; arch.mu_count as usize],
+            vu_free: vec![0; arch.vu_count as usize],
+            hbm: Hbm::new(HbmConfig {
+                channels: ((arch.hbm_bytes_per_cycle() / 32.0).round() as u32).max(1),
+                ctrl_latency: arch.hbm_latency_cycles / 2,
+                ..Default::default()
+            }),
+        }
+    }
+
+    /// Occupy the earliest-free MU for `dur` cycles starting no earlier
+    /// than `t0`; returns (start, end).
+    pub fn issue_mu(&mut self, t0: u64, dur: u64) -> (u64, u64) {
+        issue(&mut self.mu_free, t0, dur)
+    }
+
+    /// Occupy the earliest-free VU for `dur` cycles.
+    pub fn issue_vu(&mut self, t0: u64, dur: u64) -> (u64, u64) {
+        issue(&mut self.vu_free, t0, dur)
+    }
+
+    /// Latest busy-until across all compute units (end-of-run cycles).
+    pub fn max_busy(&self) -> u64 {
+        self.mu_free
+            .iter()
+            .chain(self.vu_free.iter())
+            .copied()
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Route a data-transfer instruction through the banked HBM model.
+    /// LD.SRC decomposes into one run per span of consecutive source
+    /// vertices — regular tiles stream one contiguous block (row hits),
+    /// sparse tiles pay scattered activations (the §5.3 trade-off the
+    /// paper argues is worth it at embedding granularity).
+    #[allow(clippy::too_many_arguments)]
+    pub fn issue_transfer(
+        &mut self,
+        tiling: &Tiling,
+        tile: Option<&TileCtx>,
+        cur_part: Option<usize>,
+        feat_in: u32,
+        feat_out: u32,
+        instr: &Instr,
+        start: u64,
+        bytes: u64,
+    ) -> Result<u64, String> {
+        const OUT_BASE: u64 = 1 << 41;
+        const EDGE_BASE: u64 = 1 << 42;
+        let fi = feat_in as u64 * 4;
+        let fo = feat_out as u64 * 4;
+        match instr {
+            Instr::Ld { target: LdTarget::Src, .. } => {
+                let tc = tile.ok_or("LD.SRC w/o tile")?;
+                let part = &tiling.partitions[tc.part_idx];
+                let t_meta = &part.tiles[tc.tile_idx];
+                let mut end = start;
+                let vs = &t_meta.src_vertices;
+                let mut i = 0;
+                while i < vs.len() {
+                    // coalesce consecutive vertex ids into one run
+                    let run_start = i;
+                    while i + 1 < vs.len() && vs[i + 1] == vs[i] + 1 {
+                        i += 1;
+                    }
+                    i += 1;
+                    let addr = vs[run_start] as u64 * fi;
+                    let run_bytes = (i - run_start) as u64 * fi;
+                    end = end.max(self.hbm.access(start, addr, run_bytes));
+                }
+                Ok(end)
+            }
+            Instr::Ld { target: LdTarget::Dst, .. } => {
+                let p = cur_part.ok_or("LD.DST w/o partition")?;
+                let addr = tiling.partitions[p].dst_start as u64 * fi;
+                Ok(self.hbm.access(start, addr, bytes))
+            }
+            Instr::Ld { target: LdTarget::Edge, .. } => {
+                // edge lists stream from their own region (tile hub fill)
+                let tc = tile.ok_or("LD.EDGE w/o tile")?;
+                let addr =
+                    EDGE_BASE + ((tc.part_idx as u64) << 28) + ((tc.tile_idx as u64) << 14);
+                Ok(self.hbm.access(start, addr, bytes))
+            }
+            Instr::St { .. } => {
+                let p = cur_part.ok_or("ST w/o partition")?;
+                let addr = OUT_BASE + tiling.partitions[p].dst_start as u64 * fo;
+                Ok(self.hbm.access(start, addr, bytes))
+            }
+            other => Err(format!("issue_transfer on non-mem instr {other}")),
+        }
+    }
+}
+
+fn issue(slots: &mut [u64], t0: u64, dur: u64) -> (u64, u64) {
+    let (idx, free) = slots
+        .iter()
+        .copied()
+        .enumerate()
+        .min_by_key(|&(_, t)| t)
+        .expect("at least one unit instance");
+    let start = t0.max(free);
+    slots[idx] = start + dur;
+    (start, start + dur)
+}

@@ -15,7 +15,7 @@
 
 use crate::graph::Graph;
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum TilingMode {
     /// Grid tiling: every vertex of the source partition is loaded.
     Regular,
@@ -23,7 +23,7 @@ pub enum TilingMode {
     Sparse,
 }
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Reorder {
     None,
     /// Descending in-degree relabel (paper Fig 7c "Degree Sorting").
@@ -32,7 +32,7 @@ pub enum Reorder {
     OutDegree,
 }
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct TilingConfig {
     /// Destination vertices per partition (dStream granularity).
     pub dst_part: u32,

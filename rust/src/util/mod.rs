@@ -1,8 +1,8 @@
 //! Dependency-free utilities: deterministic RNG, minimal JSON, stats.
 //!
-//! This repo builds fully offline with `xla` + `anyhow` as the only
-//! external crates, so the usual ecosystem helpers (rand, serde_json,
-//! proptest) are implemented in-tree at the size this project needs.
+//! This repo builds fully offline with no external crates at all, so
+//! the usual ecosystem helpers (rand, serde_json, proptest) are
+//! implemented in-tree at the size this project needs.
 
 pub mod json;
 pub mod rng;

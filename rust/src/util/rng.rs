@@ -2,7 +2,7 @@
 //!
 //! Used by the graph generators, workload synthesizers, and the in-tree
 //! property-test helpers. Deterministic across platforms so every
-//! experiment in EXPERIMENTS.md is exactly reproducible from its seed.
+//! experiment is exactly reproducible from its seed.
 
 /// xoshiro256** by Blackman & Vigna (public domain), seeded via SplitMix64.
 #[derive(Clone, Debug)]

@@ -1,0 +1,173 @@
+//! Plan-layer integration tests: compile-once ExecPlans, the serving
+//! plan cache, re-entrant simulation, and tiling invariants at the plan
+//! boundary.
+
+use std::sync::Arc;
+use zipper::config::{ArchConfig, RunConfig};
+use zipper::coordinator::{Coordinator, InferenceRequest};
+use zipper::plan::{ExecPlan, PlanCache};
+use zipper::sim::ExecScratch;
+use zipper::tiling::{Reorder, TilingConfig, TilingMode};
+
+fn run_cfg(model: &str, seed: u64) -> RunConfig {
+    RunConfig {
+        model: model.into(),
+        dataset: "CR".into(),
+        scale: 16,
+        feat_in: 16,
+        feat_out: 16,
+        tiling: TilingConfig {
+            dst_part: 64,
+            src_part: 64,
+            mode: TilingMode::Sparse,
+            reorder: Reorder::InDegree,
+        },
+        e2v: true,
+        functional: true,
+        seed,
+    }
+}
+
+#[test]
+fn coordinator_plan_cache_hits_and_misses() {
+    let mut c = Coordinator::new(ArchConfig::default(), 1);
+    // 3 distinct operating points, each requested twice
+    for i in 0..6u64 {
+        let model = ["gcn", "gat", "sage"][(i % 3) as usize];
+        c.submit(InferenceRequest { id: i, run: run_cfg(model, 3), input_seed: i });
+    }
+    let resp = c.drain();
+    assert_eq!(resp.len(), 6);
+    for r in &resp {
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    let stats = c.cache_stats();
+    assert_eq!(stats.entries, 3, "one plan per operating point");
+    // single worker ⇒ strictly sequential ⇒ exactly 3 misses, 3 hits
+    assert_eq!((stats.misses, stats.hits), (3, 3));
+    let warm = resp.iter().filter(|r| r.plan_cache_hit).count();
+    assert_eq!(warm, 3);
+    for r in resp.iter().filter(|r| r.plan_cache_hit) {
+        assert_eq!(r.prepare_seconds, 0.0, "warm request must not pay compilation");
+    }
+}
+
+#[test]
+fn warm_pass_is_identical_and_all_hits() {
+    let cache = Arc::new(PlanCache::new());
+    let arch = ArchConfig::default();
+    let serve = |cache: &Arc<PlanCache>| {
+        let mut c = Coordinator::with_cache(arch, 2, Arc::clone(cache));
+        for i in 0..4u64 {
+            let model = ["gcn", "gat"][(i % 2) as usize];
+            c.submit(InferenceRequest { id: i, run: run_cfg(model, 3), input_seed: i });
+        }
+        let mut resp = c.drain();
+        resp.sort_by_key(|r| r.id);
+        resp
+    };
+    let cold = serve(&cache);
+    let warm = serve(&cache);
+    assert!(warm.iter().all(|r| r.plan_cache_hit), "warm pass must be 100% cache hits");
+    for (a, b) in cold.iter().zip(&warm) {
+        assert!(a.error.is_none() && b.error.is_none());
+        assert_eq!(a.sim_cycles, b.sim_cycles);
+        assert_eq!(a.output_checksum, b.output_checksum);
+    }
+    assert_eq!(cache.stats().entries, 2);
+}
+
+#[test]
+fn exec_plan_is_reentrant_across_threads() {
+    // one immutable plan, many concurrent workers with private scratch:
+    // every run must produce bit-identical output
+    let plan = Arc::new(ExecPlan::compile(&run_cfg("gat", 5)).unwrap());
+    let arch = ArchConfig::default();
+    let x = plan.make_input(11);
+    let reference = plan
+        .simulate(&arch, true, Some(&x), 0)
+        .unwrap()
+        .output
+        .unwrap();
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let plan = Arc::clone(&plan);
+        let x = x.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut scratch = ExecScratch::new();
+            let mut outputs = Vec::new();
+            for _ in 0..3 {
+                let res = plan
+                    .simulate_with(&arch, true, Some(&x), 0, &mut scratch)
+                    .unwrap();
+                outputs.push(res.output.unwrap());
+            }
+            outputs
+        }));
+    }
+    for h in handles {
+        for out in h.join().unwrap() {
+            assert_eq!(out, reference);
+        }
+    }
+}
+
+#[test]
+fn plan_tiling_covers_every_edge_exactly_once() {
+    for model in ["gcn", "rgcn"] {
+        let plan = ExecPlan::compile(&run_cfg(model, 9)).unwrap();
+        // rebuild the global edge multiset from the tiles
+        let mut rebuilt: Vec<(u32, u32)> = Vec::new();
+        for p in &plan.tiling.partitions {
+            for t in &p.tiles {
+                for &(ls, ld) in &t.edges {
+                    rebuilt.push((t.src_vertices[ls as usize], p.dst_start + ld));
+                }
+            }
+        }
+        assert_eq!(rebuilt.len() as u64, plan.graph.num_edges(), "{model}");
+        rebuilt.sort_unstable();
+        // expected edges in *tiled* vertex ids (the tiling relabels)
+        let mut expected: Vec<(u32, u32)> = Vec::new();
+        for d in 0..plan.graph.num_vertices() {
+            for &s in plan.graph.in_neighbors(d) {
+                expected.push((plan.tiling.perm[s as usize], plan.tiling.perm[d as usize]));
+            }
+        }
+        expected.sort_unstable();
+        assert_eq!(rebuilt, expected, "{model}: every edge exactly once");
+    }
+}
+
+#[test]
+fn plan_permutation_round_trips() {
+    let plan = ExecPlan::compile(&run_cfg("gcn", 13)).unwrap();
+    let n = plan.dims.num_vertices;
+    assert_eq!(plan.tiling.perm.len() as u32, n);
+    assert_eq!(plan.tiling.inv_perm.len() as u32, n);
+    for v in 0..n {
+        assert_eq!(plan.tiling.inv_perm[plan.tiling.perm[v as usize] as usize], v);
+        assert_eq!(plan.tiling.perm[plan.tiling.inv_perm[v as usize] as usize], v);
+    }
+    // derived dims agree with their sources
+    assert_eq!(plan.dims.num_tiles, plan.tiling.num_tiles());
+    assert_eq!(plan.dims.num_edges, plan.graph.num_edges());
+    assert_eq!(plan.dims.input_len, n as usize * plan.feat_in as usize);
+    assert_eq!(plan.dims.output_len, n as usize * plan.feat_out as usize);
+}
+
+#[test]
+fn coordinator_survives_bad_requests_interleaved_with_good() {
+    let mut c = Coordinator::new(ArchConfig::default(), 2);
+    let mut bad = run_cfg("gcn", 3);
+    bad.dataset = "NOPE".into();
+    c.submit(InferenceRequest { id: 0, run: run_cfg("gcn", 3), input_seed: 0 });
+    c.submit(InferenceRequest { id: 1, run: bad, input_seed: 1 });
+    c.submit(InferenceRequest { id: 2, run: run_cfg("gcn", 3), input_seed: 2 });
+    let mut resp = c.drain();
+    assert_eq!(resp.len(), 3);
+    resp.sort_by_key(|r| r.id);
+    assert!(resp[0].error.is_none());
+    assert!(resp[1].error.as_deref().unwrap().contains("unknown dataset"));
+    assert!(resp[2].error.is_none());
+}

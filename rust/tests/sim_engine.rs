@@ -1,0 +1,201 @@
+//! Simulator engine behaviour through the public facade (moved out of
+//! `sim/engine.rs` when the engine was split into scheduler / units /
+//! exec submodules).
+
+use zipper::compiler::{compile, OptLevel, Program};
+use zipper::config::ArchConfig;
+use zipper::graph::generators;
+use zipper::models::{gat, gcn, ModelKind, WeightStore};
+use zipper::sim::{ExecScratch, SimOptions, SimResult, Simulator, Workload};
+use zipper::tiling::{tile, Reorder, TilingConfig, TilingMode};
+use zipper::util::Rng;
+
+fn run_model(m: ModelKind, opt: OptLevel, functional: bool) -> (SimResult, Program) {
+    let arch = ArchConfig::default();
+    let g = generators::power_law(300, 1500, 1.0, 1.0, if m.uses_etypes() { 3 } else { 0 }, 7);
+    let tl = tile(
+        &g,
+        TilingConfig {
+            dst_part: 64,
+            src_part: 64,
+            mode: TilingMode::Sparse,
+            reorder: Reorder::InDegree,
+        },
+    );
+    let prog = compile(&m.build(), opt).unwrap();
+    let (fi, fo) = if m.requires_square() { (16, 16) } else { (16, 8) };
+    let ws = WeightStore::synthesize(&m.build(), fi, fo, 5);
+    let mut rng = Rng::new(11);
+    let x: Vec<f32> = (0..300 * fi as usize).map(|_| rng.next_f32_sym() * 0.5).collect();
+    let wl = Workload {
+        program: &prog,
+        tiling: &tl,
+        weights: &ws,
+        feat_in: fi,
+        feat_out: fo,
+        x: functional.then_some(x.as_slice()),
+    };
+    let res = Simulator::new(&arch, &wl, SimOptions { functional, trace_window: 0 })
+        .run()
+        .unwrap_or_else(|e| panic!("{}: {e}", m.name()));
+    (res, prog)
+}
+
+#[test]
+fn all_models_simulate_to_completion() {
+    for m in ModelKind::ALL {
+        let (res, _) = run_model(m, OptLevel::E2v, false);
+        assert!(res.cycles > 0, "{}", m.name());
+        assert!(res.instructions > 0);
+        assert!(res.dram_read_bytes > 0);
+    }
+}
+
+#[test]
+fn functional_gcn_matches_direct_computation() {
+    let (res, _) = run_model(ModelKind::Gcn, OptLevel::E2v, true);
+    let out = res.output.unwrap();
+    // recompute directly: out = A^T·(x W) summed over in-edges
+    let g = generators::power_law(300, 1500, 1.0, 1.0, 0, 7);
+    let ws = WeightStore::synthesize(&gcn(), 16, 8, 5);
+    let w = &ws.tensors[0];
+    let mut rng = Rng::new(11);
+    let x: Vec<f32> = (0..300 * 16).map(|_| rng.next_f32_sym() * 0.5).collect();
+    // h = x @ w  (E2V order); out[d] = Σ_{s∈in(d)} h[s]
+    let mut h = vec![0.0f32; 300 * 8];
+    for v in 0..300usize {
+        for kk in 0..16usize {
+            let xv = x[v * 16 + kk];
+            for n in 0..8usize {
+                h[v * 8 + n] += xv * w.data[kk * 8 + n];
+            }
+        }
+    }
+    let mut expect = vec![0.0f32; 300 * 8];
+    for d in 0..300u32 {
+        for &s in g.in_neighbors(d) {
+            for n in 0..8usize {
+                expect[d as usize * 8 + n] += h[s as usize * 8 + n];
+            }
+        }
+    }
+    for (a, b) in out.iter().zip(&expect) {
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn naive_and_e2v_agree_functionally() {
+    for m in [ModelKind::Gat, ModelKind::Sage] {
+        let (a, _) = run_model(m, OptLevel::None, true);
+        let (b, _) = run_model(m, OptLevel::E2v, true);
+        let (oa, ob) = (a.output.unwrap(), b.output.unwrap());
+        let mut max_err = 0.0f32;
+        for (x, y) in oa.iter().zip(&ob) {
+            max_err = max_err.max((x - y).abs());
+        }
+        assert!(max_err < 1e-3, "{}: max err {max_err}", m.name());
+    }
+}
+
+#[test]
+fn e2v_is_faster_for_gat() {
+    let (naive, _) = run_model(ModelKind::Gat, OptLevel::None, false);
+    let (opt, _) = run_model(ModelKind::Gat, OptLevel::E2v, false);
+    assert!(opt.cycles < naive.cycles, "E2V {} !< naive {}", opt.cycles, naive.cycles);
+}
+
+#[test]
+fn more_streams_dont_break_correctness() {
+    let mut arch = ArchConfig::default();
+    arch.s_streams = 8;
+    arch.e_streams = 8;
+    let g = generators::power_law(200, 1000, 1.0, 1.0, 0, 3);
+    let tl = tile(
+        &g,
+        TilingConfig {
+            dst_part: 32,
+            src_part: 32,
+            mode: TilingMode::Sparse,
+            reorder: Reorder::None,
+        },
+    );
+    let prog = compile(&gcn(), OptLevel::E2v).unwrap();
+    let ws = WeightStore::synthesize(&gcn(), 8, 8, 1);
+    let mut rng = Rng::new(2);
+    let x: Vec<f32> = (0..200 * 8).map(|_| rng.next_f32_sym()).collect();
+    let wl = Workload {
+        program: &prog,
+        tiling: &tl,
+        weights: &ws,
+        feat_in: 8,
+        feat_out: 8,
+        x: Some(&x),
+    };
+    let res = Simulator::new(&arch, &wl, SimOptions { functional: true, trace_window: 0 })
+        .run()
+        .unwrap();
+    assert!(res.output.unwrap().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn scratch_reuse_matches_fresh_runs() {
+    // the serving hot path: one scratch, many runs — results must be
+    // bit-identical to fresh-scratch runs, across different models
+    let mut scratch = ExecScratch::new();
+    for m in [ModelKind::Gcn, ModelKind::Gat, ModelKind::Sage] {
+        let arch = ArchConfig::default();
+        let g = generators::power_law(120, 700, 1.0, 1.0, 0, 21);
+        let tl = tile(
+            &g,
+            TilingConfig {
+                dst_part: 32,
+                src_part: 32,
+                mode: TilingMode::Sparse,
+                reorder: Reorder::InDegree,
+            },
+        );
+        let prog = compile(&m.build(), OptLevel::E2v).unwrap();
+        let ws = WeightStore::synthesize(&m.build(), 8, 8, 3);
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..120 * 8).map(|_| rng.next_f32_sym()).collect();
+        let wl = Workload {
+            program: &prog,
+            tiling: &tl,
+            weights: &ws,
+            feat_in: 8,
+            feat_out: 8,
+            x: Some(&x),
+        };
+        let sim = Simulator::new(&arch, &wl, SimOptions { functional: true, trace_window: 0 });
+        let fresh = sim.run().unwrap();
+        let reused = sim.run_with(&mut scratch).unwrap();
+        assert_eq!(fresh.cycles, reused.cycles, "{}", m.name());
+        assert_eq!(fresh.output.unwrap(), reused.output.unwrap(), "{}", m.name());
+    }
+}
+
+#[test]
+fn trace_produces_samples() {
+    let arch = ArchConfig::default();
+    let g = generators::power_law(300, 3000, 1.1, 1.1, 0, 9);
+    let tl = tile(&g, TilingConfig::default());
+    let prog = compile(&gat(), OptLevel::E2v).unwrap();
+    let ws = WeightStore::synthesize(&gat(), 32, 32, 1);
+    let wl = Workload {
+        program: &prog,
+        tiling: &tl,
+        weights: &ws,
+        feat_in: 32,
+        feat_out: 32,
+        x: None,
+    };
+    let res = Simulator::new(&arch, &wl, SimOptions { functional: false, trace_window: 256 })
+        .run()
+        .unwrap();
+    assert!(!res.trace.is_empty());
+    // GAT must show multiple phases
+    let phases: std::collections::HashSet<&str> =
+        res.trace.iter().map(|s| s.phase.tag()).collect();
+    assert!(phases.len() >= 2, "phases: {phases:?}");
+}
