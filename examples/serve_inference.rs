@@ -40,6 +40,7 @@ fn request(i: u64) -> InferenceRequest {
             src_part: 256,
             mode: TilingMode::Sparse,
             reorder: Reorder::InDegree,
+            threads: 1,
         },
         e2v: true,
         functional: true,

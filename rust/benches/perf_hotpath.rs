@@ -3,18 +3,33 @@
 //! Measures, with wall-clock timing over repeated runs:
 //!   * simulator engine throughput (simulated instructions / host second)
 //!   * functional-mode throughput (instructions/s with tensor execution)
-//!   * tiling construction throughput (edges / second)
-//!   * functional GEMM kernel (MFLOP/s of the tensor executor)
+//!   * tiling construction throughput (edges / second), serial + threaded
+//!   * the in-place tensor kernels (GEMM / BMM / GEMV / SCTR / GTHR) at
+//!     the five models' operating-point dims (128 features, 2048-vertex
+//!     source tiles — paper Table 4), with the blocked GEMM compared
+//!     against the pre-blocking reference kernel kept verbatim below
+//!   * warm-path allocation counts: after the first (cold) request on a
+//!     reused `ExecScratch`, further requests must grow the pool by 0
+//!
+//! Emits `BENCH_hotpath.json`. Flags: `--scale N` overrides the dataset
+//! scale divisor (larger = smaller graphs; CI smoke uses 65536),
+//! `--reps N` overrides every rep count.
 //!
 //! Run before/after each optimization; keep if >5% better.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 use zipper::config::{ArchConfig, RunConfig};
 use zipper::coordinator::Session;
 use zipper::graph::generators;
+use zipper::isa::{Reduce, SctrDir};
 use zipper::metrics::Table;
-use zipper::sim::tensor::{matmul, Tensor};
-use zipper::tiling::{tile, TilingConfig};
+use zipper::plan::ExecPlan;
+use zipper::sim::tensor::{self, Tensor};
+use zipper::sim::ExecScratch;
+use zipper::tiling::{tile, Reorder, TilingConfig, TilingMode};
+use zipper::util::json::Json;
+use zipper::util::Rng;
 
 fn time<R>(mut f: impl FnMut() -> R, reps: u32) -> (f64, R) {
     // warmup
@@ -26,67 +41,340 @@ fn time<R>(mut f: impl FnMut() -> R, reps: u32) -> (f64, R) {
     (t0.elapsed().as_secs_f64() / reps as f64, out)
 }
 
+fn arg(name: &str) -> Option<u64> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+}
+
+/// The pre-blocking GEMM kernel (row-at-a-time ikj with a 4-way k
+/// unroll), kept verbatim as the speedup baseline for the microbench.
+fn matmul_reference(x: &Tensor, w: &[f32], k: u32, n: u32, out: &mut Tensor) {
+    assert_eq!(x.cols, k, "GEMM inner dim");
+    assert_eq!((out.rows, out.cols), (x.rows, n), "GEMM out shape");
+    out.data.fill(0.0);
+    let (k, n) = (k as usize, n as usize);
+    for r in 0..x.rows as usize {
+        let xrow = &x.data[r * k..(r + 1) * k];
+        let orow = &mut out.data[r * n..(r + 1) * n];
+        let mut kk = 0;
+        while kk + 4 <= k {
+            let (x0, x1, x2, x3) = (xrow[kk], xrow[kk + 1], xrow[kk + 2], xrow[kk + 3]);
+            let w0 = &w[kk * n..kk * n + n];
+            let w1 = &w[(kk + 1) * n..(kk + 1) * n + n];
+            let w2 = &w[(kk + 2) * n..(kk + 2) * n + n];
+            let w3 = &w[(kk + 3) * n..(kk + 3) * n + n];
+            for j in 0..n {
+                orow[j] += x0 * w0[j] + x1 * w1[j] + x2 * w2[j] + x3 * w3[j];
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let xv = xrow[kk];
+            let wrow = &w[kk * n..kk * n + n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+            kk += 1;
+        }
+    }
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn small_run(model: &str) -> RunConfig {
+    RunConfig {
+        model: model.into(),
+        dataset: "CR".into(),
+        scale: 16,
+        feat_in: 16,
+        feat_out: 16,
+        tiling: TilingConfig {
+            dst_part: 64,
+            src_part: 64,
+            mode: TilingMode::Sparse,
+            reorder: Reorder::InDegree,
+            threads: 1,
+        },
+        e2v: true,
+        functional: true,
+        seed: 3,
+    }
+}
+
 fn main() {
     let arch = ArchConfig::default();
+    let reps_override = arg("--reps").map(|r| r as u32);
+    let reps = |default: u32| reps_override.unwrap_or(default);
     let mut t = Table::new(&["bench", "time/iter", "throughput"]);
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("perf_hotpath".to_string()));
 
     // -- simulator timing-only throughput ---------------------------------
     let run = RunConfig {
         model: "gat".into(),
         dataset: "CP".into(),
-        scale: 512,
+        scale: arg("--scale").unwrap_or(512),
         feat_in: 128,
         feat_out: 128,
         ..Default::default()
     };
     let session = Session::prepare(&run).expect("session");
-    let (dt, res) = time(|| session.simulate(&arch, false, None, 0).unwrap(), 5);
+    let (dt, res) = time(|| session.simulate(&arch, false, None, 0).unwrap(), reps(5));
     t.row(&[
-        "sim engine (GAT/CP 1/512, timing)".into(),
+        format!("sim engine (GAT/CP 1/{}, timing)", run.scale),
         format!("{:.1} ms", dt * 1e3),
         format!("{:.2} M instr/s", res.instructions as f64 / dt / 1e6),
     ]);
+    root.insert("sim_instr_per_s".to_string(), num(res.instructions as f64 / dt));
 
-    // -- functional simulation ---------------------------------------------
+    // -- functional simulation (reused scratch = serving hot path) ---------
     let mut frun = run.clone();
-    frun.scale = 2048;
+    frun.scale = arg("--scale").unwrap_or(2048);
     frun.feat_in = 64;
     frun.feat_out = 64;
     let fsession = Session::prepare(&frun).expect("session");
     let x = fsession.make_input(1);
-    let (dt, res) = time(|| fsession.simulate(&arch, true, Some(&x), 0).unwrap(), 3);
+    let mut scratch = ExecScratch::new();
+    let (dt, res) = time(
+        || {
+            fsession
+                .simulate_with(&arch, true, Some(&x), 0, &mut scratch)
+                .unwrap()
+        },
+        reps(3),
+    );
     t.row(&[
-        "sim engine (GAT/CP 1/2048, functional)".into(),
+        format!("sim engine (GAT/CP 1/{}, functional)", frun.scale),
         format!("{:.1} ms", dt * 1e3),
         format!("{:.2} M instr/s", res.instructions as f64 / dt / 1e6),
     ]);
+    root.insert("func_instr_per_s".to_string(), num(res.instructions as f64 / dt));
 
-    // -- tiling construction -------------------------------------------------
-    let g = generators::power_law(40_000, 400_000, 1.1, 1.1, 0, 3);
-    let (dt, tl) = time(|| tile(&g, TilingConfig::default()), 5);
-    t.row(&[
-        "tiling (40k V / 400k E, sparse+reorder)".into(),
-        format!("{:.1} ms", dt * 1e3),
-        format!("{:.1} M edges/s", tl.num_edges as f64 / dt / 1e6),
-    ]);
+    // -- tiling construction, serial vs threaded ---------------------------
+    let tile_v = 40_000u32 / (arg("--scale").map_or(1, |s| (s / 512).max(1)) as u32);
+    let g = generators::power_law(tile_v.max(1_000), tile_v as u64 * 10, 1.1, 1.1, 0, 3);
+    let mut tiling_rows: Vec<Json> = Vec::new();
+    let mut serial_dt = 0.0;
+    for threads in [1u32, 4] {
+        let cfg = TilingConfig { threads, ..TilingConfig::default() };
+        let (dt, tl) = time(|| tile(&g, cfg), reps(5));
+        if threads == 1 {
+            serial_dt = dt;
+        }
+        t.row(&[
+            format!("tiling ({}k V, sparse+reorder, {threads} thr)", g.num_vertices() / 1000),
+            format!("{:.1} ms", dt * 1e3),
+            format!(
+                "{:.1} M edges/s ({:.2}x)",
+                tl.num_edges as f64 / dt / 1e6,
+                serial_dt / dt
+            ),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("threads".to_string(), num(threads as f64));
+        row.insert("seconds".to_string(), num(dt));
+        row.insert("edges_per_s".to_string(), num(tl.num_edges as f64 / dt));
+        tiling_rows.push(Json::Obj(row));
+    }
+    root.insert("tiling".to_string(), Json::Arr(tiling_rows));
 
-    // -- functional GEMM ------------------------------------------------------
-    let a = Tensor::filled(256, 128, 1.5);
-    let w = vec![0.5f32; 128 * 128];
-    let mut out = Tensor::zeros(256, 128);
-    let (dt, _) = time(
-        || {
-            matmul(&a, &w, 128, 128, &mut out, false);
-            out.data[0]
-        },
-        50,
-    );
-    let flops = 2.0 * 256.0 * 128.0 * 128.0;
-    t.row(&[
-        "functional GEMM 256x128x128".into(),
-        format!("{:.1} us", dt * 1e6),
-        format!("{:.2} GFLOP/s", flops / dt / 1e9),
-    ]);
+    // -- dense kernels at the five models' operating-point dims ------------
+    // 128-feature layers over a 2048-vertex source tile (Table 4 defaults);
+    // R-GCN's dense op is the per-edge typed BMM over a tile's edge list.
+    let gemm_dims: [(&str, u32, u32, u32, bool); 4] = [
+        ("gcn", 2048, 128, 128, false),
+        ("gat", 2048, 128, 128, false),
+        ("sage", 2048, 128, 128, false),
+        ("ggnn", 2048, 128, 128, true), // GRU gates accumulate into dst
+    ];
+    let mut rng = Rng::new(7);
+    let mut gemm_rows: Vec<Json> = Vec::new();
+    for (model, m, k, n, accumulate) in gemm_dims {
+        let x = Tensor::from_rows(
+            m,
+            k,
+            (0..m as usize * k as usize).map(|_| rng.next_f32_sym()).collect(),
+        );
+        let w: Vec<f32> = (0..k as usize * n as usize).map(|_| rng.next_f32_sym()).collect();
+        let mut ref_out = Tensor::zeros(m, n);
+        let (ref_dt, _) = time(
+            || {
+                matmul_reference(&x, &w, k, n, &mut ref_out);
+                ref_out.data[0]
+            },
+            reps(20),
+        );
+        let mut new_out = Tensor::zeros(m, n);
+        let (new_dt, _) = time(
+            || {
+                if accumulate {
+                    new_out.data.fill(0.0);
+                }
+                tensor::matmul(&x, &w, k, n, &mut new_out, accumulate);
+                new_out.data[0]
+            },
+            reps(20),
+        );
+        // differential check: blocked kernel must match the reference
+        matmul_reference(&x, &w, k, n, &mut ref_out);
+        new_out.data.fill(0.0);
+        tensor::matmul(&x, &w, k, n, &mut new_out, accumulate);
+        let max_err = ref_out
+            .data
+            .iter()
+            .zip(&new_out.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "{model}: blocked GEMM diverges ({max_err})");
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let speedup = ref_dt / new_dt;
+        t.row(&[
+            format!("GEMM {model} {m}x{k}x{n}{}", if accumulate { " +acc" } else { "" }),
+            format!("{:.1} us", new_dt * 1e6),
+            format!(
+                "{:.2} GFLOP/s ({:.2}x vs ref {:.2})",
+                flops / new_dt / 1e9,
+                speedup,
+                flops / ref_dt / 1e9
+            ),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("model".to_string(), Json::Str(model.to_string()));
+        row.insert("m".to_string(), num(m as f64));
+        row.insert("k".to_string(), num(k as f64));
+        row.insert("n".to_string(), num(n as f64));
+        row.insert("ref_gflops".to_string(), num(flops / ref_dt / 1e9));
+        row.insert("new_gflops".to_string(), num(flops / new_dt / 1e9));
+        row.insert("speedup".to_string(), num(speedup));
+        gemm_rows.push(Json::Obj(row));
+    }
+    root.insert("gemm".to_string(), Json::Arr(gemm_rows));
+
+    // R-GCN: per-edge typed BMM over a tile's edge list (3 relations)
+    {
+        let (edges, k, n) = (8192u32, 128u32, 128u32);
+        let x = Tensor::from_rows(
+            edges,
+            k,
+            (0..edges as usize * k as usize).map(|_| rng.next_f32_sym()).collect(),
+        );
+        let wset: Vec<f32> =
+            (0..3 * k as usize * n as usize).map(|_| rng.next_f32_sym()).collect();
+        let etypes: Vec<u8> = (0..edges as usize).map(|_| (rng.below(3)) as u8).collect();
+        let mut out = Tensor::default();
+        let (dt, _) = time(
+            || {
+                tensor::bmm_by_type(&x, &wset, k, n, Some(&etypes), &mut out);
+                out.data[0]
+            },
+            reps(5),
+        );
+        let flops = 2.0 * edges as f64 * k as f64 * n as f64;
+        t.row(&[
+            format!("BMM rgcn {edges}x{k}x{n} (3 rel)"),
+            format!("{:.1} us", dt * 1e6),
+            format!("{:.2} GFLOP/s", flops / dt / 1e9),
+        ]);
+        root.insert("bmm_gflops".to_string(), num(flops / dt / 1e9));
+    }
+
+    // GAT: attention GEMV over a tile's edge scores
+    {
+        let (m, k) = (8192u32, 128u32);
+        let x = Tensor::from_rows(
+            m,
+            k,
+            (0..m as usize * k as usize).map(|_| rng.next_f32_sym()).collect(),
+        );
+        let w: Vec<f32> = (0..k as usize).map(|_| rng.next_f32_sym()).collect();
+        let mut out = Tensor::default();
+        let (dt, _) = time(
+            || {
+                tensor::gemv(&x, &w, &mut out);
+                out.data[0]
+            },
+            reps(50),
+        );
+        t.row(&[
+            format!("GEMV gat {m}x{k}"),
+            format!("{:.1} us", dt * 1e6),
+            format!("{:.2} GFLOP/s", 2.0 * m as f64 * k as f64 / dt / 1e9),
+        ]);
+        root.insert("gemv_gflops".to_string(), num(2.0 * m as f64 * k as f64 / dt / 1e9));
+    }
+
+    // -- GOP kernels: SCTR / GTHR over a synthetic tile --------------------
+    {
+        let (verts, edges_n, cols) = (2048u32, 16384usize, 128u32);
+        let edges: Vec<(u32, u32)> = (0..edges_n)
+            .map(|_| (rng.below(verts as u64) as u32, rng.below(verts as u64) as u32))
+            .collect();
+        let v = Tensor::filled(verts, cols, 1.25);
+        let mut e = Tensor::default();
+        let (dt, _) = time(
+            || {
+                tensor::scatter_rows(&v, &edges, SctrDir::OutEdge, cols, &mut e);
+                e.data[0]
+            },
+            reps(20),
+        );
+        let elems = edges_n as f64 * cols as f64;
+        t.row(&[
+            format!("SCTR {edges_n} edges x {cols}"),
+            format!("{:.1} us", dt * 1e6),
+            format!("{:.0} M elem/s", elems / dt / 1e6),
+        ]);
+        root.insert("sctr_elems_per_s".to_string(), num(elems / dt));
+        let mut acc = Tensor::zeros(verts, cols);
+        let (dt, _) = time(
+            || {
+                tensor::gather_rows(Reduce::Sum, &e, &edges, &mut acc);
+                acc.data[0]
+            },
+            reps(20),
+        );
+        t.row(&[
+            format!("GTHR {edges_n} edges x {cols} (sum)"),
+            format!("{:.1} us", dt * 1e6),
+            format!("{:.0} M elem/s", elems / dt / 1e6),
+        ]);
+        root.insert("gthr_elems_per_s".to_string(), num(elems / dt));
+    }
+
+    // -- warm-path allocation counter: must be 0 after the cold run --------
+    let mut warm = BTreeMap::new();
+    for model in ["gcn", "gat", "sage", "ggnn", "rgcn"] {
+        let plan = ExecPlan::compile(&small_run(model)).expect("plan");
+        let x = plan.make_input(1);
+        let mut scratch = ExecScratch::new();
+        plan.simulate_with(&arch, true, Some(&x), 0, &mut scratch)
+            .expect("cold run");
+        let cold = scratch.alloc_events();
+        for _ in 0..3 {
+            plan.simulate_with(&arch, true, Some(&x), 0, &mut scratch)
+                .expect("warm run");
+        }
+        let warm_delta = scratch.alloc_events() - cold;
+        assert_eq!(warm_delta, 0, "{model}: warm requests must not grow the pool");
+        t.row(&[
+            format!("warm allocs ({model}, 3 reqs)"),
+            format!("cold {cold}"),
+            format!("warm +{warm_delta}"),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("cold".to_string(), num(cold as f64));
+        row.insert("warm_delta".to_string(), num(warm_delta as f64));
+        warm.insert(model.to_string(), Json::Obj(row));
+    }
+    root.insert("warm_allocs".to_string(), Json::Obj(warm));
 
     print!("{}", t.render());
+    let path = "BENCH_hotpath.json";
+    std::fs::write(path, Json::Obj(root).to_string_pretty()).expect("write BENCH_hotpath.json");
+    println!("wrote {path}");
 }

@@ -17,8 +17,8 @@ use std::time::Instant;
 use zipper::config::{ArchConfig, RunConfig};
 use zipper::coordinator::{Coordinator, InferenceRequest};
 use zipper::metrics::Table;
-use zipper::plan::PlanCache;
-use zipper::tiling::{Reorder, TilingConfig, TilingMode};
+use zipper::plan::{ExecPlan, PlanCache};
+use zipper::tiling::{tile, Reorder, TilingConfig, TilingMode};
 use zipper::util::json::Json;
 
 const N_REQUESTS: u64 = 60;
@@ -37,6 +37,7 @@ fn request(i: u64) -> InferenceRequest {
             src_part: 256,
             mode: TilingMode::Sparse,
             reorder: Reorder::InDegree,
+            threads: 1,
         },
         e2v: true,
         // timing-only: the serving hot path benches the scheduler +
@@ -47,18 +48,36 @@ fn request(i: u64) -> InferenceRequest {
     InferenceRequest { id: i, run, input_seed: i }
 }
 
-/// Serve one batch; returns (wall seconds, error count, warm hits).
-fn serve(arch: ArchConfig, workers: usize, cache: &Arc<PlanCache>) -> (f64, usize, usize) {
+/// Serve one batch with `threads` tiling threads per cold compile;
+/// returns (wall seconds, error count, warm hits, mean cold prepare s).
+fn serve(
+    arch: ArchConfig,
+    workers: usize,
+    cache: &Arc<PlanCache>,
+    threads: u32,
+) -> (f64, usize, usize, f64) {
     let mut c = Coordinator::with_cache(arch, workers, Arc::clone(cache));
     let t0 = Instant::now();
     for i in 0..N_REQUESTS {
-        c.submit(request(i));
+        let mut req = request(i);
+        req.run.tiling.threads = threads;
+        c.submit(req);
     }
     let resp = c.drain();
     let wall = t0.elapsed().as_secs_f64();
     let errors = resp.iter().filter(|r| r.error.is_some()).count();
     let warm = resp.iter().filter(|r| r.plan_cache_hit).count();
-    (wall, errors, warm)
+    let cold: Vec<f64> = resp
+        .iter()
+        .filter(|r| !r.plan_cache_hit && r.error.is_none())
+        .map(|r| r.prepare_seconds)
+        .collect();
+    let prep_mean = if cold.is_empty() {
+        0.0
+    } else {
+        cold.iter().sum::<f64>() / cold.len() as f64
+    };
+    (wall, errors, warm, prep_mean)
 }
 
 fn num(v: f64) -> Json {
@@ -74,10 +93,10 @@ fn main() {
 
     for workers in [1usize, 2, 4, 8] {
         let cache = Arc::new(PlanCache::new());
-        let (cold_wall, cold_err, _) = serve(arch, workers, &cache);
+        let (cold_wall, cold_err, _, _) = serve(arch, workers, &cache, 1);
         assert_eq!(cold_err, 0, "cold pass had errors");
         // warm pass: same requests, plans already compiled
-        let (warm_wall, warm_err, warm_hits) = serve(arch, workers, &cache);
+        let (warm_wall, warm_err, warm_hits, _) = serve(arch, workers, &cache, 1);
         assert_eq!(warm_err, 0, "warm pass had errors");
         assert_eq!(
             warm_hits as u64, N_REQUESTS,
@@ -117,6 +136,47 @@ fn main() {
     }
     let lookup_s = t0.elapsed().as_secs_f64() / lookups as f64;
 
+    // parallel tiling: the cold-phase latency lever. Time tile() on a
+    // larger graph across thread counts (identical partitions asserted),
+    // then measure end-to-end cold prepare_seconds at 1 vs 4 threads.
+    let mut trun = request(0).run;
+    trun.dataset = "CP".into();
+    trun.scale = 64;
+    trun.tiling.threads = 1;
+    let base_plan = ExecPlan::compile(&trun).expect("compile");
+    let mut thr_table = Table::new(&["tiling threads", "tile ms", "speedup"]);
+    let mut thr_rows: Vec<Json> = Vec::new();
+    let mut serial_s = 0.0;
+    for threads in [1u32, 2, 4, 8] {
+        let cfg = TilingConfig { threads, ..trun.tiling };
+        let reps = 3;
+        let t0 = Instant::now();
+        let mut tl = tile(&base_plan.graph, cfg);
+        for _ in 1..reps {
+            tl = tile(&base_plan.graph, cfg);
+        }
+        let dt = t0.elapsed().as_secs_f64() / reps as f64;
+        assert_eq!(
+            tl.partitions, base_plan.tiling.partitions,
+            "threads={threads} must produce the identical tiling"
+        );
+        if threads == 1 {
+            serial_s = dt;
+        }
+        thr_table.row(&[
+            threads.to_string(),
+            format!("{:.1}", dt * 1e3),
+            format!("{:.2}x", serial_s / dt),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("threads".to_string(), num(threads as f64));
+        row.insert("tile_s".to_string(), num(dt));
+        thr_rows.push(Json::Obj(row));
+    }
+    let (_, err1, _, prep1) = serve(arch, 4, &Arc::new(PlanCache::new()), 1);
+    let (_, err4, _, prep4) = serve(arch, 4, &Arc::new(PlanCache::new()), 4);
+    assert_eq!((err1, err4), (0, 0), "threaded cold passes had errors");
+
     println!("== serving throughput: cold vs warm plan cache ({N_REQUESTS} requests) ==");
     print!("{}", table.render());
     println!(
@@ -126,12 +186,22 @@ fn main() {
         lookup_s * 1e6,
         compile_s / lookup_s.max(1e-12)
     );
+    println!("\n== parallel tiling (CP 1/64, identical output asserted) ==");
+    print!("{}", thr_table.render());
+    println!(
+        "cold prepare mean: {:.3} ms @ 1 thread vs {:.3} ms @ 4 threads",
+        prep1 * 1e3,
+        prep4 * 1e3
+    );
 
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("perf_serving".to_string()));
     root.insert("sweep".to_string(), Json::Arr(rows));
     root.insert("plan_compile_s".to_string(), num(compile_s));
     root.insert("plan_lookup_s".to_string(), num(lookup_s));
+    root.insert("tiling_threads".to_string(), Json::Arr(thr_rows));
+    root.insert("cold_prepare_mean_s_threads1".to_string(), num(prep1));
+    root.insert("cold_prepare_mean_s_threads4".to_string(), num(prep4));
     let path = "BENCH_serving.json";
     std::fs::write(path, Json::Obj(root).to_string_pretty()).expect("write BENCH_serving.json");
     println!("wrote {path}");

@@ -75,9 +75,11 @@ pub struct Program {
     pub tile_bufs: u16,
     /// Number of partition-frame buffer slots.
     pub part_bufs: u16,
-    /// Partition accumulators: (buffer, reduction) — zero/−inf-initialized
-    /// at FCH.PTT, max-fixed-up at the dStream wait boundary.
-    pub accumulators: Vec<(BufId, AccKind)>,
+    /// Partition accumulators: (buffer, reduction, column dim) —
+    /// zero/−inf-initialized at FCH.PTT, max-fixed-up at the dStream
+    /// wait boundary. The column dim is recorded here so the executor
+    /// never rescans the eFunction for the writing Gthr.
+    pub accumulators: Vec<(BufId, AccKind, Dim)>,
     /// Partition-frame buffer holding the model output (ST.DST source).
     pub output_buf: BufId,
     /// Whether the model loads destination embeddings (LD.DST emitted).
@@ -289,7 +291,7 @@ pub fn compile(model: &ModelGraph, opt: OptLevel) -> Result<Program, CompileErro
     // ---- dFunction bodies ----------------------------------------------------
     let mut d_pre: Vec<Instr> = Vec::new();
     let mut d_post: Vec<Instr> = Vec::new();
-    let mut accumulators: Vec<(BufId, AccKind)> = Vec::new();
+    let mut accumulators: Vec<(BufId, AccKind, Dim)> = Vec::new();
     let mut uses_dst_input = false;
     // gathers allocate partition accumulators first (written by eFunc)
     for &id in &topo {
@@ -297,13 +299,13 @@ pub fn compile(model: &ModelGraph, opt: OptLevel) -> Result<Program, CompileErro
         if !live[i] {
             continue;
         }
-        if let Op::GatherSum { .. } | Op::GatherMax { .. } = g.node(id).op {
+        if let Op::GatherSum { e } | Op::GatherMax { e } = &g.node(id).op {
             let buf = alloc_part(id, &mut part_buf_of);
             let kind = match g.node(id).op {
                 Op::GatherMax { .. } => AccKind::Max,
                 _ => AccKind::Sum,
             };
-            accumulators.push((buf, kind));
+            accumulators.push((buf, kind, col_dim(*e)));
         }
     }
     for &id in &topo {
@@ -690,7 +692,7 @@ mod tests {
     #[test]
     fn sage_has_max_accumulator() {
         let p = compiled(ModelKind::Sage, OptLevel::E2v);
-        assert!(p.accumulators.iter().any(|&(_, k)| k == AccKind::Max));
+        assert!(p.accumulators.iter().any(|&(_, k, _)| k == AccKind::Max));
     }
 
     #[test]

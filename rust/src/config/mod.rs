@@ -192,6 +192,7 @@ pub fn apply(
             ("run", "seed") => run.seed = num()? as u64,
             ("tiling", "dst_part") => run.tiling.dst_part = num()? as u32,
             ("tiling", "src_part") => run.tiling.src_part = num()? as u32,
+            ("tiling", "threads") => run.tiling.threads = num()? as u32,
             ("tiling", "mode") => {
                 run.tiling.mode = match value.as_str() {
                     "regular" => TilingMode::Regular,
@@ -225,7 +226,7 @@ pub fn show(arch: &ArchConfig, run: &RunConfig) -> String {
          streams = 1d/{}s/{}e\npeak = {:.2} TFLOP/s\n\n\
          [run]\nmodel = {}\ndataset = {}\nscale = 1/{}\nfeat = {}x{}\n\
          e2v = {}\nfunctional = {}\nseed = {}\n\n\
-         [tiling]\ndst_part = {}\nsrc_part = {}\nmode = {:?}\nreorder = {:?}\n",
+         [tiling]\ndst_part = {}\nsrc_part = {}\nmode = {:?}\nreorder = {:?}\nthreads = {}\n",
         arch.freq_hz,
         arch.mu_count,
         arch.mu_rows,
@@ -253,6 +254,7 @@ pub fn show(arch: &ArchConfig, run: &RunConfig) -> String {
         run.tiling.src_part,
         run.tiling.mode,
         run.tiling.reorder,
+        run.tiling.threads,
     )
 }
 
@@ -287,6 +289,7 @@ mod tests {
             [tiling]
             mode = regular
             reorder = none
+            threads = 4
         "#;
         let mut arch = ArchConfig::default();
         let mut run = RunConfig::default();
@@ -296,6 +299,7 @@ mod tests {
         assert_eq!(run.model, "gat");
         assert_eq!(run.scale, 16);
         assert_eq!(run.tiling.mode, crate::tiling::TilingMode::Regular);
+        assert_eq!(run.tiling.threads, 4);
     }
 
     #[test]

@@ -397,6 +397,7 @@ mod tests {
                 src_part: 64,
                 mode: TilingMode::Sparse,
                 reorder: Reorder::InDegree,
+                threads: 1,
             },
             e2v: true,
             functional,

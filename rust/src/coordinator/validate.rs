@@ -57,6 +57,7 @@ pub fn validate_model(
             src_part: v, // one source block ⇒ one tile per partition
             mode: TilingMode::Sparse,
             reorder: Reorder::None,
+            threads: 1,
         },
         e2v: true,
         functional: true,

@@ -87,6 +87,9 @@ fn build_configs(args: &Args) -> Result<(ArchConfig, RunConfig), String> {
         run.feat_in = f;
         run.feat_out = f;
     }
+    if let Some(v) = args.get("threads") {
+        run.tiling.threads = v.parse().map_err(|_| "bad --threads")?;
+    }
     if let Some(v) = args.get("s-streams") {
         arch.s_streams = v.parse().map_err(|_| "bad --s-streams")?;
     }
@@ -306,7 +309,8 @@ fn real_main(argv: &[String]) -> Result<(), String> {
                  config    show effective configuration (--config FILE to load)\n  \
                  datasets  list the dataset registry (paper Table 3 + HyGCN sets)\n  \
                  compile   print SDE functions (--model gat [--no-e2v])\n  \
-                 run       simulate (--model gcn --dataset SL --scale 64 [--functional])\n  \
+                 run       simulate (--model gcn --dataset SL --scale 64 [--functional]\n            \
+                 [--threads N: parallel tiling at plan compile])\n  \
                  serve     batch serving demo (--requests 16 --workers 4)\n  \
                  validate  cross-validate simulator vs PJRT artifacts"
             );

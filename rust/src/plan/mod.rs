@@ -49,7 +49,10 @@ impl PlanKey {
             scale: run.scale,
             feat_in: run.feat_in,
             feat_out: run.feat_out,
-            tiling: run.tiling,
+            // normalized: `TilingConfig::threads` is a host compile-
+            // latency knob that never changes the artifact, so it must
+            // not fragment the cache
+            tiling: run.tiling.cache_key(),
             e2v: run.e2v,
             seed: run.seed,
         }
@@ -300,6 +303,7 @@ mod tests {
                 src_part: 64,
                 mode: TilingMode::Sparse,
                 reorder: Reorder::InDegree,
+                threads: 1,
             },
             e2v: true,
             functional: false,
@@ -317,6 +321,19 @@ mod tests {
         assert_ne!(a, PlanKey::of(&other));
         let s = a.to_string();
         assert!(s.contains("model=gcn") && s.contains("seed=3") && s.contains("mode=sparse"));
+    }
+
+    #[test]
+    fn plan_key_ignores_tiling_threads() {
+        // a threaded compile and a serial compile are the same plan
+        let a = PlanKey::of(&run_cfg("gcn"));
+        let mut threaded = run_cfg("gcn");
+        threaded.tiling.threads = 8;
+        assert_eq!(a, PlanKey::of(&threaded));
+        let cache = PlanCache::new();
+        cache.get_or_compile(&run_cfg("gcn")).unwrap();
+        let (_, hit) = cache.get_or_compile(&threaded).unwrap();
+        assert!(hit, "threads must not fragment the plan cache");
     }
 
     #[test]

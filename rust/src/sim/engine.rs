@@ -65,7 +65,7 @@ impl<'a, 's> Engine<'a, 's> {
         opts: SimOptions,
         scratch: &'s mut ExecScratch,
     ) -> Result<Self, String> {
-        scratch.func.begin_run();
+        scratch.func.begin_run(&Env::of(wl), opts.functional);
         if let Some(x) = wl.x {
             scratch.func.init_input(wl.tiling, x, wl.feat_in)?;
         }
@@ -274,8 +274,7 @@ impl<'a, 's> Engine<'a, 's> {
                 // functional: reset partition frame; init accumulators
                 if self.opts.functional {
                     let dims = self.dims_for_partition(p);
-                    let env = Env::of(self.wl);
-                    self.scratch.func.begin_partition(&env, &dims);
+                    self.scratch.func.begin_partition(&dims);
                 }
                 // empty partition: pre-credit the completion signal so the
                 // dStream's WAIT doesn't deadlock
@@ -328,8 +327,7 @@ impl<'a, 's> Engine<'a, 's> {
                     }
                     // dStream resuming after all tiles: fix up max accs
                     if self.sched.streams[sid].class == StreamClass::D && self.opts.functional {
-                        let env = Env::of(self.wl);
-                        self.scratch.func.fixup_max_accs(&env);
+                        self.scratch.func.fixup_max_accs();
                     }
                     self.sched.advance(sid, t0 + 1, 1);
                 } else {

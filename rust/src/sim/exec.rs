@@ -3,15 +3,19 @@
 //!
 //! All run-local state lives in [`ExecScratch`], a reusable arena the
 //! caller owns: a serving worker allocates one scratch and reuses it for
-//! every request, so repeat simulations pay no per-run `HashMap`/`Vec`
-//! churn. Buffer frames are flat slot vectors indexed by `BufId` (the
-//! compiler assigns dense ids per frame), which also removes the hashing
-//! the old engine paid on every operand access.
+//! every request. Buffer frames are flat slot vectors indexed by `BufId`
+//! whose tensors are *pooled* — clearing a frame only marks its slots
+//! dead, the backing allocations stay resident — and every compute
+//! instruction borrows its destination slot and computes into it via the
+//! in-place kernels in [`super::tensor`]. Combined with the `begin_run`
+//! pre-sizing pass (frame/slot counts come straight from the plan), a
+//! warm request does zero pool growth; [`ExecScratch::alloc_events`]
+//! counts the growth events so benches can assert exactly that.
 
 use super::scheduler::TileCtx;
 use super::tensor::{self, Tensor};
 use crate::compiler::{AccKind, Program, PART_FRAME_BASE};
-use crate::isa::{BufId, Dim, DimCtx, Instr, LdTarget, Reduce, SctrDir};
+use crate::isa::{BufId, Dim, DimCtx, Instr, LdTarget};
 use crate::models::WeightStore;
 use crate::tiling::Tiling;
 
@@ -45,16 +49,17 @@ pub struct ExecScratch {
 
 impl ExecScratch {
     pub fn new() -> ExecScratch {
-        ExecScratch {
-            func: FuncState {
-                x_tiled: Vec::new(),
-                out_tiled: Vec::new(),
-                part_frame: Frame::new(),
-                tile_frames: Vec::new(),
-                next_frame: 0,
-                has_input: false,
-            },
-        }
+        ExecScratch { func: FuncState::new() }
+    }
+
+    /// Pool-growth events since this scratch was created: +1 every time
+    /// a frame, slot vector, or backing tensor allocation had to grow.
+    /// Monotonic across runs; a warm request on a reused scratch should
+    /// add ≈0 (the returned output embedding vector is caller-owned and
+    /// deliberately excluded). `perf_hotpath` asserts the warm delta is
+    /// zero for all five models.
+    pub fn alloc_events(&self) -> u64 {
+        self.func.alloc_events()
     }
 }
 
@@ -64,35 +69,72 @@ impl Default for ExecScratch {
     }
 }
 
-/// One buffer frame: dense `BufId` → tensor slots.
+/// One pooled buffer slot: the tensor stays resident (capacity reuse)
+/// even when the value it held is dead.
+#[derive(Default)]
+struct Slot {
+    t: Tensor,
+    /// Whether the slot currently holds a live value.
+    set: bool,
+}
+
+/// One buffer frame: dense `BufId` → pooled tensor slots.
+#[derive(Default)]
 pub(crate) struct Frame {
-    slots: Vec<Option<Tensor>>,
+    slots: Vec<Slot>,
+    allocs: u64,
 }
 
 impl Frame {
-    fn new() -> Frame {
-        Frame { slots: Vec::new() }
-    }
-
+    /// Invalidate every slot, keeping tensors (and capacity) pooled.
     fn clear(&mut self) {
         for s in &mut self.slots {
-            *s = None;
+            s.set = false;
+        }
+    }
+
+    fn ensure_slots(&mut self, n: usize) {
+        if self.slots.len() < n {
+            self.allocs += 1;
+            self.slots.resize_with(n, Slot::default);
         }
     }
 
     fn get(&self, i: usize) -> Option<&Tensor> {
-        self.slots.get(i).and_then(|s| s.as_ref())
+        self.slots.get(i).and_then(|s| if s.set { Some(&s.t) } else { None })
     }
 
     fn get_mut(&mut self, i: usize) -> Option<&mut Tensor> {
-        self.slots.get_mut(i).and_then(|s| s.as_mut())
+        self.slots
+            .get_mut(i)
+            .and_then(|s| if s.set { Some(&mut s.t) } else { None })
+    }
+
+    /// Mutably borrow slot `i`'s pooled tensor for an in-place rewrite,
+    /// marking it live.
+    fn slot_mut(&mut self, i: usize) -> &mut Tensor {
+        self.ensure_slots(i + 1);
+        let s = &mut self.slots[i];
+        s.set = true;
+        &mut s.t
+    }
+
+    /// Detach slot `i`'s tensor so an op can compute into it while its
+    /// operands stay borrowed from the frames (slot is left unset).
+    /// Returns (tensor, was_set); the caller re-attaches via `put`.
+    fn take(&mut self, i: usize) -> (Tensor, bool) {
+        self.ensure_slots(i + 1);
+        let s = &mut self.slots[i];
+        let was = s.set;
+        s.set = false;
+        (std::mem::take(&mut s.t), was)
     }
 
     fn put(&mut self, i: usize, t: Tensor) {
-        if self.slots.len() <= i {
-            self.slots.resize_with(i + 1, || None);
-        }
-        self.slots[i] = Some(t);
+        self.ensure_slots(i + 1);
+        let s = &mut self.slots[i];
+        s.t = t;
+        s.set = true;
     }
 }
 
@@ -110,17 +152,85 @@ pub(crate) struct FuncState {
     tile_frames: Vec<Frame>,
     pub next_frame: usize,
     pub has_input: bool,
+    /// (partition-frame slot, kind, resolved cols) per program
+    /// accumulator — the compiler records the column dim next to each
+    /// accumulator, so this is a cheap O(accumulators) resolve at
+    /// `begin_run` and `begin_partition` is scan-free.
+    acc_meta: Vec<(usize, AccKind, u32)>,
+    allocs: u64,
 }
 
 impl FuncState {
-    /// Reset per-run state; retains buffer capacity from prior runs.
-    pub fn begin_run(&mut self) {
+    fn new() -> FuncState {
+        FuncState {
+            x_tiled: Vec::new(),
+            out_tiled: Vec::new(),
+            part_frame: Frame::default(),
+            tile_frames: Vec::new(),
+            next_frame: 0,
+            has_input: false,
+            acc_meta: Vec::new(),
+            allocs: 0,
+        }
+    }
+
+    fn alloc_events(&self) -> u64 {
+        self.allocs
+            + self.part_frame.allocs
+            + self.tile_frames.iter().map(|f| f.allocs).sum::<u64>()
+    }
+
+    /// Reset per-run state; retains buffer capacity from prior runs and
+    /// (functional runs) pre-sizes the pool from the plan.
+    pub fn begin_run(&mut self, env: &Env, functional: bool) {
         self.part_frame.clear();
         for f in &mut self.tile_frames {
             f.clear();
         }
         self.next_frame = 0;
         self.has_input = false;
+        if functional {
+            self.reserve(env);
+        }
+    }
+
+    /// Pre-size the buffer pool from the plan's dimensions so steady
+    /// state does zero Vec growth: one frame per concurrently-live tile
+    /// of a partition, `tile_bufs`/`part_bufs` slots per frame. Tensor
+    /// capacity inside each slot is learned on first touch and kept
+    /// forever, so only the first run on a scratch allocates.
+    fn reserve(&mut self, env: &Env) {
+        let frames = env
+            .tiling
+            .partitions
+            .iter()
+            .map(|p| p.tiles.len())
+            .max()
+            .unwrap_or(0);
+        if frames > self.tile_frames.capacity() {
+            self.allocs += 1;
+        }
+        while self.tile_frames.len() < frames {
+            self.tile_frames.push(Frame::default());
+        }
+        let tile_slots = env.program.tile_bufs as usize;
+        for f in &mut self.tile_frames {
+            f.ensure_slots(tile_slots);
+        }
+        self.part_frame.ensure_slots(env.program.part_bufs as usize);
+        if env.program.accumulators.len() > self.acc_meta.capacity() {
+            self.allocs += 1;
+        }
+        self.acc_meta.clear();
+        for &(buf, kind, cols) in &env.program.accumulators {
+            let cols = match cols {
+                Dim::FeatIn => env.feat_in,
+                Dim::FeatOut => env.feat_out,
+                Dim::Const(c) => c,
+                _ => env.feat_out,
+            };
+            self.acc_meta.push((part_slot(buf), kind, cols));
+        }
     }
 
     /// Permute the caller's input embeddings into tiled vertex order.
@@ -134,10 +244,15 @@ impl FuncState {
                 n * f
             ));
         }
+        if n * f > self.x_tiled.capacity() {
+            self.allocs += 1;
+        }
         self.x_tiled.resize(n * f, 0.0);
-        for old in 0..n {
-            let new = tiling.perm[old] as usize;
-            self.x_tiled[new * f..(new + 1) * f].copy_from_slice(&x[old * f..(old + 1) * f]);
+        if f > 0 {
+            for (old, row) in x.chunks_exact(f).enumerate() {
+                let new = tiling.perm[old] as usize;
+                self.x_tiled[new * f..(new + 1) * f].copy_from_slice(row);
+            }
         }
         self.has_input = true;
         Ok(())
@@ -146,47 +261,35 @@ impl FuncState {
     /// Size (and zero) the tiled output image for a functional run.
     pub fn prepare_output(&mut self, num_vertices: u32, feat_out: u32) {
         let len = num_vertices as usize * feat_out as usize;
+        if len > self.out_tiled.capacity() {
+            self.allocs += 1;
+        }
         self.out_tiled.clear();
         self.out_tiled.resize(len, 0.0);
     }
 
-    /// Column width of a partition accumulator (learned from the Gthr
-    /// that writes it).
-    fn acc_cols(&self, env: &Env, buf: BufId) -> u32 {
-        for i in &env.program.e_func {
-            if let Instr::Gthr { dst, cols, .. } = i {
-                if *dst == buf {
-                    return match cols {
-                        Dim::FeatIn => env.feat_in,
-                        Dim::FeatOut => env.feat_out,
-                        Dim::Const(c) => *c,
-                        _ => env.feat_out,
-                    };
-                }
-            }
-        }
-        env.feat_out
-    }
-
-    /// FCH.PTT: reset the partition frame and init accumulators.
-    pub fn begin_partition(&mut self, env: &Env, dims: &DimCtx) {
+    /// FCH.PTT: reset the partition frame and init accumulators in
+    /// place (pooled slots, no allocation on the warm path).
+    pub fn begin_partition(&mut self, dims: &DimCtx) {
         self.part_frame.clear();
-        for &(buf, kind) in &env.program.accumulators {
-            let cols = self.acc_cols(env, buf);
+        for &(slot, kind, cols) in &self.acc_meta {
             let init = match kind {
                 AccKind::Sum => 0.0,
                 AccKind::Max => f32::NEG_INFINITY,
             };
-            self.part_frame
-                .put(part_slot(buf), Tensor::filled(dims.part_dst, cols, init));
+            let grew = self
+                .part_frame
+                .slot_mut(slot)
+                .reset_filled(dims.part_dst, cols, init);
+            self.allocs += grew as u64;
         }
     }
 
     /// dStream wait boundary: neutralize untouched Max accumulators.
-    pub fn fixup_max_accs(&mut self, env: &Env) {
-        for &(buf, kind) in &env.program.accumulators {
+    pub fn fixup_max_accs(&mut self) {
+        for &(slot, kind, _) in &self.acc_meta {
             if kind == AccKind::Max {
-                if let Some(t) = self.part_frame.get_mut(part_slot(buf)) {
+                if let Some(t) = self.part_frame.get_mut(slot) {
                     for v in &mut t.data {
                         if *v == f32::NEG_INFINITY {
                             *v = 0.0;
@@ -197,7 +300,9 @@ impl FuncState {
         }
     }
 
-    /// UPD.PTT: commit the partition output rows and recycle tile frames.
+    /// UPD.PTT: commit the partition output rows and recycle tile
+    /// frames. Destination rows are contiguous in the tiled image, so
+    /// the commit is a single memcpy.
     pub fn commit_partition(
         &mut self,
         env: &Env,
@@ -208,10 +313,17 @@ impl FuncState {
             .part_frame
             .get(part_slot(out_buf))
             .ok_or("output buffer not materialized")?;
-        let f = env.feat_out as usize;
-        for (i, d) in (part.dst_start..part.dst_end).enumerate() {
-            self.out_tiled[d as usize * f..(d as usize + 1) * f].copy_from_slice(t.row(i as u32));
+        if (t.rows, t.cols) != (part.num_dst(), env.feat_out) {
+            return Err(format!(
+                "output buffer shape {}x{} != partition {}x{}",
+                t.rows,
+                t.cols,
+                part.num_dst(),
+                env.feat_out
+            ));
         }
+        let base = part.dst_start as usize * env.feat_out as usize;
+        self.out_tiled[base..base + t.data.len()].copy_from_slice(&t.data);
         for fr in &mut self.tile_frames {
             fr.clear();
         }
@@ -226,7 +338,8 @@ impl FuncState {
         self.next_frame += 1;
         if functional {
             while self.tile_frames.len() <= frame {
-                self.tile_frames.push(Frame::new());
+                self.allocs += 1;
+                self.tile_frames.push(Frame::default());
             }
         }
         frame
@@ -258,21 +371,44 @@ impl FuncState {
         }
     }
 
-    fn put_buf(&mut self, tile: Option<&TileCtx>, buf: BufId, t: Tensor) -> Result<(), String> {
+    /// Detach `buf`'s pooled tensor so an op can compute into it while
+    /// its operands stay borrowed. Returns (tensor, was_set).
+    fn take_buf(&mut self, tile: Option<&TileCtx>, buf: BufId) -> Result<(Tensor, bool), String> {
+        if buf.is_partition_frame() {
+            Ok(self.part_frame.take(part_slot(buf)))
+        } else {
+            let frame = tile.ok_or("tile buf w/o tile")?.frame;
+            while self.tile_frames.len() <= frame {
+                self.allocs += 1;
+                self.tile_frames.push(Frame::default());
+            }
+            Ok(self.tile_frames[frame].take(buf.0 as usize))
+        }
+    }
+
+    /// Re-attach a computed tensor to its slot; `grew` (from the
+    /// in-place kernel) feeds the allocation counter.
+    fn put_back(
+        &mut self,
+        tile: Option<&TileCtx>,
+        buf: BufId,
+        t: Tensor,
+        grew: bool,
+    ) -> Result<(), String> {
+        self.allocs += grew as u64;
         if buf.is_partition_frame() {
             self.part_frame.put(part_slot(buf), t);
         } else {
             let frame = tile.ok_or("tile buf w/o tile")?.frame;
-            while self.tile_frames.len() <= frame {
-                self.tile_frames.push(Frame::new());
-            }
             self.tile_frames[frame].put(buf.0 as usize, t);
         }
         Ok(())
     }
 
     /// Functional semantics of LD.* (the edge list lives in the Tile
-    /// struct already, so LD.EDGE is timing-only).
+    /// struct already, so LD.EDGE is timing-only). Destination rows are
+    /// contiguous ranges of the tiled image, and sparse source lists
+    /// frequently are too, so both loads prefer block memcpys.
     pub fn exec_load(
         &mut self,
         env: &Env,
@@ -290,15 +426,27 @@ impl FuncState {
                 if !self.has_input {
                     return Err("functional run without input x".into());
                 }
-                let part = &env.tiling.partitions[tc.part_idx];
-                let t_meta = &part.tiles[tc.tile_idx];
+                let t_meta = &env.tiling.partitions[tc.part_idx].tiles[tc.tile_idx];
                 let f = env.feat_in as usize;
-                let mut t = Tensor::zeros(t_meta.num_src(), env.feat_in);
-                for (i, &v) in t_meta.src_vertices.iter().enumerate() {
-                    t.row_mut(i as u32)
-                        .copy_from_slice(&self.x_tiled[v as usize * f..(v as usize + 1) * f]);
+                let (mut t, _) = self.take_buf(tile, *dst)?;
+                let grew = t.reshape(t_meta.num_src(), env.feat_in);
+                let vs = &t_meta.src_vertices;
+                if let (Some(&first), Some(&last)) = (vs.first(), vs.last()) {
+                    if (last - first) as usize + 1 == vs.len() {
+                        // contiguous source block (regular tiles, dense
+                        // sparse tiles): one memcpy
+                        let base = first as usize * f;
+                        t.data
+                            .copy_from_slice(&self.x_tiled[base..base + vs.len() * f]);
+                    } else if f > 0 {
+                        for (row, &v) in t.data.chunks_exact_mut(f).zip(vs) {
+                            row.copy_from_slice(
+                                &self.x_tiled[v as usize * f..(v as usize + 1) * f],
+                            );
+                        }
+                    }
                 }
-                self.put_buf(tile, *dst, t)
+                self.put_back(tile, *dst, t, grew)
             }
             LdTarget::Dst => {
                 let p = cur_part.ok_or("LD.DST w/o partition")?;
@@ -306,18 +454,17 @@ impl FuncState {
                     return Err("functional run without input x".into());
                 }
                 let part = &env.tiling.partitions[p];
-                let f = env.feat_in as usize;
-                let mut t = Tensor::zeros(part.num_dst(), env.feat_in);
-                for (i, v) in (part.dst_start..part.dst_end).enumerate() {
-                    t.row_mut(i as u32)
-                        .copy_from_slice(&self.x_tiled[v as usize * f..(v as usize + 1) * f]);
-                }
-                self.put_buf(tile, *dst, t)
+                let (mut t, _) = self.take_buf(tile, *dst)?;
+                let grew = t.reshape(part.num_dst(), env.feat_in);
+                let base = part.dst_start as usize * env.feat_in as usize;
+                t.data.copy_from_slice(&self.x_tiled[base..base + t.data.len()]);
+                self.put_back(tile, *dst, t, grew)
             }
         }
     }
 
-    /// Functional semantics of every compute instruction.
+    /// Functional semantics of every compute instruction: borrow the
+    /// destination's pooled tensor, compute into it in place, re-attach.
     pub fn exec_compute(
         &mut self,
         env: &Env,
@@ -328,89 +475,73 @@ impl FuncState {
         let rd = |d: Dim| d.resolve(dims);
         match instr {
             Instr::ElwU { op, src, dst, .. } => {
-                let t = tensor::apply_unary(*op, self.get_buf(tile, *src)?);
-                self.put_buf(tile, *dst, t)
+                let (mut out, _) = self.take_buf(tile, *dst)?;
+                let x = self.get_buf(tile, *src)?;
+                let grew = tensor::apply_unary(*op, x, &mut out);
+                self.put_back(tile, *dst, out, grew)
             }
             Instr::ElwB { op, a, b, dst, .. } => {
-                let t =
-                    tensor::apply_binary(*op, self.get_buf(tile, *a)?, self.get_buf(tile, *b)?);
-                self.put_buf(tile, *dst, t)
+                let (mut out, _) = self.take_buf(tile, *dst)?;
+                let at = self.get_buf(tile, *a)?;
+                let bt = self.get_buf(tile, *b)?;
+                let grew = tensor::apply_binary(*op, at, bt, &mut out);
+                self.put_back(tile, *dst, out, grew)
             }
             Instr::ElwBcast { op, a, vec, dst, .. } => {
-                let t =
-                    tensor::apply_bcast(*op, self.get_buf(tile, *a)?, self.get_buf(tile, *vec)?);
-                self.put_buf(tile, *dst, t)
+                let (mut out, _) = self.take_buf(tile, *dst)?;
+                let at = self.get_buf(tile, *a)?;
+                let vt = self.get_buf(tile, *vec)?;
+                let grew = tensor::apply_bcast(*op, at, vt, &mut out);
+                self.put_back(tile, *dst, out, grew)
             }
             Instr::Gemv { src, weight: w, dst, .. } => {
+                let (mut out, _) = self.take_buf(tile, *dst)?;
                 let x = self.get_buf(tile, *src)?;
-                let mut out = Tensor::zeros(x.rows, 1);
-                tensor::gemv(x, &env.weights.tensors[w.0 as usize].data, &mut out);
-                self.put_buf(tile, *dst, out)
+                let grew = tensor::gemv(x, &env.weights.tensors[w.0 as usize].data, &mut out);
+                self.put_back(tile, *dst, out, grew)
             }
             Instr::Gemm { src, weight: w, dst, k, n, accumulate, .. } => {
+                let (mut out, was_set) = self.take_buf(tile, *dst)?;
+                if *accumulate && !was_set {
+                    return Err(format!("GEMM accumulate into unset buffer b{}", dst.0));
+                }
                 let x = self.get_buf(tile, *src)?;
-                let mut out = Tensor::zeros(x.rows, rd(*n));
-                tensor::matmul(
+                let grew = tensor::matmul(
                     x,
                     &env.weights.tensors[w.0 as usize].data,
                     rd(*k),
                     rd(*n),
                     &mut out,
-                    false,
+                    *accumulate,
                 );
-                if *accumulate {
-                    let sum = {
-                        let prev = self.get_buf(tile, *dst)?;
-                        tensor::apply_binary(crate::isa::ElwBinary::Add, prev, &out)
-                    };
-                    self.put_buf(tile, *dst, sum)
-                } else {
-                    self.put_buf(tile, *dst, out)
-                }
+                self.put_back(tile, *dst, out, grew)
             }
             Instr::Bmm { src, weights, dst, k, n, .. } => {
                 let tc = tile.ok_or("BMM w/o tile")?;
-                let part = &env.tiling.partitions[tc.part_idx];
-                let t_meta = &part.tiles[tc.tile_idx];
-                let default_types;
-                let etypes: &[u8] = match &t_meta.etypes {
-                    Some(t) => t.as_slice(),
-                    None => {
-                        default_types = vec![0u8; t_meta.edges.len()];
-                        &default_types
-                    }
-                };
+                let t_meta = &env.tiling.partitions[tc.part_idx].tiles[tc.tile_idx];
+                let (mut out, _) = self.take_buf(tile, *dst)?;
                 let x = self.get_buf(tile, *src)?;
-                let mut out = Tensor::zeros(x.rows, rd(*n));
-                tensor::bmm_by_type(
+                let grew = tensor::bmm_by_type(
                     x,
                     &env.weights.tensors[weights.0 as usize].data,
                     rd(*k),
                     rd(*n),
-                    etypes,
+                    t_meta.etypes.as_deref(),
                     &mut out,
                 );
-                self.put_buf(tile, *dst, out)
+                self.put_back(tile, *dst, out, grew)
             }
             Instr::Sctr { dir, src, dst, cols } => {
                 let tc = tile.ok_or("SCTR w/o tile")?;
-                let part = &env.tiling.partitions[tc.part_idx];
-                let t_meta = &part.tiles[tc.tile_idx];
+                let t_meta = &env.tiling.partitions[tc.part_idx].tiles[tc.tile_idx];
+                let (mut out, _) = self.take_buf(tile, *dst)?;
                 let v = self.get_buf(tile, *src)?;
-                let mut out = Tensor::zeros(t_meta.num_edges(), rd(*cols));
-                for (e, &(ls, ld)) in t_meta.edges.iter().enumerate() {
-                    let row = match dir {
-                        SctrDir::OutEdge => v.row(ls),
-                        SctrDir::InEdge => v.row(ld),
-                    };
-                    out.row_mut(e as u32).copy_from_slice(row);
-                }
-                self.put_buf(tile, *dst, out)
+                let grew = tensor::scatter_rows(v, &t_meta.edges, *dir, rd(*cols), &mut out);
+                self.put_back(tile, *dst, out, grew)
             }
             Instr::Gthr { reduce, src, dst, .. } => {
                 let tc = tile.ok_or("GTHR w/o tile")?;
-                let part = &env.tiling.partitions[tc.part_idx];
-                let t_meta = &part.tiles[tc.tile_idx];
+                let t_meta = &env.tiling.partitions[tc.part_idx].tiles[tc.tile_idx];
                 // disjoint-field borrows: edge data lives in a tile
                 // frame, the accumulator in the partition frame — no
                 // clone needed (functional-mode hot-spot)
@@ -423,22 +554,7 @@ impl FuncState {
                     .part_frame
                     .get_mut(part_slot(*dst))
                     .ok_or_else(|| format!("accumulator b{} unset", dst.0))?;
-                for (ei, &(_, ld)) in t_meta.edges.iter().enumerate() {
-                    let src_row = e.row(ei as u32);
-                    let dst_row = acc.row_mut(ld);
-                    match reduce {
-                        Reduce::Sum => {
-                            for (d, &s) in dst_row.iter_mut().zip(src_row) {
-                                *d += s;
-                            }
-                        }
-                        Reduce::Max => {
-                            for (d, &s) in dst_row.iter_mut().zip(src_row) {
-                                *d = d.max(s);
-                            }
-                        }
-                    }
-                }
+                tensor::gather_rows(*reduce, e, &t_meta.edges, acc);
                 Ok(())
             }
             other => Err(format!("unexpected compute instr: {other}")),

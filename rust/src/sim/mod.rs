@@ -14,7 +14,9 @@
 //!   * `scheduler` — stream scoreboard, SIGNAL/WAIT wakeups, issue pick;
 //!   * `units` — MU/VU busy-until scoreboards + HBM routing;
 //!   * `exec` — functional execution on f32 embeddings, with all
-//!     run-local state in the reusable [`ExecScratch`];
+//!     run-local state in the reusable [`ExecScratch`] (pooled buffer
+//!     frames + in-place kernels: warm requests grow the pool by zero,
+//!     see DESIGN.md "Memory discipline");
 //!   * [`hbm`] — banked memory-controller timing (Ramulator stand-in);
 //!   * [`timing`] — per-instruction cycle counts;
 //!   * [`tensor`] — dense f32 tensors + functional op semantics.

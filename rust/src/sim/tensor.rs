@@ -4,11 +4,19 @@
 //! each instruction updates real embedding data so end-of-run outputs can
 //! be validated against the PJRT-executed JAX artifacts (the role DGL
 //! played for the paper's simulator validation, §8.1).
+//!
+//! **In-place convention** (the executor's zero-allocation contract, see
+//! DESIGN.md "Memory discipline"): every op writes into a caller-provided
+//! `&mut Tensor`, resizing it in place — capacity is preserved across
+//! calls, so the executor's pooled buffer slots never re-allocate on the
+//! warm path. Each shaping op returns `true` iff the destination's
+//! backing allocation had to grow; the executor feeds that into its
+//! allocation counter. New kernels must follow the same convention.
 
-use crate::isa::{ElwBinary, ElwUnary};
+use crate::isa::{ElwBinary, ElwUnary, Reduce, SctrDir};
 
 /// Row-major dense matrix.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Tensor {
     pub rows: u32,
     pub cols: u32,
@@ -44,9 +52,34 @@ impl Tensor {
     pub fn bytes(&self) -> u64 {
         self.data.len() as u64 * 4
     }
+
+    /// Reshape in place WITHOUT initializing reused elements — callers
+    /// must overwrite every element. Capacity is preserved; returns
+    /// `true` iff the backing allocation had to grow.
+    pub fn reshape(&mut self, rows: u32, cols: u32) -> bool {
+        let len = rows as usize * cols as usize;
+        let grew = len > self.data.capacity();
+        self.data.resize(len, 0.0);
+        self.rows = rows;
+        self.cols = cols;
+        grew
+    }
+
+    /// Reshape in place and set every element to `v` (accumulator
+    /// init). Capacity is preserved; returns `true` iff the backing
+    /// allocation had to grow.
+    pub fn reset_filled(&mut self, rows: u32, cols: u32, v: f32) -> bool {
+        let len = rows as usize * cols as usize;
+        let grew = len > self.data.capacity();
+        self.data.clear();
+        self.data.resize(len, v);
+        self.rows = rows;
+        self.cols = cols;
+        grew
+    }
 }
 
-pub fn apply_unary(op: ElwUnary, x: &Tensor) -> Tensor {
+pub fn apply_unary(op: ElwUnary, x: &Tensor, out: &mut Tensor) -> bool {
     let f: fn(f32) -> f32 = match op {
         ElwUnary::Exp => |v| v.exp(),
         ElwUnary::Relu => |v| v.max(0.0),
@@ -58,38 +91,43 @@ pub fn apply_unary(op: ElwUnary, x: &Tensor) -> Tensor {
         ElwUnary::Recip => |v| 1.0 / v,
         ElwUnary::Recip0 => |v| if v == 0.0 { 0.0 } else { 1.0 / v },
     };
-    Tensor {
-        rows: x.rows,
-        cols: x.cols,
-        data: x.data.iter().map(|&v| f(v)).collect(),
+    let grew = out.reshape(x.rows, x.cols);
+    for (o, &v) in out.data.iter_mut().zip(&x.data) {
+        *o = f(v);
     }
+    grew
 }
 
-pub fn apply_binary(op: ElwBinary, a: &Tensor, b: &Tensor) -> Tensor {
+pub fn apply_binary(op: ElwBinary, a: &Tensor, b: &Tensor, out: &mut Tensor) -> bool {
     assert_eq!((a.rows, a.cols), (b.rows, b.cols), "ELW shape mismatch");
     let f: fn(f32, f32) -> f32 = binop(op);
-    Tensor {
-        rows: a.rows,
-        cols: a.cols,
-        data: a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect(),
+    let grew = out.reshape(a.rows, a.cols);
+    for ((o, &x), &y) in out.data.iter_mut().zip(&a.data).zip(&b.data) {
+        *o = f(x, y);
     }
+    grew
 }
 
 /// Broadcast a (rows × 1) column over a (rows × cols) operand.
-pub fn apply_bcast(op: ElwBinary, a: &Tensor, vec: &Tensor) -> Tensor {
+pub fn apply_bcast(op: ElwBinary, a: &Tensor, vec: &Tensor, out: &mut Tensor) -> bool {
     assert_eq!(a.rows, vec.rows, "broadcast rows mismatch");
     assert_eq!(vec.cols, 1, "broadcast vector must be a column");
     let f = binop(op);
-    let mut out = Tensor::zeros(a.rows, a.cols);
-    for r in 0..a.rows {
-        let v = vec.data[r as usize];
-        let src = a.row(r);
-        let dst = out.row_mut(r);
-        for (d, &s) in dst.iter_mut().zip(src) {
-            *d = f(s, v);
+    let grew = out.reshape(a.rows, a.cols);
+    let c = a.cols as usize;
+    if c > 0 {
+        for ((dst, src), &v) in out
+            .data
+            .chunks_exact_mut(c)
+            .zip(a.data.chunks_exact(c))
+            .zip(&vec.data)
+        {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = f(s, v);
+            }
         }
     }
-    out
+    grew
 }
 
 fn binop(op: ElwBinary) -> fn(f32, f32) -> f32 {
@@ -102,90 +140,200 @@ fn binop(op: ElwBinary) -> fn(f32, f32) -> f32 {
     }
 }
 
-/// `x (m×k) @ w (k×n)`, optionally accumulating into `out`.
+/// Row block of the GEMM microkernel.
+const MR: usize = 4;
+/// Column panel of the GEMM microkernel: 4×16 f32 accumulators fit the
+/// SIMD register file (16 ymm on AVX2), so the k-loop runs register-
+/// resident instead of streaming the output row through L1.
+const NR: usize = 16;
+
+/// `x (m×k) @ w (k×n)` → `out (m×n)`, in place (capacity preserved).
 ///
-/// Hot path of the functional simulator (see perf benches): ikj
-/// order with a 4-way unroll over k so the inner j-loop is a clean
-/// multiply-add chain the compiler vectorizes (AVX2/512 with the
-/// project's `target-cpu=native` rustflag).
-pub fn matmul(x: &Tensor, w: &[f32], k: u32, n: u32, out: &mut Tensor, accumulate: bool) {
+/// Hot path of the functional simulator (see `perf_hotpath`):
+/// register-blocked MR×NR microkernel with the k-loop innermost over a
+/// contiguous weight-panel row, amortizing each weight load over MR
+/// output rows (~4× less weight-stream traffic than the row-at-a-time
+/// kernel it replaced). `accumulate` folds into the store, so
+/// GEMM-accumulate needs no separate zero + add passes.
+pub fn matmul(x: &Tensor, w: &[f32], k: u32, n: u32, out: &mut Tensor, accumulate: bool) -> bool {
     assert_eq!(x.cols, k, "GEMM inner dim");
-    assert_eq!((out.rows, out.cols), (x.rows, n), "GEMM out shape");
-    if !accumulate {
-        out.data.fill(0.0);
-    }
+    let grew = if accumulate {
+        assert_eq!((out.rows, out.cols), (x.rows, n), "GEMM accumulate shape");
+        false
+    } else {
+        out.reshape(x.rows, n)
+    };
+    let m = x.rows as usize;
     let (k, n) = (k as usize, n as usize);
-    for r in 0..x.rows as usize {
-        let xrow = &x.data[r * k..(r + 1) * k];
-        let orow = &mut out.data[r * n..(r + 1) * n];
-        let mut kk = 0;
-        while kk + 4 <= k {
-            let (x0, x1, x2, x3) = (xrow[kk], xrow[kk + 1], xrow[kk + 2], xrow[kk + 3]);
-            let w0 = &w[kk * n..kk * n + n];
-            let w1 = &w[(kk + 1) * n..(kk + 1) * n + n];
-            let w2 = &w[(kk + 2) * n..(kk + 2) * n + n];
-            let w3 = &w[(kk + 3) * n..(kk + 3) * n + n];
-            for j in 0..n {
-                orow[j] += x0 * w0[j] + x1 * w1[j] + x2 * w2[j] + x3 * w3[j];
+    debug_assert!(w.len() >= k * n, "weight matrix too small");
+    let mut r = 0;
+    while r < m {
+        let mr = MR.min(m - r);
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            let mut acc = [[0.0f32; NR]; MR];
+            if mr == MR && nr == NR {
+                // full tile: constant-trip loops, register-resident acc
+                for kk in 0..k {
+                    let wrow: &[f32; NR] =
+                        w[kk * n + j0..kk * n + j0 + NR].try_into().unwrap();
+                    for (i, arow) in acc.iter_mut().enumerate() {
+                        let xv = x.data[(r + i) * k + kk];
+                        for (av, &wv) in arow.iter_mut().zip(wrow) {
+                            *av += xv * wv;
+                        }
+                    }
+                }
+            } else {
+                // ragged edge tile (m % 4 / n % 16 remainders)
+                for kk in 0..k {
+                    let wrow = &w[kk * n + j0..kk * n + j0 + nr];
+                    for (i, arow) in acc[..mr].iter_mut().enumerate() {
+                        let xv = x.data[(r + i) * k + kk];
+                        for (av, &wv) in arow[..nr].iter_mut().zip(wrow) {
+                            *av += xv * wv;
+                        }
+                    }
+                }
             }
-            kk += 4;
-        }
-        while kk < k {
-            let xv = xrow[kk];
-            let wrow = &w[kk * n..kk * n + n];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += xv * wv;
+            for (i, arow) in acc[..mr].iter().enumerate() {
+                let orow = &mut out.data[(r + i) * n + j0..(r + i) * n + j0 + nr];
+                if accumulate {
+                    for (o, &v) in orow.iter_mut().zip(&arow[..nr]) {
+                        *o += v;
+                    }
+                } else {
+                    orow.copy_from_slice(&arow[..nr]);
+                }
             }
-            kk += 1;
+            j0 += nr;
         }
+        r += mr;
     }
+    grew
 }
 
-/// Per-edge typed matmul: edge r uses weight matrix `etypes[r]`.
+/// Per-edge typed matmul: edge r uses weight matrix `etypes[r]`
+/// (`None` = every edge uses matrix 0, the untyped-graph fallback).
 pub fn bmm_by_type(
     x: &Tensor,
     wset: &[f32],
     k: u32,
     n: u32,
-    etypes: &[u8],
+    etypes: Option<&[u8]>,
     out: &mut Tensor,
-) {
+) -> bool {
     assert_eq!(x.cols, k);
-    assert_eq!(etypes.len(), x.rows as usize);
-    assert_eq!((out.rows, out.cols), (x.rows, n));
-    let mat = (k * n) as usize;
-    out.data.fill(0.0);
+    if let Some(t) = etypes {
+        assert_eq!(t.len(), x.rows as usize);
+    }
+    let grew = out.reshape(x.rows, n);
+    let (k, n) = (k as usize, n as usize);
+    let mat = k * n;
     for r in 0..x.rows as usize {
-        let w = &wset[etypes[r] as usize * mat..(etypes[r] as usize + 1) * mat];
-        let xrow = &x.data[r * k as usize..(r + 1) * k as usize];
-        let orow = &mut out.data[r * n as usize..(r + 1) * n as usize];
+        let ty = etypes.map_or(0, |t| t[r] as usize);
+        let w = &wset[ty * mat..(ty + 1) * mat];
+        let xrow = &x.data[r * k..(r + 1) * k];
+        let orow = &mut out.data[r * n..(r + 1) * n];
+        orow.fill(0.0);
         for (kk, &xv) in xrow.iter().enumerate() {
-            let wrow = &w[kk * n as usize..(kk + 1) * n as usize];
+            let wrow = &w[kk * n..(kk + 1) * n];
             for (o, &wv) in orow.iter_mut().zip(wrow) {
                 *o += xv * wv;
             }
         }
     }
+    grew
 }
 
-/// GEMV: `x (rows×cols) @ w (cols×1)` → (rows×1).
-pub fn gemv(x: &Tensor, w: &[f32], out: &mut Tensor) {
-    assert_eq!((out.rows, out.cols), (x.rows, 1));
+/// GEMV: `x (rows×cols) @ w (cols×1)` → (rows×1), in place.
+pub fn gemv(x: &Tensor, w: &[f32], out: &mut Tensor) -> bool {
     assert_eq!(w.len(), x.cols as usize);
-    for r in 0..x.rows {
-        out.data[r as usize] = x.row(r).iter().zip(w).map(|(&a, &b)| a * b).sum();
+    let grew = out.reshape(x.rows, 1);
+    let c = x.cols as usize;
+    if c == 0 {
+        out.data.fill(0.0);
+    } else {
+        for (o, xrow) in out.data.iter_mut().zip(x.data.chunks_exact(c)) {
+            *o = xrow.iter().zip(w).map(|(&a, &b)| a * b).sum();
+        }
+    }
+    grew
+}
+
+/// SCTR: expand vertex rows along a tile's COO edge list. `edges` holds
+/// (local_src, local_dst) pairs; `dir` picks which side indexes `v`.
+pub fn scatter_rows(
+    v: &Tensor,
+    edges: &[(u32, u32)],
+    dir: SctrDir,
+    cols: u32,
+    out: &mut Tensor,
+) -> bool {
+    assert_eq!(v.cols, cols, "SCTR cols mismatch");
+    let grew = out.reshape(edges.len() as u32, cols);
+    let c = cols as usize;
+    if c > 0 {
+        for (row, &(ls, ld)) in out.data.chunks_exact_mut(c).zip(edges) {
+            let src = match dir {
+                SctrDir::OutEdge => ls,
+                SctrDir::InEdge => ld,
+            };
+            row.copy_from_slice(v.row(src));
+        }
+    }
+    grew
+}
+
+/// GTHR: reduce edge rows into the partition accumulator
+/// (`acc[ld] ⊕= e[ei]` for each edge). The accumulator is written in
+/// place and must already be shaped by the partition prologue.
+pub fn gather_rows(reduce: Reduce, e: &Tensor, edges: &[(u32, u32)], acc: &mut Tensor) {
+    match reduce {
+        Reduce::Sum => {
+            for (ei, &(_, ld)) in edges.iter().enumerate() {
+                let src = e.row(ei as u32);
+                for (d, &s) in acc.row_mut(ld).iter_mut().zip(src) {
+                    *d += s;
+                }
+            }
+        }
+        Reduce::Max => {
+            for (ei, &(_, ld)) in edges.iter().enumerate() {
+                let src = e.row(ei as u32);
+                for (d, &s) in acc.row_mut(ld).iter_mut().zip(src) {
+                    *d = d.max(s);
+                }
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
+
+    /// Scalar reference GEMM for differential-testing the blocked kernel.
+    fn matmul_naive(x: &Tensor, w: &[f32], k: usize, n: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(x.rows as usize * n, 0.0);
+        for r in 0..x.rows as usize {
+            for kk in 0..k {
+                let xv = x.data[r * k + kk];
+                for j in 0..n {
+                    out[r * n + j] += xv * w[kk * n + j];
+                }
+            }
+        }
+    }
 
     #[test]
     fn matmul_small() {
         let x = Tensor::from_rows(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
         let w = vec![1.0, 0.0, 0.0, 1.0]; // identity
-        let mut out = Tensor::zeros(2, 2);
+        let mut out = Tensor::default();
         matmul(&x, &w, 2, 2, &mut out, false);
         assert_eq!(out.data, x.data);
         // accumulate doubles
@@ -194,19 +342,60 @@ mod tests {
     }
 
     #[test]
+    fn blocked_matmul_matches_naive_on_ragged_shapes() {
+        let mut rng = Rng::new(3);
+        let mut out = Tensor::default();
+        let shapes = [(1u32, 1usize, 1usize), (7, 13, 21), (4, 16, 16), (9, 5, 17), (64, 32, 48)];
+        for (m, k, n) in shapes {
+            let x = Tensor::from_rows(
+                m,
+                k as u32,
+                (0..m as usize * k).map(|_| rng.next_f32_sym()).collect(),
+            );
+            let w: Vec<f32> = (0..k * n).map(|_| rng.next_f32_sym()).collect();
+            let mut expect = Vec::new();
+            matmul_naive(&x, &w, k, n, &mut expect);
+            matmul(&x, &w, k as u32, n as u32, &mut out, false);
+            assert_eq!((out.rows, out.cols), (m, n as u32));
+            for (a, b) in out.data.iter().zip(&expect) {
+                assert!((a - b).abs() < 1e-4, "{m}x{k}x{n}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn in_place_ops_reuse_capacity() {
+        let x = Tensor::filled(8, 8, 2.0);
+        let mut out = Tensor::default();
+        assert!(apply_unary(ElwUnary::Relu, &x, &mut out), "first use must grow");
+        let small = Tensor::filled(4, 4, -1.0);
+        assert!(
+            !apply_unary(ElwUnary::Relu, &small, &mut out),
+            "shrinking reuse must not grow"
+        );
+        assert_eq!((out.rows, out.cols), (4, 4));
+        assert!(out.data.iter().all(|&v| v == 0.0));
+        assert!(!out.reshape(8, 8), "regrow within capacity must not allocate");
+    }
+
+    #[test]
     fn unary_ops() {
         let x = Tensor::from_rows(1, 3, vec![-1.0, 0.0, 2.0]);
-        assert_eq!(apply_unary(ElwUnary::Relu, &x).data, vec![0.0, 0.0, 2.0]);
-        assert_eq!(apply_unary(ElwUnary::OneMinus, &x).data, vec![2.0, 1.0, -1.0]);
-        let lr = apply_unary(ElwUnary::LeakyRelu, &x).data;
-        assert!((lr[0] + 0.2).abs() < 1e-6);
+        let mut out = Tensor::default();
+        apply_unary(ElwUnary::Relu, &x, &mut out);
+        assert_eq!(out.data, vec![0.0, 0.0, 2.0]);
+        apply_unary(ElwUnary::OneMinus, &x, &mut out);
+        assert_eq!(out.data, vec![2.0, 1.0, -1.0]);
+        apply_unary(ElwUnary::LeakyRelu, &x, &mut out);
+        assert!((out.data[0] + 0.2).abs() < 1e-6);
     }
 
     #[test]
     fn bcast_divide() {
         let a = Tensor::from_rows(2, 2, vec![2.0, 4.0, 9.0, 12.0]);
         let v = Tensor::from_rows(2, 1, vec![2.0, 3.0]);
-        let out = apply_bcast(ElwBinary::Div, &a, &v);
+        let mut out = Tensor::default();
+        apply_bcast(ElwBinary::Div, &a, &v, &mut out);
         assert_eq!(out.data, vec![1.0, 2.0, 3.0, 4.0]);
     }
 
@@ -215,17 +404,36 @@ mod tests {
         // two 1x1 "matrices": w0 = [10], w1 = [100]
         let x = Tensor::from_rows(3, 1, vec![1.0, 2.0, 3.0]);
         let wset = vec![10.0, 100.0];
-        let mut out = Tensor::zeros(3, 1);
-        bmm_by_type(&x, &wset, 1, 1, &[0, 1, 0], &mut out);
+        let mut out = Tensor::default();
+        bmm_by_type(&x, &wset, 1, 1, Some(&[0, 1, 0]), &mut out);
         assert_eq!(out.data, vec![10.0, 200.0, 30.0]);
+        // untyped fallback: every edge uses matrix 0
+        bmm_by_type(&x, &wset, 1, 1, None, &mut out);
+        assert_eq!(out.data, vec![10.0, 20.0, 30.0]);
     }
 
     #[test]
     fn gemv_matches_manual() {
         let x = Tensor::from_rows(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         let w = vec![1.0, 0.5, 2.0];
-        let mut out = Tensor::zeros(2, 1);
+        let mut out = Tensor::default();
         gemv(&x, &w, &mut out);
         assert_eq!(out.data, vec![8.0, 18.5]);
+    }
+
+    #[test]
+    fn scatter_then_gather_roundtrip() {
+        let v = Tensor::from_rows(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let edges = [(0u32, 1u32), (2, 1), (1, 0)];
+        let mut e = Tensor::default();
+        scatter_rows(&v, &edges, SctrDir::OutEdge, 2, &mut e);
+        assert_eq!(e.data, vec![1.0, 2.0, 5.0, 6.0, 3.0, 4.0]);
+        let mut acc = Tensor::zeros(2, 2);
+        gather_rows(Reduce::Sum, &e, &edges, &mut acc);
+        // dst 0 ← edge 2 (src row 1); dst 1 ← edges 0+1 (rows 0+2)
+        assert_eq!(acc.data, vec![3.0, 4.0, 6.0, 8.0]);
+        let mut mx = Tensor::filled(2, 2, f32::NEG_INFINITY);
+        gather_rows(Reduce::Max, &e, &edges, &mut mx);
+        assert_eq!(mx.data, vec![3.0, 4.0, 5.0, 6.0]);
     }
 }

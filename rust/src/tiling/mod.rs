@@ -40,6 +40,10 @@ pub struct TilingConfig {
     pub src_part: u32,
     pub mode: TilingMode,
     pub reorder: Reorder,
+    /// Host OS threads used to *build* the tiling (per-partition fan-out
+    /// at plan-compile time). Purely a cold-start latency knob: the
+    /// produced tiling is identical for every value. 0 or 1 = serial.
+    pub threads: u32,
 }
 
 impl Default for TilingConfig {
@@ -51,13 +55,23 @@ impl Default for TilingConfig {
             src_part: 2048,
             mode: TilingMode::Sparse,
             reorder: Reorder::InDegree,
+            threads: 1,
         }
+    }
+}
+
+impl TilingConfig {
+    /// The plan-identity view of this config: `threads` is a host-side
+    /// compile-latency knob that never changes the produced tiling, so
+    /// cache keys normalize it away (see `plan::PlanKey`).
+    pub fn cache_key(self) -> TilingConfig {
+        TilingConfig { threads: 0, ..self }
     }
 }
 
 /// One tile: the edges between one source block and one destination
 /// partition, in local coordinates.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Tile {
     pub partition_id: u32,
     pub tile_id: u32,
@@ -87,7 +101,7 @@ impl Tile {
 }
 
 /// One destination partition and its tiles.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Partition {
     pub partition_id: u32,
     /// Global destination vertex range [start, end).
@@ -114,6 +128,22 @@ pub struct Tiling {
     pub num_vertices: u32,
     pub num_edges: u64,
 }
+
+/// Artifact equality: the config is compared through
+/// [`TilingConfig::cache_key`], so the host-side `threads` knob never
+/// makes byte-identical tilings compare unequal.
+impl PartialEq for Tiling {
+    fn eq(&self, other: &Self) -> bool {
+        self.config.cache_key() == other.config.cache_key()
+            && self.num_vertices == other.num_vertices
+            && self.num_edges == other.num_edges
+            && self.perm == other.perm
+            && self.inv_perm == other.inv_perm
+            && self.partitions == other.partitions
+    }
+}
+
+impl Eq for Tiling {}
 
 impl Tiling {
     pub fn num_tiles(&self) -> usize {
@@ -163,6 +193,172 @@ fn degree_perm(degrees: &[u32]) -> Vec<u32> {
     perm
 }
 
+/// Reusable per-thread scratch for partition construction.
+#[derive(Default)]
+struct TileScratch {
+    /// global→local source-id map (sparse tiling hot path).
+    local: Vec<u32>,
+    /// Per-source-block edge buckets, recycled across partitions.
+    buckets: Vec<Vec<(u32, u32, u8)>>,
+}
+
+/// Build one destination partition's tiles. Pure function of (graph,
+/// cfg, p) — `scratch` only recycles allocations — so partitions can be
+/// constructed in any order or concurrently with identical results.
+fn build_partition(
+    g: &Graph,
+    cfg: TilingConfig,
+    n: u32,
+    blocks_per_part: u32,
+    p: u32,
+    scratch: &mut TileScratch,
+) -> Partition {
+    let dst_start = p * cfg.dst_part;
+    let dst_end = ((p + 1) * cfg.dst_part).min(n);
+    // bucket edges of this partition by source block
+    if scratch.buckets.len() < blocks_per_part as usize {
+        scratch.buckets.resize_with(blocks_per_part as usize, Vec::new);
+    }
+    for b in &mut scratch.buckets {
+        b.clear();
+    }
+    for d in dst_start..dst_end {
+        let range = g.in_edge_range(d);
+        let nbrs = g.in_neighbors(d);
+        for (k, &s) in nbrs.iter().enumerate() {
+            let et = g.etypes().map_or(0, |t| t[range.start + k]);
+            scratch.buckets[(s / cfg.src_part) as usize].push((s, d - dst_start, et));
+        }
+    }
+    let mut tiles = Vec::new();
+    for (b, edges) in scratch
+        .buckets
+        .iter()
+        .enumerate()
+        .take(blocks_per_part as usize)
+    {
+        let blk_start = b as u32 * cfg.src_part;
+        let blk_end = ((b as u32 + 1) * cfg.src_part).min(n);
+        match cfg.mode {
+            TilingMode::Regular => {
+                if edges.is_empty() && cfg.dst_part < n {
+                    // Regular tiling still skips entirely-empty tiles
+                    // (no metadata exists for them in any scheme);
+                    // the cost difference vs sparse is the blank rows
+                    // *within* non-empty tiles.
+                    continue;
+                }
+                let src_vertices: Vec<u32> = (blk_start..blk_end).collect();
+                let has_types = g.has_etypes();
+                let mut coo = Vec::with_capacity(edges.len());
+                let mut types = Vec::new();
+                for &(s, dl, et) in edges {
+                    coo.push((s - blk_start, dl));
+                    if has_types {
+                        types.push(et);
+                    }
+                }
+                tiles.push(Tile {
+                    partition_id: p,
+                    tile_id: tiles.len() as u32,
+                    src_vertices,
+                    edges: coo,
+                    etypes: has_types.then_some(types),
+                });
+            }
+            TilingMode::Sparse => {
+                if edges.is_empty() {
+                    continue;
+                }
+                // compact source ids via a reusable block-local
+                // scratch map (O(E) instead of sort+binary-search)
+                let blk_len = (blk_end - blk_start) as usize;
+                if scratch.local.len() < blk_len {
+                    scratch.local.resize(blk_len, u32::MAX);
+                }
+                let mut uniq: Vec<u32> = Vec::new();
+                for &(s, _, _) in edges {
+                    let off = (s - blk_start) as usize;
+                    if scratch.local[off] == u32::MAX {
+                        scratch.local[off] = 0; // present marker
+                        uniq.push(s);
+                    }
+                }
+                uniq.sort_unstable(); // keep ascending global order
+                for (i, &s) in uniq.iter().enumerate() {
+                    scratch.local[(s - blk_start) as usize] = i as u32;
+                }
+                let has_types = g.has_etypes();
+                let mut coo = Vec::with_capacity(edges.len());
+                let mut types = Vec::new();
+                for &(s, dl, et) in edges {
+                    coo.push((scratch.local[(s - blk_start) as usize], dl));
+                    if has_types {
+                        types.push(et);
+                    }
+                }
+                // reset only the touched entries
+                for &s in &uniq {
+                    scratch.local[(s - blk_start) as usize] = u32::MAX;
+                }
+                tiles.push(Tile {
+                    partition_id: p,
+                    tile_id: tiles.len() as u32,
+                    src_vertices: uniq,
+                    edges: coo,
+                    etypes: has_types.then_some(types),
+                });
+            }
+        }
+    }
+    Partition { partition_id: p, dst_start, dst_end, tiles }
+}
+
+/// Build every destination partition, fanning out across
+/// `cfg.threads` OS threads when asked. Each partition is independent,
+/// so the result is identical to the serial order for any thread count
+/// (`threads` is a cold-start latency knob, not a semantic one). The
+/// crate stays dependency-free: plain `std::thread::scope` workers pull
+/// partition ids off an atomic counter (degree-sorted graphs put most
+/// edges in the first partitions, so static chunking would imbalance).
+fn build_partitions(
+    g: &Graph,
+    cfg: TilingConfig,
+    n: u32,
+    num_parts: u32,
+    blocks_per_part: u32,
+) -> Vec<Partition> {
+    let threads = (cfg.threads as usize).min(num_parts as usize);
+    if threads <= 1 {
+        let mut scratch = TileScratch::default();
+        return (0..num_parts)
+            .map(|p| build_partition(g, cfg, n, blocks_per_part, p, &mut scratch))
+            .collect();
+    }
+    let next = std::sync::atomic::AtomicU32::new(0);
+    let collected = std::sync::Mutex::new(Vec::with_capacity(num_parts as usize));
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                let mut scratch = TileScratch::default();
+                let mut built: Vec<Partition> = Vec::new();
+                loop {
+                    let p = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if p >= num_parts {
+                        break;
+                    }
+                    built.push(build_partition(g, cfg, n, blocks_per_part, p, &mut scratch));
+                }
+                let mut guard = collected.lock().unwrap_or_else(|e| e.into_inner());
+                guard.extend(built);
+            });
+        }
+    });
+    let mut partitions = collected.into_inner().unwrap_or_else(|e| e.into_inner());
+    partitions.sort_unstable_by_key(|p| p.partition_id);
+    partitions
+}
+
 /// Tile a graph under `cfg`. The graph is relabeled first if reordering
 /// is requested; `Tiling::perm` records the mapping so embeddings can be
 /// permuted consistently (the coordinator does this once at load time).
@@ -188,102 +384,7 @@ pub fn tile(graph: &Graph, cfg: TilingConfig) -> Tiling {
 
     let num_parts = crate::util::ceil_div(n as u64, cfg.dst_part as u64) as u32;
     let blocks_per_part = crate::util::ceil_div(n as u64, cfg.src_part as u64) as u32;
-    let mut partitions = Vec::with_capacity(num_parts as usize);
-    // reusable global→local source-id scratch (sparse tiling hot path)
-    let mut local_scratch: Vec<u32> = Vec::new();
-
-    for p in 0..num_parts {
-        let dst_start = p * cfg.dst_part;
-        let dst_end = ((p + 1) * cfg.dst_part).min(n);
-        // bucket edges of this partition by source block
-        let mut per_block: Vec<Vec<(u32, u32, u8)>> =
-            vec![Vec::new(); blocks_per_part as usize];
-        for d in dst_start..dst_end {
-            let range = g.in_edge_range(d);
-            let nbrs = g.in_neighbors(d);
-            for (k, &s) in nbrs.iter().enumerate() {
-                let et = g.etypes().map_or(0, |t| t[range.start + k]);
-                per_block[(s / cfg.src_part) as usize].push((s, d - dst_start, et));
-            }
-        }
-        let mut tiles = Vec::new();
-        for (b, edges) in per_block.into_iter().enumerate() {
-            let blk_start = b as u32 * cfg.src_part;
-            let blk_end = ((b as u32 + 1) * cfg.src_part).min(n);
-            match cfg.mode {
-                TilingMode::Regular => {
-                    if edges.is_empty() && cfg.dst_part < n {
-                        // Regular tiling still skips entirely-empty tiles
-                        // (no metadata exists for them in any scheme);
-                        // the cost difference vs sparse is the blank rows
-                        // *within* non-empty tiles.
-                        continue;
-                    }
-                    let src_vertices: Vec<u32> = (blk_start..blk_end).collect();
-                    let has_types = g.has_etypes();
-                    let mut coo = Vec::with_capacity(edges.len());
-                    let mut types = Vec::new();
-                    for &(s, dl, et) in &edges {
-                        coo.push((s - blk_start, dl));
-                        if has_types {
-                            types.push(et);
-                        }
-                    }
-                    tiles.push(Tile {
-                        partition_id: p,
-                        tile_id: tiles.len() as u32,
-                        src_vertices,
-                        edges: coo,
-                        etypes: has_types.then_some(types),
-                    });
-                }
-                TilingMode::Sparse => {
-                    if edges.is_empty() {
-                        continue;
-                    }
-                    // compact source ids via a reusable block-local
-                    // scratch map (O(E) instead of sort+binary-search)
-                    let blk_len = (blk_end - blk_start) as usize;
-                    if local_scratch.len() < blk_len {
-                        local_scratch.resize(blk_len, u32::MAX);
-                    }
-                    let mut uniq: Vec<u32> = Vec::new();
-                    for &(s, _, _) in &edges {
-                        let off = (s - blk_start) as usize;
-                        if local_scratch[off] == u32::MAX {
-                            local_scratch[off] = 0; // present marker
-                            uniq.push(s);
-                        }
-                    }
-                    uniq.sort_unstable(); // keep ascending global order
-                    for (i, &s) in uniq.iter().enumerate() {
-                        local_scratch[(s - blk_start) as usize] = i as u32;
-                    }
-                    let has_types = g.has_etypes();
-                    let mut coo = Vec::with_capacity(edges.len());
-                    let mut types = Vec::new();
-                    for &(s, dl, et) in &edges {
-                        coo.push((local_scratch[(s - blk_start) as usize], dl));
-                        if has_types {
-                            types.push(et);
-                        }
-                    }
-                    // reset only the touched entries
-                    for &s in &uniq {
-                        local_scratch[(s - blk_start) as usize] = u32::MAX;
-                    }
-                    tiles.push(Tile {
-                        partition_id: p,
-                        tile_id: tiles.len() as u32,
-                        src_vertices: uniq,
-                        edges: coo,
-                        etypes: has_types.then_some(types),
-                    });
-                }
-            }
-        }
-        partitions.push(Partition { partition_id: p, dst_start, dst_end, tiles });
-    }
+    let partitions = build_partitions(g, cfg, n, num_parts, blocks_per_part);
 
     Tiling {
         config: cfg,
@@ -312,7 +413,7 @@ mod tests {
     }
 
     fn cfg(mode: TilingMode, reorder: Reorder) -> TilingConfig {
-        TilingConfig { dst_part: 4, src_part: 4, mode, reorder }
+        TilingConfig { dst_part: 4, src_part: 4, mode, reorder, threads: 1 }
     }
 
     #[test]
@@ -339,6 +440,7 @@ mod tests {
                     src_part: 64,
                     mode: TilingMode::Sparse,
                     reorder,
+                    threads: 1,
                 },
             );
             let total: u64 = t
@@ -355,9 +457,9 @@ mod tests {
     fn sparse_loads_fewer_sources() {
         let g = generators::power_law(512, 1_024, 1.2, 1.2, 0, 9);
         let reg = tile(&g, TilingConfig { dst_part: 64, src_part: 64,
-            mode: TilingMode::Regular, reorder: Reorder::None });
+            mode: TilingMode::Regular, reorder: Reorder::None, threads: 1 });
         let sp = tile(&g, TilingConfig { dst_part: 64, src_part: 64,
-            mode: TilingMode::Sparse, reorder: Reorder::None });
+            mode: TilingMode::Sparse, reorder: Reorder::None, threads: 1 });
         assert!(sp.total_src_loads() < reg.total_src_loads());
     }
 
@@ -366,7 +468,7 @@ mod tests {
         // the paper's Fig 11 effect: sparse+reorder < sparse < regular
         let g = generators::power_law(2_000, 16_000, 1.2, 1.2, 0, 11);
         let mk = |mode, reorder| {
-            tile(&g, TilingConfig { dst_part: 128, src_part: 128, mode, reorder })
+            tile(&g, TilingConfig { dst_part: 128, src_part: 128, mode, reorder, threads: 1 })
                 .total_src_loads()
         };
         let regular = mk(TilingMode::Regular, Reorder::None);
@@ -432,10 +534,46 @@ mod tests {
     }
 
     #[test]
+    fn parallel_tiling_matches_serial() {
+        // threads is a latency knob only: identical partitions/tiles for
+        // every thread count, including more threads than partitions
+        let g = generators::power_law(3_000, 24_000, 1.2, 1.2, 2, 5);
+        for (mode, reorder) in [
+            (TilingMode::Sparse, Reorder::InDegree),
+            (TilingMode::Regular, Reorder::None),
+        ] {
+            let base_cfg = TilingConfig {
+                dst_part: 128,
+                src_part: 128,
+                mode,
+                reorder,
+                threads: 1,
+            };
+            let base = tile(&g, base_cfg);
+            for threads in [0u32, 2, 4, 7, 64] {
+                let par = tile(&g, TilingConfig { threads, ..base_cfg });
+                assert_eq!(base.partitions, par.partitions, "threads={threads}");
+                assert_eq!(base.perm, par.perm, "threads={threads}");
+                assert_eq!(base.inv_perm, par.inv_perm, "threads={threads}");
+                // whole-artifact equality ignores the threads knob
+                assert_eq!(base, par, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn cache_key_normalizes_threads() {
+        let a = TilingConfig { threads: 1, ..TilingConfig::default() };
+        let b = TilingConfig { threads: 8, ..TilingConfig::default() };
+        assert_ne!(a, b);
+        assert_eq!(a.cache_key(), b.cache_key());
+    }
+
+    #[test]
     fn single_partition_degenerate() {
         let g = small();
         let t = tile(&g, TilingConfig { dst_part: 1_000, src_part: 1_000,
-            mode: TilingMode::Regular, reorder: Reorder::None });
+            mode: TilingMode::Regular, reorder: Reorder::None, threads: 1 });
         assert_eq!(t.partitions.len(), 1);
         assert_eq!(t.num_tiles(), 1);
         assert_eq!(t.partitions[0].tiles[0].num_src(), 8);

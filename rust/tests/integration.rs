@@ -21,6 +21,7 @@ fn run_cfg(model: &str, dataset: &str) -> RunConfig {
             src_part: 512,
             mode: TilingMode::Sparse,
             reorder: Reorder::InDegree,
+            threads: 1,
         },
         e2v: true,
         functional: false,
@@ -141,7 +142,7 @@ mod properties {
                 1 => Reorder::InDegree,
                 _ => Reorder::OutDegree,
             };
-            let t = tile(&g, TilingConfig { dst_part, src_part, mode, reorder });
+            let t = tile(&g, TilingConfig { dst_part, src_part, mode, reorder, threads: 1 });
             let total: u64 = t
                 .partitions
                 .iter()
@@ -181,6 +182,7 @@ mod properties {
                         src_part,
                         mode: TilingMode::Sparse,
                         reorder,
+                        threads: 1,
                     },
                     e2v: true,
                     functional: true,
@@ -227,6 +229,7 @@ mod properties {
                             src_part: 32,
                             mode: TilingMode::Sparse,
                             reorder: Reorder::None,
+                            threads: 1,
                         },
                         e2v,
                         functional: true,
@@ -262,6 +265,7 @@ mod properties {
                 src_part: 128,
                 mode: TilingMode::Sparse,
                 reorder,
+                threads: 1,
             };
             let plain = tile(&g, cfg(Reorder::None)).total_src_loads();
             let sorted = tile(&g, cfg(Reorder::InDegree)).total_src_loads();

@@ -21,6 +21,7 @@ fn run_cfg(model: &str, seed: u64) -> RunConfig {
             src_part: 64,
             mode: TilingMode::Sparse,
             reorder: Reorder::InDegree,
+            threads: 1,
         },
         e2v: true,
         functional: true,

@@ -1,0 +1,126 @@
+//! Differential tests for the pooled `ExecScratch`: reusing one scratch
+//! across runs — and across *different plans* — must be bit-identical
+//! to fresh-scratch runs (stale-capacity / stale-shape bugs show up
+//! here), and the warm path must not grow the pool at all.
+
+use zipper::config::{ArchConfig, RunConfig};
+use zipper::plan::ExecPlan;
+use zipper::sim::ExecScratch;
+use zipper::tiling::{Reorder, TilingConfig, TilingMode};
+
+const MODELS: [&str; 5] = ["gcn", "gat", "sage", "ggnn", "rgcn"];
+
+fn run_cfg(model: &str) -> RunConfig {
+    RunConfig {
+        model: model.into(),
+        dataset: "CR".into(),
+        scale: 16,
+        feat_in: 16,
+        feat_out: 16,
+        tiling: TilingConfig {
+            dst_part: 64,
+            src_part: 64,
+            mode: TilingMode::Sparse,
+            reorder: Reorder::InDegree,
+            threads: 1,
+        },
+        e2v: true,
+        functional: true,
+        seed: 3,
+    }
+}
+
+#[test]
+fn reused_scratch_is_bit_identical_across_runs() {
+    let arch = ArchConfig::default();
+    for m in MODELS {
+        let plan = ExecPlan::compile(&run_cfg(m)).unwrap();
+        let x = plan.make_input(9);
+        let fresh = plan.simulate(&arch, true, Some(&x), 0).unwrap();
+        let expect = fresh.output.unwrap();
+        let mut scratch = ExecScratch::new();
+        for round in 0..3 {
+            let res = plan
+                .simulate_with(&arch, true, Some(&x), 0, &mut scratch)
+                .unwrap();
+            assert_eq!(res.cycles, fresh.cycles, "{m} round {round}");
+            assert_eq!(res.output.unwrap(), expect, "{m} round {round}");
+        }
+    }
+}
+
+#[test]
+fn scratch_reused_across_plans_matches_fresh() {
+    // stale-capacity / stale-shape hazard: interleave all five models
+    // (different programs, frame counts, buffer shapes) through ONE
+    // scratch, three rounds with different inputs each round
+    let arch = ArchConfig::default();
+    let plans: Vec<ExecPlan> = MODELS
+        .iter()
+        .map(|m| ExecPlan::compile(&run_cfg(m)).unwrap())
+        .collect();
+    let mut scratch = ExecScratch::new();
+    for round in 0..3u64 {
+        for (plan, m) in plans.iter().zip(MODELS) {
+            let x = plan.make_input(round);
+            let fresh = plan.simulate(&arch, true, Some(&x), 0).unwrap();
+            let reused = plan
+                .simulate_with(&arch, true, Some(&x), 0, &mut scratch)
+                .unwrap();
+            assert_eq!(fresh.cycles, reused.cycles, "{m} round {round}");
+            assert_eq!(
+                fresh.output.unwrap(),
+                reused.output.unwrap(),
+                "{m} round {round}"
+            );
+        }
+    }
+}
+
+#[test]
+fn warm_runs_do_not_grow_the_pool() {
+    let arch = ArchConfig::default();
+    for m in MODELS {
+        let plan = ExecPlan::compile(&run_cfg(m)).unwrap();
+        let x = plan.make_input(1);
+        let mut scratch = ExecScratch::new();
+        plan.simulate_with(&arch, true, Some(&x), 0, &mut scratch)
+            .unwrap();
+        let after_cold = scratch.alloc_events();
+        assert!(after_cold > 0, "{m}: the cold run must size the pool");
+        for _ in 0..3 {
+            plan.simulate_with(&arch, true, Some(&x), 0, &mut scratch)
+                .unwrap();
+        }
+        assert_eq!(
+            scratch.alloc_events(),
+            after_cold,
+            "{m}: warm runs must not grow the pool"
+        );
+    }
+}
+
+#[test]
+fn timing_only_runs_share_the_scratch_safely() {
+    // the serving pool mixes functional and timing-only requests through
+    // the same worker scratch; interleaving must not disturb either
+    let arch = ArchConfig::default();
+    let plan = ExecPlan::compile(&run_cfg("gat")).unwrap();
+    let x = plan.make_input(2);
+    let expect = plan
+        .simulate(&arch, true, Some(&x), 0)
+        .unwrap()
+        .output
+        .unwrap();
+    let mut scratch = ExecScratch::new();
+    for _ in 0..2 {
+        let timing = plan
+            .simulate_with(&arch, false, None, 0, &mut scratch)
+            .unwrap();
+        assert!(timing.output.is_none());
+        let func = plan
+            .simulate_with(&arch, true, Some(&x), 0, &mut scratch)
+            .unwrap();
+        assert_eq!(func.output.unwrap(), expect);
+    }
+}

@@ -20,6 +20,7 @@ fn run_model(m: ModelKind, opt: OptLevel, functional: bool) -> (SimResult, Progr
             src_part: 64,
             mode: TilingMode::Sparse,
             reorder: Reorder::InDegree,
+            threads: 1,
         },
     );
     let prog = compile(&m.build(), opt).unwrap();
@@ -118,6 +119,7 @@ fn more_streams_dont_break_correctness() {
             src_part: 32,
             mode: TilingMode::Sparse,
             reorder: Reorder::None,
+            threads: 1,
         },
     );
     let prog = compile(&gcn(), OptLevel::E2v).unwrap();
@@ -153,6 +155,7 @@ fn scratch_reuse_matches_fresh_runs() {
                 src_part: 32,
                 mode: TilingMode::Sparse,
                 reorder: Reorder::InDegree,
+                threads: 1,
             },
         );
         let prog = compile(&m.build(), OptLevel::E2v).unwrap();
