@@ -103,6 +103,7 @@ fn small_run(model: &str) -> RunConfig {
         e2v: true,
         functional: true,
         seed: 3,
+        serving: Default::default(),
     }
 }
 

@@ -3,25 +3,41 @@
 //! Measures requests/sec through the coordinator with a **cold** plan
 //! cache (every request may compile a plan) vs a **warm** cache (every
 //! request reuses a shared `Arc<ExecPlan>` and a per-worker scratch),
-//! across worker counts. Also times plan compilation vs cache lookup
-//! directly. Emits `BENCH_serving.json` so future PRs have a trajectory
-//! for the serving hot path.
+//! across worker counts; times plan compilation vs cache lookup
+//! directly; and sweeps **batched + tile-parallel** serving
+//! (`--max-batch` × `--exec-threads`) against sequential warm serving on
+//! the largest bundled dataset, asserting bit-identical per-request
+//! outputs for every combination and ≥ 2× throughput at 4 exec threads.
+//! Emits `BENCH_serving.json` so future PRs have a trajectory for the
+//! serving hot path.
 //!
 //! ```bash
-//! cargo bench --bench perf_serving
+//! cargo bench --bench perf_serving            # full run (asserts 2x)
+//! cargo bench --bench perf_serving -- --smoke # tiny CI-sized run
 //! ```
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
-use zipper::config::{ArchConfig, RunConfig};
-use zipper::coordinator::{Coordinator, InferenceRequest};
+use zipper::config::{ArchConfig, RunConfig, ServingConfig};
+use zipper::coordinator::{Coordinator, InferenceRequest, InferenceResponse};
 use zipper::metrics::Table;
 use zipper::plan::{ExecPlan, PlanCache};
 use zipper::tiling::{tile, Reorder, TilingConfig, TilingMode};
 use zipper::util::json::Json;
 
-const N_REQUESTS: u64 = 60;
+fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+/// Requests per serving pass (`--smoke` = CI-sized tiny run).
+fn n_requests() -> u64 {
+    if smoke() {
+        20
+    } else {
+        60
+    }
+}
 
 fn request(i: u64) -> InferenceRequest {
     let models = ["gcn", "gat", "sage", "ggnn", "rgcn"];
@@ -44,6 +60,7 @@ fn request(i: u64) -> InferenceRequest {
         // plan reuse, not the functional executor
         functional: false,
         seed: 7,
+        serving: Default::default(),
     };
     InferenceRequest { id: i, run, input_seed: i }
 }
@@ -58,7 +75,7 @@ fn serve(
 ) -> (f64, usize, usize, f64) {
     let mut c = Coordinator::with_cache(arch, workers, Arc::clone(cache));
     let t0 = Instant::now();
-    for i in 0..N_REQUESTS {
+    for i in 0..n_requests() {
         let mut req = request(i);
         req.run.tiling.threads = threads;
         c.submit(req);
@@ -86,6 +103,7 @@ fn num(v: f64) -> Json {
 
 fn main() {
     let arch = ArchConfig::default();
+    let n_req = n_requests();
     let mut table = Table::new(&[
         "workers", "cold req/s", "warm req/s", "speedup", "warm hits",
     ]);
@@ -99,21 +117,21 @@ fn main() {
         let (warm_wall, warm_err, warm_hits, _) = serve(arch, workers, &cache, 1);
         assert_eq!(warm_err, 0, "warm pass had errors");
         assert_eq!(
-            warm_hits as u64, N_REQUESTS,
+            warm_hits as u64, n_req,
             "warm pass must hit the plan cache on every request"
         );
-        let cold_rps = N_REQUESTS as f64 / cold_wall;
-        let warm_rps = N_REQUESTS as f64 / warm_wall;
+        let cold_rps = n_req as f64 / cold_wall;
+        let warm_rps = n_req as f64 / warm_wall;
         table.row(&[
             workers.to_string(),
             format!("{cold_rps:.1}"),
             format!("{warm_rps:.1}"),
             format!("{:.2}x", warm_rps / cold_rps),
-            format!("{warm_hits}/{N_REQUESTS}"),
+            format!("{warm_hits}/{n_req}"),
         ]);
         let mut row = BTreeMap::new();
         row.insert("workers".to_string(), num(workers as f64));
-        row.insert("requests".to_string(), num(N_REQUESTS as f64));
+        row.insert("requests".to_string(), num(n_req as f64));
         row.insert("cold_wall_s".to_string(), num(cold_wall));
         row.insert("warm_wall_s".to_string(), num(warm_wall));
         row.insert("cold_req_per_s".to_string(), num(cold_rps));
@@ -141,7 +159,8 @@ fn main() {
     // then measure end-to-end cold prepare_seconds at 1 vs 4 threads.
     let mut trun = request(0).run;
     trun.dataset = "CP".into();
-    trun.scale = 64;
+    let tiling_scale: u64 = if smoke() { 512 } else { 64 };
+    trun.scale = tiling_scale;
     trun.tiling.threads = 1;
     let base_plan = ExecPlan::compile(&trun).expect("compile");
     let mut thr_table = Table::new(&["tiling threads", "tile ms", "speedup"]);
@@ -177,7 +196,90 @@ fn main() {
     let (_, err4, _, prep4) = serve(arch, 4, &Arc::new(PlanCache::new()), 4);
     assert_eq!((err1, err4), (0, 0), "threaded cold passes had errors");
 
-    println!("== serving throughput: cold vs warm plan cache ({N_REQUESTS} requests) ==");
+    // ---- batched + tile-parallel vs sequential warm serving --------------
+    // Functional requests sharing one plan on the largest bundled
+    // dataset (SL, scaled): sequential warm serving pays a timing
+    // simulation + a one-lane functional pass per request; batched
+    // serving amortizes the timing sim and the LD.SRC/LD.DST tile
+    // traversal across the batch and shards tiles over exec threads.
+    // Outputs must be bit-identical for every combination.
+    let (batch_dataset, batch_scale, batch_requests) =
+        if smoke() { ("CR", 16, 12u64) } else { ("SL", 64, 32u64) };
+    let batch_req = |i: u64| {
+        let mut run = request(0).run;
+        run.model = "gcn".into();
+        run.dataset = batch_dataset.into();
+        run.scale = batch_scale;
+        run.functional = true;
+        InferenceRequest { id: i, run, input_seed: i % 4 }
+    };
+    let serve_batched = |serving: ServingConfig,
+                         cache: &Arc<PlanCache>|
+     -> (Vec<InferenceResponse>, f64) {
+        let mut c = Coordinator::with_serving(arch, 4, serving, Arc::clone(cache));
+        let t0 = Instant::now();
+        for i in 0..batch_requests {
+            c.submit(batch_req(i));
+        }
+        let mut resp = c.drain();
+        let wall = t0.elapsed().as_secs_f64();
+        resp.sort_by_key(|r| r.id);
+        for r in &resp {
+            assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+        }
+        (resp, wall)
+    };
+    let bcache = Arc::new(PlanCache::new());
+    let seq_cfg = ServingConfig { exec_threads: 1, max_batch: 1 };
+    let _ = serve_batched(seq_cfg, &bcache); // cold pass compiles the plan
+    let (seq_resp, seq_wall) = serve_batched(seq_cfg, &bcache);
+    let seq_rps = batch_requests as f64 / seq_wall;
+    let mut bt = Table::new(&["exec threads", "max batch", "req/s", "vs sequential"]);
+    let mut brows: Vec<Json> = Vec::new();
+    let mut speedup_4x8 = 0.0;
+    for exec_threads in [1u32, 2, 4] {
+        for max_batch in [1u32, 3, 8] {
+            let serving = ServingConfig { exec_threads, max_batch };
+            let (resp, wall) = serve_batched(serving, &bcache);
+            for (r, s) in resp.iter().zip(&seq_resp) {
+                assert_eq!(
+                    r.output_checksum, s.output_checksum,
+                    "threads={exec_threads} batch={max_batch} id={}: batched output \
+                     must be bit-identical to sequential",
+                    r.id
+                );
+                assert_eq!(r.sim_cycles, s.sim_cycles);
+            }
+            let rps = batch_requests as f64 / wall;
+            let speedup = rps / seq_rps;
+            if (exec_threads, max_batch) == (4, 8) {
+                speedup_4x8 = speedup;
+            }
+            bt.row(&[
+                exec_threads.to_string(),
+                max_batch.to_string(),
+                format!("{rps:.1}"),
+                format!("{speedup:.2}x"),
+            ]);
+            let mut row = BTreeMap::new();
+            row.insert("exec_threads".to_string(), num(exec_threads as f64));
+            row.insert("max_batch".to_string(), num(max_batch as f64));
+            row.insert("req_per_s".to_string(), num(rps));
+            row.insert("speedup_vs_sequential".to_string(), num(speedup));
+            brows.push(Json::Obj(row));
+        }
+    }
+    if !smoke() {
+        // acceptance floor for the batched serving path (skipped in the
+        // tiny CI smoke, where thread overhead dominates the workload)
+        assert!(
+            speedup_4x8 >= 2.0,
+            "batched serving at 4 exec threads / max_batch 8 must be ≥2x \
+             sequential warm throughput, got {speedup_4x8:.2}x"
+        );
+    }
+
+    println!("== serving throughput: cold vs warm plan cache ({n_req} requests) ==");
     print!("{}", table.render());
     println!(
         "\nplan compile (tile+compile+weights): {:.3} ms; cache lookup: {:.3} us \
@@ -186,13 +288,19 @@ fn main() {
         lookup_s * 1e6,
         compile_s / lookup_s.max(1e-12)
     );
-    println!("\n== parallel tiling (CP 1/64, identical output asserted) ==");
+    println!("\n== parallel tiling (CP 1/{tiling_scale}, identical output asserted) ==");
     print!("{}", thr_table.render());
     println!(
         "cold prepare mean: {:.3} ms @ 1 thread vs {:.3} ms @ 4 threads",
         prep1 * 1e3,
         prep4 * 1e3
     );
+    println!(
+        "\n== batched + tile-parallel serving ({batch_requests} functional requests, \
+         {batch_dataset} 1/{batch_scale}, bit-identical outputs asserted) =="
+    );
+    print!("{}", bt.render());
+    println!("sequential warm baseline: {seq_rps:.1} req/s");
 
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("perf_serving".to_string()));
@@ -202,6 +310,11 @@ fn main() {
     root.insert("tiling_threads".to_string(), Json::Arr(thr_rows));
     root.insert("cold_prepare_mean_s_threads1".to_string(), num(prep1));
     root.insert("cold_prepare_mean_s_threads4".to_string(), num(prep4));
+    root.insert("batch_dataset".to_string(), Json::Str(batch_dataset.to_string()));
+    root.insert("batch_scale".to_string(), num(batch_scale as f64));
+    root.insert("batch_requests".to_string(), num(batch_requests as f64));
+    root.insert("batch_sequential_req_per_s".to_string(), num(seq_rps));
+    root.insert("batch_sweep".to_string(), Json::Arr(brows));
     let path = "BENCH_serving.json";
     std::fs::write(path, Json::Obj(root).to_string_pretty()).expect("write BENCH_serving.json");
     println!("wrote {path}");

@@ -76,6 +76,27 @@ impl ArchConfig {
     }
 }
 
+/// Serving-layer execution knobs (`[serving]` section / `--exec-threads`
+/// / `--max-batch`). Host-side only: like `TilingConfig::threads`, these
+/// never change compiled artifacts or outputs — `exec_threads` shards
+/// each partition's tiles across OS threads inside the coordinator's
+/// batched functional pass (bit-identical for every value, see
+/// `sim::parallel`), and `max_batch` bounds how many queued requests
+/// sharing one plan the `BatchPlanner` groups into a single pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServingConfig {
+    /// OS threads for tile-parallel functional execution per batch.
+    pub exec_threads: u32,
+    /// Max requests sharing one `ExecPlan` grouped into one batch.
+    pub max_batch: u32,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig { exec_threads: 1, max_batch: 1 }
+    }
+}
+
 /// Run parameters: model, dataset, tiling, optimization toggles.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
@@ -91,6 +112,8 @@ pub struct RunConfig {
     /// Execute functionally (compute embeddings) as well as timing.
     pub functional: bool,
     pub seed: u64,
+    /// Coordinator serving knobs (never part of the plan identity).
+    pub serving: ServingConfig,
 }
 
 impl Default for RunConfig {
@@ -105,6 +128,7 @@ impl Default for RunConfig {
             e2v: true,
             functional: false,
             seed: 42,
+            serving: ServingConfig::default(),
         }
     }
 }
@@ -190,6 +214,8 @@ pub fn apply(
             ("run", "e2v") => run.e2v = boolean()?,
             ("run", "functional") => run.functional = boolean()?,
             ("run", "seed") => run.seed = num()? as u64,
+            ("serving", "exec_threads") => run.serving.exec_threads = num()? as u32,
+            ("serving", "max_batch") => run.serving.max_batch = num()? as u32,
             ("tiling", "dst_part") => run.tiling.dst_part = num()? as u32,
             ("tiling", "src_part") => run.tiling.src_part = num()? as u32,
             ("tiling", "threads") => run.tiling.threads = num()? as u32,
@@ -226,6 +252,7 @@ pub fn show(arch: &ArchConfig, run: &RunConfig) -> String {
          streams = 1d/{}s/{}e\npeak = {:.2} TFLOP/s\n\n\
          [run]\nmodel = {}\ndataset = {}\nscale = 1/{}\nfeat = {}x{}\n\
          e2v = {}\nfunctional = {}\nseed = {}\n\n\
+         [serving]\nexec_threads = {}\nmax_batch = {}\n\n\
          [tiling]\ndst_part = {}\nsrc_part = {}\nmode = {:?}\nreorder = {:?}\nthreads = {}\n",
         arch.freq_hz,
         arch.mu_count,
@@ -250,6 +277,8 @@ pub fn show(arch: &ArchConfig, run: &RunConfig) -> String {
         run.e2v,
         run.functional,
         run.seed,
+        run.serving.exec_threads,
+        run.serving.max_batch,
         run.tiling.dst_part,
         run.tiling.src_part,
         run.tiling.mode,
@@ -286,6 +315,9 @@ mod tests {
             [run]
             model = "gat"
             scale = 16
+            [serving]
+            exec_threads = 4
+            max_batch = 8
             [tiling]
             mode = regular
             reorder = none
@@ -298,6 +330,7 @@ mod tests {
         assert_eq!(arch.hbm_bytes_per_sec, 512.0e9);
         assert_eq!(run.model, "gat");
         assert_eq!(run.scale, 16);
+        assert_eq!(run.serving, ServingConfig { exec_threads: 4, max_batch: 8 });
         assert_eq!(run.tiling.mode, crate::tiling::TilingMode::Regular);
         assert_eq!(run.tiling.threads, 4);
     }
@@ -316,5 +349,6 @@ mod tests {
         let s = show(&ArchConfig::default(), &RunConfig::default());
         assert!(s.contains("mu_count = 1 (32x128)"));
         assert!(s.contains("21.00 MB"));
+        assert!(s.contains("[serving]") && s.contains("max_batch = 1"));
     }
 }

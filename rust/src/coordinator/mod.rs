@@ -4,9 +4,14 @@
 //!   * **Plans** — compile-once bundles (`plan::ExecPlan`): dataset →
 //!     graph → tiling → compiled SDE program → weights, cached per
 //!     structured `PlanKey` and shared across workers as `Arc`s.
-//!   * **Serving** — a worker pool consuming inference requests from a
-//!     queue; each worker reuses one `ExecScratch`, so a warm request
-//!     does zero recompile/retile work and almost no allocation.
+//!   * **Serving** — a worker pool consuming *batches* of inference
+//!     requests from a queue. [`BatchPlanner`] groups queued requests
+//!     that share one execution plan; a worker serves a batch with a
+//!     single input-independent timing simulation plus one tile-parallel
+//!     batched functional pass (`sim::parallel`), amortizing plan
+//!     lookup, LD.SRC/LD.DST tile traversal, and the cycle-level
+//!     simulation across the batch while keeping per-request responses
+//!     and latency accounting.
 //!   * **Validation** — the three-layer glue: execute the same tiles
 //!     through the PJRT-loaded JAX artifacts and compare against the
 //!     simulator's functional output (paper §8.1: "validate ... the
@@ -16,13 +21,15 @@
 pub mod validate;
 
 use crate::compiler::Program;
-use crate::config::{ArchConfig, RunConfig};
+use crate::config::{ArchConfig, RunConfig, ServingConfig};
 use crate::energy::EnergyModel;
 use crate::graph::Graph;
 use crate::models::{ModelKind, WeightStore};
-use crate::plan::{CacheStats, ExecPlan, PlanCache};
+use crate::plan::{CacheStats, ExecPlan, PlanCache, PlanKey};
+use crate::sim::parallel::BatchScratch;
 use crate::sim::{ExecScratch, SimResult};
 use crate::tiling::Tiling;
+use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -31,6 +38,33 @@ use std::time::Instant;
 /// A prepared inference session: a thin handle over a shared, immutable
 /// [`ExecPlan`]. Cheap to clone; all per-run state lives in the caller's
 /// scratch. Kept as the stable front-door API for benches and examples.
+///
+/// # Examples
+///
+/// Compile once, then simulate functionally and read the embeddings:
+///
+/// ```
+/// use zipper::config::{ArchConfig, RunConfig};
+/// use zipper::coordinator::Session;
+///
+/// let mut run = RunConfig::default();
+/// run.dataset = "CR".into(); // tiny citation-graph stand-in
+/// run.scale = 64;
+/// run.feat_in = 8;
+/// run.feat_out = 8;
+/// run.functional = true;
+///
+/// let session = Session::prepare(&run).unwrap();
+/// let x = session.make_input(1);
+/// let res = session
+///     .simulate(&ArchConfig::default(), true, Some(&x), 0)
+///     .unwrap();
+/// assert!(res.cycles > 0);
+/// assert_eq!(
+///     res.output.unwrap().len(),
+///     session.plan().dims.output_len
+/// );
+/// ```
 #[derive(Clone)]
 pub struct Session {
     plan: Arc<ExecPlan>,
@@ -138,6 +172,8 @@ pub struct InferenceResponse {
     pub plan_cache_hit: bool,
     /// Host seconds spent compiling the plan (0 on a warm request).
     pub prepare_seconds: f64,
+    /// How many requests shared this request's batched pass (≥ 1).
+    pub batch_size: usize,
     /// Checksum of the output embeddings (functional runs).
     pub output_checksum: Option<f64>,
     pub error: Option<String>,
@@ -155,6 +191,7 @@ impl InferenceResponse {
             wall_seconds: 0.0,
             plan_cache_hit: false,
             prepare_seconds: 0.0,
+            batch_size: 1,
             output_checksum: None,
             error: None,
         }
@@ -165,17 +202,114 @@ impl InferenceResponse {
     }
 }
 
+/// Groups queued requests into executable batches: requests sharing one
+/// execution plan (same [`PlanKey`]) *and* the same functional flag may
+/// ride one batched pass, capped at `max_batch` per batch. Grouping
+/// preserves first-arrival order of groups and request order within a
+/// group, so serving stays deterministic.
+pub struct BatchPlanner {
+    max_batch: usize,
+}
+
+impl BatchPlanner {
+    /// `max_batch` is clamped to ≥ 1 (1 = no batching, the default).
+    pub fn new(max_batch: usize) -> BatchPlanner {
+        BatchPlanner { max_batch: max_batch.max(1) }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Partition `reqs` into batches of plan-compatible requests.
+    pub fn plan(&self, reqs: Vec<InferenceRequest>) -> Vec<Vec<InferenceRequest>> {
+        let mut order: Vec<(PlanKey, bool)> = Vec::new();
+        let mut groups: HashMap<(PlanKey, bool), Vec<InferenceRequest>> = HashMap::new();
+        for r in reqs {
+            let key = (PlanKey::of(&r.run), r.run.functional);
+            match groups.get_mut(&key) {
+                Some(g) => g.push(r),
+                None => {
+                    order.push(key.clone());
+                    groups.insert(key, vec![r]);
+                }
+            }
+        }
+        let mut out = Vec::new();
+        for key in order {
+            let group = groups.remove(&key).expect("group recorded in order");
+            let mut group = group.into_iter();
+            loop {
+                let chunk: Vec<InferenceRequest> =
+                    group.by_ref().take(self.max_batch).collect();
+                if chunk.is_empty() {
+                    break;
+                }
+                out.push(chunk);
+            }
+        }
+        out
+    }
+}
+
 /// Multi-threaded serving coordinator over a shared [`PlanCache`].
+///
+/// Requests are grouped into plan-compatible batches: a group is
+/// dispatched to the worker pool as soon as it reaches `max_batch`
+/// pending requests (immediately, with the default `max_batch = 1`),
+/// and partially filled groups are flushed through the [`BatchPlanner`]
+/// at [`Coordinator::drain`]. Workers execute batch-at-a-time: one
+/// timing simulation plus one tile-parallel batched functional pass per
+/// batch (see the module docs). With the default [`ServingConfig`]
+/// (`max_batch = 1`, `exec_threads = 1`) behavior degenerates to
+/// classic one-request-per-worker serving.
+///
+/// # Examples
+///
+/// ```
+/// use zipper::config::{ArchConfig, RunConfig};
+/// use zipper::coordinator::{Coordinator, InferenceRequest};
+///
+/// let mut run = RunConfig::default();
+/// run.dataset = "CR".into(); // tiny citation-graph stand-in
+/// run.scale = 64;
+/// run.feat_in = 8;
+/// run.feat_out = 8;
+///
+/// let mut c = Coordinator::new(ArchConfig::default(), 2);
+/// for id in 0..3 {
+///     c.submit(InferenceRequest { id, run: run.clone(), input_seed: id });
+/// }
+/// let responses = c.drain();
+/// assert_eq!(responses.len(), 3);
+/// assert!(responses.iter().all(|r| r.error.is_none()));
+/// // identical configs share one compiled plan
+/// assert_eq!(c.cache_stats().entries, 1);
+/// ```
 pub struct Coordinator {
-    tx: Option<mpsc::Sender<InferenceRequest>>,
+    tx: Option<mpsc::Sender<Vec<InferenceRequest>>>,
     rx_resp: mpsc::Receiver<InferenceResponse>,
     workers: Vec<std::thread::JoinHandle<()>>,
     /// (id, model, dataset) per submitted request, so drain can report
     /// losses instead of silently truncating.
     submitted: Vec<(u64, String, String)>,
+    /// Requests buffered until their plan group fills or the queue is
+    /// flushed at drain.
+    pending: Vec<InferenceRequest>,
+    /// Pending-request count per batch key, for eager dispatch.
+    pending_counts: HashMap<(PlanKey, bool), usize>,
     /// Responses synthesized locally (e.g. when the queue is gone).
     local: Vec<InferenceResponse>,
+    planner: BatchPlanner,
     cache: Arc<PlanCache>,
+}
+
+/// Per-worker pooled state: the timing-simulation scratch plus the
+/// batched functional executor's scratch, both reused for every batch
+/// this worker serves.
+struct WorkerState {
+    timing: ExecScratch,
+    batch: BatchScratch,
 }
 
 impl Coordinator {
@@ -185,7 +319,19 @@ impl Coordinator {
 
     /// Share an existing plan cache (warm restarts, cold/warm benches).
     pub fn with_cache(arch: ArchConfig, num_workers: usize, cache: Arc<PlanCache>) -> Coordinator {
-        let (tx, rx) = mpsc::channel::<InferenceRequest>();
+        Self::with_serving(arch, num_workers, ServingConfig::default(), cache)
+    }
+
+    /// Full constructor: worker count plus the serving knobs
+    /// (`exec_threads` for the tile-parallel functional pass,
+    /// `max_batch` for the batch planner).
+    pub fn with_serving(
+        arch: ArchConfig,
+        num_workers: usize,
+        serving: ServingConfig,
+        cache: Arc<PlanCache>,
+    ) -> Coordinator {
+        let (tx, rx) = mpsc::channel::<Vec<InferenceRequest>>();
         let (tx_resp, rx_resp) = mpsc::channel::<InferenceResponse>();
         let rx = Arc::new(Mutex::new(rx));
         let mut workers = Vec::new();
@@ -194,11 +340,12 @@ impl Coordinator {
             let tx_resp = tx_resp.clone();
             let cache = Arc::clone(&cache);
             workers.push(std::thread::spawn(move || {
-                // per-worker scratch: reused across every request this
-                // worker serves (the allocation-light hot path)
-                let mut scratch = ExecScratch::new();
-                loop {
-                    let req = {
+                // per-worker pooled scratches: reused across every batch
+                // this worker serves (the allocation-light hot path)
+                let mut state =
+                    WorkerState { timing: ExecScratch::new(), batch: BatchScratch::new() };
+                'serve: loop {
+                    let batch = {
                         let guard = match rx.lock() {
                             Ok(g) => g,
                             // a peer panicked while holding the queue
@@ -207,21 +354,32 @@ impl Coordinator {
                         };
                         guard.recv()
                     };
-                    let Ok(req) = req else { break };
+                    let Ok(batch) = batch else { break };
                     let t0 = Instant::now();
-                    let resp = catch_unwind(AssertUnwindSafe(|| {
-                        handle(&arch, &cache, &req, t0, &mut scratch)
+                    let responses = catch_unwind(AssertUnwindSafe(|| {
+                        handle_batch(&arch, &cache, serving, &batch, t0, &mut state)
                     }))
                     .unwrap_or_else(|panic| {
-                        InferenceResponse::failed(
-                            req.id,
-                            &req.run.model,
-                            &req.run.dataset,
-                            format!("worker panicked: {}", panic_message(panic.as_ref())),
-                        )
+                        let msg = format!(
+                            "worker panicked: {}",
+                            panic_message(panic.as_ref())
+                        );
+                        batch
+                            .iter()
+                            .map(|r| {
+                                InferenceResponse::failed(
+                                    r.id,
+                                    &r.run.model,
+                                    &r.run.dataset,
+                                    msg.clone(),
+                                )
+                            })
+                            .collect::<Vec<_>>()
                     });
-                    if tx_resp.send(resp).is_err() {
-                        break;
+                    for resp in responses {
+                        if tx_resp.send(resp).is_err() {
+                            break 'serve;
+                        }
                     }
                 }
             }));
@@ -231,7 +389,10 @@ impl Coordinator {
             rx_resp,
             workers,
             submitted: Vec::new(),
+            pending: Vec::new(),
+            pending_counts: HashMap::new(),
             local: Vec::new(),
+            planner: BatchPlanner::new(serving.max_batch as usize),
             cache,
         }
     }
@@ -245,20 +406,75 @@ impl Coordinator {
     }
 
     /// Enqueue a request. Never panics: if the worker pool is gone (all
-    /// workers exited) the failure is reported as an error response.
+    /// workers exited or already drained) the failure is reported as an
+    /// error response from `drain`.
+    ///
+    /// Dispatch is eager: as soon as a plan group reaches `max_batch`
+    /// pending requests it is handed to the worker pool, so serving
+    /// overlaps with the caller still producing requests (with the
+    /// default `max_batch = 1` every submit dispatches immediately).
+    /// Partially filled groups ride along at the next [`Coordinator::drain`].
     pub fn submit(&mut self, req: InferenceRequest) {
         self.submitted.push((req.id, req.run.model.clone(), req.run.dataset.clone()));
-        let sent = match &self.tx {
-            Some(tx) => tx.send(req).map_err(|e| e.0),
-            None => Err(req),
-        };
-        if let Err(req) = sent {
+        if self.tx.is_none() {
             self.local.push(InferenceResponse::failed(
                 req.id,
                 &req.run.model,
                 &req.run.dataset,
                 "worker pool unavailable (already drained or all workers exited)".into(),
             ));
+            return;
+        }
+        let key = (PlanKey::of(&req.run), req.run.functional);
+        let count = self.pending_counts.entry(key.clone()).or_insert(0);
+        *count += 1;
+        let group_full = *count >= self.planner.max_batch();
+        self.pending.push(req);
+        if group_full {
+            self.pending_counts.remove(&key);
+            let mut batch = Vec::with_capacity(self.planner.max_batch());
+            let mut rest = Vec::with_capacity(self.pending.len());
+            for r in std::mem::take(&mut self.pending) {
+                if (PlanKey::of(&r.run), r.run.functional) == key {
+                    batch.push(r);
+                } else {
+                    rest.push(r);
+                }
+            }
+            self.pending = rest;
+            self.dispatch(batch);
+        }
+    }
+
+    /// Send one batch to the worker pool, degrading to local error
+    /// responses if every worker is gone.
+    fn dispatch(&mut self, batch: Vec<InferenceRequest>) {
+        let sent = match &self.tx {
+            Some(tx) => tx.send(batch).map_err(|e| e.0),
+            None => Err(batch),
+        };
+        if let Err(batch) = sent {
+            for req in batch {
+                self.local.push(InferenceResponse::failed(
+                    req.id,
+                    &req.run.model,
+                    &req.run.dataset,
+                    "worker pool unavailable (already drained or all workers exited)".into(),
+                ));
+            }
+        }
+    }
+
+    /// Group the remaining (partially filled) buffered requests into
+    /// batches and hand them to the worker pool.
+    fn flush(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        self.pending_counts.clear();
+        let pending = std::mem::take(&mut self.pending);
+        for batch in self.planner.plan(pending) {
+            self.dispatch(batch);
         }
     }
 
@@ -267,6 +483,7 @@ impl Coordinator {
     /// worker failure come back as error responses instead of being
     /// silently dropped.
     pub fn drain(&mut self) -> Vec<InferenceResponse> {
+        self.flush();
         drop(self.tx.take());
         let expected = self.submitted.len();
         let mut out = std::mem::take(&mut self.local);
@@ -291,7 +508,7 @@ impl Coordinator {
             // per-id multiset accounting: ids are caller-chosen and may
             // repeat, so count received responses per id instead of
             // testing mere presence
-            let mut received: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+            let mut received: HashMap<u64, usize> = HashMap::new();
             for r in &out {
                 *received.entry(r.id).or_insert(0) += 1;
             }
@@ -328,56 +545,82 @@ fn panic_message(panic: &(dyn std::any::Any + Send)) -> &str {
     }
 }
 
-fn handle(
+/// Fail every member of a batch with the same error.
+fn fail_batch(batch: &[InferenceRequest], error: &str, t0: Instant) -> Vec<InferenceResponse> {
+    batch
+        .iter()
+        .map(|r| InferenceResponse {
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            ..InferenceResponse::failed(r.id, &r.run.model, &r.run.dataset, error.to_string())
+        })
+        .collect()
+}
+
+/// Serve one plan-compatible batch: a single plan lookup, a single
+/// input-independent timing simulation, and (for functional requests)
+/// one tile-parallel batched functional pass covering every lane. The
+/// per-request accounting (wall clock, cache hit, prepare time, output
+/// checksum) is preserved in each response.
+fn handle_batch(
     arch: &ArchConfig,
     cache: &PlanCache,
-    req: &InferenceRequest,
+    serving: ServingConfig,
+    batch: &[InferenceRequest],
     t0: Instant,
-    scratch: &mut ExecScratch,
-) -> InferenceResponse {
-    let base = InferenceResponse::empty(req.id, &req.run.model, &req.run.dataset);
-    let (plan, hit) = match cache.get_or_compile(&req.run) {
+    state: &mut WorkerState,
+) -> Vec<InferenceResponse> {
+    let first = &batch[0];
+    let (plan, hit) = match cache.get_or_compile(&first.run) {
         Ok(p) => p,
-        Err(e) => {
-            return InferenceResponse {
-                error: Some(e),
-                wall_seconds: t0.elapsed().as_secs_f64(),
-                ..base
-            }
-        }
+        Err(e) => return fail_batch(batch, &e, t0),
     };
     let prepare_seconds = if hit { 0.0 } else { t0.elapsed().as_secs_f64() };
-    let x;
-    let input = if req.run.functional {
-        x = plan.make_input(req.input_seed);
-        Some(x.as_slice())
-    } else {
-        None
+
+    // Timing is a pure function of (arch, plan) — input embeddings never
+    // reach the cycle-level model — so one simulation covers the batch.
+    let timing = match plan.simulate_with(arch, false, None, 0, &mut state.timing) {
+        Ok(t) => t,
+        Err(e) => return fail_batch(batch, &e, t0),
     };
-    match plan.simulate_with(arch, req.run.functional, input, 0, scratch) {
-        Ok(res) => {
-            let energy = EnergyModel::default()
-                .evaluate(&res.counters, arch.freq_hz)
-                .total_j();
-            InferenceResponse {
-                sim_cycles: res.cycles,
-                sim_seconds: res.seconds(arch),
-                energy_j: energy,
-                wall_seconds: t0.elapsed().as_secs_f64(),
-                plan_cache_hit: hit,
-                prepare_seconds,
-                output_checksum: res.output.map(|o| o.iter().map(|&v| v as f64).sum::<f64>()),
-                ..base
-            }
+    let energy_j = EnergyModel::default()
+        .evaluate(&timing.counters, arch.freq_hz)
+        .total_j();
+
+    // Functional lanes: one scratch-resident batched pass for all
+    // requests, tiles sharded across `serving.exec_threads`.
+    let mut checksums: Vec<Option<f64>> = vec![None; batch.len()];
+    if first.run.functional {
+        let inputs: Vec<Vec<f32>> =
+            batch.iter().map(|r| plan.make_input(r.input_seed)).collect();
+        let lanes: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let outs = match plan.execute_batch_with(
+            &lanes,
+            serving.exec_threads.max(1) as usize,
+            &mut state.batch,
+        ) {
+            Ok(o) => o,
+            Err(e) => return fail_batch(batch, &e, t0),
+        };
+        for (slot, out) in checksums.iter_mut().zip(&outs) {
+            *slot = Some(out.iter().map(|&v| v as f64).sum::<f64>());
         }
-        Err(e) => InferenceResponse {
-            error: Some(e),
+    }
+
+    batch
+        .iter()
+        .zip(checksums)
+        .map(|(req, output_checksum)| InferenceResponse {
+            sim_cycles: timing.cycles,
+            sim_seconds: timing.seconds(arch),
+            energy_j,
             wall_seconds: t0.elapsed().as_secs_f64(),
             plan_cache_hit: hit,
             prepare_seconds,
-            ..base
-        },
-    }
+            batch_size: batch.len(),
+            output_checksum,
+            ..InferenceResponse::empty(req.id, &req.run.model, &req.run.dataset)
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -402,6 +645,7 @@ mod tests {
             e2v: true,
             functional,
             seed: 3,
+            serving: Default::default(),
         }
     }
 
@@ -432,6 +676,7 @@ mod tests {
             assert!(r.error.is_none(), "{:?}", r.error);
             assert!(r.sim_cycles > 0);
             assert!(r.energy_j > 0.0);
+            assert_eq!(r.batch_size, 1);
         }
     }
 
@@ -473,5 +718,98 @@ mod tests {
         let second = c.drain();
         assert_eq!(second.len(), 1);
         assert!(second[0].error.as_deref().unwrap().contains("worker pool unavailable"));
+    }
+
+    #[test]
+    fn batch_planner_groups_by_plan_and_caps_size() {
+        let planner = BatchPlanner::new(3);
+        let reqs: Vec<InferenceRequest> = (0..7)
+            .map(|i| {
+                let m = if i % 2 == 0 { "gcn" } else { "gat" };
+                InferenceRequest { id: i, run: small_run(m, true), input_seed: i }
+            })
+            .collect();
+        let batches = planner.plan(reqs);
+        // 4 gcn → [3, 1]; 3 gat → [3]
+        assert_eq!(batches.len(), 3);
+        for b in &batches {
+            assert!(!b.is_empty() && b.len() <= 3);
+            assert!(b.iter().all(|r| r.run.model == b[0].run.model));
+        }
+        // request order preserved within each plan group
+        let gcn_ids: Vec<u64> = batches
+            .iter()
+            .flatten()
+            .filter(|r| r.run.model == "gcn")
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(gcn_ids, vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn batch_planner_splits_mixed_functional_flags() {
+        // same plan key, different functional flag → separate batches
+        let planner = BatchPlanner::new(8);
+        let reqs: Vec<InferenceRequest> = (0..4)
+            .map(|i| InferenceRequest {
+                id: i,
+                run: small_run("gcn", i % 2 == 0),
+                input_seed: i,
+            })
+            .collect();
+        let batches = planner.plan(reqs);
+        assert_eq!(batches.len(), 2);
+        for b in &batches {
+            assert!(b.iter().all(|r| r.run.functional == b[0].run.functional));
+        }
+    }
+
+    #[test]
+    fn batched_compile_error_fails_every_member() {
+        let serving = ServingConfig { exec_threads: 2, max_batch: 4 };
+        let mut c = Coordinator::with_serving(
+            ArchConfig::default(),
+            1,
+            serving,
+            Arc::new(PlanCache::new()),
+        );
+        let mut bad = small_run("gcn", true);
+        bad.model = "transformer".into();
+        for i in 0..3 {
+            c.submit(InferenceRequest { id: i, run: bad.clone(), input_seed: i });
+        }
+        let resp = c.drain();
+        assert_eq!(resp.len(), 3);
+        assert!(resp.iter().all(|r| r.error.is_some()));
+    }
+
+    #[test]
+    fn batched_responses_report_batch_size_and_shared_timing() {
+        let serving = ServingConfig { exec_threads: 2, max_batch: 8 };
+        let mut c = Coordinator::with_serving(
+            ArchConfig::default(),
+            1,
+            serving,
+            Arc::new(PlanCache::new()),
+        );
+        for i in 0..5 {
+            c.submit(InferenceRequest { id: i, run: small_run("gat", true), input_seed: i });
+        }
+        let mut resp = c.drain();
+        resp.sort_by_key(|r| r.id);
+        assert_eq!(resp.len(), 5);
+        let expect = Session::prepare(&small_run("gat", true))
+            .unwrap()
+            .simulate(&ArchConfig::default(), false, None, 0)
+            .unwrap()
+            .cycles;
+        for r in &resp {
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert_eq!(r.batch_size, 5);
+            assert_eq!(r.sim_cycles, expect, "batched timing must match the engine");
+            assert!(r.output_checksum.is_some());
+        }
+        // different seeds → different embeddings → different checksums
+        assert_ne!(resp[0].output_checksum, resp[1].output_checksum);
     }
 }

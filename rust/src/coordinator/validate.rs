@@ -62,6 +62,7 @@ pub fn validate_model(
         e2v: true,
         functional: true,
         seed,
+        serving: Default::default(),
     };
     let session = Session::from_graph(model, graph, &run).map_err(|e| format!("session: {e}"))?;
     let x = session.make_input(seed ^ 0x5eed);

@@ -16,14 +16,37 @@
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the compute
 //!   hot-spots (MU-tiled GEMM, GOP scatter/gather, fused ELW).
 //!
-//! The serving pipeline is *compile-once*: `plan::ExecPlan` bundles the
-//! immutable artifacts (tiling + compiled program + weights) produced
-//! once per operating point, and every consumer — simulator, serving
-//! coordinator, benches — runs off a shared `Arc<ExecPlan>` with
-//! per-request state confined to a reusable `sim::ExecScratch`.
+//! The serving pipeline is *compile-once* and *batch-parallel*:
+//! [`plan::ExecPlan`] bundles the immutable artifacts (tiling + compiled
+//! program + weights) produced once per operating point, and every
+//! consumer — simulator, serving coordinator, benches — runs off a
+//! shared `Arc<ExecPlan>` with per-request state confined to reusable
+//! scratches ([`sim::ExecScratch`] for the discrete-event engine,
+//! [`sim::parallel::BatchScratch`] for the tile-parallel batched
+//! functional executor). The coordinator's [`coordinator::BatchPlanner`]
+//! groups queued requests sharing one plan so a batch costs one timing
+//! simulation plus one batched functional pass, with outputs
+//! bit-identical to sequential serving for any thread count.
+//!
+//! Quickstart (see README.md for the full tour):
+//!
+//! ```
+//! use zipper::config::{ArchConfig, RunConfig};
+//! use zipper::coordinator::Session;
+//!
+//! let mut run = RunConfig::default();
+//! run.dataset = "CR".into();
+//! run.scale = 64;
+//! run.feat_in = 8;
+//! run.feat_out = 8;
+//! let session = Session::prepare(&run).unwrap();
+//! let res = session.simulate(&ArchConfig::default(), false, None, 0).unwrap();
+//! assert!(res.cycles > 0);
+//! ```
 //!
 //! See DESIGN.md for the layer and module map (including the split
-//! simulator engine and the ExecPlan pipeline).
+//! simulator engine, the ExecPlan pipeline, and the §3.3 tile-parallel
+//! execution + request batching design).
 
 pub mod area;
 pub mod baselines;

@@ -90,6 +90,12 @@ fn build_configs(args: &Args) -> Result<(ArchConfig, RunConfig), String> {
     if let Some(v) = args.get("threads") {
         run.tiling.threads = v.parse().map_err(|_| "bad --threads")?;
     }
+    if let Some(v) = args.get("exec-threads") {
+        run.serving.exec_threads = v.parse().map_err(|_| "bad --exec-threads")?;
+    }
+    if let Some(v) = args.get("max-batch") {
+        run.serving.max_batch = v.parse().map_err(|_| "bad --max-batch")?;
+    }
     if let Some(v) = args.get("s-streams") {
         arch.s_streams = v.parse().map_err(|_| "bad --s-streams")?;
     }
@@ -222,7 +228,12 @@ fn real_main(argv: &[String]) -> Result<(), String> {
                 .parse()
                 .map_err(|_| "bad --workers")?;
             let models = ["gcn", "gat", "sage", "ggnn", "rgcn"];
-            let mut c = Coordinator::new(arch, workers);
+            let mut c = Coordinator::with_serving(
+                arch,
+                workers,
+                run.serving,
+                std::sync::Arc::new(zipper::plan::PlanCache::new()),
+            );
             let t0 = std::time::Instant::now();
             for i in 0..n {
                 let mut r = run.clone();
@@ -232,7 +243,8 @@ fn real_main(argv: &[String]) -> Result<(), String> {
             let mut resp = c.drain();
             let wall = t0.elapsed().as_secs_f64();
             resp.sort_by_key(|r| r.id);
-            let mut t = Table::new(&["id", "model", "sim cycles", "sim time", "energy", "wall"]);
+            let mut t =
+                Table::new(&["id", "model", "sim cycles", "sim time", "energy", "wall", "batch"]);
             for r in &resp {
                 t.row(&[
                     r.id.to_string(),
@@ -241,6 +253,7 @@ fn real_main(argv: &[String]) -> Result<(), String> {
                     format!("{:.3} ms", r.sim_seconds * 1e3),
                     format!("{:.3} mJ", r.energy_j * 1e3),
                     format!("{:.1} ms", r.wall_seconds * 1e3),
+                    r.batch_size.to_string(),
                 ]);
             }
             print!("{}", t.render());
@@ -249,6 +262,10 @@ fn real_main(argv: &[String]) -> Result<(), String> {
                 "served {n} requests on {workers} workers in {wall:.3}s \
                  ({:.1} req/s), {errors} errors",
                 n as f64 / wall
+            );
+            println!(
+                "batching: max_batch={} exec_threads={}",
+                run.serving.max_batch, run.serving.exec_threads
             );
             let stats = c.cache_stats();
             println!(
@@ -309,10 +326,31 @@ fn real_main(argv: &[String]) -> Result<(), String> {
                  config    show effective configuration (--config FILE to load)\n  \
                  datasets  list the dataset registry (paper Table 3 + HyGCN sets)\n  \
                  compile   print SDE functions (--model gat [--no-e2v])\n  \
-                 run       simulate (--model gcn --dataset SL --scale 64 [--functional]\n            \
-                 [--threads N: parallel tiling at plan compile])\n  \
-                 serve     batch serving demo (--requests 16 --workers 4)\n  \
-                 validate  cross-validate simulator vs PJRT artifacts"
+                 run       simulate one (model, dataset) and print metrics\n  \
+                 serve     serve a request batch through the coordinator pool\n  \
+                 validate  cross-validate simulator vs PJRT artifacts\n            \
+                 (--artifacts DIR, default artifacts/)\n\n\
+                 common flags (config file section in brackets):\n  \
+                 --config FILE        load an INI/TOML-lite config first; flags override\n  \
+                 --model M            gcn | gat | sage | ggnn | rgcn       [run]\n  \
+                 --dataset D          registry id, see `zipper datasets`   [run]\n  \
+                 --scale N            dataset scale divisor (1/N size)     [run]\n  \
+                 --feat F             feature width (sets feat_in=feat_out) [run]\n  \
+                 --no-e2v             disable the E2V compiler optimization\n  \
+                 --functional         also execute on f32 embeddings (checksums)\n  \
+                 --mu N / --vu N      matrix / vector unit counts          [arch]\n  \
+                 --s-streams N / --e-streams N   stream counts             [arch]\n\n\
+                 serving flags (serve; all host-side, never change outputs):\n  \
+                 --requests N         number of inference requests (default 16)\n  \
+                 --workers N          coordinator worker threads (default 4)\n  \
+                 --max-batch N        group up to N queued requests sharing one\n                       \
+                 compiled plan into a single batched pass\n                       \
+                 (default 1 = no batching)            [serving]\n  \
+                 --exec-threads N     tile-parallel functional execution threads\n                       \
+                 per batch; outputs are bit-identical for\n                       \
+                 every value (default 1)              [serving]\n  \
+                 --threads N          OS threads for parallel tiling when a plan\n                       \
+                 is compiled (cold-start latency knob) [tiling]"
             );
             Ok(())
         }

@@ -18,6 +18,7 @@ use crate::compiler::{compile, OptLevel, Program};
 use crate::config::{ArchConfig, RunConfig};
 use crate::graph::{datasets, Graph};
 use crate::models::{ModelKind, WeightStore, NUM_RELATIONS};
+use crate::sim::parallel::BatchScratch;
 use crate::sim::{ExecScratch, SimOptions, SimResult, Simulator, Workload};
 use crate::tiling::{tile, Reorder, Tiling, TilingConfig, TilingMode};
 use crate::util::Rng;
@@ -206,6 +207,25 @@ impl ExecPlan {
         let wl = self.workload(x);
         Simulator::new(arch, &wl, SimOptions { functional, trace_window }).run_with(scratch)
     }
+
+    /// Tile-parallel batched functional execution (no timing): one input
+    /// embedding per request lane, each partition's tiles sharded across
+    /// `exec_threads` OS threads, reductions folded in deterministic tile
+    /// order. Returns one output vector per lane, bit-identical for every
+    /// `exec_threads` value and batch grouping (see [`sim::parallel`]).
+    /// Timing for these lanes comes from a `functional: false`
+    /// [`ExecPlan::simulate_with`] run, which is input-independent.
+    ///
+    /// [`sim::parallel`]: crate::sim::parallel
+    pub fn execute_batch_with(
+        &self,
+        inputs: &[&[f32]],
+        exec_threads: usize,
+        scratch: &mut BatchScratch,
+    ) -> Result<Vec<Vec<f32>>, String> {
+        let wl = self.workload(None);
+        crate::sim::parallel::run_batch(&wl, inputs, exec_threads, scratch)
+    }
 }
 
 /// Snapshot of cache effectiveness counters.
@@ -231,6 +251,29 @@ impl CacheStats {
 /// across workers. Compilation happens outside the map lock so a slow
 /// compile never blocks unrelated lookups; if two threads race on the
 /// same key the first insert wins and the loser's plan is dropped.
+///
+/// # Examples
+///
+/// The second lookup of an identical [`RunConfig`] is a hit and returns
+/// the same shared plan:
+///
+/// ```
+/// use zipper::config::RunConfig;
+/// use zipper::plan::PlanCache;
+///
+/// let cache = PlanCache::new();
+/// let mut run = RunConfig::default();
+/// run.dataset = "CR".into(); // tiny citation-graph stand-in
+/// run.scale = 64;
+/// run.feat_in = 8;
+/// run.feat_out = 8;
+///
+/// let (first, hit_first) = cache.get_or_compile(&run).unwrap();
+/// let (again, hit_again) = cache.get_or_compile(&run).unwrap();
+/// assert!(!hit_first && hit_again);
+/// assert!(std::sync::Arc::ptr_eq(&first, &again));
+/// assert_eq!(cache.stats().entries, 1);
+/// ```
 pub struct PlanCache {
     plans: Mutex<HashMap<PlanKey, Arc<ExecPlan>>>,
     hits: AtomicU64,
@@ -308,6 +351,7 @@ mod tests {
             e2v: true,
             functional: false,
             seed: 3,
+            serving: Default::default(),
         }
     }
 

@@ -78,33 +78,35 @@ struct Slot {
     set: bool,
 }
 
-/// One buffer frame: dense `BufId` → pooled tensor slots.
+/// One buffer frame: dense `BufId` → pooled tensor slots. Shared with
+/// the tile-parallel executor in `sim::parallel`, which owns one frame
+/// per in-flight (tile, lane) pair.
 #[derive(Default)]
 pub(crate) struct Frame {
     slots: Vec<Slot>,
-    allocs: u64,
+    pub(crate) allocs: u64,
 }
 
 impl Frame {
     /// Invalidate every slot, keeping tensors (and capacity) pooled.
-    fn clear(&mut self) {
+    pub(crate) fn clear(&mut self) {
         for s in &mut self.slots {
             s.set = false;
         }
     }
 
-    fn ensure_slots(&mut self, n: usize) {
+    pub(crate) fn ensure_slots(&mut self, n: usize) {
         if self.slots.len() < n {
             self.allocs += 1;
             self.slots.resize_with(n, Slot::default);
         }
     }
 
-    fn get(&self, i: usize) -> Option<&Tensor> {
+    pub(crate) fn get(&self, i: usize) -> Option<&Tensor> {
         self.slots.get(i).and_then(|s| if s.set { Some(&s.t) } else { None })
     }
 
-    fn get_mut(&mut self, i: usize) -> Option<&mut Tensor> {
+    pub(crate) fn get_mut(&mut self, i: usize) -> Option<&mut Tensor> {
         self.slots
             .get_mut(i)
             .and_then(|s| if s.set { Some(&mut s.t) } else { None })
@@ -112,7 +114,7 @@ impl Frame {
 
     /// Mutably borrow slot `i`'s pooled tensor for an in-place rewrite,
     /// marking it live.
-    fn slot_mut(&mut self, i: usize) -> &mut Tensor {
+    pub(crate) fn slot_mut(&mut self, i: usize) -> &mut Tensor {
         self.ensure_slots(i + 1);
         let s = &mut self.slots[i];
         s.set = true;
@@ -122,7 +124,7 @@ impl Frame {
     /// Detach slot `i`'s tensor so an op can compute into it while its
     /// operands stay borrowed from the frames (slot is left unset).
     /// Returns (tensor, was_set); the caller re-attaches via `put`.
-    fn take(&mut self, i: usize) -> (Tensor, bool) {
+    pub(crate) fn take(&mut self, i: usize) -> (Tensor, bool) {
         self.ensure_slots(i + 1);
         let s = &mut self.slots[i];
         let was = s.set;
@@ -130,7 +132,7 @@ impl Frame {
         (std::mem::take(&mut s.t), was)
     }
 
-    fn put(&mut self, i: usize, t: Tensor) {
+    pub(crate) fn put(&mut self, i: usize, t: Tensor) {
         self.ensure_slots(i + 1);
         let s = &mut self.slots[i];
         s.t = t;
@@ -138,7 +140,7 @@ impl Frame {
     }
 }
 
-fn part_slot(buf: BufId) -> usize {
+pub(crate) fn part_slot(buf: BufId) -> usize {
     (buf.0 - PART_FRAME_BASE) as usize
 }
 

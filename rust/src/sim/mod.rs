@@ -17,6 +17,10 @@
 //!     run-local state in the reusable [`ExecScratch`] (pooled buffer
 //!     frames + in-place kernels: warm requests grow the pool by zero,
 //!     see DESIGN.md "Memory discipline");
+//!   * [`parallel`] — the tile-parallel batched functional executor:
+//!     shards each partition's tiles across a scoped thread pool and
+//!     folds the GTHR reductions in deterministic tile order, so outputs
+//!     are bit-identical for any thread count (DESIGN.md §3.3);
 //!   * [`hbm`] — banked memory-controller timing (Ramulator stand-in);
 //!   * [`timing`] — per-instruction cycle counts;
 //!   * [`tensor`] — dense f32 tensors + functional op semantics.
@@ -28,6 +32,7 @@
 mod engine;
 mod exec;
 pub mod hbm;
+pub mod parallel;
 mod scheduler;
 pub mod tensor;
 pub mod timing;

@@ -1,0 +1,669 @@
+//! Tile-parallel, batched functional execution (the serving fast path).
+//!
+//! The discrete-event engine behind [`super::Simulator`] interleaves
+//! functional execution with cycle-accurate stream scheduling, which
+//! makes it inherently sequential. This module is the complementary mode: it
+//! executes a plan *functionally only*, in the canonical partition order,
+//! and exploits the paper's tile-level parallelism on the host — the
+//! tiles of each graph partition are sharded round-robin across a scoped
+//! thread pool, each worker owning its own pooled buffer frames.
+//!
+//! **Determinism contract.** Outputs are bit-identical for every thread
+//! count and every batch grouping:
+//!
+//! * a tile's buffers are a pure function of (input lane, partition
+//!   frame, tile metadata) — workers never write shared state during the
+//!   tile phase;
+//! * the only cross-tile reduction (`GTHR` into the partition
+//!   accumulators) is *deferred*: workers leave each tile's gather
+//!   sources resident in their frames, and the main thread folds them in
+//!   ascending tile order, partition by partition — the same float
+//!   association for 1 thread or N;
+//! * lanes (requests of a batch) never interact, so batch size only
+//!   changes how much tile-metadata traversal is amortized, not the
+//!   arithmetic per lane.
+//!
+//! **Memory discipline.** [`BatchScratch`] follows the PR 2 pooling
+//! rules: frames and tensors stay resident across tiles, partitions,
+//! runs, and plans; [`BatchScratch::alloc_events`] counts growth events
+//! and `rust/tests/parallel_batch.rs` asserts a warm batch adds zero —
+//! per worker thread, via [`BatchScratch::worker_alloc_events`].
+
+use super::exec::{part_slot, Env, Frame};
+use super::tensor::{self, Tensor};
+use super::types::Workload;
+use crate::compiler::AccKind;
+use crate::isa::{BufId, Dim, DimCtx, Instr, LdTarget, StreamClass};
+use crate::tiling::{Partition, Tile, Tiling};
+
+/// Per-request ("lane") state of a batched run: permuted input/output
+/// images plus the partition frame the lane's accumulators live in.
+#[derive(Default)]
+struct LaneState {
+    x_tiled: Vec<f32>,
+    out_tiled: Vec<f32>,
+    part_frame: Frame,
+    allocs: u64,
+}
+
+impl LaneState {
+    /// Permute the caller's input embeddings into tiled vertex order.
+    fn init_input(&mut self, tiling: &Tiling, x: &[f32], feat_in: u32) -> Result<(), String> {
+        let n = tiling.num_vertices as usize;
+        let f = feat_in as usize;
+        if x.len() != n * f {
+            return Err(format!(
+                "input embedding size {} != |V|*feat_in = {}",
+                x.len(),
+                n * f
+            ));
+        }
+        if n * f > self.x_tiled.capacity() {
+            self.allocs += 1;
+        }
+        self.x_tiled.resize(n * f, 0.0);
+        if f > 0 {
+            for (old, row) in x.chunks_exact(f).enumerate() {
+                let new = tiling.perm[old] as usize;
+                self.x_tiled[new * f..(new + 1) * f].copy_from_slice(row);
+            }
+        }
+        Ok(())
+    }
+
+    fn prepare_output(&mut self, num_vertices: u32, feat_out: u32) {
+        let len = num_vertices as usize * feat_out as usize;
+        if len > self.out_tiled.capacity() {
+            self.allocs += 1;
+        }
+        self.out_tiled.clear();
+        self.out_tiled.resize(len, 0.0);
+    }
+
+    /// Reset the partition frame and init accumulators in place.
+    fn begin_partition(&mut self, acc_meta: &[(usize, AccKind, u32)], part_dst: u32) {
+        self.part_frame.clear();
+        for &(slot, kind, cols) in acc_meta {
+            let init = match kind {
+                AccKind::Sum => 0.0,
+                AccKind::Max => f32::NEG_INFINITY,
+            };
+            let grew = self.part_frame.slot_mut(slot).reset_filled(part_dst, cols, init);
+            self.allocs += grew as u64;
+        }
+    }
+
+    /// Post-fold boundary: neutralize untouched Max accumulators.
+    fn fixup_max_accs(&mut self, acc_meta: &[(usize, AccKind, u32)]) {
+        for &(slot, kind, _) in acc_meta {
+            if kind == AccKind::Max {
+                if let Some(t) = self.part_frame.get_mut(slot) {
+                    for v in &mut t.data {
+                        if *v == f32::NEG_INFINITY {
+                            *v = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Commit the partition's output rows into the tiled output image.
+    fn commit_partition(&mut self, env: &Env, part: &Partition) -> Result<(), String> {
+        let t = self
+            .part_frame
+            .get(part_slot(env.program.output_buf))
+            .ok_or("output buffer not materialized")?;
+        if (t.rows, t.cols) != (part.num_dst(), env.feat_out) {
+            return Err(format!(
+                "output buffer shape {}x{} != partition {}x{}",
+                t.rows,
+                t.cols,
+                part.num_dst(),
+                env.feat_out
+            ));
+        }
+        let base = part.dst_start as usize * env.feat_out as usize;
+        self.out_tiled[base..base + t.data.len()].copy_from_slice(&t.data);
+        Ok(())
+    }
+
+    /// Un-permute the tiled output back to original vertex order. The
+    /// returned vector is caller-owned (excluded from `alloc_events`).
+    fn take_output(&self, tiling: &Tiling, feat_out: u32) -> Vec<f32> {
+        let n = tiling.num_vertices as usize;
+        let f = feat_out as usize;
+        let mut out = vec![0.0f32; n * f];
+        for new in 0..n {
+            let old = tiling.inv_perm[new] as usize;
+            out[old * f..(old + 1) * f].copy_from_slice(&self.out_tiled[new * f..(new + 1) * f]);
+        }
+        out
+    }
+
+    fn alloc_events(&self) -> u64 {
+        self.allocs + self.part_frame.allocs
+    }
+}
+
+/// One exec thread's pooled tile frames: worker `w` of `T` owns the
+/// frames of tiles `w, w+T, w+2T, …` of the current partition, laid out
+/// `[tile slot][lane]`. The assignment is static so a worker's pool size
+/// is a pure function of (plan, threads, lanes) — warm batches grow it
+/// by zero.
+#[derive(Default)]
+struct WorkerScratch {
+    frames: Vec<Frame>,
+    allocs: u64,
+}
+
+impl WorkerScratch {
+    fn alloc_events(&self) -> u64 {
+        self.allocs + self.frames.iter().map(|f| f.allocs).sum::<u64>()
+    }
+}
+
+/// Reusable state of the batched tile-parallel executor. Create once per
+/// serving worker and pass to every [`run_batch`] call; lanes, worker
+/// frames, and tensors are recycled between batches (and across plans).
+#[derive(Default)]
+pub struct BatchScratch {
+    lanes: Vec<LaneState>,
+    workers: Vec<WorkerScratch>,
+    acc_meta: Vec<(usize, AccKind, u32)>,
+    allocs: u64,
+}
+
+impl BatchScratch {
+    pub fn new() -> BatchScratch {
+        BatchScratch::default()
+    }
+
+    /// Pool-growth events since this scratch was created, summed over
+    /// lanes and exec-thread workers (monotonic; a warm batch of the
+    /// same shape adds 0).
+    pub fn alloc_events(&self) -> u64 {
+        self.allocs
+            + self.lanes.iter().map(|l| l.alloc_events()).sum::<u64>()
+            + self.workers.iter().map(|w| w.alloc_events()).sum::<u64>()
+    }
+
+    /// Per-exec-thread pool-growth events (index = worker id). Warm
+    /// batches must not move any entry.
+    pub fn worker_alloc_events(&self) -> Vec<u64> {
+        self.workers.iter().map(|w| w.alloc_events()).collect()
+    }
+
+    /// Pre-size every pool from the plan so a warm batch of the same
+    /// (plan, lanes, threads) shape does zero growth.
+    fn reserve(&mut self, env: &Env, nlanes: usize, threads: usize) {
+        if nlanes > self.lanes.capacity() {
+            self.allocs += 1;
+        }
+        while self.lanes.len() < nlanes {
+            self.lanes.push(LaneState::default());
+        }
+        let part_slots = env.program.part_bufs as usize;
+        for lane in self.lanes.iter_mut().take(nlanes) {
+            lane.part_frame.ensure_slots(part_slots);
+        }
+        if threads > self.workers.capacity() {
+            self.allocs += 1;
+        }
+        while self.workers.len() < threads {
+            self.workers.push(WorkerScratch::default());
+        }
+        let max_tiles = env
+            .tiling
+            .partitions
+            .iter()
+            .map(|p| p.tiles.len())
+            .max()
+            .unwrap_or(0);
+        let frames_needed = max_tiles.div_ceil(threads) * nlanes;
+        let tile_slots = env.program.tile_bufs as usize;
+        for ws in self.workers.iter_mut().take(threads) {
+            if frames_needed > ws.frames.capacity() {
+                ws.allocs += 1;
+            }
+            while ws.frames.len() < frames_needed {
+                ws.frames.push(Frame::default());
+            }
+            for f in ws.frames.iter_mut() {
+                f.ensure_slots(tile_slots);
+            }
+        }
+        if env.program.accumulators.len() > self.acc_meta.capacity() {
+            self.allocs += 1;
+        }
+        self.acc_meta.clear();
+        for &(buf, kind, cols) in &env.program.accumulators {
+            let cols = match cols {
+                Dim::FeatIn => env.feat_in,
+                Dim::FeatOut => env.feat_out,
+                Dim::Const(c) => c,
+                _ => env.feat_out,
+            };
+            self.acc_meta.push((part_slot(buf), kind, cols));
+        }
+    }
+}
+
+/// Execute `wl`'s program functionally for a batch of input embeddings
+/// (one lane per entry of `inputs`, original vertex order), sharding each
+/// partition's tiles across `exec_threads` OS threads. Returns one output
+/// embedding vector per lane, bit-identical for every `exec_threads`
+/// value and batch grouping (see the module docs for the argument).
+///
+/// `wl.x` is ignored — inputs arrive per lane. Timing is not modeled
+/// here; pair with a `functional: false` [`super::Simulator`] run (which
+/// is input-independent) when latency numbers are needed.
+pub fn run_batch(
+    wl: &Workload,
+    inputs: &[&[f32]],
+    exec_threads: usize,
+    scratch: &mut BatchScratch,
+) -> Result<Vec<Vec<f32>>, String> {
+    let env = Env::of(wl);
+    let nlanes = inputs.len();
+    if nlanes == 0 {
+        return Ok(Vec::new());
+    }
+    let threads = exec_threads.max(1);
+    scratch.reserve(&env, nlanes, threads);
+    let BatchScratch { lanes, workers, acc_meta, .. } = scratch;
+    for (lane, x) in lanes.iter_mut().zip(inputs) {
+        lane.init_input(env.tiling, x, env.feat_in)?;
+        lane.prepare_output(env.tiling.num_vertices, env.feat_out);
+    }
+
+    // The compiler's dFunction layout (see compiler docs): FCH.PTT;
+    // <pre ops>; SIGNAL.S; WAIT; <post ops incl. ST.DST>; UPD.PTT; JUMP.
+    let d = &env.program.d_func;
+    let sig = d
+        .iter()
+        .position(|i| matches!(i, Instr::Signal { class: StreamClass::S }))
+        .ok_or("dFunction missing SIGNAL.S")?;
+    let wait = d
+        .iter()
+        .position(|i| matches!(i, Instr::Wait { .. }))
+        .ok_or("dFunction missing WAIT")?;
+    let upd = d
+        .iter()
+        .position(|i| matches!(i, Instr::UpdPtt))
+        .ok_or("dFunction missing UPD.PTT")?;
+    let d_pre = &d[1..sig];
+    let d_post = &d[wait + 1..upd];
+
+    for part in &env.tiling.partitions {
+        let pdims = DimCtx {
+            tile_src: 0,
+            tile_edges: 0,
+            part_dst: part.num_dst(),
+            feat_in: env.feat_in,
+            feat_out: env.feat_out,
+        };
+        for lane in lanes.iter_mut().take(nlanes) {
+            lane.begin_partition(acc_meta, part.num_dst());
+            for instr in d_pre {
+                exec_part_instr(&env, part, &pdims, lane, instr)?;
+            }
+        }
+
+        let tiles = &part.tiles;
+        if !tiles.is_empty() {
+            // ---- tile phase: round-robin shard across exec threads ----
+            let lane_view: &[LaneState] = &lanes[..nlanes];
+            if threads == 1 || tiles.len() == 1 {
+                worker_pass(&env, lane_view, part, 1, 0, &mut workers[0])?;
+            } else {
+                let env_ref = &env;
+                let results: Vec<Result<(), String>> = std::thread::scope(|s| {
+                    let handles: Vec<_> = workers
+                        .iter_mut()
+                        .take(threads)
+                        .enumerate()
+                        .map(|(w, ws)| {
+                            s.spawn(move || worker_pass(env_ref, lane_view, part, threads, w, ws))
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().unwrap_or_else(|_| Err("tile worker panicked".into())))
+                        .collect()
+                });
+                for r in results {
+                    r?;
+                }
+            }
+
+            // ---- deterministic reduction: ascending tile order ----
+            // (this is what makes outputs independent of the thread
+            // count: the gather fold order is fixed here, not by the
+            // workers' completion order)
+            let stride = if threads == 1 || tiles.len() == 1 { 1 } else { threads };
+            for (t_idx, t_meta) in tiles.iter().enumerate() {
+                let ws = &workers[t_idx % stride];
+                let base = (t_idx / stride) * nlanes;
+                for instr in &env.program.e_func {
+                    if let Instr::Gthr { reduce, src, dst, .. } = instr {
+                        for (b, lane) in lanes.iter_mut().take(nlanes).enumerate() {
+                            let frame = &ws.frames[base + b];
+                            let e = frame
+                                .get(src.0 as usize)
+                                .ok_or_else(|| format!("gather source b{} unset", src.0))?;
+                            let acc = lane
+                                .part_frame
+                                .get_mut(part_slot(*dst))
+                                .ok_or_else(|| format!("accumulator b{} unset", dst.0))?;
+                            tensor::gather_rows(*reduce, e, &t_meta.edges, acc);
+                        }
+                    }
+                }
+            }
+        }
+
+        for lane in lanes.iter_mut().take(nlanes) {
+            lane.fixup_max_accs(acc_meta);
+            for instr in d_post {
+                exec_part_instr(&env, part, &pdims, lane, instr)?;
+            }
+            lane.commit_partition(&env, part)?;
+        }
+    }
+
+    Ok(lanes
+        .iter()
+        .take(nlanes)
+        .map(|l| l.take_output(env.tiling, env.feat_out))
+        .collect())
+}
+
+/// One worker's share of a partition's tile phase: tiles
+/// `first, first+stride, …`, each executed for every lane into the
+/// worker's own pooled frames.
+fn worker_pass(
+    env: &Env,
+    lanes: &[LaneState],
+    part: &Partition,
+    stride: usize,
+    first: usize,
+    ws: &mut WorkerScratch,
+) -> Result<(), String> {
+    let nlanes = lanes.len();
+    let mut t_idx = first;
+    let mut slot = 0usize;
+    while t_idx < part.tiles.len() {
+        let t_meta = &part.tiles[t_idx];
+        for (b, lane) in lanes.iter().enumerate() {
+            let grew = exec_tile(env, lane, part, t_meta, &mut ws.frames[slot * nlanes + b])?;
+            ws.allocs += grew;
+        }
+        t_idx += stride;
+        slot += 1;
+    }
+    Ok(())
+}
+
+/// Execute one tile's sFunction + eFunction bodies for one lane,
+/// *excluding* the GTHR reductions (deferred to the ordered fold). Reads
+/// the lane's partition frame and input image; writes only `frame`.
+/// Returns the number of pool-growth events.
+fn exec_tile(
+    env: &Env,
+    lane: &LaneState,
+    part: &Partition,
+    t_meta: &Tile,
+    frame: &mut Frame,
+) -> Result<u64, String> {
+    frame.clear();
+    let mut grew: u64 = 0;
+    let dims = DimCtx {
+        tile_src: t_meta.num_src(),
+        tile_edges: t_meta.num_edges(),
+        part_dst: part.num_dst(),
+        feat_in: env.feat_in,
+        feat_out: env.feat_out,
+    };
+    for instr in &env.program.s_func {
+        match instr {
+            Instr::Wait { .. } | Instr::FchTile { .. } | Instr::Signal { .. } | Instr::Jump(_) => {}
+            Instr::Ld { target: LdTarget::Src, dst, .. } => {
+                grew += load_src(lane, t_meta, env.feat_in, frame, *dst)?;
+            }
+            other => grew += exec_tile_compute(env, lane, t_meta, &dims, frame, other)?,
+        }
+    }
+    for instr in &env.program.e_func {
+        match instr {
+            Instr::Wait { .. } | Instr::ChkPtt | Instr::Jump(_) => {}
+            // the edge list already lives in the Tile struct; LD.EDGE
+            // is timing-only
+            Instr::Ld { target: LdTarget::Edge, .. } => {}
+            // cross-tile reduction: deferred to the ordered fold
+            Instr::Gthr { .. } => {}
+            other => grew += exec_tile_compute(env, lane, t_meta, &dims, frame, other)?,
+        }
+    }
+    Ok(grew)
+}
+
+/// LD.SRC into a tile frame: gather the tile's source-vertex rows from
+/// the lane's permuted input image (contiguous blocks use one memcpy).
+fn load_src(
+    lane: &LaneState,
+    t_meta: &Tile,
+    feat_in: u32,
+    frame: &mut Frame,
+    dst: BufId,
+) -> Result<u64, String> {
+    let (mut t, _) = take_tile_dst(frame, dst)?;
+    let grew = t.reshape(t_meta.num_src(), feat_in);
+    let f = feat_in as usize;
+    let vs = &t_meta.src_vertices;
+    if let (Some(&first), Some(&last)) = (vs.first(), vs.last()) {
+        if (last - first) as usize + 1 == vs.len() {
+            let base = first as usize * f;
+            t.data.copy_from_slice(&lane.x_tiled[base..base + vs.len() * f]);
+        } else if f > 0 {
+            for (row, &v) in t.data.chunks_exact_mut(f).zip(vs) {
+                row.copy_from_slice(&lane.x_tiled[v as usize * f..(v as usize + 1) * f]);
+            }
+        }
+    }
+    frame.put(dst.0 as usize, t);
+    Ok(grew as u64)
+}
+
+/// Read an operand of a tile-phase instruction: tile buffers come from
+/// the worker's frame, partition buffers (LD.DST data, dFunction pre-op
+/// results) from the lane's read-only partition frame.
+fn read_buf<'f>(lane: &'f LaneState, frame: &'f Frame, buf: BufId) -> Result<&'f Tensor, String> {
+    if buf.is_partition_frame() {
+        lane.part_frame
+            .get(part_slot(buf))
+            .ok_or_else(|| format!("partition buffer b{} unset", buf.0))
+    } else {
+        frame
+            .get(buf.0 as usize)
+            .ok_or_else(|| format!("tile buffer b{} unset", buf.0))
+    }
+}
+
+/// Detach a tile-frame destination slot. Writing the shared partition
+/// frame from the (parallel) tile phase would be a data race, so it is a
+/// hard error — the compiler routes all cross-tile writes through GTHR.
+fn take_tile_dst(frame: &mut Frame, buf: BufId) -> Result<(Tensor, bool), String> {
+    if buf.is_partition_frame() {
+        return Err(format!(
+            "tile phase cannot write partition buffer b{} (only GTHR crosses tiles)",
+            buf.0
+        ));
+    }
+    Ok(frame.take(buf.0 as usize))
+}
+
+/// Functional semantics of one tile-phase compute instruction, mirroring
+/// `FuncState::exec_compute`: detach the destination's pooled tensor,
+/// compute into it in place, re-attach. Returns pool-growth events.
+fn exec_tile_compute(
+    env: &Env,
+    lane: &LaneState,
+    t_meta: &Tile,
+    dims: &DimCtx,
+    frame: &mut Frame,
+    instr: &Instr,
+) -> Result<u64, String> {
+    let rd = |d: Dim| d.resolve(dims);
+    let (dst, out, grew) = match instr {
+        Instr::ElwU { op, src, dst, .. } => {
+            let (mut out, _) = take_tile_dst(frame, *dst)?;
+            let x = read_buf(lane, frame, *src)?;
+            let grew = tensor::apply_unary(*op, x, &mut out);
+            (*dst, out, grew)
+        }
+        Instr::ElwB { op, a, b, dst, .. } => {
+            let (mut out, _) = take_tile_dst(frame, *dst)?;
+            let at = read_buf(lane, frame, *a)?;
+            let bt = read_buf(lane, frame, *b)?;
+            let grew = tensor::apply_binary(*op, at, bt, &mut out);
+            (*dst, out, grew)
+        }
+        Instr::ElwBcast { op, a, vec, dst, .. } => {
+            let (mut out, _) = take_tile_dst(frame, *dst)?;
+            let at = read_buf(lane, frame, *a)?;
+            let vt = read_buf(lane, frame, *vec)?;
+            let grew = tensor::apply_bcast(*op, at, vt, &mut out);
+            (*dst, out, grew)
+        }
+        Instr::Gemv { src, weight: w, dst, .. } => {
+            let (mut out, _) = take_tile_dst(frame, *dst)?;
+            let x = read_buf(lane, frame, *src)?;
+            let grew = tensor::gemv(x, &env.weights.tensors[w.0 as usize].data, &mut out);
+            (*dst, out, grew)
+        }
+        Instr::Gemm { src, weight: w, dst, k, n, accumulate, .. } => {
+            let (mut out, was_set) = take_tile_dst(frame, *dst)?;
+            if *accumulate && !was_set {
+                return Err(format!("GEMM accumulate into unset buffer b{}", dst.0));
+            }
+            let x = read_buf(lane, frame, *src)?;
+            let grew = tensor::matmul(
+                x,
+                &env.weights.tensors[w.0 as usize].data,
+                rd(*k),
+                rd(*n),
+                &mut out,
+                *accumulate,
+            );
+            (*dst, out, grew)
+        }
+        Instr::Bmm { src, weights, dst, k, n, .. } => {
+            let (mut out, _) = take_tile_dst(frame, *dst)?;
+            let x = read_buf(lane, frame, *src)?;
+            let grew = tensor::bmm_by_type(
+                x,
+                &env.weights.tensors[weights.0 as usize].data,
+                rd(*k),
+                rd(*n),
+                t_meta.etypes.as_deref(),
+                &mut out,
+            );
+            (*dst, out, grew)
+        }
+        Instr::Sctr { dir, src, dst, cols } => {
+            let (mut out, _) = take_tile_dst(frame, *dst)?;
+            let v = read_buf(lane, frame, *src)?;
+            let grew = tensor::scatter_rows(v, &t_meta.edges, *dir, rd(*cols), &mut out);
+            (*dst, out, grew)
+        }
+        other => return Err(format!("unexpected instr in tile phase: {other}")),
+    };
+    frame.put(dst.0 as usize, out);
+    Ok(grew as u64)
+}
+
+fn take_part(lane: &mut LaneState, buf: BufId) -> Result<(Tensor, bool), String> {
+    if !buf.is_partition_frame() {
+        return Err(format!("dFunction write to tile buffer b{}", buf.0));
+    }
+    Ok(lane.part_frame.take(part_slot(buf)))
+}
+
+fn get_part(lane: &LaneState, buf: BufId) -> Result<&Tensor, String> {
+    if !buf.is_partition_frame() {
+        return Err(format!("dFunction read of tile buffer b{}", buf.0));
+    }
+    lane.part_frame
+        .get(part_slot(buf))
+        .ok_or_else(|| format!("partition buffer b{} unset", buf.0))
+}
+
+/// Functional semantics of one dFunction instruction (pre or post
+/// phase): LD.DST plus partition-frame computes. ST.DST is a no-op here —
+/// the commit happens once per partition via `LaneState::commit_partition`.
+fn exec_part_instr(
+    env: &Env,
+    part: &Partition,
+    dims: &DimCtx,
+    lane: &mut LaneState,
+    instr: &Instr,
+) -> Result<(), String> {
+    let rd = |d: Dim| d.resolve(dims);
+    let (dst, out, grew) = match instr {
+        Instr::Ld { target: LdTarget::Dst, dst, .. } => {
+            let (mut t, _) = take_part(lane, *dst)?;
+            let grew = t.reshape(part.num_dst(), env.feat_in);
+            let base = part.dst_start as usize * env.feat_in as usize;
+            t.data.copy_from_slice(&lane.x_tiled[base..base + t.data.len()]);
+            (*dst, t, grew)
+        }
+        Instr::St { .. } => return Ok(()),
+        Instr::ElwU { op, src, dst, .. } => {
+            let (mut out, _) = take_part(lane, *dst)?;
+            let x = get_part(lane, *src)?;
+            let grew = tensor::apply_unary(*op, x, &mut out);
+            (*dst, out, grew)
+        }
+        Instr::ElwB { op, a, b, dst, .. } => {
+            let (mut out, _) = take_part(lane, *dst)?;
+            let at = get_part(lane, *a)?;
+            let bt = get_part(lane, *b)?;
+            let grew = tensor::apply_binary(*op, at, bt, &mut out);
+            (*dst, out, grew)
+        }
+        Instr::ElwBcast { op, a, vec, dst, .. } => {
+            let (mut out, _) = take_part(lane, *dst)?;
+            let at = get_part(lane, *a)?;
+            let vt = get_part(lane, *vec)?;
+            let grew = tensor::apply_bcast(*op, at, vt, &mut out);
+            (*dst, out, grew)
+        }
+        Instr::Gemv { src, weight: w, dst, .. } => {
+            let (mut out, _) = take_part(lane, *dst)?;
+            let x = get_part(lane, *src)?;
+            let grew = tensor::gemv(x, &env.weights.tensors[w.0 as usize].data, &mut out);
+            (*dst, out, grew)
+        }
+        Instr::Gemm { src, weight: w, dst, k, n, accumulate, .. } => {
+            let (mut out, was_set) = take_part(lane, *dst)?;
+            if *accumulate && !was_set {
+                return Err(format!("GEMM accumulate into unset buffer b{}", dst.0));
+            }
+            let x = get_part(lane, *src)?;
+            let grew = tensor::matmul(
+                x,
+                &env.weights.tensors[w.0 as usize].data,
+                rd(*k),
+                rd(*n),
+                &mut out,
+                *accumulate,
+            );
+            (*dst, out, grew)
+        }
+        other => return Err(format!("unexpected instr in dFunction phase: {other}")),
+    };
+    lane.part_frame.put(part_slot(dst), out);
+    lane.allocs += grew as u64;
+    Ok(())
+}

@@ -26,6 +26,7 @@ fn run_cfg(model: &str, dataset: &str) -> RunConfig {
         e2v: true,
         functional: false,
         seed: 11,
+        serving: Default::default(),
     }
 }
 
@@ -187,6 +188,7 @@ mod properties {
                     e2v: true,
                     functional: true,
                     seed: 9,
+                    serving: Default::default(),
                 };
                 let session =
                     Session::from_graph(ModelKind::Gcn, g.clone(), &cfg).unwrap();
@@ -234,6 +236,7 @@ mod properties {
                         e2v,
                         functional: true,
                         seed: 3,
+                        serving: Default::default(),
                     };
                     let s = Session::from_graph(m, g.clone(), &cfg).unwrap();
                     let x = s.make_input(21);

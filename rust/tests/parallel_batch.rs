@@ -1,0 +1,235 @@
+//! Determinism, equivalence, and allocation tests for the tile-parallel
+//! batched functional executor (`sim::parallel`) and the coordinator's
+//! batched serving path: outputs must be bit-identical to the sequential
+//! path for every (exec_threads, max_batch) combination, batched timing
+//! must match the engine, and warm batches must not grow any worker
+//! thread's pool.
+
+use std::sync::Arc;
+use zipper::config::{ArchConfig, RunConfig, ServingConfig};
+use zipper::coordinator::{Coordinator, InferenceRequest, InferenceResponse};
+use zipper::plan::{ExecPlan, PlanCache};
+use zipper::sim::parallel::BatchScratch;
+use zipper::tiling::{Reorder, TilingConfig, TilingMode};
+
+const MODELS: [&str; 5] = ["gcn", "gat", "sage", "ggnn", "rgcn"];
+const THREADS: [usize; 3] = [1, 2, 4];
+const BATCHES: [usize; 3] = [1, 3, 8];
+
+fn run_cfg(model: &str) -> RunConfig {
+    RunConfig {
+        model: model.into(),
+        dataset: "CR".into(),
+        scale: 16,
+        feat_in: 16,
+        feat_out: 16,
+        tiling: TilingConfig {
+            dst_part: 64,
+            src_part: 64,
+            mode: TilingMode::Sparse,
+            reorder: Reorder::InDegree,
+            threads: 1,
+        },
+        e2v: true,
+        functional: true,
+        seed: 3,
+        serving: Default::default(),
+    }
+}
+
+#[test]
+fn tile_parallel_outputs_bit_identical_for_all_threads_and_batches() {
+    for m in MODELS {
+        let plan = ExecPlan::compile(&run_cfg(m)).unwrap();
+        let inputs: Vec<Vec<f32>> = (0..8).map(|s| plan.make_input(s)).collect();
+        // the sequential path: one lane at a time, one exec thread
+        let mut seq = BatchScratch::new();
+        let expected: Vec<Vec<f32>> = inputs
+            .iter()
+            .map(|x| {
+                plan.execute_batch_with(&[x.as_slice()], 1, &mut seq)
+                    .unwrap()
+                    .remove(0)
+            })
+            .collect();
+        for threads in THREADS {
+            for batch in BATCHES {
+                let mut scratch = BatchScratch::new();
+                let mut got: Vec<Vec<f32>> = Vec::new();
+                for chunk in inputs.chunks(batch) {
+                    let lanes: Vec<&[f32]> = chunk.iter().map(|v| v.as_slice()).collect();
+                    got.extend(plan.execute_batch_with(&lanes, threads, &mut scratch).unwrap());
+                }
+                assert_eq!(got.len(), expected.len());
+                for (i, (g, e)) in got.iter().zip(&expected).enumerate() {
+                    assert_eq!(g, e, "{m} threads={threads} batch={batch} lane={i}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_executor_matches_engine_functional_closely() {
+    // the canonical tile-ordered reduction uses a different float
+    // association than the discrete-event engine's schedule-dependent
+    // gather order, so this is a tolerance check, not bit equality
+    let arch = ArchConfig::default();
+    for m in MODELS {
+        let plan = ExecPlan::compile(&run_cfg(m)).unwrap();
+        let x = plan.make_input(5);
+        let engine = plan
+            .simulate(&arch, true, Some(&x), 0)
+            .unwrap()
+            .output
+            .unwrap();
+        let mut scratch = BatchScratch::new();
+        let par = plan
+            .execute_batch_with(&[&x], 2, &mut scratch)
+            .unwrap()
+            .remove(0);
+        assert_eq!(engine.len(), par.len(), "{m}");
+        for (i, (a, b)) in engine.iter().zip(&par).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-3,
+                "{m} row {i}: engine {a} vs parallel {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn bad_input_length_is_reported() {
+    let plan = ExecPlan::compile(&run_cfg("gcn")).unwrap();
+    let short = vec![0.0f32; 3];
+    let mut scratch = BatchScratch::new();
+    let err = plan
+        .execute_batch_with(&[short.as_slice()], 2, &mut scratch)
+        .unwrap_err();
+    assert!(err.contains("input embedding size"), "{err}");
+    // empty batches are a no-op, not an error
+    assert!(plan
+        .execute_batch_with(&[], 2, &mut scratch)
+        .unwrap()
+        .is_empty());
+}
+
+#[test]
+fn warm_batches_do_not_grow_any_worker_pool() {
+    for m in MODELS {
+        let plan = ExecPlan::compile(&run_cfg(m)).unwrap();
+        let inputs: Vec<Vec<f32>> = (0..3).map(|s| plan.make_input(s)).collect();
+        let lanes: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let mut scratch = BatchScratch::new();
+        plan.execute_batch_with(&lanes, 4, &mut scratch).unwrap();
+        let cold_total = scratch.alloc_events();
+        let cold_per_worker = scratch.worker_alloc_events();
+        assert!(cold_total > 0, "{m}: the cold batch must size the pools");
+        for _ in 0..3 {
+            plan.execute_batch_with(&lanes, 4, &mut scratch).unwrap();
+        }
+        assert_eq!(
+            scratch.alloc_events(),
+            cold_total,
+            "{m}: warm batches must not grow the pool"
+        );
+        assert_eq!(
+            scratch.worker_alloc_events(),
+            cold_per_worker,
+            "{m}: warm batches must not grow any worker thread's pool"
+        );
+    }
+}
+
+#[test]
+fn one_scratch_serves_all_plans_bit_identically() {
+    // cross-plan pooling hazard: run all five models through ONE batch
+    // scratch and compare against fresh-scratch outputs
+    let plans: Vec<ExecPlan> = MODELS
+        .iter()
+        .map(|m| ExecPlan::compile(&run_cfg(m)).unwrap())
+        .collect();
+    let mut shared = BatchScratch::new();
+    for round in 0..2u64 {
+        for (plan, m) in plans.iter().zip(MODELS) {
+            let inputs: Vec<Vec<f32>> = (0..3).map(|s| plan.make_input(round + s)).collect();
+            let lanes: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+            let mut fresh = BatchScratch::new();
+            let want = plan.execute_batch_with(&lanes, 2, &mut fresh).unwrap();
+            let got = plan.execute_batch_with(&lanes, 2, &mut shared).unwrap();
+            assert_eq!(got, want, "{m} round {round}");
+        }
+    }
+}
+
+fn serve(
+    serving: ServingConfig,
+    cache: &Arc<PlanCache>,
+    reqs: &[InferenceRequest],
+) -> Vec<InferenceResponse> {
+    let mut c =
+        Coordinator::with_serving(ArchConfig::default(), 2, serving, Arc::clone(cache));
+    for r in reqs {
+        c.submit(r.clone());
+    }
+    let mut resp = c.drain();
+    resp.sort_by_key(|r| r.id);
+    resp
+}
+
+#[test]
+fn batched_serving_bit_identical_to_sequential_for_all_combinations() {
+    // two plans interleaved so the BatchPlanner actually has to group
+    let reqs: Vec<InferenceRequest> = (0..8)
+        .map(|i| InferenceRequest {
+            id: i,
+            run: run_cfg(if i % 2 == 0 { "gcn" } else { "gat" }),
+            input_seed: i,
+        })
+        .collect();
+    let cache = Arc::new(PlanCache::new());
+    let sequential = serve(ServingConfig { exec_threads: 1, max_batch: 1 }, &cache, &reqs);
+    for r in &sequential {
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(r.output_checksum.is_some());
+    }
+    for threads in THREADS {
+        for batch in BATCHES {
+            let serving =
+                ServingConfig { exec_threads: threads as u32, max_batch: batch as u32 };
+            let got = serve(serving, &cache, &reqs);
+            assert_eq!(got.len(), sequential.len());
+            for (g, s) in got.iter().zip(&sequential) {
+                assert!(g.error.is_none(), "{:?}", g.error);
+                assert_eq!(
+                    g.output_checksum, s.output_checksum,
+                    "threads={threads} batch={batch} id={}",
+                    g.id
+                );
+                assert_eq!(g.sim_cycles, s.sim_cycles, "timing must not depend on batching");
+                assert!(g.batch_size >= 1 && g.batch_size <= batch);
+            }
+        }
+    }
+}
+
+#[test]
+fn all_models_batch_identically_through_the_coordinator() {
+    // every model: 6 same-plan functional requests batched 3-at-a-time
+    // across 4 exec threads must reproduce the sequential checksums
+    for m in MODELS {
+        let reqs: Vec<InferenceRequest> = (0..6)
+            .map(|i| InferenceRequest { id: i, run: run_cfg(m), input_seed: i % 2 })
+            .collect();
+        let cache = Arc::new(PlanCache::new());
+        let seq = serve(ServingConfig { exec_threads: 1, max_batch: 1 }, &cache, &reqs);
+        let bat = serve(ServingConfig { exec_threads: 4, max_batch: 3 }, &cache, &reqs);
+        for (s, b) in seq.iter().zip(&bat) {
+            assert!(s.error.is_none() && b.error.is_none());
+            assert_eq!(s.output_checksum, b.output_checksum, "{m} id={}", s.id);
+        }
+        // same input seed ⇒ same checksum, regardless of batch position
+        assert_eq!(bat[0].output_checksum, bat[2].output_checksum, "{m}");
+        assert_eq!(bat[1].output_checksum, bat[3].output_checksum, "{m}");
+    }
+}

@@ -26,6 +26,7 @@ fn run_cfg(model: &str, seed: u64) -> RunConfig {
         e2v: true,
         functional: true,
         seed,
+        serving: Default::default(),
     }
 }
 

@@ -27,6 +27,7 @@ fn run_cfg(model: &str) -> RunConfig {
         e2v: true,
         functional: true,
         seed: 3,
+        serving: Default::default(),
     }
 }
 
