@@ -216,7 +216,7 @@ fn main() {
                 if accumulate {
                     new_out.data.fill(0.0);
                 }
-                tensor::matmul(&x, &w, k, n, &mut new_out, accumulate);
+                tensor::matmul(&x, &w, k, n, &mut new_out, accumulate).unwrap();
                 new_out.data[0]
             },
             reps(20),
@@ -224,7 +224,7 @@ fn main() {
         // differential check: blocked kernel must match the reference
         matmul_reference(&x, &w, k, n, &mut ref_out);
         new_out.data.fill(0.0);
-        tensor::matmul(&x, &w, k, n, &mut new_out, accumulate);
+        tensor::matmul(&x, &w, k, n, &mut new_out, accumulate).unwrap();
         let max_err = ref_out
             .data
             .iter()
@@ -270,7 +270,7 @@ fn main() {
         let mut out = Tensor::default();
         let (dt, _) = time(
             || {
-                tensor::bmm_by_type(&x, &wset, k, n, Some(&etypes), &mut out);
+                tensor::bmm_by_type(&x, &wset, k, n, Some(&etypes), &mut out).unwrap();
                 out.data[0]
             },
             reps(5),
@@ -296,7 +296,7 @@ fn main() {
         let mut out = Tensor::default();
         let (dt, _) = time(
             || {
-                tensor::gemv(&x, &w, &mut out);
+                tensor::gemv(&x, &w, &mut out).unwrap();
                 out.data[0]
             },
             reps(50),
@@ -319,7 +319,7 @@ fn main() {
         let mut e = Tensor::default();
         let (dt, _) = time(
             || {
-                tensor::scatter_rows(&v, &edges, SctrDir::OutEdge, cols, &mut e);
+                tensor::scatter_rows(&v, &edges, SctrDir::OutEdge, cols, &mut e).unwrap();
                 e.data[0]
             },
             reps(20),
@@ -334,7 +334,7 @@ fn main() {
         let mut acc = Tensor::zeros(verts, cols);
         let (dt, _) = time(
             || {
-                tensor::gather_rows(Reduce::Sum, &e, &edges, &mut acc);
+                tensor::gather_rows(Reduce::Sum, &e, &edges, &mut acc).unwrap();
                 acc.data[0]
             },
             reps(20),

@@ -212,7 +212,9 @@ impl ExecPlan {
     /// embedding per request lane, each partition's tiles sharded across
     /// `exec_threads` OS threads, reductions folded in deterministic tile
     /// order. Returns one output vector per lane, bit-identical for every
-    /// `exec_threads` value and batch grouping (see [`sim::parallel`]).
+    /// `exec_threads` value and batch grouping — and bit-identical to a
+    /// functional [`ExecPlan::simulate_with`] run: both executors share
+    /// the single instruction-dispatch core (see [`sim::parallel`]).
     /// Timing for these lanes comes from a `functional: false`
     /// [`ExecPlan::simulate_with`] run, which is input-independent.
     ///

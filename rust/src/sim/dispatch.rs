@@ -1,0 +1,576 @@
+//! The single instruction-semantics core: ONE `match instr` owning the
+//! functional semantics of every compute and load instruction, shared by
+//! every execution path in the simulator.
+//!
+//! Zipper's central claim is that the graph-native IR captures GNN
+//! primitive semantics *once* and every backend consumes it (paper §4).
+//! The reproduction used to violate that: the discrete-event engine
+//! (`sim::exec`) and the tile-parallel batched executor (`sim::parallel`)
+//! each carried their own near-identical `match instr` block, so an
+//! `Instr` or kernel change could silently diverge the engine from the
+//! serving fast path. This module is the fix: [`exec_instr`] is the only
+//! per-instruction functional-semantics `match` under `rust/src/sim/`
+//! (CI greps for exactly that), parameterized over the small
+//! [`BufAccess`] trait. The paths differ only in *where buffers live and
+//! what they are allowed to write* — that policy lives in three thin
+//! adapters:
+//!
+//! * `exec::EngineAccess` — the engine's tile/partition frames (tile
+//!   buffers resolve through the stream's bound tile frame);
+//! * `parallel::TileAccess` — a parallel worker's private tile frame
+//!   plus a *read-only* view of the lane's partition frame (writing a
+//!   partition buffer from the tile phase is that adapter's hard error);
+//! * `parallel::PartAccess` — the dFunction partition-only view (tile
+//!   buffer access is its hard error).
+//!
+//! **Aliased operands.** All paths detach the destination slot before
+//! borrowing sources, so `src == dst` (e.g. `ELW.Relu b1 -> b1`)
+//! historically failed with a spurious "buffer b1 unset" — in every
+//! copy. The shared core fixes it once: when an elementwise operand
+//! aliases the destination, the op computes in place on the detached
+//! tensor (bit-identical math, zero allocation). Structural ops whose
+//! output shape differs from the aliased input (GEMM/BMM/GEMV/SCTR)
+//! cannot run in place and report a descriptive error instead.
+//!
+//! **GTHR is not dispatched here.** The cross-tile gather reduction is
+//! the one op whose float association depends on execution order, so
+//! both paths defer it and call [`fold_tile_gathers`] in ascending tile
+//! order at the partition's wait boundary — which is exactly why the
+//! engine's functional output and `run_batch` are now bit-identical
+//! (asserted in `rust/tests/parallel_batch.rs`).
+
+use super::exec::{part_slot, Frame};
+use super::tensor::{self, Tensor};
+use crate::isa::{BufId, Dim, DimCtx, Instr, LdTarget};
+use crate::models::WeightStore;
+use crate::tiling::{Partition, Tile};
+
+/// Buffer-access policy of one execution path: where operands are read
+/// from, where destinations may be written, and how pool growth is
+/// accounted. The dispatch core is generic over this — adding an `Instr`
+/// arm to only one path is no longer expressible.
+pub(crate) trait BufAccess {
+    /// Borrow operand `buf` for reading.
+    fn read(&self, buf: BufId) -> Result<&Tensor, String>;
+    /// Detach destination `buf`'s pooled tensor so the op can compute
+    /// into it while operands stay borrowed. Returns (tensor, was_set).
+    fn take_dst(&mut self, buf: BufId) -> Result<(Tensor, bool), String>;
+    /// Re-attach the computed tensor; `grew` (from the in-place kernel)
+    /// feeds the path's allocation counter.
+    fn put_back(&mut self, buf: BufId, t: Tensor, grew: bool) -> Result<(), String>;
+    /// The lane's permuted input image (LD.SRC / LD.DST source).
+    fn input(&self) -> Result<&[f32], String>;
+}
+
+fn ctx(instr: &Instr, e: String) -> String {
+    format!("{instr}: {e}")
+}
+
+fn alias_err(instr: &Instr, buf: BufId) -> String {
+    format!(
+        "{instr}: operand b{} aliases the destination; this op cannot run in place",
+        buf.0
+    )
+}
+
+fn require_set(was_set: bool, buf: BufId, instr: &Instr) -> Result<(), String> {
+    if was_set {
+        Ok(())
+    } else {
+        Err(format!("{instr}: aliased operand b{} unset", buf.0))
+    }
+}
+
+/// Gather the rows of `vs` (global tiled-order vertex ids) out of the
+/// permuted input image. Contiguous blocks (regular tiles, dense sparse
+/// tiles) collapse to one memcpy.
+fn copy_vertex_rows(x_tiled: &[f32], vs: &[u32], f: usize, t: &mut Tensor) {
+    if let (Some(&first), Some(&last)) = (vs.first(), vs.last()) {
+        if (last - first) as usize + 1 == vs.len() {
+            let base = first as usize * f;
+            t.data.copy_from_slice(&x_tiled[base..base + vs.len() * f]);
+        } else if f > 0 {
+            for (row, &v) in t.data.chunks_exact_mut(f).zip(vs) {
+                row.copy_from_slice(&x_tiled[v as usize * f..(v as usize + 1) * f]);
+            }
+        }
+    }
+}
+
+/// Functional semantics of one load or compute instruction: detach the
+/// destination's pooled tensor through `a`, compute into it in place,
+/// re-attach. `part` / `t_meta` are the bound partition / tile (callers
+/// resolve them; instructions that need a missing binding error out).
+///
+/// This is THE per-instruction semantics site. Do not re-implement any
+/// arm elsewhere — extend the [`BufAccess`] adapters instead.
+pub(crate) fn exec_instr<A: BufAccess>(
+    a: &mut A,
+    weights: &WeightStore,
+    feat_in: u32,
+    part: Option<&Partition>,
+    t_meta: Option<&Tile>,
+    dims: &DimCtx,
+    instr: &Instr,
+) -> Result<(), String> {
+    let rd = |d: Dim| d.resolve(dims);
+    match instr {
+        // the edge list already lives in the Tile struct; LD.EDGE is
+        // timing-only
+        Instr::Ld { target: LdTarget::Edge, .. } => Ok(()),
+        Instr::Ld { target: LdTarget::Src, dst, .. } => {
+            let tm = t_meta.ok_or("LD.SRC w/o tile")?;
+            let (mut t, _) = a.take_dst(*dst)?;
+            let grew = t.reshape(tm.num_src(), feat_in);
+            copy_vertex_rows(a.input()?, &tm.src_vertices, feat_in as usize, &mut t);
+            a.put_back(*dst, t, grew)
+        }
+        Instr::Ld { target: LdTarget::Dst, dst, .. } => {
+            let p = part.ok_or("LD.DST w/o partition")?;
+            let (mut t, _) = a.take_dst(*dst)?;
+            let grew = t.reshape(p.num_dst(), feat_in);
+            let x = a.input()?;
+            let base = p.dst_start as usize * feat_in as usize;
+            t.data.copy_from_slice(&x[base..base + t.data.len()]);
+            a.put_back(*dst, t, grew)
+        }
+        // the functional store happens at the UPD.PTT partition commit
+        Instr::St { .. } => Ok(()),
+        Instr::ElwU { op, src, dst, .. } => {
+            let (mut out, was_set) = a.take_dst(*dst)?;
+            if src == dst {
+                require_set(was_set, *src, instr)?;
+                tensor::apply_unary_inplace(*op, &mut out);
+                a.put_back(*dst, out, false)
+            } else {
+                let x = a.read(*src)?;
+                let grew = tensor::apply_unary(*op, x, &mut out);
+                a.put_back(*dst, out, grew)
+            }
+        }
+        Instr::ElwB { op, a: lhs, b: rhs, dst, .. } => {
+            let (mut out, was_set) = a.take_dst(*dst)?;
+            match (lhs == dst, rhs == dst) {
+                (false, false) => {
+                    let at = a.read(*lhs)?;
+                    let bt = a.read(*rhs)?;
+                    let grew =
+                        tensor::apply_binary(*op, at, bt, &mut out).map_err(|e| ctx(instr, e))?;
+                    a.put_back(*dst, out, grew)
+                }
+                (true, false) => {
+                    require_set(was_set, *lhs, instr)?;
+                    let bt = a.read(*rhs)?;
+                    tensor::apply_binary_lhs_inplace(*op, &mut out, bt)
+                        .map_err(|e| ctx(instr, e))?;
+                    a.put_back(*dst, out, false)
+                }
+                (false, true) => {
+                    require_set(was_set, *rhs, instr)?;
+                    let at = a.read(*lhs)?;
+                    tensor::apply_binary_rhs_inplace(*op, at, &mut out)
+                        .map_err(|e| ctx(instr, e))?;
+                    a.put_back(*dst, out, false)
+                }
+                (true, true) => {
+                    require_set(was_set, *lhs, instr)?;
+                    tensor::apply_binary_self_inplace(*op, &mut out);
+                    a.put_back(*dst, out, false)
+                }
+            }
+        }
+        Instr::ElwBcast { op, a: lhs, vec, dst, .. } => {
+            if vec == dst {
+                return Err(alias_err(instr, *vec));
+            }
+            let (mut out, was_set) = a.take_dst(*dst)?;
+            if lhs == dst {
+                require_set(was_set, *lhs, instr)?;
+                let vt = a.read(*vec)?;
+                tensor::apply_bcast_inplace(*op, &mut out, vt).map_err(|e| ctx(instr, e))?;
+                a.put_back(*dst, out, false)
+            } else {
+                let at = a.read(*lhs)?;
+                let vt = a.read(*vec)?;
+                let grew =
+                    tensor::apply_bcast(*op, at, vt, &mut out).map_err(|e| ctx(instr, e))?;
+                a.put_back(*dst, out, grew)
+            }
+        }
+        Instr::Gemv { src, weight: w, dst, .. } => {
+            if src == dst {
+                return Err(alias_err(instr, *src));
+            }
+            let (mut out, _) = a.take_dst(*dst)?;
+            let x = a.read(*src)?;
+            let grew = tensor::gemv(x, &weights.tensors[w.0 as usize].data, &mut out)
+                .map_err(|e| ctx(instr, e))?;
+            a.put_back(*dst, out, grew)
+        }
+        Instr::Gemm { src, weight: w, dst, k, n, accumulate, .. } => {
+            if src == dst {
+                return Err(alias_err(instr, *src));
+            }
+            let (mut out, was_set) = a.take_dst(*dst)?;
+            if *accumulate && !was_set {
+                return Err(format!("{instr}: accumulate into unset buffer b{}", dst.0));
+            }
+            let x = a.read(*src)?;
+            let grew = tensor::matmul(
+                x,
+                &weights.tensors[w.0 as usize].data,
+                rd(*k),
+                rd(*n),
+                &mut out,
+                *accumulate,
+            )
+            .map_err(|e| ctx(instr, e))?;
+            a.put_back(*dst, out, grew)
+        }
+        Instr::Bmm { src, weights: w, dst, k, n, .. } => {
+            if src == dst {
+                return Err(alias_err(instr, *src));
+            }
+            let tm = t_meta.ok_or("BMM w/o tile")?;
+            let (mut out, _) = a.take_dst(*dst)?;
+            let x = a.read(*src)?;
+            let grew = tensor::bmm_by_type(
+                x,
+                &weights.tensors[w.0 as usize].data,
+                rd(*k),
+                rd(*n),
+                tm.etypes.as_deref(),
+                &mut out,
+            )
+            .map_err(|e| ctx(instr, e))?;
+            a.put_back(*dst, out, grew)
+        }
+        Instr::Sctr { dir, src, dst, cols } => {
+            if src == dst {
+                return Err(alias_err(instr, *src));
+            }
+            let tm = t_meta.ok_or("SCTR w/o tile")?;
+            let (mut out, _) = a.take_dst(*dst)?;
+            let v = a.read(*src)?;
+            let grew = tensor::scatter_rows(v, &tm.edges, *dir, rd(*cols), &mut out)
+                .map_err(|e| ctx(instr, e))?;
+            a.put_back(*dst, out, grew)
+        }
+        Instr::Gthr { .. } => Err(format!(
+            "{instr}: GTHR is a cross-tile reduction; it goes through fold_tile_gathers"
+        )),
+        other => Err(format!("unexpected instr in functional dispatch: {other}")),
+    }
+}
+
+/// Fold one tile's GTHR reductions into a partition frame, in program
+/// (eFunction) order. Both paths call this per tile in **ascending tile
+/// order** at the partition's wait boundary — the gather fold order, and
+/// hence the float association, is fixed by the plan rather than by
+/// stream scheduling or worker completion, which is what makes the
+/// engine and `run_batch` outputs bit-identical.
+pub(crate) fn fold_tile_gathers(
+    e_func: &[Instr],
+    frame: &Frame,
+    t_meta: &Tile,
+    part_frame: &mut Frame,
+) -> Result<(), String> {
+    for instr in e_func {
+        if let Instr::Gthr { reduce, src, dst, .. } = instr {
+            let e = frame
+                .get(src.0 as usize)
+                .ok_or_else(|| format!("{instr}: gather source b{} unset", src.0))?;
+            let acc = part_frame
+                .get_mut(part_slot(*dst))
+                .ok_or_else(|| format!("{instr}: accumulator b{} unset", dst.0))?;
+            tensor::gather_rows(*reduce, e, &t_meta.edges, acc).map_err(|e| ctx(instr, e))?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::exec::EngineAccess;
+    use super::super::parallel::{PartAccess, TileAccess};
+    use super::*;
+    use crate::compiler::PART_FRAME_BASE;
+    use crate::isa::{ElwBinary, ElwUnary, Reduce, SctrDir, WeightId};
+    use crate::models::{WeightStore, WeightTensor};
+    use crate::util::Rng;
+
+    const FI: u32 = 4;
+    const FO: u32 = 4;
+    const P0: BufId = BufId(PART_FRAME_BASE);
+    const P1: BufId = BufId(PART_FRAME_BASE + 1);
+
+    fn fixture() -> (WeightStore, Partition, Tile, DimCtx, Vec<f32>) {
+        let mut rng = Rng::new(42);
+        let mut mk = |len: usize| -> Vec<f32> { (0..len).map(|_| rng.next_f32_sym()).collect() };
+        let weights = WeightStore {
+            tensors: vec![
+                WeightTensor { name: "w", rows: FI, cols: FO, count: 1, data: mk(16) },
+                WeightTensor { name: "a", rows: FI, cols: 1, count: 1, data: mk(4) },
+                WeightTensor { name: "rel", rows: FI, cols: FO, count: 2, data: mk(32) },
+            ],
+        };
+        let tile = Tile {
+            partition_id: 0,
+            tile_id: 0,
+            src_vertices: vec![0, 1, 2],
+            edges: vec![(0, 0), (1, 1), (2, 0), (1, 0)],
+            etypes: Some(vec![0, 1, 0, 1]),
+        };
+        let part = Partition { partition_id: 0, dst_start: 0, dst_end: 2, tiles: Vec::new() };
+        let dims = DimCtx { tile_src: 3, tile_edges: 4, part_dst: 2, feat_in: FI, feat_out: FO };
+        let x_tiled = mk(4 * FI as usize);
+        (weights, part, tile, dims, x_tiled)
+    }
+
+    /// Every tile-phase compute variant, exercising plain, aliased
+    /// (src == dst), partition-frame reads, and accumulate flavors.
+    fn tile_phase_program() -> Vec<Instr> {
+        let (r, c, e) = (Dim::TileSrc, Dim::FeatIn, Dim::TileEdges);
+        vec![
+            Instr::Ld { target: LdTarget::Src, dst: BufId(0), rows: r, cols: c },
+            Instr::ElwU { op: ElwUnary::Tanh, src: BufId(0), dst: BufId(1), rows: r, cols: c },
+            // aliased in-place unary (the historical "buffer unset" bug)
+            Instr::ElwU { op: ElwUnary::Relu, src: BufId(1), dst: BufId(1), rows: r, cols: c },
+            Instr::ElwB {
+                op: ElwBinary::Add, a: BufId(0), b: BufId(1), dst: BufId(2), rows: r, cols: c,
+            },
+            // aliased lhs / rhs / both
+            Instr::ElwB {
+                op: ElwBinary::Mul, a: BufId(2), b: BufId(0), dst: BufId(2), rows: r, cols: c,
+            },
+            Instr::ElwB {
+                op: ElwBinary::Sub, a: BufId(0), b: BufId(2), dst: BufId(2), rows: r, cols: c,
+            },
+            Instr::ElwB {
+                op: ElwBinary::Max, a: BufId(2), b: BufId(2), dst: BufId(2), rows: r, cols: c,
+            },
+            Instr::Gemv { src: BufId(0), weight: WeightId(1), dst: BufId(3), rows: r, cols: c },
+            Instr::ElwBcast {
+                op: ElwBinary::Mul, a: BufId(2), vec: BufId(3), dst: BufId(4), rows: r, cols: c,
+            },
+            Instr::ElwBcast {
+                op: ElwBinary::Add, a: BufId(4), vec: BufId(3), dst: BufId(4), rows: r, cols: c,
+            },
+            Instr::Gemm {
+                src: BufId(0), weight: WeightId(0), dst: BufId(5),
+                m: r, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+            },
+            Instr::Gemm {
+                src: BufId(4), weight: WeightId(0), dst: BufId(5),
+                m: r, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: true,
+            },
+            Instr::Sctr { dir: SctrDir::OutEdge, src: BufId(5), dst: BufId(6), cols: Dim::FeatOut },
+            // partition-frame read from the tile phase (LD.DST-style data)
+            Instr::Sctr { dir: SctrDir::InEdge, src: P0, dst: BufId(7), cols: Dim::FeatIn },
+            Instr::Bmm {
+                src: BufId(6), weights: WeightId(2), dst: BufId(8),
+                m: e, k: Dim::FeatOut, n: Dim::FeatOut,
+            },
+        ]
+    }
+
+    fn e_func() -> Vec<Instr> {
+        vec![Instr::Gthr {
+            reduce: Reduce::Sum,
+            src: BufId(8),
+            dst: P1,
+            cols: Dim::FeatOut,
+            accumulate: true,
+        }]
+    }
+
+    fn init_part_frame(frame: &mut Frame, x_tiled: &[f32]) {
+        // P0: "LD.DST" rows (2 x FI) straight from the input image;
+        // P1: zeroed Sum accumulator (2 x FO)
+        let t = frame.slot_mut(part_slot(P0));
+        t.reshape(2, FI);
+        t.data.copy_from_slice(&x_tiled[..2 * FI as usize]);
+        frame.slot_mut(part_slot(P1)).reset_filled(2, FO, 0.0);
+    }
+
+    /// The same instruction stream driven through the engine adapter and
+    /// the parallel tile adapter over equivalently pooled frames must
+    /// produce bit-identical buffers, fold results, and alloc counts.
+    #[test]
+    fn engine_and_tile_adapters_agree_on_every_compute_variant() {
+        let (weights, part, tile, dims, x_tiled) = fixture();
+
+        // engine path: FuncState-style frames
+        let mut eng_part = Frame::default();
+        init_part_frame(&mut eng_part, &x_tiled);
+        let mut eng_tiles = vec![Frame::default()];
+        let mut eng_allocs = 0u64;
+        {
+            let mut a = EngineAccess {
+                part_frame: &mut eng_part,
+                tile_frames: &mut eng_tiles,
+                frame: Some(0),
+                x_tiled: &x_tiled,
+                has_input: true,
+                allocs: &mut eng_allocs,
+            };
+            for instr in &tile_phase_program() {
+                exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, instr)
+                    .unwrap_or_else(|e| panic!("engine adapter: {e}"));
+            }
+        }
+        fold_tile_gathers(&e_func(), &eng_tiles[0], &tile, &mut eng_part).unwrap();
+
+        // parallel path: worker frame + read-only lane partition frame
+        let mut lane_part = Frame::default();
+        init_part_frame(&mut lane_part, &x_tiled);
+        let mut worker_frame = Frame::default();
+        let tile_allocs;
+        {
+            let mut a = TileAccess {
+                lane_part: &lane_part,
+                x_tiled: &x_tiled,
+                frame: &mut worker_frame,
+                allocs: 0,
+            };
+            for instr in &tile_phase_program() {
+                exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, instr)
+                    .unwrap_or_else(|e| panic!("tile adapter: {e}"));
+            }
+            tile_allocs = a.allocs;
+        }
+        fold_tile_gathers(&e_func(), &worker_frame, &tile, &mut lane_part).unwrap();
+
+        for slot in 0..9usize {
+            assert_eq!(
+                eng_tiles[0].get(slot),
+                worker_frame.get(slot),
+                "tile buffer b{slot} diverged between adapters"
+            );
+        }
+        assert_eq!(
+            eng_part.get(part_slot(P1)),
+            lane_part.get(part_slot(P1)),
+            "folded accumulator diverged between adapters"
+        );
+        assert_eq!(
+            eng_allocs + eng_part.allocs + eng_tiles[0].allocs,
+            tile_allocs + worker_frame.allocs + lane_part.allocs,
+            "alloc-event counts diverged between adapters"
+        );
+    }
+
+    /// Partition-phase instructions through the engine adapter (no bound
+    /// tile) vs the dFunction partition-only adapter.
+    #[test]
+    fn engine_and_dfunction_adapters_agree_on_partition_phase() {
+        let (weights, part, _tile, dims, x_tiled) = fixture();
+        let prog = vec![
+            Instr::Ld { target: LdTarget::Dst, dst: P0, rows: Dim::PartDst, cols: Dim::FeatIn },
+            Instr::Gemm {
+                src: P0, weight: WeightId(0), dst: P1,
+                m: Dim::PartDst, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+            },
+            // aliased in-place unary on a partition buffer
+            Instr::ElwU {
+                op: ElwUnary::Sigmoid, src: P1, dst: P1, rows: Dim::PartDst, cols: Dim::FeatOut,
+            },
+            Instr::St { src: P1, rows: Dim::PartDst, cols: Dim::FeatOut },
+        ];
+
+        let mut eng_part = Frame::default();
+        let mut eng_tiles = Vec::new();
+        let mut eng_allocs = 0u64;
+        {
+            let mut a = EngineAccess {
+                part_frame: &mut eng_part,
+                tile_frames: &mut eng_tiles,
+                frame: None,
+                x_tiled: &x_tiled,
+                has_input: true,
+                allocs: &mut eng_allocs,
+            };
+            for instr in &prog {
+                exec_instr(&mut a, &weights, FI, Some(&part), None, &dims, instr)
+                    .unwrap_or_else(|e| panic!("engine adapter: {e}"));
+            }
+        }
+
+        let mut d_part = Frame::default();
+        let mut d_allocs = 0u64;
+        {
+            let mut a = PartAccess {
+                part_frame: &mut d_part,
+                x_tiled: &x_tiled,
+                allocs: &mut d_allocs,
+            };
+            for instr in &prog {
+                exec_instr(&mut a, &weights, FI, Some(&part), None, &dims, instr)
+                    .unwrap_or_else(|e| panic!("dFunction adapter: {e}"));
+            }
+        }
+
+        for slot in [part_slot(P0), part_slot(P1)] {
+            assert_eq!(eng_part.get(slot), d_part.get(slot), "partition slot {slot} diverged");
+        }
+        assert_eq!(
+            eng_allocs + eng_part.allocs,
+            d_allocs + d_part.allocs,
+            "alloc-event counts diverged between adapters"
+        );
+    }
+
+    /// Write restrictions are adapter policy, not core policy: the same
+    /// instruction is legal or illegal depending on the path.
+    #[test]
+    fn adapter_write_restrictions_hold() {
+        let (weights, part, tile, dims, x_tiled) = fixture();
+        let to_part = Instr::ElwU {
+            op: ElwUnary::Relu, src: BufId(0), dst: P0, rows: Dim::TileSrc, cols: Dim::FeatIn,
+        };
+        let mut frame = Frame::default();
+        frame.slot_mut(0).reset_filled(3, FI, 1.0);
+        let lane_part = Frame::default();
+        let mut a = TileAccess { lane_part: &lane_part, x_tiled: &x_tiled, frame: &mut frame, allocs: 0 };
+        let err = exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, &to_part)
+            .unwrap_err();
+        assert!(err.contains("tile phase cannot write partition buffer"), "{err}");
+
+        let to_tile = Instr::ElwU {
+            op: ElwUnary::Relu, src: P0, dst: BufId(0), rows: Dim::PartDst, cols: Dim::FeatIn,
+        };
+        let mut part_frame = Frame::default();
+        part_frame.slot_mut(part_slot(P0)).reset_filled(2, FI, 1.0);
+        let mut allocs = 0u64;
+        let mut a = PartAccess { part_frame: &mut part_frame, x_tiled: &x_tiled, allocs: &mut allocs };
+        let err =
+            exec_instr(&mut a, &weights, FI, Some(&part), None, &dims, &to_tile).unwrap_err();
+        assert!(err.contains("dFunction write to tile buffer"), "{err}");
+    }
+
+    /// Aliasing a structural op (shape-changing) is a descriptive error,
+    /// not a spurious "unset"; aliasing an unset elementwise operand is
+    /// a genuine unset error.
+    #[test]
+    fn structural_aliasing_and_unset_aliasing_report_clearly() {
+        let (weights, part, tile, dims, x_tiled) = fixture();
+        let mut frame = Frame::default();
+        frame.slot_mut(0).reset_filled(3, FI, 1.0);
+        let lane_part = Frame::default();
+        let mut a = TileAccess { lane_part: &lane_part, x_tiled: &x_tiled, frame: &mut frame, allocs: 0 };
+        let gemm = Instr::Gemm {
+            src: BufId(0), weight: WeightId(0), dst: BufId(0),
+            m: Dim::TileSrc, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+        };
+        let err =
+            exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, &gemm).unwrap_err();
+        assert!(err.contains("cannot run in place"), "{err}");
+
+        let relu_unset = Instr::ElwU {
+            op: ElwUnary::Relu, src: BufId(2), dst: BufId(2), rows: Dim::TileSrc, cols: Dim::FeatIn,
+        };
+        let err = exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, &relu_unset)
+            .unwrap_err();
+        assert!(err.contains("unset"), "{err}");
+    }
+}

@@ -194,10 +194,11 @@ impl<'a, 's> Engine<'a, 's> {
                         if self.opts.functional {
                             let env = Env::of(self.wl);
                             let tile = self.sched.streams[sid].tile.clone();
-                            self.scratch.func.exec_load(
+                            self.scratch.func.exec_instr(
                                 &env,
                                 tile.as_ref(),
                                 self.cur_part,
+                                &dims,
                                 &instr,
                             )?;
                         }
@@ -236,11 +237,13 @@ impl<'a, 's> Engine<'a, 's> {
                 };
                 self.record_trace(start, end, instr.flops(&dims), 0, phase);
                 if self.opts.functional {
+                    // GTHR is a no-op here: its reduction is deferred to
+                    // the tile-ordered fold at the dStream wait boundary
                     let env = Env::of(self.wl);
                     let tile = self.sched.streams[sid].tile.clone();
                     self.scratch
                         .func
-                        .exec_compute(&env, tile.as_ref(), &dims, &instr)?;
+                        .exec_instr(&env, tile.as_ref(), self.cur_part, &dims, &instr)?;
                 }
                 self.sched.advance(sid, end, 1);
             }
@@ -325,8 +328,14 @@ impl<'a, 's> Engine<'a, 's> {
                             self.sched.streams[sid].tile = Some(t);
                         }
                     }
-                    // dStream resuming after all tiles: fix up max accs
+                    // dStream resuming after all tiles: fold the
+                    // deferred GTHR reductions in ascending tile order
+                    // (bit-exact with the batched path), then fix up
+                    // untouched max accumulators
                     if self.sched.streams[sid].class == StreamClass::D && self.opts.functional {
+                        let p = self.cur_part.ok_or("dStream WAIT without partition")?;
+                        let env = Env::of(self.wl);
+                        self.scratch.func.fold_gathers(&env, p)?;
                         self.scratch.func.fixup_max_accs();
                     }
                     self.sched.advance(sid, t0 + 1, 1);

@@ -11,11 +11,18 @@
 //! pre-sizing pass (frame/slot counts come straight from the plan), a
 //! warm request does zero pool growth; [`ExecScratch::alloc_events`]
 //! counts the growth events so benches can assert exactly that.
+//!
+//! Per-instruction functional semantics do NOT live here: they live in
+//! the shared dispatch core (`sim::dispatch`), which this module feeds
+//! through its [`EngineAccess`] adapter. This file owns the engine's
+//! run-local *state* (frames, input/output images, accumulator metadata)
+//! and the partition lifecycle hooks the engine calls.
 
+use super::dispatch::{self, BufAccess};
 use super::scheduler::TileCtx;
-use super::tensor::{self, Tensor};
+use super::tensor::Tensor;
 use crate::compiler::{AccKind, Program, PART_FRAME_BASE};
-use crate::isa::{BufId, Dim, DimCtx, Instr, LdTarget};
+use crate::isa::{BufId, Dim, DimCtx, Instr};
 use crate::models::WeightStore;
 use crate::tiling::Tiling;
 
@@ -359,13 +366,77 @@ impl FuncState {
         out
     }
 
-    fn get_buf(&self, tile: Option<&TileCtx>, buf: BufId) -> Result<&Tensor, String> {
+    /// Functional semantics of one load or compute instruction, executed
+    /// through the shared dispatch core (`sim::dispatch::exec_instr`)
+    /// over this state's frames. GTHR is the one exception: it is
+    /// deferred to [`FuncState::fold_gathers`] at the dStream wait
+    /// boundary so the cross-tile float association matches the batched
+    /// path bit-exactly.
+    pub fn exec_instr(
+        &mut self,
+        env: &Env,
+        tile: Option<&TileCtx>,
+        cur_part: Option<usize>,
+        dims: &DimCtx,
+        instr: &Instr,
+    ) -> Result<(), String> {
+        if matches!(instr, Instr::Gthr { .. }) {
+            return Ok(());
+        }
+        let t_meta = tile.map(|tc| &env.tiling.partitions[tc.part_idx].tiles[tc.tile_idx]);
+        let part = cur_part.map(|p| &env.tiling.partitions[p]);
+        let mut a = EngineAccess {
+            part_frame: &mut self.part_frame,
+            tile_frames: &mut self.tile_frames,
+            frame: tile.map(|tc| tc.frame),
+            x_tiled: &self.x_tiled,
+            has_input: self.has_input,
+            allocs: &mut self.allocs,
+        };
+        dispatch::exec_instr(&mut a, env.weights, env.feat_in, part, t_meta, dims, instr)
+    }
+
+    /// dStream wait boundary: all tiles of the partition have retired,
+    /// so fold their deferred GTHR reductions into the partition
+    /// accumulators in **ascending tile order** (frame `i` belongs to
+    /// tile `i` — FCH.TILE hands frames out in fetch order and they are
+    /// recycled at UPD.PTT). Same fold order as `parallel::run_batch`,
+    /// hence bit-identical outputs.
+    pub fn fold_gathers(&mut self, env: &Env, part_idx: usize) -> Result<(), String> {
+        let part = &env.tiling.partitions[part_idx];
+        for (t_idx, t_meta) in part.tiles.iter().enumerate() {
+            let frame = self
+                .tile_frames
+                .get(t_idx)
+                .ok_or_else(|| format!("gather fold: tile frame {t_idx} missing"))?;
+            dispatch::fold_tile_gathers(&env.program.e_func, frame, t_meta, &mut self.part_frame)?;
+        }
+        Ok(())
+    }
+}
+
+/// The engine's [`BufAccess`] adapter: tile buffers resolve through the
+/// stream's bound tile frame, partition buffers through the partition
+/// frame. A missing tile binding (dStream instructions touching tile
+/// buffers) is this adapter's access error.
+pub(crate) struct EngineAccess<'s> {
+    pub(crate) part_frame: &'s mut Frame,
+    pub(crate) tile_frames: &'s mut Vec<Frame>,
+    /// Bound tile's frame id (`None` off-tile, e.g. dFunction instrs).
+    pub(crate) frame: Option<usize>,
+    pub(crate) x_tiled: &'s [f32],
+    pub(crate) has_input: bool,
+    pub(crate) allocs: &'s mut u64,
+}
+
+impl BufAccess for EngineAccess<'_> {
+    fn read(&self, buf: BufId) -> Result<&Tensor, String> {
         if buf.is_partition_frame() {
             self.part_frame
                 .get(part_slot(buf))
                 .ok_or_else(|| format!("partition buffer b{} unset", buf.0))
         } else {
-            let frame = tile.ok_or("tile buf w/o tile")?.frame;
+            let frame = self.frame.ok_or("tile buf w/o tile")?;
             self.tile_frames
                 .get(frame)
                 .and_then(|f| f.get(buf.0 as usize))
@@ -373,193 +444,34 @@ impl FuncState {
         }
     }
 
-    /// Detach `buf`'s pooled tensor so an op can compute into it while
-    /// its operands stay borrowed. Returns (tensor, was_set).
-    fn take_buf(&mut self, tile: Option<&TileCtx>, buf: BufId) -> Result<(Tensor, bool), String> {
+    fn take_dst(&mut self, buf: BufId) -> Result<(Tensor, bool), String> {
         if buf.is_partition_frame() {
             Ok(self.part_frame.take(part_slot(buf)))
         } else {
-            let frame = tile.ok_or("tile buf w/o tile")?.frame;
+            let frame = self.frame.ok_or("tile buf w/o tile")?;
             while self.tile_frames.len() <= frame {
-                self.allocs += 1;
+                *self.allocs += 1;
                 self.tile_frames.push(Frame::default());
             }
             Ok(self.tile_frames[frame].take(buf.0 as usize))
         }
     }
 
-    /// Re-attach a computed tensor to its slot; `grew` (from the
-    /// in-place kernel) feeds the allocation counter.
-    fn put_back(
-        &mut self,
-        tile: Option<&TileCtx>,
-        buf: BufId,
-        t: Tensor,
-        grew: bool,
-    ) -> Result<(), String> {
-        self.allocs += grew as u64;
+    fn put_back(&mut self, buf: BufId, t: Tensor, grew: bool) -> Result<(), String> {
+        *self.allocs += grew as u64;
         if buf.is_partition_frame() {
             self.part_frame.put(part_slot(buf), t);
         } else {
-            let frame = tile.ok_or("tile buf w/o tile")?.frame;
+            let frame = self.frame.ok_or("tile buf w/o tile")?;
             self.tile_frames[frame].put(buf.0 as usize, t);
         }
         Ok(())
     }
 
-    /// Functional semantics of LD.* (the edge list lives in the Tile
-    /// struct already, so LD.EDGE is timing-only). Destination rows are
-    /// contiguous ranges of the tiled image, and sparse source lists
-    /// frequently are too, so both loads prefer block memcpys.
-    pub fn exec_load(
-        &mut self,
-        env: &Env,
-        tile: Option<&TileCtx>,
-        cur_part: Option<usize>,
-        instr: &Instr,
-    ) -> Result<(), String> {
-        let Instr::Ld { target, dst, .. } = instr else {
-            return Err(format!("exec_load on non-load instr {instr}"));
-        };
-        match target {
-            LdTarget::Edge => Ok(()),
-            LdTarget::Src => {
-                let tc = tile.ok_or("LD.SRC w/o tile")?;
-                if !self.has_input {
-                    return Err("functional run without input x".into());
-                }
-                let t_meta = &env.tiling.partitions[tc.part_idx].tiles[tc.tile_idx];
-                let f = env.feat_in as usize;
-                let (mut t, _) = self.take_buf(tile, *dst)?;
-                let grew = t.reshape(t_meta.num_src(), env.feat_in);
-                let vs = &t_meta.src_vertices;
-                if let (Some(&first), Some(&last)) = (vs.first(), vs.last()) {
-                    if (last - first) as usize + 1 == vs.len() {
-                        // contiguous source block (regular tiles, dense
-                        // sparse tiles): one memcpy
-                        let base = first as usize * f;
-                        t.data
-                            .copy_from_slice(&self.x_tiled[base..base + vs.len() * f]);
-                    } else if f > 0 {
-                        for (row, &v) in t.data.chunks_exact_mut(f).zip(vs) {
-                            row.copy_from_slice(
-                                &self.x_tiled[v as usize * f..(v as usize + 1) * f],
-                            );
-                        }
-                    }
-                }
-                self.put_back(tile, *dst, t, grew)
-            }
-            LdTarget::Dst => {
-                let p = cur_part.ok_or("LD.DST w/o partition")?;
-                if !self.has_input {
-                    return Err("functional run without input x".into());
-                }
-                let part = &env.tiling.partitions[p];
-                let (mut t, _) = self.take_buf(tile, *dst)?;
-                let grew = t.reshape(part.num_dst(), env.feat_in);
-                let base = part.dst_start as usize * env.feat_in as usize;
-                t.data.copy_from_slice(&self.x_tiled[base..base + t.data.len()]);
-                self.put_back(tile, *dst, t, grew)
-            }
+    fn input(&self) -> Result<&[f32], String> {
+        if !self.has_input {
+            return Err("functional run without input x".into());
         }
-    }
-
-    /// Functional semantics of every compute instruction: borrow the
-    /// destination's pooled tensor, compute into it in place, re-attach.
-    pub fn exec_compute(
-        &mut self,
-        env: &Env,
-        tile: Option<&TileCtx>,
-        dims: &DimCtx,
-        instr: &Instr,
-    ) -> Result<(), String> {
-        let rd = |d: Dim| d.resolve(dims);
-        match instr {
-            Instr::ElwU { op, src, dst, .. } => {
-                let (mut out, _) = self.take_buf(tile, *dst)?;
-                let x = self.get_buf(tile, *src)?;
-                let grew = tensor::apply_unary(*op, x, &mut out);
-                self.put_back(tile, *dst, out, grew)
-            }
-            Instr::ElwB { op, a, b, dst, .. } => {
-                let (mut out, _) = self.take_buf(tile, *dst)?;
-                let at = self.get_buf(tile, *a)?;
-                let bt = self.get_buf(tile, *b)?;
-                let grew = tensor::apply_binary(*op, at, bt, &mut out);
-                self.put_back(tile, *dst, out, grew)
-            }
-            Instr::ElwBcast { op, a, vec, dst, .. } => {
-                let (mut out, _) = self.take_buf(tile, *dst)?;
-                let at = self.get_buf(tile, *a)?;
-                let vt = self.get_buf(tile, *vec)?;
-                let grew = tensor::apply_bcast(*op, at, vt, &mut out);
-                self.put_back(tile, *dst, out, grew)
-            }
-            Instr::Gemv { src, weight: w, dst, .. } => {
-                let (mut out, _) = self.take_buf(tile, *dst)?;
-                let x = self.get_buf(tile, *src)?;
-                let grew = tensor::gemv(x, &env.weights.tensors[w.0 as usize].data, &mut out);
-                self.put_back(tile, *dst, out, grew)
-            }
-            Instr::Gemm { src, weight: w, dst, k, n, accumulate, .. } => {
-                let (mut out, was_set) = self.take_buf(tile, *dst)?;
-                if *accumulate && !was_set {
-                    return Err(format!("GEMM accumulate into unset buffer b{}", dst.0));
-                }
-                let x = self.get_buf(tile, *src)?;
-                let grew = tensor::matmul(
-                    x,
-                    &env.weights.tensors[w.0 as usize].data,
-                    rd(*k),
-                    rd(*n),
-                    &mut out,
-                    *accumulate,
-                );
-                self.put_back(tile, *dst, out, grew)
-            }
-            Instr::Bmm { src, weights, dst, k, n, .. } => {
-                let tc = tile.ok_or("BMM w/o tile")?;
-                let t_meta = &env.tiling.partitions[tc.part_idx].tiles[tc.tile_idx];
-                let (mut out, _) = self.take_buf(tile, *dst)?;
-                let x = self.get_buf(tile, *src)?;
-                let grew = tensor::bmm_by_type(
-                    x,
-                    &env.weights.tensors[weights.0 as usize].data,
-                    rd(*k),
-                    rd(*n),
-                    t_meta.etypes.as_deref(),
-                    &mut out,
-                );
-                self.put_back(tile, *dst, out, grew)
-            }
-            Instr::Sctr { dir, src, dst, cols } => {
-                let tc = tile.ok_or("SCTR w/o tile")?;
-                let t_meta = &env.tiling.partitions[tc.part_idx].tiles[tc.tile_idx];
-                let (mut out, _) = self.take_buf(tile, *dst)?;
-                let v = self.get_buf(tile, *src)?;
-                let grew = tensor::scatter_rows(v, &t_meta.edges, *dir, rd(*cols), &mut out);
-                self.put_back(tile, *dst, out, grew)
-            }
-            Instr::Gthr { reduce, src, dst, .. } => {
-                let tc = tile.ok_or("GTHR w/o tile")?;
-                let t_meta = &env.tiling.partitions[tc.part_idx].tiles[tc.tile_idx];
-                // disjoint-field borrows: edge data lives in a tile
-                // frame, the accumulator in the partition frame — no
-                // clone needed (functional-mode hot-spot)
-                let e = self
-                    .tile_frames
-                    .get(tc.frame)
-                    .and_then(|f| f.get(src.0 as usize))
-                    .ok_or_else(|| format!("tile buffer b{} unset", src.0))?;
-                let acc = self
-                    .part_frame
-                    .get_mut(part_slot(*dst))
-                    .ok_or_else(|| format!("accumulator b{} unset", dst.0))?;
-                tensor::gather_rows(*reduce, e, &t_meta.edges, acc);
-                Ok(())
-            }
-            other => Err(format!("unexpected compute instr: {other}")),
-        }
+        Ok(self.x_tiled)
     }
 }

@@ -13,14 +13,19 @@
 //!     ISA's control/protocol semantics;
 //!   * `scheduler` — stream scoreboard, SIGNAL/WAIT wakeups, issue pick;
 //!   * `units` — MU/VU busy-until scoreboards + HBM routing;
-//!   * `exec` — functional execution on f32 embeddings, with all
-//!     run-local state in the reusable [`ExecScratch`] (pooled buffer
-//!     frames + in-place kernels: warm requests grow the pool by zero,
-//!     see DESIGN.md "Memory discipline");
+//!   * `dispatch` — THE per-instruction functional-semantics core: one
+//!     `match instr` shared by the engine and the batched path,
+//!     parameterized over a small buffer-access trait (DESIGN.md §3.3
+//!     "single dispatch core");
+//!   * `exec` — the engine's run-local functional state in the reusable
+//!     [`ExecScratch`] (pooled buffer frames + in-place kernels: warm
+//!     requests grow the pool by zero, see DESIGN.md "Memory
+//!     discipline") plus its dispatch adapter;
 //!   * [`parallel`] — the tile-parallel batched functional executor:
 //!     shards each partition's tiles across a scoped thread pool and
 //!     folds the GTHR reductions in deterministic tile order, so outputs
-//!     are bit-identical for any thread count (DESIGN.md §3.3);
+//!     are bit-identical for any thread count AND bit-identical to the
+//!     engine's functional output (DESIGN.md §3.3);
 //!   * [`hbm`] — banked memory-controller timing (Ramulator stand-in);
 //!   * [`timing`] — per-instruction cycle counts;
 //!   * [`tensor`] — dense f32 tensors + functional op semantics.
@@ -29,6 +34,7 @@
 //! latency+bandwidth memory-controller queue; eDRAM bank conflicts are
 //! folded into per-access byte accounting.
 
+mod dispatch;
 mod engine;
 mod exec;
 pub mod hbm;

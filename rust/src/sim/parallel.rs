@@ -23,17 +23,27 @@
 //!   changes how much tile-metadata traversal is amortized, not the
 //!   arithmetic per lane.
 //!
+//! Instruction semantics are NOT implemented here: every load/compute
+//! goes through the shared dispatch core (`sim::dispatch::exec_instr`)
+//! via this module's two adapters — [`TileAccess`] (worker frame +
+//! read-only lane partition view) and [`PartAccess`] (dFunction
+//! partition-only view) — and the gather fold is the shared
+//! `dispatch::fold_tile_gathers`. The engine consumes the same core, so
+//! outputs here are **bit-identical to the engine's functional output**,
+//! not merely close (asserted in `rust/tests/parallel_batch.rs`).
+//!
 //! **Memory discipline.** [`BatchScratch`] follows the PR 2 pooling
 //! rules: frames and tensors stay resident across tiles, partitions,
 //! runs, and plans; [`BatchScratch::alloc_events`] counts growth events
 //! and `rust/tests/parallel_batch.rs` asserts a warm batch adds zero —
 //! per worker thread, via [`BatchScratch::worker_alloc_events`].
 
+use super::dispatch::{self, BufAccess};
 use super::exec::{part_slot, Env, Frame};
-use super::tensor::{self, Tensor};
+use super::tensor::Tensor;
 use super::types::Workload;
 use crate::compiler::AccKind;
-use crate::isa::{BufId, Dim, DimCtx, Instr, LdTarget, StreamClass};
+use crate::isa::{BufId, Dim, DimCtx, Instr, StreamClass};
 use crate::tiling::{Partition, Tile, Tiling};
 
 /// Per-request ("lane") state of a batched run: permuted input/output
@@ -277,21 +287,8 @@ pub fn run_batch(
         lane.prepare_output(env.tiling.num_vertices, env.feat_out);
     }
 
-    // The compiler's dFunction layout (see compiler docs): FCH.PTT;
-    // <pre ops>; SIGNAL.S; WAIT; <post ops incl. ST.DST>; UPD.PTT; JUMP.
     let d = &env.program.d_func;
-    let sig = d
-        .iter()
-        .position(|i| matches!(i, Instr::Signal { class: StreamClass::S }))
-        .ok_or("dFunction missing SIGNAL.S")?;
-    let wait = d
-        .iter()
-        .position(|i| matches!(i, Instr::Wait { .. }))
-        .ok_or("dFunction missing WAIT")?;
-    let upd = d
-        .iter()
-        .position(|i| matches!(i, Instr::UpdPtt))
-        .ok_or("dFunction missing UPD.PTT")?;
+    let (sig, wait, upd) = validate_d_layout(d)?;
     let d_pre = &d[1..sig];
     let d_post = &d[wait + 1..upd];
 
@@ -345,20 +342,13 @@ pub fn run_batch(
             for (t_idx, t_meta) in tiles.iter().enumerate() {
                 let ws = &workers[t_idx % stride];
                 let base = (t_idx / stride) * nlanes;
-                for instr in &env.program.e_func {
-                    if let Instr::Gthr { reduce, src, dst, .. } = instr {
-                        for (b, lane) in lanes.iter_mut().take(nlanes).enumerate() {
-                            let frame = &ws.frames[base + b];
-                            let e = frame
-                                .get(src.0 as usize)
-                                .ok_or_else(|| format!("gather source b{} unset", src.0))?;
-                            let acc = lane
-                                .part_frame
-                                .get_mut(part_slot(*dst))
-                                .ok_or_else(|| format!("accumulator b{} unset", dst.0))?;
-                            tensor::gather_rows(*reduce, e, &t_meta.edges, acc);
-                        }
-                    }
+                for (b, lane) in lanes.iter_mut().take(nlanes).enumerate() {
+                    dispatch::fold_tile_gathers(
+                        &env.program.e_func,
+                        &ws.frames[base + b],
+                        t_meta,
+                        &mut lane.part_frame,
+                    )?;
                 }
             }
         }
@@ -405,10 +395,48 @@ fn worker_pass(
     Ok(())
 }
 
-/// Execute one tile's sFunction + eFunction bodies for one lane,
-/// *excluding* the GTHR reductions (deferred to the ordered fold). Reads
-/// the lane's partition frame and input image; writes only `frame`.
-/// Returns the number of pool-growth events.
+/// Validate the compiler's dFunction layout before slicing it into pre
+/// and post phases: `FCH.PTT; <pre ops>; SIGNAL.S; WAIT; <post ops incl.
+/// ST.DST>; UPD.PTT; JUMP`. A program that drifts from this shape (or
+/// reorders the markers) gets a structured error naming the offending
+/// instruction/positions instead of silently dropping instructions.
+/// Returns the (SIGNAL.S, WAIT, UPD.PTT) positions.
+fn validate_d_layout(d: &[Instr]) -> Result<(usize, usize, usize), String> {
+    match d.first() {
+        Some(Instr::FchPtt) => {}
+        Some(other) => {
+            return Err(format!(
+                "dFunction layout: expected FCH.PTT at instruction 0, found {other}"
+            ))
+        }
+        None => return Err("dFunction layout: empty function".into()),
+    }
+    let sig = d
+        .iter()
+        .position(|i| matches!(i, Instr::Signal { class: StreamClass::S }))
+        .ok_or("dFunction layout: missing SIGNAL.S")?;
+    let wait = d
+        .iter()
+        .position(|i| matches!(i, Instr::Wait { .. }))
+        .ok_or("dFunction layout: missing WAIT")?;
+    let upd = d
+        .iter()
+        .position(|i| matches!(i, Instr::UpdPtt))
+        .ok_or("dFunction layout: missing UPD.PTT")?;
+    if !(sig < wait && wait < upd) {
+        return Err(format!(
+            "dFunction layout: SIGNAL.S@{sig}, WAIT@{wait}, UPD.PTT@{upd} out of order \
+             (need SIGNAL.S < WAIT < UPD.PTT)"
+        ));
+    }
+    Ok((sig, wait, upd))
+}
+
+/// Execute one tile's sFunction + eFunction bodies for one lane through
+/// the shared dispatch core, *excluding* the GTHR reductions (deferred
+/// to the ordered fold). Reads the lane's partition frame and input
+/// image; writes only `frame` (the [`TileAccess`] adapter hard-errors on
+/// partition writes). Returns the number of pool-growth events.
 fn exec_tile(
     env: &Env,
     lane: &LaneState,
@@ -417,7 +445,6 @@ fn exec_tile(
     frame: &mut Frame,
 ) -> Result<u64, String> {
     frame.clear();
-    let mut grew: u64 = 0;
     let dims = DimCtx {
         tile_src: t_meta.num_src(),
         tile_edges: t_meta.num_edges(),
@@ -425,183 +452,142 @@ fn exec_tile(
         feat_in: env.feat_in,
         feat_out: env.feat_out,
     };
+    let mut a = TileAccess {
+        lane_part: &lane.part_frame,
+        x_tiled: &lane.x_tiled,
+        frame,
+        allocs: 0,
+    };
     for instr in &env.program.s_func {
         match instr {
             Instr::Wait { .. } | Instr::FchTile { .. } | Instr::Signal { .. } | Instr::Jump(_) => {}
-            Instr::Ld { target: LdTarget::Src, dst, .. } => {
-                grew += load_src(lane, t_meta, env.feat_in, frame, *dst)?;
-            }
-            other => grew += exec_tile_compute(env, lane, t_meta, &dims, frame, other)?,
+            other => dispatch::exec_instr(
+                &mut a,
+                env.weights,
+                env.feat_in,
+                Some(part),
+                Some(t_meta),
+                &dims,
+                other,
+            )?,
         }
     }
     for instr in &env.program.e_func {
         match instr {
             Instr::Wait { .. } | Instr::ChkPtt | Instr::Jump(_) => {}
-            // the edge list already lives in the Tile struct; LD.EDGE
-            // is timing-only
-            Instr::Ld { target: LdTarget::Edge, .. } => {}
             // cross-tile reduction: deferred to the ordered fold
             Instr::Gthr { .. } => {}
-            other => grew += exec_tile_compute(env, lane, t_meta, &dims, frame, other)?,
+            other => dispatch::exec_instr(
+                &mut a,
+                env.weights,
+                env.feat_in,
+                Some(part),
+                Some(t_meta),
+                &dims,
+                other,
+            )?,
         }
     }
-    Ok(grew)
+    Ok(a.allocs)
 }
 
-/// LD.SRC into a tile frame: gather the tile's source-vertex rows from
-/// the lane's permuted input image (contiguous blocks use one memcpy).
-fn load_src(
-    lane: &LaneState,
-    t_meta: &Tile,
-    feat_in: u32,
-    frame: &mut Frame,
-    dst: BufId,
-) -> Result<u64, String> {
-    let (mut t, _) = take_tile_dst(frame, dst)?;
-    let grew = t.reshape(t_meta.num_src(), feat_in);
-    let f = feat_in as usize;
-    let vs = &t_meta.src_vertices;
-    if let (Some(&first), Some(&last)) = (vs.first(), vs.last()) {
-        if (last - first) as usize + 1 == vs.len() {
-            let base = first as usize * f;
-            t.data.copy_from_slice(&lane.x_tiled[base..base + vs.len() * f]);
-        } else if f > 0 {
-            for (row, &v) in t.data.chunks_exact_mut(f).zip(vs) {
-                row.copy_from_slice(&lane.x_tiled[v as usize * f..(v as usize + 1) * f]);
-            }
+/// A parallel worker's [`BufAccess`] adapter for the tile phase: tile
+/// buffers live in the worker's private frame, partition buffers (LD.DST
+/// data, dFunction pre-op results) are a *read-only* view of the lane's
+/// partition frame. Writing the shared partition frame from the
+/// (parallel) tile phase would be a data race, so it is this adapter's
+/// hard error — the compiler routes all cross-tile writes through GTHR.
+pub(crate) struct TileAccess<'s> {
+    pub(crate) lane_part: &'s Frame,
+    pub(crate) x_tiled: &'s [f32],
+    pub(crate) frame: &'s mut Frame,
+    pub(crate) allocs: u64,
+}
+
+impl BufAccess for TileAccess<'_> {
+    fn read(&self, buf: BufId) -> Result<&Tensor, String> {
+        if buf.is_partition_frame() {
+            self.lane_part
+                .get(part_slot(buf))
+                .ok_or_else(|| format!("partition buffer b{} unset", buf.0))
+        } else {
+            self.frame
+                .get(buf.0 as usize)
+                .ok_or_else(|| format!("tile buffer b{} unset", buf.0))
         }
     }
-    frame.put(dst.0 as usize, t);
-    Ok(grew as u64)
+
+    fn take_dst(&mut self, buf: BufId) -> Result<(Tensor, bool), String> {
+        if buf.is_partition_frame() {
+            return Err(format!(
+                "tile phase cannot write partition buffer b{} (only GTHR crosses tiles)",
+                buf.0
+            ));
+        }
+        Ok(self.frame.take(buf.0 as usize))
+    }
+
+    fn put_back(&mut self, buf: BufId, t: Tensor, grew: bool) -> Result<(), String> {
+        if buf.is_partition_frame() {
+            return Err(format!(
+                "tile phase cannot write partition buffer b{} (only GTHR crosses tiles)",
+                buf.0
+            ));
+        }
+        self.allocs += grew as u64;
+        self.frame.put(buf.0 as usize, t);
+        Ok(())
+    }
+
+    fn input(&self) -> Result<&[f32], String> {
+        Ok(self.x_tiled)
+    }
 }
 
-/// Read an operand of a tile-phase instruction: tile buffers come from
-/// the worker's frame, partition buffers (LD.DST data, dFunction pre-op
-/// results) from the lane's read-only partition frame.
-fn read_buf<'f>(lane: &'f LaneState, frame: &'f Frame, buf: BufId) -> Result<&'f Tensor, String> {
-    if buf.is_partition_frame() {
-        lane.part_frame
+/// The dFunction partition-only [`BufAccess`] adapter: any tile-buffer
+/// access from the per-partition pre/post phases is this adapter's hard
+/// error (there is no bound tile to resolve it against).
+pub(crate) struct PartAccess<'s> {
+    pub(crate) part_frame: &'s mut Frame,
+    pub(crate) x_tiled: &'s [f32],
+    pub(crate) allocs: &'s mut u64,
+}
+
+impl BufAccess for PartAccess<'_> {
+    fn read(&self, buf: BufId) -> Result<&Tensor, String> {
+        if !buf.is_partition_frame() {
+            return Err(format!("dFunction read of tile buffer b{}", buf.0));
+        }
+        self.part_frame
             .get(part_slot(buf))
             .ok_or_else(|| format!("partition buffer b{} unset", buf.0))
-    } else {
-        frame
-            .get(buf.0 as usize)
-            .ok_or_else(|| format!("tile buffer b{} unset", buf.0))
+    }
+
+    fn take_dst(&mut self, buf: BufId) -> Result<(Tensor, bool), String> {
+        if !buf.is_partition_frame() {
+            return Err(format!("dFunction write to tile buffer b{}", buf.0));
+        }
+        Ok(self.part_frame.take(part_slot(buf)))
+    }
+
+    fn put_back(&mut self, buf: BufId, t: Tensor, grew: bool) -> Result<(), String> {
+        if !buf.is_partition_frame() {
+            return Err(format!("dFunction write to tile buffer b{}", buf.0));
+        }
+        *self.allocs += grew as u64;
+        self.part_frame.put(part_slot(buf), t);
+        Ok(())
+    }
+
+    fn input(&self) -> Result<&[f32], String> {
+        Ok(self.x_tiled)
     }
 }
 
-/// Detach a tile-frame destination slot. Writing the shared partition
-/// frame from the (parallel) tile phase would be a data race, so it is a
-/// hard error — the compiler routes all cross-tile writes through GTHR.
-fn take_tile_dst(frame: &mut Frame, buf: BufId) -> Result<(Tensor, bool), String> {
-    if buf.is_partition_frame() {
-        return Err(format!(
-            "tile phase cannot write partition buffer b{} (only GTHR crosses tiles)",
-            buf.0
-        ));
-    }
-    Ok(frame.take(buf.0 as usize))
-}
-
-/// Functional semantics of one tile-phase compute instruction, mirroring
-/// `FuncState::exec_compute`: detach the destination's pooled tensor,
-/// compute into it in place, re-attach. Returns pool-growth events.
-fn exec_tile_compute(
-    env: &Env,
-    lane: &LaneState,
-    t_meta: &Tile,
-    dims: &DimCtx,
-    frame: &mut Frame,
-    instr: &Instr,
-) -> Result<u64, String> {
-    let rd = |d: Dim| d.resolve(dims);
-    let (dst, out, grew) = match instr {
-        Instr::ElwU { op, src, dst, .. } => {
-            let (mut out, _) = take_tile_dst(frame, *dst)?;
-            let x = read_buf(lane, frame, *src)?;
-            let grew = tensor::apply_unary(*op, x, &mut out);
-            (*dst, out, grew)
-        }
-        Instr::ElwB { op, a, b, dst, .. } => {
-            let (mut out, _) = take_tile_dst(frame, *dst)?;
-            let at = read_buf(lane, frame, *a)?;
-            let bt = read_buf(lane, frame, *b)?;
-            let grew = tensor::apply_binary(*op, at, bt, &mut out);
-            (*dst, out, grew)
-        }
-        Instr::ElwBcast { op, a, vec, dst, .. } => {
-            let (mut out, _) = take_tile_dst(frame, *dst)?;
-            let at = read_buf(lane, frame, *a)?;
-            let vt = read_buf(lane, frame, *vec)?;
-            let grew = tensor::apply_bcast(*op, at, vt, &mut out);
-            (*dst, out, grew)
-        }
-        Instr::Gemv { src, weight: w, dst, .. } => {
-            let (mut out, _) = take_tile_dst(frame, *dst)?;
-            let x = read_buf(lane, frame, *src)?;
-            let grew = tensor::gemv(x, &env.weights.tensors[w.0 as usize].data, &mut out);
-            (*dst, out, grew)
-        }
-        Instr::Gemm { src, weight: w, dst, k, n, accumulate, .. } => {
-            let (mut out, was_set) = take_tile_dst(frame, *dst)?;
-            if *accumulate && !was_set {
-                return Err(format!("GEMM accumulate into unset buffer b{}", dst.0));
-            }
-            let x = read_buf(lane, frame, *src)?;
-            let grew = tensor::matmul(
-                x,
-                &env.weights.tensors[w.0 as usize].data,
-                rd(*k),
-                rd(*n),
-                &mut out,
-                *accumulate,
-            );
-            (*dst, out, grew)
-        }
-        Instr::Bmm { src, weights, dst, k, n, .. } => {
-            let (mut out, _) = take_tile_dst(frame, *dst)?;
-            let x = read_buf(lane, frame, *src)?;
-            let grew = tensor::bmm_by_type(
-                x,
-                &env.weights.tensors[weights.0 as usize].data,
-                rd(*k),
-                rd(*n),
-                t_meta.etypes.as_deref(),
-                &mut out,
-            );
-            (*dst, out, grew)
-        }
-        Instr::Sctr { dir, src, dst, cols } => {
-            let (mut out, _) = take_tile_dst(frame, *dst)?;
-            let v = read_buf(lane, frame, *src)?;
-            let grew = tensor::scatter_rows(v, &t_meta.edges, *dir, rd(*cols), &mut out);
-            (*dst, out, grew)
-        }
-        other => return Err(format!("unexpected instr in tile phase: {other}")),
-    };
-    frame.put(dst.0 as usize, out);
-    Ok(grew as u64)
-}
-
-fn take_part(lane: &mut LaneState, buf: BufId) -> Result<(Tensor, bool), String> {
-    if !buf.is_partition_frame() {
-        return Err(format!("dFunction write to tile buffer b{}", buf.0));
-    }
-    Ok(lane.part_frame.take(part_slot(buf)))
-}
-
-fn get_part(lane: &LaneState, buf: BufId) -> Result<&Tensor, String> {
-    if !buf.is_partition_frame() {
-        return Err(format!("dFunction read of tile buffer b{}", buf.0));
-    }
-    lane.part_frame
-        .get(part_slot(buf))
-        .ok_or_else(|| format!("partition buffer b{} unset", buf.0))
-}
-
-/// Functional semantics of one dFunction instruction (pre or post
-/// phase): LD.DST plus partition-frame computes. ST.DST is a no-op here —
-/// the commit happens once per partition via `LaneState::commit_partition`.
+/// One dFunction instruction (pre or post phase) for one lane, through
+/// the shared dispatch core over the partition-only adapter. ST.DST is a
+/// dispatch-level no-op — the commit happens once per partition via
+/// `LaneState::commit_partition`.
 fn exec_part_instr(
     env: &Env,
     part: &Partition,
@@ -609,61 +595,10 @@ fn exec_part_instr(
     lane: &mut LaneState,
     instr: &Instr,
 ) -> Result<(), String> {
-    let rd = |d: Dim| d.resolve(dims);
-    let (dst, out, grew) = match instr {
-        Instr::Ld { target: LdTarget::Dst, dst, .. } => {
-            let (mut t, _) = take_part(lane, *dst)?;
-            let grew = t.reshape(part.num_dst(), env.feat_in);
-            let base = part.dst_start as usize * env.feat_in as usize;
-            t.data.copy_from_slice(&lane.x_tiled[base..base + t.data.len()]);
-            (*dst, t, grew)
-        }
-        Instr::St { .. } => return Ok(()),
-        Instr::ElwU { op, src, dst, .. } => {
-            let (mut out, _) = take_part(lane, *dst)?;
-            let x = get_part(lane, *src)?;
-            let grew = tensor::apply_unary(*op, x, &mut out);
-            (*dst, out, grew)
-        }
-        Instr::ElwB { op, a, b, dst, .. } => {
-            let (mut out, _) = take_part(lane, *dst)?;
-            let at = get_part(lane, *a)?;
-            let bt = get_part(lane, *b)?;
-            let grew = tensor::apply_binary(*op, at, bt, &mut out);
-            (*dst, out, grew)
-        }
-        Instr::ElwBcast { op, a, vec, dst, .. } => {
-            let (mut out, _) = take_part(lane, *dst)?;
-            let at = get_part(lane, *a)?;
-            let vt = get_part(lane, *vec)?;
-            let grew = tensor::apply_bcast(*op, at, vt, &mut out);
-            (*dst, out, grew)
-        }
-        Instr::Gemv { src, weight: w, dst, .. } => {
-            let (mut out, _) = take_part(lane, *dst)?;
-            let x = get_part(lane, *src)?;
-            let grew = tensor::gemv(x, &env.weights.tensors[w.0 as usize].data, &mut out);
-            (*dst, out, grew)
-        }
-        Instr::Gemm { src, weight: w, dst, k, n, accumulate, .. } => {
-            let (mut out, was_set) = take_part(lane, *dst)?;
-            if *accumulate && !was_set {
-                return Err(format!("GEMM accumulate into unset buffer b{}", dst.0));
-            }
-            let x = get_part(lane, *src)?;
-            let grew = tensor::matmul(
-                x,
-                &env.weights.tensors[w.0 as usize].data,
-                rd(*k),
-                rd(*n),
-                &mut out,
-                *accumulate,
-            );
-            (*dst, out, grew)
-        }
-        other => return Err(format!("unexpected instr in dFunction phase: {other}")),
+    let mut a = PartAccess {
+        part_frame: &mut lane.part_frame,
+        x_tiled: &lane.x_tiled,
+        allocs: &mut lane.allocs,
     };
-    lane.part_frame.put(part_slot(dst), out);
-    lane.allocs += grew as u64;
-    Ok(())
+    dispatch::exec_instr(&mut a, env.weights, env.feat_in, Some(part), None, dims, instr)
 }

@@ -12,6 +12,20 @@
 //! warm path. Each shaping op returns `true` iff the destination's
 //! backing allocation had to grow; the executor feeds that into its
 //! allocation counter. New kernels must follow the same convention.
+//!
+//! **Error convention**: operand-shape mismatches that a (mis)compiled
+//! program could reach through the serving path return `Err(String)`
+//! carrying the offending shapes — the dispatch core prefixes the
+//! instruction — instead of panicking inside a scoped worker thread
+//! (which would surface as a messageless "tile worker panicked").
+//! `debug_assert!` remains for pure-internal invariants the tiling and
+//! compiler construction already guarantee (e.g. local edge endpoints
+//! in bounds).
+//!
+//! The `*_inplace` variants back the dispatch core's aliased-operand
+//! (`src == dst`) path: they apply the exact same scalar function to the
+//! detached destination tensor, so results are bit-identical to the
+//! out-of-place kernels.
 
 use crate::isa::{ElwBinary, ElwUnary, Reduce, SctrDir};
 
@@ -79,8 +93,8 @@ impl Tensor {
     }
 }
 
-pub fn apply_unary(op: ElwUnary, x: &Tensor, out: &mut Tensor) -> bool {
-    let f: fn(f32) -> f32 = match op {
+fn unop(op: ElwUnary) -> fn(f32) -> f32 {
+    match op {
         ElwUnary::Exp => |v| v.exp(),
         ElwUnary::Relu => |v| v.max(0.0),
         ElwUnary::LeakyRelu => |v| if v >= 0.0 { v } else { 0.2 * v },
@@ -90,7 +104,11 @@ pub fn apply_unary(op: ElwUnary, x: &Tensor, out: &mut Tensor) -> bool {
         ElwUnary::OneMinus => |v| 1.0 - v,
         ElwUnary::Recip => |v| 1.0 / v,
         ElwUnary::Recip0 => |v| if v == 0.0 { 0.0 } else { 1.0 / v },
-    };
+    }
+}
+
+pub fn apply_unary(op: ElwUnary, x: &Tensor, out: &mut Tensor) -> bool {
+    let f = unop(op);
     let grew = out.reshape(x.rows, x.cols);
     for (o, &v) in out.data.iter_mut().zip(&x.data) {
         *o = f(v);
@@ -98,20 +116,102 @@ pub fn apply_unary(op: ElwUnary, x: &Tensor, out: &mut Tensor) -> bool {
     grew
 }
 
-pub fn apply_binary(op: ElwBinary, a: &Tensor, b: &Tensor, out: &mut Tensor) -> bool {
-    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "ELW shape mismatch");
+/// In-place unary for aliased `src == dst` instructions.
+pub fn apply_unary_inplace(op: ElwUnary, t: &mut Tensor) {
+    let f = unop(op);
+    for v in &mut t.data {
+        *v = f(*v);
+    }
+}
+
+fn binary_shapes_match(a: &Tensor, b: &Tensor) -> Result<(), String> {
+    if (a.rows, a.cols) != (b.rows, b.cols) {
+        return Err(format!(
+            "ELW operand shape mismatch: {}x{} vs {}x{}",
+            a.rows, a.cols, b.rows, b.cols
+        ));
+    }
+    Ok(())
+}
+
+pub fn apply_binary(
+    op: ElwBinary,
+    a: &Tensor,
+    b: &Tensor,
+    out: &mut Tensor,
+) -> Result<bool, String> {
+    binary_shapes_match(a, b)?;
     let f: fn(f32, f32) -> f32 = binop(op);
     let grew = out.reshape(a.rows, a.cols);
     for ((o, &x), &y) in out.data.iter_mut().zip(&a.data).zip(&b.data) {
         *o = f(x, y);
     }
-    grew
+    Ok(grew)
+}
+
+/// In-place binary with the destination aliasing the LEFT operand:
+/// `a = f(a, b)`.
+pub fn apply_binary_lhs_inplace(
+    op: ElwBinary,
+    a: &mut Tensor,
+    b: &Tensor,
+) -> Result<(), String> {
+    binary_shapes_match(a, b)?;
+    let f = binop(op);
+    for (x, &y) in a.data.iter_mut().zip(&b.data) {
+        *x = f(*x, y);
+    }
+    Ok(())
+}
+
+/// In-place binary with the destination aliasing the RIGHT operand:
+/// `b = f(a, b)`.
+pub fn apply_binary_rhs_inplace(
+    op: ElwBinary,
+    a: &Tensor,
+    b: &mut Tensor,
+) -> Result<(), String> {
+    binary_shapes_match(a, b)?;
+    let f = binop(op);
+    for (&x, y) in a.data.iter().zip(b.data.iter_mut()) {
+        *y = f(x, *y);
+    }
+    Ok(())
+}
+
+/// In-place binary with the destination aliasing BOTH operands:
+/// `t = f(t, t)`.
+pub fn apply_binary_self_inplace(op: ElwBinary, t: &mut Tensor) {
+    let f = binop(op);
+    for v in &mut t.data {
+        *v = f(*v, *v);
+    }
+}
+
+fn bcast_shapes_match(a: &Tensor, vec: &Tensor) -> Result<(), String> {
+    if a.rows != vec.rows {
+        return Err(format!(
+            "broadcast row mismatch: operand {}x{} vs vector {}x{}",
+            a.rows, a.cols, vec.rows, vec.cols
+        ));
+    }
+    if vec.cols != 1 {
+        return Err(format!(
+            "broadcast vector must be a column, got {}x{}",
+            vec.rows, vec.cols
+        ));
+    }
+    Ok(())
 }
 
 /// Broadcast a (rows × 1) column over a (rows × cols) operand.
-pub fn apply_bcast(op: ElwBinary, a: &Tensor, vec: &Tensor, out: &mut Tensor) -> bool {
-    assert_eq!(a.rows, vec.rows, "broadcast rows mismatch");
-    assert_eq!(vec.cols, 1, "broadcast vector must be a column");
+pub fn apply_bcast(
+    op: ElwBinary,
+    a: &Tensor,
+    vec: &Tensor,
+    out: &mut Tensor,
+) -> Result<bool, String> {
+    bcast_shapes_match(a, vec)?;
     let f = binop(op);
     let grew = out.reshape(a.rows, a.cols);
     let c = a.cols as usize;
@@ -127,7 +227,23 @@ pub fn apply_bcast(op: ElwBinary, a: &Tensor, vec: &Tensor, out: &mut Tensor) ->
             }
         }
     }
-    grew
+    Ok(grew)
+}
+
+/// In-place broadcast with the destination aliasing the row operand:
+/// `a[r][c] = f(a[r][c], vec[r])`.
+pub fn apply_bcast_inplace(op: ElwBinary, a: &mut Tensor, vec: &Tensor) -> Result<(), String> {
+    bcast_shapes_match(a, vec)?;
+    let f = binop(op);
+    let c = a.cols as usize;
+    if c > 0 {
+        for (dst, &v) in a.data.chunks_exact_mut(c).zip(&vec.data) {
+            for d in dst.iter_mut() {
+                *d = f(*d, v);
+            }
+        }
+    }
+    Ok(())
 }
 
 fn binop(op: ElwBinary) -> fn(f32, f32) -> f32 {
@@ -155,17 +271,39 @@ const NR: usize = 16;
 /// output rows (~4× less weight-stream traffic than the row-at-a-time
 /// kernel it replaced). `accumulate` folds into the store, so
 /// GEMM-accumulate needs no separate zero + add passes.
-pub fn matmul(x: &Tensor, w: &[f32], k: u32, n: u32, out: &mut Tensor, accumulate: bool) -> bool {
-    assert_eq!(x.cols, k, "GEMM inner dim");
+pub fn matmul(
+    x: &Tensor,
+    w: &[f32],
+    k: u32,
+    n: u32,
+    out: &mut Tensor,
+    accumulate: bool,
+) -> Result<bool, String> {
+    if x.cols != k {
+        return Err(format!(
+            "GEMM inner-dim mismatch: src is {}x{}, k = {k}",
+            x.rows, x.cols
+        ));
+    }
+    if (w.len() as u64) < k as u64 * n as u64 {
+        return Err(format!(
+            "GEMM weight matrix too small: {} elements for {k}x{n}",
+            w.len()
+        ));
+    }
     let grew = if accumulate {
-        assert_eq!((out.rows, out.cols), (x.rows, n), "GEMM accumulate shape");
+        if (out.rows, out.cols) != (x.rows, n) {
+            return Err(format!(
+                "GEMM accumulate destination is {}x{}, want {}x{n}",
+                out.rows, out.cols, x.rows
+            ));
+        }
         false
     } else {
         out.reshape(x.rows, n)
     };
     let m = x.rows as usize;
     let (k, n) = (k as usize, n as usize);
-    debug_assert!(w.len() >= k * n, "weight matrix too small");
     let mut r = 0;
     while r < m {
         let mr = MR.min(m - r);
@@ -211,7 +349,7 @@ pub fn matmul(x: &Tensor, w: &[f32], k: u32, n: u32, out: &mut Tensor, accumulat
         }
         r += mr;
     }
-    grew
+    Ok(grew)
 }
 
 /// Per-edge typed matmul: edge r uses weight matrix `etypes[r]`
@@ -223,14 +361,44 @@ pub fn bmm_by_type(
     n: u32,
     etypes: Option<&[u8]>,
     out: &mut Tensor,
-) -> bool {
-    assert_eq!(x.cols, k);
+) -> Result<bool, String> {
+    if x.cols != k {
+        return Err(format!(
+            "BMM inner-dim mismatch: src is {}x{}, k = {k}",
+            x.rows, x.cols
+        ));
+    }
     if let Some(t) = etypes {
-        assert_eq!(t.len(), x.rows as usize);
+        if t.len() != x.rows as usize {
+            return Err(format!(
+                "BMM edge-type count {} != {} edge rows",
+                t.len(),
+                x.rows
+            ));
+        }
     }
     let grew = out.reshape(x.rows, n);
     let (k, n) = (k as usize, n as usize);
     let mat = k * n;
+    if mat == 0 {
+        out.data.fill(0.0);
+        return Ok(grew);
+    }
+    let nmat = wset.len() / mat;
+    match etypes.and_then(|t| t.iter().copied().max()) {
+        Some(max_ty) if (max_ty as usize) >= nmat => {
+            return Err(format!(
+                "BMM edge type {max_ty} out of range: weight set holds {nmat} {k}x{n} matrices"
+            ));
+        }
+        None if etypes.is_none() && nmat == 0 => {
+            return Err(format!(
+                "BMM weight set too small: {} elements for one {k}x{n} matrix",
+                wset.len()
+            ));
+        }
+        _ => {}
+    }
     for r in 0..x.rows as usize {
         let ty = etypes.map_or(0, |t| t[r] as usize);
         let w = &wset[ty * mat..(ty + 1) * mat];
@@ -244,12 +412,20 @@ pub fn bmm_by_type(
             }
         }
     }
-    grew
+    Ok(grew)
 }
 
 /// GEMV: `x (rows×cols) @ w (cols×1)` → (rows×1), in place.
-pub fn gemv(x: &Tensor, w: &[f32], out: &mut Tensor) -> bool {
-    assert_eq!(w.len(), x.cols as usize);
+pub fn gemv(x: &Tensor, w: &[f32], out: &mut Tensor) -> Result<bool, String> {
+    if w.len() != x.cols as usize {
+        return Err(format!(
+            "GEMV weight length {} != src cols {} (src is {}x{})",
+            w.len(),
+            x.cols,
+            x.rows,
+            x.cols
+        ));
+    }
     let grew = out.reshape(x.rows, 1);
     let c = x.cols as usize;
     if c == 0 {
@@ -259,7 +435,7 @@ pub fn gemv(x: &Tensor, w: &[f32], out: &mut Tensor) -> bool {
             *o = xrow.iter().zip(w).map(|(&a, &b)| a * b).sum();
         }
     }
-    grew
+    Ok(grew)
 }
 
 /// SCTR: expand vertex rows along a tile's COO edge list. `edges` holds
@@ -270,8 +446,13 @@ pub fn scatter_rows(
     dir: SctrDir,
     cols: u32,
     out: &mut Tensor,
-) -> bool {
-    assert_eq!(v.cols, cols, "SCTR cols mismatch");
+) -> Result<bool, String> {
+    if v.cols != cols {
+        return Err(format!(
+            "SCTR column mismatch: vertex buffer is {}x{}, want {cols} cols",
+            v.rows, v.cols
+        ));
+    }
     let grew = out.reshape(edges.len() as u32, cols);
     let c = cols as usize;
     if c > 0 {
@@ -280,16 +461,37 @@ pub fn scatter_rows(
                 SctrDir::OutEdge => ls,
                 SctrDir::InEdge => ld,
             };
+            // local edge endpoints in bounds is a tiling-construction
+            // invariant, not a program-reachable state
+            debug_assert!(src < v.rows, "edge endpoint {src} out of tile bounds {}", v.rows);
             row.copy_from_slice(v.row(src));
         }
     }
-    grew
+    Ok(grew)
 }
 
 /// GTHR: reduce edge rows into the partition accumulator
 /// (`acc[ld] ⊕= e[ei]` for each edge). The accumulator is written in
 /// place and must already be shaped by the partition prologue.
-pub fn gather_rows(reduce: Reduce, e: &Tensor, edges: &[(u32, u32)], acc: &mut Tensor) {
+pub fn gather_rows(
+    reduce: Reduce,
+    e: &Tensor,
+    edges: &[(u32, u32)],
+    acc: &mut Tensor,
+) -> Result<(), String> {
+    if e.cols != acc.cols {
+        return Err(format!(
+            "GTHR column mismatch: edge buffer is {}x{}, accumulator {}x{}",
+            e.rows, e.cols, acc.rows, acc.cols
+        ));
+    }
+    if (e.rows as usize) < edges.len() {
+        return Err(format!(
+            "GTHR edge buffer has {} rows for {} edges",
+            e.rows,
+            edges.len()
+        ));
+    }
     match reduce {
         Reduce::Sum => {
             for (ei, &(_, ld)) in edges.iter().enumerate() {
@@ -308,6 +510,7 @@ pub fn gather_rows(reduce: Reduce, e: &Tensor, edges: &[(u32, u32)], acc: &mut T
             }
         }
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -334,10 +537,10 @@ mod tests {
         let x = Tensor::from_rows(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
         let w = vec![1.0, 0.0, 0.0, 1.0]; // identity
         let mut out = Tensor::default();
-        matmul(&x, &w, 2, 2, &mut out, false);
+        matmul(&x, &w, 2, 2, &mut out, false).unwrap();
         assert_eq!(out.data, x.data);
         // accumulate doubles
-        matmul(&x, &w, 2, 2, &mut out, true);
+        matmul(&x, &w, 2, 2, &mut out, true).unwrap();
         assert_eq!(out.data, vec![2.0, 4.0, 6.0, 8.0]);
     }
 
@@ -355,7 +558,7 @@ mod tests {
             let w: Vec<f32> = (0..k * n).map(|_| rng.next_f32_sym()).collect();
             let mut expect = Vec::new();
             matmul_naive(&x, &w, k, n, &mut expect);
-            matmul(&x, &w, k as u32, n as u32, &mut out, false);
+            matmul(&x, &w, k as u32, n as u32, &mut out, false).unwrap();
             assert_eq!((out.rows, out.cols), (m, n as u32));
             for (a, b) in out.data.iter().zip(&expect) {
                 assert!((a - b).abs() < 1e-4, "{m}x{k}x{n}: {a} vs {b}");
@@ -395,7 +598,7 @@ mod tests {
         let a = Tensor::from_rows(2, 2, vec![2.0, 4.0, 9.0, 12.0]);
         let v = Tensor::from_rows(2, 1, vec![2.0, 3.0]);
         let mut out = Tensor::default();
-        apply_bcast(ElwBinary::Div, &a, &v, &mut out);
+        apply_bcast(ElwBinary::Div, &a, &v, &mut out).unwrap();
         assert_eq!(out.data, vec![1.0, 2.0, 3.0, 4.0]);
     }
 
@@ -405,10 +608,10 @@ mod tests {
         let x = Tensor::from_rows(3, 1, vec![1.0, 2.0, 3.0]);
         let wset = vec![10.0, 100.0];
         let mut out = Tensor::default();
-        bmm_by_type(&x, &wset, 1, 1, Some(&[0, 1, 0]), &mut out);
+        bmm_by_type(&x, &wset, 1, 1, Some(&[0, 1, 0]), &mut out).unwrap();
         assert_eq!(out.data, vec![10.0, 200.0, 30.0]);
         // untyped fallback: every edge uses matrix 0
-        bmm_by_type(&x, &wset, 1, 1, None, &mut out);
+        bmm_by_type(&x, &wset, 1, 1, None, &mut out).unwrap();
         assert_eq!(out.data, vec![10.0, 20.0, 30.0]);
     }
 
@@ -417,7 +620,7 @@ mod tests {
         let x = Tensor::from_rows(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         let w = vec![1.0, 0.5, 2.0];
         let mut out = Tensor::default();
-        gemv(&x, &w, &mut out);
+        gemv(&x, &w, &mut out).unwrap();
         assert_eq!(out.data, vec![8.0, 18.5]);
     }
 
@@ -426,14 +629,76 @@ mod tests {
         let v = Tensor::from_rows(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         let edges = [(0u32, 1u32), (2, 1), (1, 0)];
         let mut e = Tensor::default();
-        scatter_rows(&v, &edges, SctrDir::OutEdge, 2, &mut e);
+        scatter_rows(&v, &edges, SctrDir::OutEdge, 2, &mut e).unwrap();
         assert_eq!(e.data, vec![1.0, 2.0, 5.0, 6.0, 3.0, 4.0]);
         let mut acc = Tensor::zeros(2, 2);
-        gather_rows(Reduce::Sum, &e, &edges, &mut acc);
+        gather_rows(Reduce::Sum, &e, &edges, &mut acc).unwrap();
         // dst 0 ← edge 2 (src row 1); dst 1 ← edges 0+1 (rows 0+2)
         assert_eq!(acc.data, vec![3.0, 4.0, 6.0, 8.0]);
         let mut mx = Tensor::filled(2, 2, f32::NEG_INFINITY);
-        gather_rows(Reduce::Max, &e, &edges, &mut mx);
+        gather_rows(Reduce::Max, &e, &edges, &mut mx).unwrap();
         assert_eq!(mx.data, vec![3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn shape_mismatches_are_errors_carrying_shapes() {
+        let a = Tensor::zeros(2, 3);
+        let b = Tensor::zeros(3, 2);
+        let mut out = Tensor::default();
+        let e = apply_binary(ElwBinary::Add, &a, &b, &mut out).unwrap_err();
+        assert!(e.contains("2x3") && e.contains("3x2"), "{e}");
+        let v = Tensor::zeros(2, 2); // not a column
+        let e = apply_bcast(ElwBinary::Div, &a, &v, &mut out).unwrap_err();
+        assert!(e.contains("column"), "{e}");
+        let e = matmul(&a, &[0.0; 6], 2, 3, &mut out, false).unwrap_err();
+        assert!(e.contains("inner-dim"), "{e}");
+        let e = matmul(&a, &[0.0; 2], 3, 2, &mut out, false).unwrap_err();
+        assert!(e.contains("too small"), "{e}");
+        let e = bmm_by_type(&a, &[0.0; 6], 3, 2, Some(&[0, 1]), &mut out).unwrap_err();
+        assert!(e.contains("out of range"), "{e}");
+        let e = gemv(&a, &[1.0, 2.0], &mut out).unwrap_err();
+        assert!(e.contains("GEMV"), "{e}");
+        let e = scatter_rows(&a, &[(0, 0)], SctrDir::OutEdge, 5, &mut out).unwrap_err();
+        assert!(e.contains("SCTR"), "{e}");
+        let edge_buf = Tensor::zeros(1, 4);
+        let mut acc = Tensor::zeros(2, 3);
+        let e = gather_rows(Reduce::Sum, &edge_buf, &[(0, 0)], &mut acc).unwrap_err();
+        assert!(e.contains("GTHR"), "{e}");
+    }
+
+    #[test]
+    fn inplace_variants_match_out_of_place_bit_exactly() {
+        let mut rng = Rng::new(9);
+        let mk = |rng: &mut Rng, r: u32, c: u32| {
+            Tensor::from_rows(r, c, (0..r as usize * c as usize).map(|_| rng.next_f32_sym()).collect())
+        };
+        let a = mk(&mut rng, 5, 7);
+        let b = mk(&mut rng, 5, 7);
+        let v = mk(&mut rng, 5, 1);
+        let mut want = Tensor::default();
+        let mut got;
+
+        apply_unary(ElwUnary::Sigmoid, &a, &mut want);
+        got = a.clone();
+        apply_unary_inplace(ElwUnary::Sigmoid, &mut got);
+        assert_eq!(got, want);
+
+        apply_binary(ElwBinary::Sub, &a, &b, &mut want).unwrap();
+        got = a.clone();
+        apply_binary_lhs_inplace(ElwBinary::Sub, &mut got, &b).unwrap();
+        assert_eq!(got, want);
+        got = b.clone();
+        apply_binary_rhs_inplace(ElwBinary::Sub, &a, &mut got).unwrap();
+        assert_eq!(got, want);
+
+        apply_binary(ElwBinary::Mul, &a, &a, &mut want).unwrap();
+        got = a.clone();
+        apply_binary_self_inplace(ElwBinary::Mul, &mut got);
+        assert_eq!(got, want);
+
+        apply_bcast(ElwBinary::Div, &a, &v, &mut want).unwrap();
+        got = a.clone();
+        apply_bcast_inplace(ElwBinary::Div, &mut got, &v).unwrap();
+        assert_eq!(got, want);
     }
 }
