@@ -14,7 +14,12 @@
 //!      execution on (`max_batch = 8`, `exec_threads = 4`): same-plan
 //!      requests share one timing simulation and one batched functional
 //!      pass, with per-request checksums asserted bit-identical to the
-//!      sequential warm pass.
+//!      sequential warm pass,
+//!   5. serves **3-layer pipelines** (GCN/GAT/SAGE, shared tiling per
+//!      plan) and prints the per-layer cycle/DRAM/energy breakdown plus
+//!      the aggregate peak-UEM footprint (Fig 2's inter-layer
+//!      activation story), asserting the per-layer cycles sum to the
+//!      pipeline total.
 //!
 //! ```bash
 //! cargo run --release --example serve_inference
@@ -50,6 +55,8 @@ fn request(i: u64) -> InferenceRequest {
         e2v: true,
         functional: true,
         seed: 7,
+        layers: 1,
+        hidden: Vec::new(),
         serving: Default::default(),
     };
     InferenceRequest { id: i, run, input_seed: i }
@@ -206,6 +213,55 @@ fn main() -> Result<(), String> {
         warm_wall / batched_wall
     );
     println!("per-request outputs bit-identical to sequential serving (asserted)");
+
+    // ---- phase 5: stacked-layer pipelines --------------------------------
+    println!("\n== phase 5: 3-layer pipelines (one shared tiling per plan) ==");
+    let serving = ServingConfig { exec_threads: 4, max_batch: 4 };
+    let mut c = Coordinator::with_serving(arch, workers, serving, Arc::clone(&cache));
+    for i in 0..3u64 {
+        // request(0..3) lands on gcn/gat/sage
+        for k in 0..2u64 {
+            let mut req = request(i);
+            req.id = i * 2 + k;
+            req.run.layers = 3;
+            req.input_seed = k;
+            c.submit(req);
+        }
+    }
+    let mut deep = c.drain();
+    deep.sort_by_key(|r| r.id);
+    let mut lt = Table::new(&["model", "layer", "dims", "cycles", "dram read", "energy"]);
+    for r in deep.iter() {
+        if let Some(e) = &r.error {
+            return Err(format!("layered request {} failed: {e}", r.id));
+        }
+        assert_eq!(r.layers.len(), 3, "depth-3 breakdown expected");
+        assert_eq!(
+            r.sim_cycles,
+            r.layers.iter().map(|l| l.cycles).sum::<u64>(),
+            "per-layer cycles must sum to the pipeline total"
+        );
+        if r.id % 2 == 0 {
+            for (l, lc) in r.layers.iter().enumerate() {
+                lt.row(&[
+                    if l == 0 { r.model.clone() } else { String::new() },
+                    l.to_string(),
+                    format!("{}x{}", lc.feat_in, lc.feat_out),
+                    lc.cycles.to_string(),
+                    format!("{:.1} KB", lc.dram_read_bytes as f64 / 1024.0),
+                    format!("{:.3} mJ", lc.energy_j * 1e3),
+                ]);
+            }
+        }
+    }
+    print!("{}", lt.render());
+    let peak = deep.iter().map(|r| r.peak_uem_bytes).max().unwrap_or(0);
+    println!(
+        "aggregate peak UEM incl. inter-layer activations: {:.1} KB \
+         (depth cost is visible per layer above)",
+        peak as f64 / 1024.0
+    );
+
     println!(
         "\nsimulated accelerator latency: mean {:.3} ms, min {:.3} ms, max {:.3} ms",
         sim_lat.mean * 1e3,

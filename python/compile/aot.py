@@ -17,6 +17,7 @@ request path.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import hashlib
 import json
 import pathlib
@@ -75,6 +76,35 @@ DEFAULT_SHAPES = [
 ]
 
 
+def chain_shapes(base: M.TileShape, layers: int,
+                 hidden: list[int]) -> list[M.TileShape]:
+    """Tile shapes for every layer of a stacked pipeline at `base`.
+
+    Mirrors the Rust ``ModelSpec`` width resolution: the chain is
+    ``feat_in -> hidden... -> feat_out`` with hidden defaulting to
+    ``feat_out`` repeated ``layers - 1`` times. One artifact per distinct
+    (in, out) pair is enough — the Rust runtime re-executes the same
+    artifact per layer with that layer's weights.
+    """
+    if layers <= 1:
+        if hidden:
+            # mirror the Rust ModelSpec rule: a depth-1 pipeline takes
+            # no hidden widths (silently dropping them would desync the
+            # artifact set from the runtime's validation)
+            raise SystemExit(
+                f"--hidden lists {len(hidden)} widths but --layers {layers} "
+                f"needs exactly 0")
+        return [base]
+    hs = hidden or [base.feat_out] * (layers - 1)
+    if len(hs) != layers - 1:
+        raise SystemExit(
+            f"--hidden lists {len(hs)} widths but --layers {layers} needs "
+            f"exactly {layers - 1}")
+    widths = [base.feat_in, *hs, base.feat_out]
+    return [dataclasses.replace(base, feat_in=fi, feat_out=fo)
+            for fi, fo in zip(widths, widths[1:])]
+
+
 def main(argv=None) -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--out-dir", default=None,
@@ -84,21 +114,46 @@ def main(argv=None) -> None:
                         "(Makefile stamp file)")
     p.add_argument("--models", nargs="*", default=sorted(M.MODELS),
                    help="subset of models to lower")
+    p.add_argument("--layers", type=int, default=1,
+                   help="pipeline depth: also lower artifacts for every "
+                        "layer's (in, out) dims of the stacked chain (the "
+                        "Rust side chains one artifact execution per layer, "
+                        "ReLU between hidden layers, final layer linear)")
+    p.add_argument("--hidden", default="",
+                   help="comma-separated hidden widths (layers-1 entries; "
+                        "default: feat_out repeated)")
     args = p.parse_args(argv)
+    hidden = [int(h) for h in args.hidden.split(",") if h.strip()]
 
     repo = pathlib.Path(__file__).resolve().parents[2]
     out_dir = pathlib.Path(args.out_dir) if args.out_dir else repo / "artifacts"
     out_dir.mkdir(parents=True, exist_ok=True)
 
     manifest = {"format": "hlo-text", "entries": []}
+    if args.layers > 1:
+        # stacking recipe for consumers: mirrors rust models::ModelSpec
+        manifest["pipeline"] = {
+            "layers": args.layers,
+            "hidden": hidden or None,
+            "activation": "relu",
+            "final": "linear",
+            "note": "execute one artifact per layer with that layer's "
+                    "weights; layer l output (original vertex order) is "
+                    "layer l+1 input, ReLU between hidden layers",
+        }
     for name in args.models:
-        for ts in DEFAULT_SHAPES:
-            text, meta = lower_model(name, ts)
-            fname = f"{name}__{ts.tag()}.hlo.txt"
-            (out_dir / fname).write_text(text)
-            meta["file"] = fname
-            manifest["entries"].append(meta)
-            print(f"  {fname}: {len(text)} chars", file=sys.stderr)
+        seen: set[str] = set()
+        for base in DEFAULT_SHAPES:
+            for ts in chain_shapes(base, args.layers, hidden):
+                if ts.tag() in seen:
+                    continue  # uniform chains reuse one artifact per layer
+                seen.add(ts.tag())
+                text, meta = lower_model(name, ts)
+                fname = f"{name}__{ts.tag()}.hlo.txt"
+                (out_dir / fname).write_text(text)
+                meta["file"] = fname
+                manifest["entries"].append(meta)
+                print(f"  {fname}: {len(text)} chars", file=sys.stderr)
 
     (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
     print(f"wrote {len(manifest['entries'])} artifacts to {out_dir}",

@@ -211,6 +211,62 @@ class ModelSpec:
         return functools.partial(self.fn, num_dst=ts.num_dst)
 
 
+# ---------------------------------------------------------------------------
+# Layer stacking (multi-layer pipelines)
+# ---------------------------------------------------------------------------
+
+# Argument-name classes shared by every registry model: the graph args
+# are layer-invariant, the x args carry the chained embeddings, and
+# everything else is a per-layer weight.
+GRAPH_ARG_NAMES = ("src", "dst", "valid", "etype")
+X_ARG_NAMES = ("x_src", "x_dst")
+
+
+def stacked(name: str, ts: TileShape, layer_weights, graph_args, x,
+            activation=None):
+    """Chain ``len(layer_weights)`` layers of model `name` on one tile.
+
+    Mirrors the Rust ``ModelSpec`` pipeline semantics exactly: layer
+    *l*'s output becomes layer *l+1*'s ``x_src``/``x_dst``, hidden
+    layers get `activation` (default ReLU), and the final layer is
+    linear. The graph args (edge list, validity mask, edge types) are
+    shared by every layer — the single-tiling amortization the Rust
+    `plan::ExecPlan` performs per partition.
+
+    Requires a *square* tile (``num_src == num_dst`` and ``feat_in ==
+    feat_out``): only then is "feed the output back in" well-defined on
+    one tile, which is the per-partition contract the Rust multi-layer
+    PJRT validation drives.
+
+    `layer_weights` is one dict per layer mapping weight arg names to
+    arrays; `graph_args` maps the GRAPH_ARG_NAMES the model uses.
+    """
+    from .kernels import ref
+    if activation is None:
+        activation = ref.relu
+    if ts.num_src != ts.num_dst or ts.feat_in != ts.feat_out:
+        raise ValueError(
+            f"stacked() needs a square tile shape (num_src == num_dst, "
+            f"feat_in == feat_out), got {ts}")
+    spec = MODELS[name]
+    fn = spec.bind(ts)
+    h = x
+    depth = len(layer_weights)
+    for l, weights in enumerate(layer_weights):
+        args = []
+        for n in spec.arg_names:
+            if n in X_ARG_NAMES:
+                args.append(h)
+            elif n in GRAPH_ARG_NAMES:
+                args.append(graph_args[n])
+            else:
+                args.append(weights[n])
+        h = fn(*args)
+        if l + 1 < depth:
+            h = activation(h)
+    return h
+
+
 MODELS: dict[str, ModelSpec] = {
     "gcn": ModelSpec("gcn", gcn_e2v, ("x_src", "src", "dst", "valid", "w")),
     "gcn_naive": ModelSpec("gcn_naive", gcn_naive,

@@ -1,0 +1,89 @@
+"""Layer-stacking semantics: `model.stacked` must equal manually chaining
+the single-layer tile forwards with ReLU between hidden layers and a
+linear final layer — the exact pipeline contract the Rust `ModelSpec` /
+`plan::ExecPlan` implement and the multi-layer PJRT validation drives.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+# square tile: stacking needs num_src == num_dst and feat_in == feat_out
+TS = M.TileShape(num_src=40, num_dst=40, num_edges=120, feat_in=16,
+                 feat_out=16)
+
+STACKABLE = ["gcn", "gat", "sage", "ggnn", "rgcn"]
+
+
+def _named_args(name, seed):
+    spec = M.MODELS[name]
+    return dict(zip(spec.arg_names, spec.example_args(TS, seed=seed)))
+
+
+def _split(name, seed):
+    """(graph_args, weight_args, x) for one layer at `seed`."""
+    named = _named_args(name, seed)
+    graph = {k: v for k, v in named.items() if k in M.GRAPH_ARG_NAMES}
+    weights = {k: v for k, v in named.items()
+               if k not in M.GRAPH_ARG_NAMES and k not in M.X_ARG_NAMES}
+    return graph, weights, named["x_src"]
+
+
+@pytest.mark.parametrize("name", STACKABLE)
+@pytest.mark.parametrize("depth", [2, 3])
+def test_stacked_matches_manual_chain(name, depth):
+    graph, _, x = _split(name, seed=1)
+    layer_weights = [_split(name, seed=10 + l)[1] for l in range(depth)]
+
+    got = np.asarray(M.stacked(name, TS, layer_weights, graph, x))
+
+    spec = M.MODELS[name]
+    fn = spec.bind(TS)
+    h = x
+    for l, weights in enumerate(layer_weights):
+        args = []
+        for n in spec.arg_names:
+            if n in M.X_ARG_NAMES:
+                args.append(h)
+            elif n in M.GRAPH_ARG_NAMES:
+                args.append(graph[n])
+            else:
+                args.append(weights[n])
+        h = fn(*args)
+        if l + 1 < depth:
+            h = ref.relu(h)  # hidden layers activated, final linear
+    np.testing.assert_array_equal(got, np.asarray(h))
+    assert got.shape == (TS.num_dst, TS.feat_out)
+    assert np.isfinite(got).all()
+
+
+def test_hidden_relu_applied_final_linear():
+    # with ReLU disabled the chain must differ (hidden negatives survive)
+    name = "gcn"
+    graph, _, x = _split(name, seed=2)
+    layer_weights = [_split(name, seed=20 + l)[1] for l in range(2)]
+    relu = np.asarray(M.stacked(name, TS, layer_weights, graph, x))
+    linear = np.asarray(M.stacked(name, TS, layer_weights, graph, x,
+                                  activation=lambda h: h))
+    assert not np.array_equal(relu, linear), \
+        "fixture too weak: hidden ReLU clamped nothing"
+    # the FINAL layer is linear: outputs may go negative
+    assert (relu < 0).any()
+
+
+def test_stacked_rejects_non_square_tiles():
+    bad = M.TileShape(num_src=32, num_dst=16, num_edges=64, feat_in=8,
+                      feat_out=8)
+    with pytest.raises(ValueError, match="square"):
+        M.stacked("gcn", bad, [], {}, None)
+    bad = M.TileShape(num_src=32, num_dst=32, num_edges=64, feat_in=8,
+                      feat_out=4)
+    with pytest.raises(ValueError, match="square"):
+        M.stacked("gcn", bad, [], {}, None)

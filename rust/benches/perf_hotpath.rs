@@ -103,6 +103,8 @@ fn small_run(model: &str) -> RunConfig {
         e2v: true,
         functional: true,
         seed: 3,
+        layers: 1,
+        hidden: Vec::new(),
         serving: Default::default(),
     }
 }

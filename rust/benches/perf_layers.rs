@@ -1,0 +1,183 @@
+//! Depth sweep for stacked-layer pipelines (the multi-layer serving
+//! story): GCN/GAT/SAGE at depths {1, 2, 3} on SL/64, served through the
+//! coordinator with a warm plan cache. Measures warm req/s per depth,
+//! records the per-layer cycle/DRAM breakdown and the Fig 2-style
+//! aggregate peak-UEM footprint, and asserts the compile-once contract:
+//! warm multi-layer requests hit the plan cache on every request and
+//! **tiling runs exactly once per plan** — never per layer, never on a
+//! warm request. Emits `BENCH_layers.json`.
+//!
+//! ```bash
+//! cargo bench --bench perf_layers            # SL/64 full sweep
+//! cargo bench --bench perf_layers -- --smoke # tiny CI-sized run
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+use zipper::config::{ArchConfig, RunConfig, ServingConfig};
+use zipper::coordinator::{Coordinator, InferenceRequest, InferenceResponse};
+use zipper::metrics::Table;
+use zipper::plan::PlanCache;
+use zipper::tiling::{self, Reorder, TilingConfig, TilingMode};
+use zipper::util::json::Json;
+
+fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn request(model: &str, dataset: &str, scale: u64, depth: u32, id: u64) -> InferenceRequest {
+    let run = RunConfig {
+        model: model.into(),
+        dataset: dataset.into(),
+        scale,
+        feat_in: 32,
+        feat_out: 32,
+        layers: depth,
+        hidden: Vec::new(),
+        tiling: TilingConfig {
+            dst_part: 256,
+            src_part: 256,
+            mode: TilingMode::Sparse,
+            reorder: Reorder::InDegree,
+            threads: 1,
+        },
+        e2v: true,
+        functional: true,
+        seed: 7,
+        serving: Default::default(),
+    };
+    InferenceRequest { id, run, input_seed: id % 4 }
+}
+
+fn serve(
+    arch: ArchConfig,
+    cache: &Arc<PlanCache>,
+    model: &str,
+    dataset: &str,
+    scale: u64,
+    depth: u32,
+    n: u64,
+) -> (Vec<InferenceResponse>, f64) {
+    let serving = ServingConfig { exec_threads: 2, max_batch: 4 };
+    let mut c = Coordinator::with_serving(arch, 2, serving, Arc::clone(cache));
+    let t0 = Instant::now();
+    for i in 0..n {
+        c.submit(request(model, dataset, scale, depth, i));
+    }
+    let mut resp = c.drain();
+    let wall = t0.elapsed().as_secs_f64();
+    resp.sort_by_key(|r| r.id);
+    for r in &resp {
+        assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+    }
+    (resp, wall)
+}
+
+fn main() {
+    let (dataset, scale, n_req) = if smoke() { ("CR", 16, 6u64) } else { ("SL", 64, 16u64) };
+    let arch = ArchConfig::default();
+    let mut table = Table::new(&[
+        "model", "depth", "warm req/s", "cycles", "per-layer cycles", "peak UEM",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+
+    for model in ["gcn", "gat", "sage"] {
+        for depth in [1u32, 2, 3] {
+            let cache = Arc::new(PlanCache::new());
+            // compile the plan once, single-threaded, and prove the
+            // compile-once contract at depth: ONE tiling per plan,
+            // shared by every layer stage — never one per layer
+            let tiles_before = tiling::tile_invocations();
+            let (plan, hit) = cache
+                .get_or_compile(&request(model, dataset, scale, depth, 0).run)
+                .expect("plan compiles");
+            assert!(!hit);
+            assert_eq!(plan.depth(), depth as usize);
+            assert_eq!(
+                tiling::tile_invocations() - tiles_before,
+                1,
+                "{model} depth {depth}: tiling must run exactly once per plan, \
+                 regardless of depth"
+            );
+
+            let (first, _) = serve(arch, &cache, model, dataset, scale, depth, n_req);
+            let tiles_warm_before = tiling::tile_invocations();
+            let (warm, warm_wall) = serve(arch, &cache, model, dataset, scale, depth, n_req);
+            assert_eq!(
+                tiling::tile_invocations(),
+                tiles_warm_before,
+                "{model} depth {depth}: warm requests must never retile"
+            );
+            assert_eq!(cache.stats().entries, 1, "one plan serves every request");
+            assert!(
+                warm.iter().all(|r| r.plan_cache_hit),
+                "{model} depth {depth}: warm multi-layer requests must hit the plan cache"
+            );
+            for (c, w) in first.iter().zip(&warm) {
+                assert_eq!(
+                    c.output_checksum, w.output_checksum,
+                    "{model} depth {depth} id={}: warm output must be bit-identical",
+                    c.id
+                );
+            }
+
+            let r0 = &warm[0];
+            assert_eq!(r0.layers.len(), depth as usize);
+            assert_eq!(
+                r0.sim_cycles,
+                r0.layers.iter().map(|l| l.cycles).sum::<u64>(),
+                "per-layer cycles must sum to the pipeline total"
+            );
+            let warm_rps = n_req as f64 / warm_wall;
+            let per_layer: Vec<String> =
+                r0.layers.iter().map(|l| l.cycles.to_string()).collect();
+            table.row(&[
+                model.to_string(),
+                depth.to_string(),
+                format!("{warm_rps:.1}"),
+                r0.sim_cycles.to_string(),
+                per_layer.join("+"),
+                format!("{:.1} KB", r0.peak_uem_bytes as f64 / 1024.0),
+            ]);
+            let mut row = BTreeMap::new();
+            row.insert("model".to_string(), Json::Str(model.to_string()));
+            row.insert("depth".to_string(), num(depth as f64));
+            row.insert("requests".to_string(), num(n_req as f64));
+            row.insert("warm_req_per_s".to_string(), num(warm_rps));
+            row.insert("sim_cycles".to_string(), num(r0.sim_cycles as f64));
+            row.insert(
+                "layer_cycles".to_string(),
+                Json::Arr(r0.layers.iter().map(|l| num(l.cycles as f64)).collect()),
+            );
+            row.insert(
+                "layer_dram_read_bytes".to_string(),
+                Json::Arr(
+                    r0.layers.iter().map(|l| num(l.dram_read_bytes as f64)).collect(),
+                ),
+            );
+            row.insert("peak_uem_bytes".to_string(), num(r0.peak_uem_bytes as f64));
+            row.insert("energy_j".to_string(), num(r0.energy_j));
+            rows.push(Json::Obj(row));
+        }
+    }
+
+    println!(
+        "== stacked-layer pipelines ({dataset} 1/{scale}, {n_req} warm functional \
+         requests per cell; tiling-once + warm-hit asserted) =="
+    );
+    print!("{}", table.render());
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("perf_layers".to_string()));
+    root.insert("dataset".to_string(), Json::Str(dataset.to_string()));
+    root.insert("scale".to_string(), num(scale as f64));
+    root.insert("sweep".to_string(), Json::Arr(rows));
+    let path = "BENCH_layers.json";
+    std::fs::write(path, Json::Obj(root).to_string_pretty()).expect("write BENCH_layers.json");
+    println!("wrote {path}");
+}

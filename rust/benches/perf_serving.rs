@@ -60,6 +60,8 @@ fn request(i: u64) -> InferenceRequest {
         // plan reuse, not the functional executor
         functional: false,
         seed: 7,
+        layers: 1,
+        hidden: Vec::new(),
         serving: Default::default(),
     };
     InferenceRequest { id: i, run, input_seed: i }

@@ -106,6 +106,13 @@ pub struct RunConfig {
     pub scale: u64,
     pub feat_in: u32,
     pub feat_out: u32,
+    /// Pipeline depth: number of stacked GNN layers (0 is treated as 1).
+    /// Layer *l*'s output embedding feeds layer *l+1*; hidden layers are
+    /// ReLU-activated, the final layer is linear (`models::ModelSpec`).
+    pub layers: u32,
+    /// Hidden embedding widths between layers: exactly `layers − 1`
+    /// entries, or empty (every hidden width defaults to `feat_out`).
+    pub hidden: Vec<u32>,
     pub tiling: crate::tiling::TilingConfig,
     /// Compiler optimization level.
     pub e2v: bool,
@@ -124,6 +131,8 @@ impl Default for RunConfig {
             scale: 64,
             feat_in: 128,
             feat_out: 128,
+            layers: 1,
+            hidden: Vec::new(),
             tiling: crate::tiling::TilingConfig::default(),
             e2v: true,
             functional: false,
@@ -211,6 +220,19 @@ pub fn apply(
             ("run", "scale") => run.scale = num()? as u64,
             ("run", "feat_in") => run.feat_in = num()? as u32,
             ("run", "feat_out") => run.feat_out = num()? as u32,
+            ("run", "layers") => run.layers = num()? as u32,
+            ("run", "hidden") => {
+                run.hidden = value
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(|s| {
+                        s.parse::<u32>().map_err(|_| {
+                            ConfigError(format!("{section}.{key}: not a width: {s}"))
+                        })
+                    })
+                    .collect::<Result<Vec<u32>, ConfigError>>()?;
+            }
             ("run", "e2v") => run.e2v = boolean()?,
             ("run", "functional") => run.functional = boolean()?,
             ("run", "seed") => run.seed = num()? as u64,
@@ -246,11 +268,21 @@ pub fn apply(
 
 /// Render the effective configuration (for `zipper config --show`).
 pub fn show(arch: &ArchConfig, run: &RunConfig) -> String {
+    let hidden = if run.hidden.is_empty() {
+        "(default)".to_string()
+    } else {
+        run.hidden
+            .iter()
+            .map(|h| h.to_string())
+            .collect::<Vec<_>>()
+            .join(",")
+    };
     format!(
         "[arch]\nfreq_hz = {}\nmu_count = {} ({}x{})\nvu_count = {} ({}x{} lanes)\n\
          uem = {} ({} banks)\ntile_hub = {}\nhbm = {:.0} GB/s (latency {} cyc)\n\
          streams = 1d/{}s/{}e\npeak = {:.2} TFLOP/s\n\n\
          [run]\nmodel = {}\ndataset = {}\nscale = 1/{}\nfeat = {}x{}\n\
+         layers = {}\nhidden = {}\n\
          e2v = {}\nfunctional = {}\nseed = {}\n\n\
          [serving]\nexec_threads = {}\nmax_batch = {}\n\n\
          [tiling]\ndst_part = {}\nsrc_part = {}\nmode = {:?}\nreorder = {:?}\nthreads = {}\n",
@@ -274,6 +306,8 @@ pub fn show(arch: &ArchConfig, run: &RunConfig) -> String {
         run.scale,
         run.feat_in,
         run.feat_out,
+        run.layers,
+        hidden,
         run.e2v,
         run.functional,
         run.seed,
@@ -315,6 +349,8 @@ mod tests {
             [run]
             model = "gat"
             scale = 16
+            layers = 3
+            hidden = "64, 32"
             [serving]
             exec_threads = 4
             max_batch = 8
@@ -330,6 +366,8 @@ mod tests {
         assert_eq!(arch.hbm_bytes_per_sec, 512.0e9);
         assert_eq!(run.model, "gat");
         assert_eq!(run.scale, 16);
+        assert_eq!(run.layers, 3);
+        assert_eq!(run.hidden, vec![64, 32]);
         assert_eq!(run.serving, ServingConfig { exec_threads: 4, max_batch: 8 });
         assert_eq!(run.tiling.mode, crate::tiling::TilingMode::Regular);
         assert_eq!(run.tiling.threads, 4);
@@ -350,5 +388,9 @@ mod tests {
         assert!(s.contains("mu_count = 1 (32x128)"));
         assert!(s.contains("21.00 MB"));
         assert!(s.contains("[serving]") && s.contains("max_batch = 1"));
+        assert!(s.contains("layers = 1") && s.contains("hidden = (default)"));
+        let run = RunConfig { layers: 3, hidden: vec![64, 32], ..RunConfig::default() };
+        let s = show(&ArchConfig::default(), &run);
+        assert!(s.contains("layers = 3") && s.contains("hidden = 64,32"));
     }
 }

@@ -24,7 +24,7 @@ use crate::compiler::Program;
 use crate::config::{ArchConfig, RunConfig, ServingConfig};
 use crate::energy::EnergyModel;
 use crate::graph::Graph;
-use crate::models::{ModelKind, WeightStore};
+use crate::models::{ModelKind, ModelSpec, WeightStore};
 use crate::plan::{CacheStats, ExecPlan, PlanCache, PlanKey};
 use crate::sim::parallel::BatchScratch;
 use crate::sim::{ExecScratch, SimResult};
@@ -94,6 +94,16 @@ impl Session {
         self.plan.model
     }
 
+    /// Resolved layer chain (depth, per-layer widths, activations).
+    pub fn spec(&self) -> &ModelSpec {
+        &self.plan.spec
+    }
+
+    /// Pipeline depth (≥ 1).
+    pub fn depth(&self) -> usize {
+        self.plan.depth()
+    }
+
     pub fn graph(&self) -> &Graph {
         &self.plan.graph
     }
@@ -102,18 +112,25 @@ impl Session {
         &self.plan.tiling
     }
 
+    /// The first layer stage's compiled program (the whole model for
+    /// depth-1 sessions; see [`crate::plan::ExecPlan::stages`] for the
+    /// full pipeline).
     pub fn program(&self) -> &Program {
-        &self.plan.program
+        &self.plan.stages[0].program
     }
 
+    /// The first layer stage's weights (see
+    /// [`crate::plan::ExecPlan::stages`] for deeper layers).
     pub fn weights(&self) -> &WeightStore {
-        &self.plan.weights
+        &self.plan.stages[0].weights
     }
 
+    /// First layer's input embedding width.
     pub fn feat_in(&self) -> u32 {
         self.plan.feat_in
     }
 
+    /// Final layer's output embedding width.
     pub fn feat_out(&self) -> u32 {
         self.plan.feat_out
     }
@@ -156,16 +173,35 @@ pub struct InferenceRequest {
     pub input_seed: u64,
 }
 
+/// One layer's slice of a response's cost (Fig 2-style depth
+/// breakdown): cycles/DRAM/energy are additive across a pipeline's
+/// layers, so `sum(layers[i].cycles) == sim_cycles`.
+#[derive(Clone, Debug)]
+pub struct LayerCost {
+    pub feat_in: u32,
+    pub feat_out: u32,
+    pub cycles: u64,
+    pub dram_read_bytes: u64,
+    pub dram_write_bytes: u64,
+    pub energy_j: f64,
+}
+
 /// The response: simulated device time + host-side serving latency.
 #[derive(Clone, Debug)]
 pub struct InferenceResponse {
     pub id: u64,
     pub model: String,
     pub dataset: String,
-    /// Simulated accelerator latency (cycles / seconds @ arch clock).
+    /// Simulated accelerator latency (cycles / seconds @ arch clock),
+    /// summed over the pipeline's layers.
     pub sim_cycles: u64,
     pub sim_seconds: f64,
     pub energy_j: f64,
+    /// Per-layer cost breakdown (one entry per layer, depth-1 included).
+    pub layers: Vec<LayerCost>,
+    /// Peak UEM residency across the whole pipeline, inter-layer
+    /// activation images included (Fig 2's footprint story).
+    pub peak_uem_bytes: u64,
     /// Wall-clock serving latency (queue + prepare + simulate).
     pub wall_seconds: f64,
     /// Whether the execution plan came from the cache (warm request).
@@ -188,6 +224,8 @@ impl InferenceResponse {
             sim_cycles: 0,
             sim_seconds: 0.0,
             energy_j: 0.0,
+            layers: Vec::new(),
+            peak_uem_bytes: 0,
             wall_seconds: 0.0,
             plan_cache_hit: false,
             prepare_seconds: 0.0,
@@ -416,6 +454,18 @@ impl Coordinator {
     /// Partially filled groups ride along at the next [`Coordinator::drain`].
     pub fn submit(&mut self, req: InferenceRequest) {
         self.submitted.push((req.id, req.run.model.clone(), req.run.dataset.clone()));
+        // structured front-door validation: inconsistent layer chains
+        // (wrong hidden-width count, non-square GGNN widths) fail here
+        // with shape-carrying errors instead of deep in a worker compile
+        if let Err(e) = validate::check_layer_chain(&req.run) {
+            self.local.push(InferenceResponse::failed(
+                req.id,
+                &req.run.model,
+                &req.run.dataset,
+                e,
+            ));
+            return;
+        }
         if self.tx.is_none() {
             self.local.push(InferenceResponse::failed(
                 req.id,
@@ -577,14 +627,26 @@ fn handle_batch(
     let prepare_seconds = if hit { 0.0 } else { t0.elapsed().as_secs_f64() };
 
     // Timing is a pure function of (arch, plan) — input embeddings never
-    // reach the cycle-level model — so one simulation covers the batch.
+    // reach the cycle-level model — so one simulation covers the batch
+    // (all layers of the pipeline, summed).
     let timing = match plan.simulate_with(arch, false, None, 0, &mut state.timing) {
         Ok(t) => t,
         Err(e) => return fail_batch(batch, &e, t0),
     };
-    let energy_j = EnergyModel::default()
-        .evaluate(&timing.counters, arch.freq_hz)
-        .total_j();
+    let energy = EnergyModel::default();
+    let energy_j = energy.evaluate(&timing.counters, arch.freq_hz).total_j();
+    let layer_costs: Vec<LayerCost> = timing
+        .layers
+        .iter()
+        .map(|lm| LayerCost {
+            feat_in: lm.feat_in,
+            feat_out: lm.feat_out,
+            cycles: lm.cycles,
+            dram_read_bytes: lm.dram_read_bytes,
+            dram_write_bytes: lm.dram_write_bytes,
+            energy_j: energy.evaluate(&lm.counters, arch.freq_hz).total_j(),
+        })
+        .collect();
 
     // Functional lanes: one scratch-resident batched pass for all
     // requests, tiles sharded across `serving.exec_threads`.
@@ -613,6 +675,8 @@ fn handle_batch(
             sim_cycles: timing.cycles,
             sim_seconds: timing.seconds(arch),
             energy_j,
+            layers: layer_costs.clone(),
+            peak_uem_bytes: timing.peak_uem_bytes,
             wall_seconds: t0.elapsed().as_secs_f64(),
             plan_cache_hit: hit,
             prepare_seconds,
@@ -635,6 +699,8 @@ mod tests {
             scale: 16,
             feat_in: 16,
             feat_out: 16,
+            layers: 1,
+            hidden: Vec::new(),
             tiling: TilingConfig {
                 dst_part: 64,
                 src_part: 64,
@@ -705,7 +771,48 @@ mod tests {
         run.model = "transformer".into();
         c.submit(InferenceRequest { id: 0, run, input_seed: 0 });
         let resp = c.drain();
-        assert!(resp[0].error.is_some());
+        assert!(resp[0].error.as_deref().unwrap().contains("unknown model"));
+    }
+
+    #[test]
+    fn inconsistent_layer_chain_fails_fast_at_submit() {
+        let mut c = Coordinator::new(ArchConfig::default(), 1);
+        let mut run = small_run("gcn", false);
+        run.layers = 3;
+        run.hidden = vec![8]; // needs 2 widths
+        c.submit(InferenceRequest { id: 0, run, input_seed: 0 });
+        let mut run = small_run("ggnn", false);
+        run.layers = 2;
+        run.hidden = vec![32]; // GGNN needs square layers
+        c.submit(InferenceRequest { id: 1, run, input_seed: 0 });
+        let mut resp = c.drain();
+        resp.sort_by_key(|r| r.id);
+        let gcn_err = resp[0].error.as_deref().unwrap();
+        assert!(gcn_err.contains("3-layer") && gcn_err.contains("16"), "{gcn_err}");
+        let ggnn_err = resp[1].error.as_deref().unwrap();
+        assert!(ggnn_err.contains("square") && ggnn_err.contains("32"), "{ggnn_err}");
+    }
+
+    #[test]
+    fn responses_carry_per_layer_breakdown() {
+        let mut c = Coordinator::new(ArchConfig::default(), 1);
+        let mut run = small_run("gcn", true);
+        run.layers = 3;
+        c.submit(InferenceRequest { id: 0, run, input_seed: 0 });
+        let resp = c.drain();
+        let r = &resp[0];
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.layers.len(), 3);
+        assert_eq!(r.sim_cycles, r.layers.iter().map(|l| l.cycles).sum::<u64>());
+        let layer_j: f64 = r.layers.iter().map(|l| l.energy_j).sum();
+        assert!((layer_j - r.energy_j).abs() / r.energy_j < 0.2, "{layer_j} vs {}", r.energy_j);
+        assert!(r.peak_uem_bytes > 0);
+        // depth-1 responses still carry a one-entry breakdown
+        let mut c = Coordinator::new(ArchConfig::default(), 1);
+        c.submit(InferenceRequest { id: 0, run: small_run("gcn", false), input_seed: 0 });
+        let resp = c.drain();
+        assert_eq!(resp[0].layers.len(), 1);
+        assert_eq!(resp[0].layers[0].cycles, resp[0].sim_cycles);
     }
 
     #[test]

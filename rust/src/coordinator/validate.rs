@@ -1,11 +1,27 @@
-//! Three-layer cross-validation: simulator functional output vs the
-//! PJRT-executed JAX/Pallas artifacts (paper §8.1's DGL validation).
+//! Request validation + three-layer cross-validation.
 //!
-//! Setup: a small graph tiled so each destination partition has exactly
-//! one tile (src_part ≥ |V|), padded to the artifact's static tile shape.
-//! For every partition we pack the tile's COO edges + embeddings into the
-//! artifact's argument layout, execute via PJRT, and compare against the
-//! simulator's functional output row-by-row.
+//! Two jobs live here:
+//!
+//! 1. **Structured front-door validation** ([`check_layer_chain`]): a
+//!    request's model name and layer chain (depth + hidden widths) are
+//!    resolved into a [`ModelSpec`] *before* any compile work happens,
+//!    so inconsistent chains (wrong hidden-width count, non-square GGNN
+//!    widths) fail at submit with shape-carrying messages instead of
+//!    deep inside a worker's plan compile.
+//! 2. **PJRT cross-validation** ([`validate_model_depth`]): simulator
+//!    functional output vs the PJRT-executed JAX/Pallas artifacts (paper
+//!    §8.1's DGL validation), now depth-aware — the oracle stacks the
+//!    same per-layer tile executions the Rust pipeline runs, chaining
+//!    layer *l*'s whole-graph output into layer *l+1* with the hidden
+//!    layers' ReLU applied between (mirroring `LayerSpec::activation`).
+//!
+//! Oracle setup: a small graph tiled so each destination partition has
+//! exactly one tile (src_part ≥ |V|), padded to the artifact's static
+//! tile shape. For every partition we pack the tile's COO edges +
+//! embeddings into the artifact's argument layout, execute via PJRT, and
+//! compare against the simulator's functional output row-by-row.
+//! Multi-layer chains reuse the same square artifact (feat_in ==
+//! feat_out) per layer with that layer's weights.
 //!
 //! Requires a PJRT-backed `Runtime` (see `runtime` module docs); with
 //! the dependency-free stub, `Runtime::execute` returns an error and
@@ -18,13 +34,24 @@
 use super::Session;
 use crate::config::{ArchConfig, RunConfig};
 use crate::graph::generators;
-use crate::models::ModelKind;
+use crate::models::{ModelKind, ModelSpec, WeightStore};
 use crate::runtime::{pack, ArgValue, Runtime, TileShape};
-use crate::tiling::{Reorder, TilingConfig, TilingMode};
+use crate::tiling::{Reorder, Tiling, TilingConfig, TilingMode};
+
+/// Resolve a request's layer chain into a [`ModelSpec`], carrying the
+/// offending shapes in the error. The coordinator calls this at submit
+/// so malformed pipelines never reach the worker pool.
+pub fn check_layer_chain(run: &RunConfig) -> Result<ModelSpec, String> {
+    let kind = ModelKind::parse(&run.model)
+        .ok_or_else(|| format!("unknown model {}", run.model))?;
+    ModelSpec::new(kind, run.feat_in, &run.hidden, run.feat_out, run.layers)
+}
 
 #[derive(Clone, Debug)]
 pub struct ValidationReport {
     pub model: String,
+    /// Pipeline depth the report covers.
+    pub layers: u32,
     pub partitions: usize,
     pub rows_compared: usize,
     pub max_abs_err: f32,
@@ -33,13 +60,37 @@ pub struct ValidationReport {
     pub pass: bool,
 }
 
-/// Validate one model end-to-end against the artifact at `shape`.
+/// Validate one model end-to-end against the artifact at `shape`
+/// (depth 1 — the classic single-layer check).
 pub fn validate_model(
     rt: &mut Runtime,
     model: ModelKind,
     shape: &TileShape,
     seed: u64,
 ) -> Result<ValidationReport, String> {
+    validate_model_depth(rt, model, shape, seed, 1)
+}
+
+/// Validate a `depth`-layer pipeline end-to-end against the artifact at
+/// `shape`: the simulator runs the stacked-layer `ExecPlan`, the oracle
+/// chains per-layer PJRT executions with the same per-layer weights and
+/// the hidden layers' ReLU in between. Multi-layer chains need a square
+/// artifact shape (uniform widths).
+pub fn validate_model_depth(
+    rt: &mut Runtime,
+    model: ModelKind,
+    shape: &TileShape,
+    seed: u64,
+    depth: u32,
+) -> Result<ValidationReport, String> {
+    let depth = depth.max(1);
+    if depth > 1 && shape.feat_in != shape.feat_out {
+        return Err(format!(
+            "multi-layer validation needs a square artifact shape (uniform width chain), \
+             got feat {}x{}",
+            shape.feat_in, shape.feat_out
+        ));
+    }
     // graph sized to fit the artifact: one tile per partition
     let v = shape.num_src.min(200);
     let e = (shape.num_edges / 2).min(600) as u64;
@@ -52,6 +103,8 @@ pub fn validate_model(
         scale: 1,
         feat_in: shape.feat_in,
         feat_out: shape.feat_out,
+        layers: depth,
+        hidden: Vec::new(),
         tiling: TilingConfig {
             dst_part,
             src_part: v, // one source block ⇒ one tile per partition
@@ -71,11 +124,61 @@ pub fn validate_model(
         .map_err(|e| format!("simulate: {e}"))?;
     let sim_out = sim.output.ok_or("no functional output")?;
 
-    // Oracle path: per-partition PJRT execution.
+    // Oracle path: chain per-layer PJRT executions. Layer l's
+    // whole-graph output (original vertex order) feeds layer l+1; the
+    // hidden layers' trailing ReLU matches `LayerSpec::activation`.
+    let mut cur = x;
+    for l in 0..depth as usize {
+        let stage = &session.plan().stages[l];
+        let mut out = pjrt_layer(rt, model, shape, &session, &stage.weights, &cur)?;
+        if l + 1 < depth as usize {
+            for h in &mut out {
+                *h = h.max(0.0);
+            }
+        }
+        cur = out;
+    }
+    let oracle = cur;
+
+    let mut max_err = 0.0f32;
+    let mut sum_err = 0.0f64;
+    for (a, b) in sim_out.iter().zip(&oracle) {
+        let e = (a - b).abs();
+        max_err = max_err.max(e);
+        sum_err += e as f64;
+    }
+    // the existing single-layer tolerance, widened per extra layer
+    // (hidden-layer error propagates through the next layer's GEMMs)
+    let tol = 2e-3 * depth as f32;
+    Ok(ValidationReport {
+        model: model.name().into(),
+        layers: depth,
+        partitions: session.tiling().partitions.len(),
+        rows_compared: session.graph().num_vertices() as usize,
+        max_abs_err: max_err,
+        mean_abs_err: (sum_err / sim_out.len() as f64) as f32,
+        tol,
+        pass: max_err < tol,
+    })
+}
+
+/// Execute ONE layer through the PJRT artifact, partition by partition:
+/// permute `x` into the shared tiling's vertex order, pack each
+/// partition's single tile into the artifact's argument layout with this
+/// layer's `weights`, execute, and un-permute the stitched output back
+/// to original vertex order.
+fn pjrt_layer(
+    rt: &mut Runtime,
+    model: ModelKind,
+    shape: &TileShape,
+    session: &Session,
+    weights: &WeightStore,
+    x: &[f32],
+) -> Result<Vec<f32>, String> {
     let fi = shape.feat_in as usize;
     let fo = shape.feat_out as usize;
     let n = session.graph().num_vertices() as usize;
-    let tiling = session.tiling();
+    let tiling: &Tiling = session.tiling();
     // permuted input (tiling may relabel; Reorder::None ⇒ identity, but
     // keep the general path)
     let mut x_tiled = vec![0.0f32; n * fi];
@@ -121,8 +224,7 @@ pub fn validate_model(
 
         // weights in the artifact's argument order
         let w = |name: &str| -> Result<ArgValue, String> {
-            let t = session
-                .weights()
+            let t = weights
                 .tensors
                 .iter()
                 .find(|t| t.name == name)
@@ -169,27 +271,10 @@ pub fn validate_model(
         oracle[old * fo..(old + 1) * fo]
             .copy_from_slice(&oracle_tiled[new * fo..(new + 1) * fo]);
     }
-
-    let mut max_err = 0.0f32;
-    let mut sum_err = 0.0f64;
-    for (a, b) in sim_out.iter().zip(&oracle) {
-        let e = (a - b).abs();
-        max_err = max_err.max(e);
-        sum_err += e as f64;
-    }
-    let tol = 2e-3;
-    Ok(ValidationReport {
-        model: model.name().into(),
-        partitions: tiling.partitions.len(),
-        rows_compared: n,
-        max_abs_err: max_err,
-        mean_abs_err: (sum_err / sim_out.len() as f64) as f32,
-        tol,
-        pass: max_err < tol,
-    })
+    Ok(oracle)
 }
 
-/// Validate every model that has an artifact at `shape`.
+/// Validate every model that has an artifact at `shape` (depth 1).
 pub fn validate_all(
     rt: &mut Runtime,
     shape: &TileShape,
@@ -200,4 +285,54 @@ pub fn validate_all(
         reports.push(validate_model(rt, m, shape, seed)?);
     }
     Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(model: &str, feat_in: u32, hidden: Vec<u32>, feat_out: u32, layers: u32) -> RunConfig {
+        RunConfig {
+            model: model.into(),
+            feat_in,
+            feat_out,
+            layers,
+            hidden,
+            ..RunConfig::default()
+        }
+    }
+
+    #[test]
+    fn valid_chains_resolve() {
+        let spec = check_layer_chain(&run("gcn", 64, vec![32, 8], 16, 3)).unwrap();
+        let dims: Vec<(u32, u32)> =
+            spec.layers.iter().map(|l| (l.feat_in, l.feat_out)).collect();
+        assert_eq!(dims, vec![(64, 32), (32, 8), (8, 16)]);
+        // depth-1 and default hidden chains always resolve
+        assert_eq!(check_layer_chain(&run("gat", 32, vec![], 16, 1)).unwrap().depth(), 1);
+        assert_eq!(check_layer_chain(&run("sage", 32, vec![], 16, 4)).unwrap().depth(), 4);
+    }
+
+    #[test]
+    fn wrong_hidden_count_is_a_shape_carrying_error() {
+        let err = check_layer_chain(&run("gcn", 64, vec![32], 16, 3)).unwrap_err();
+        assert!(err.contains("3-layer") && err.contains("64") && err.contains("16"), "{err}");
+        let err = check_layer_chain(&run("gat", 8, vec![4, 4], 8, 2)).unwrap_err();
+        assert!(err.contains("2") && err.contains("exactly 1"), "{err}");
+    }
+
+    #[test]
+    fn ggnn_square_rule_enforced_per_layer() {
+        let err = check_layer_chain(&run("ggnn", 16, vec![16, 32], 16, 3)).unwrap_err();
+        assert!(err.contains("square") && err.contains("hidden[1]") && err.contains("32"), "{err}");
+        // all-square chains pass, feat_out is coerced like depth 1
+        let spec = check_layer_chain(&run("ggnn", 16, vec![16], 64, 2)).unwrap();
+        assert!(spec.layers.iter().all(|l| (l.feat_in, l.feat_out) == (16, 16)));
+    }
+
+    #[test]
+    fn unknown_model_is_rejected() {
+        let err = check_layer_chain(&run("transformer", 16, vec![], 16, 1)).unwrap_err();
+        assert!(err.contains("unknown model transformer"), "{err}");
+    }
 }

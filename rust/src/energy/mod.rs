@@ -56,6 +56,20 @@ pub struct EnergyCounters {
     pub cycles: u64,
 }
 
+/// Event counts are additive: summing the per-layer counters of a
+/// multi-layer pipeline yields the whole run's counters (the layers
+/// execute back-to-back on the same hardware).
+impl std::ops::AddAssign for EnergyCounters {
+    fn add_assign(&mut self, rhs: EnergyCounters) {
+        self.macs += rhs.macs;
+        self.vu_ops += rhs.vu_ops;
+        self.uem_bytes += rhs.uem_bytes;
+        self.th_bytes += rhs.th_bytes;
+        self.hbm_bytes += rhs.hbm_bytes;
+        self.cycles += rhs.cycles;
+    }
+}
+
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct EnergyBreakdown {
     pub mac_j: f64,

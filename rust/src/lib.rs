@@ -17,8 +17,10 @@
 //!   hot-spots (MU-tiled GEMM, GOP scatter/gather, fused ELW).
 //!
 //! The serving pipeline is *compile-once* and *batch-parallel*:
-//! [`plan::ExecPlan`] bundles the immutable artifacts (tiling + compiled
-//! program + weights) produced once per operating point, and every
+//! [`plan::ExecPlan`] bundles the immutable artifacts — ONE shared
+//! tiling plus a pipeline of per-layer compiled programs + weights
+//! (multi-layer models via [`models::ModelSpec`]) — produced once per
+//! operating point, and every
 //! consumer — simulator, serving coordinator, benches — runs off a
 //! shared `Arc<ExecPlan>` with per-request state confined to reusable
 //! scratches ([`sim::ExecScratch`] for the discrete-event engine,

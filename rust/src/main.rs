@@ -87,6 +87,17 @@ fn build_configs(args: &Args) -> Result<(ArchConfig, RunConfig), String> {
         run.feat_in = f;
         run.feat_out = f;
     }
+    if let Some(v) = args.get("layers") {
+        run.layers = v.parse().map_err(|_| "bad --layers")?;
+    }
+    if let Some(v) = args.get("hidden") {
+        run.hidden = v
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse::<u32>().map_err(|_| "bad --hidden"))
+            .collect::<Result<Vec<u32>, _>>()?;
+    }
     if let Some(v) = args.get("threads") {
         run.tiling.threads = v.parse().map_err(|_| "bad --threads")?;
     }
@@ -208,6 +219,23 @@ fn real_main(argv: &[String]) -> Result<(), String> {
                 e.total_j(),
                 100.0 * e.hbm_j / e.total_j()
             );
+            if res.layers.len() > 1 {
+                println!(
+                    "layer pipeline: depth {} (peak UEM incl. inter-layer activations: {})",
+                    res.layers.len(),
+                    util::fmt_bytes(res.peak_uem_bytes)
+                );
+                for (l, lm) in res.layers.iter().enumerate() {
+                    println!(
+                        "  layer {l}: {}x{}  cycles={}  dram r/w {} / {}",
+                        lm.feat_in,
+                        lm.feat_out,
+                        lm.cycles,
+                        util::fmt_bytes(lm.dram_read_bytes),
+                        util::fmt_bytes(lm.dram_write_bytes),
+                    );
+                }
+            }
             if let Some(out) = res.output {
                 let sum: f64 = out.iter().map(|&v| v as f64).sum();
                 println!("output checksum: {sum:.6}");
@@ -267,6 +295,18 @@ fn real_main(argv: &[String]) -> Result<(), String> {
                 "batching: max_batch={} exec_threads={}",
                 run.serving.max_batch, run.serving.exec_threads
             );
+            if run.layers > 1 {
+                if let Some(r) = resp.iter().find(|r| r.error.is_none()) {
+                    let per: Vec<String> =
+                        r.layers.iter().map(|l| l.cycles.to_string()).collect();
+                    println!(
+                        "layer pipeline: depth {} — per-layer cycles [{}], peak UEM {}",
+                        run.layers,
+                        per.join(", "),
+                        util::fmt_bytes(r.peak_uem_bytes)
+                    );
+                }
+            }
             let stats = c.cache_stats();
             println!(
                 "plan cache: {} plans compiled once, {} warm hits ({:.0}% hit rate)",
@@ -336,6 +376,12 @@ fn real_main(argv: &[String]) -> Result<(), String> {
                  --dataset D          registry id, see `zipper datasets`   [run]\n  \
                  --scale N            dataset scale divisor (1/N size)     [run]\n  \
                  --feat F             feature width (sets feat_in=feat_out) [run]\n  \
+                 --layers N           stacked GNN layers compiled into one plan\n                       \
+                 sharing a single tiling; hidden layers are\n                       \
+                 ReLU-activated, the final layer linear\n                       \
+                 (default 1)                          [run]\n  \
+                 --hidden d1,d2,...   hidden widths between layers (exactly\n                       \
+                 layers-1 entries; default: feat_out) [run]\n  \
                  --no-e2v             disable the E2V compiler optimization\n  \
                  --functional         also execute on f32 embeddings (checksums)\n  \
                  --mu N / --vu N      matrix / vector unit counts          [arch]\n  \

@@ -14,7 +14,7 @@
 //! unstabilized softmax; the AOT oracle uses the max-stabilized form and
 //! the integration tests compare under a small-magnitude tolerance.
 
-use crate::ir::{FDim, ModelGraph};
+use crate::ir::{FDim, ModelGraph, NodeId};
 use crate::isa::{ElwBinary, ElwUnary};
 use crate::util::Rng;
 
@@ -49,8 +49,10 @@ impl ModelKind {
         }
     }
 
+    /// Case-insensitive name lookup. Allocation-free: this sits on the
+    /// serving hot parse path (`PlanKey` construction per submit).
     pub fn parse(s: &str) -> Option<ModelKind> {
-        Self::ALL.iter().copied().find(|m| m.name() == s.to_ascii_lowercase())
+        Self::ALL.iter().copied().find(|m| m.name().eq_ignore_ascii_case(s))
     }
 
     /// Whether the model reads destination-vertex embeddings (GAT's
@@ -71,33 +73,191 @@ impl ModelKind {
         matches!(self, ModelKind::Rgcn)
     }
 
-    /// Build the naive tensor-level DAG.
+    /// Build the naive tensor-level DAG — the depth-1, linear-output
+    /// special case of [`ModelKind::build_layer`].
     pub fn build(self) -> ModelGraph {
-        match self {
-            ModelKind::Gcn => gcn(),
-            ModelKind::Gat => gat(),
-            ModelKind::Sage => sage(),
-            ModelKind::Ggnn => ggnn(),
-            ModelKind::Rgcn => rgcn(),
+        self.build_layer(None)
+    }
+
+    /// Build one pipeline layer's tensor-level DAG: the model body plus
+    /// an optional trailing activation. Hidden layers of a multi-layer
+    /// [`ModelSpec`] are activated (ReLU), the final layer is linear —
+    /// with `None` this is byte-identical to the pre-pipeline
+    /// [`ModelKind::build`] DAG.
+    pub fn build_layer(self, activation: Option<ElwUnary>) -> ModelGraph {
+        let mut g = ModelGraph::new(self.name());
+        let h = match self {
+            ModelKind::Gcn => gcn_body(&mut g),
+            ModelKind::Gat => gat_body(&mut g),
+            ModelKind::Sage => sage_body(&mut g),
+            ModelKind::Ggnn => ggnn_body(&mut g),
+            ModelKind::Rgcn => rgcn_body(&mut g),
+        };
+        let h = match activation {
+            Some(op) => g.unary(op, h),
+            None => h,
+        };
+        g.output_v(h, "h");
+        g
+    }
+}
+
+/// One layer of a stacked GNN pipeline: the feature dims the compiler
+/// resolves `FeatIn`/`FeatOut` against for this layer's program, plus
+/// the trailing activation (`None` = linear).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerSpec {
+    pub feat_in: u32,
+    pub feat_out: u32,
+    /// Appended to the layer body by [`ModelKind::build_layer`]; hidden
+    /// layers get `Some(Relu)`, the final layer `None`.
+    pub activation: Option<ElwUnary>,
+}
+
+/// A multi-layer GNN model: one [`ModelKind`] body stacked `depth`
+/// times, layer *l*'s output embedding feeding layer *l+1*'s input.
+/// This is the unit of compilation (paper Fig 5 loops `for each layer`):
+/// every layer shares one graph tiling, only the per-layer programs and
+/// weights differ.
+///
+/// # Examples
+///
+/// ```
+/// use zipper::models::{ModelKind, ModelSpec};
+///
+/// // 3-layer GCN: 64 → 32 → 32 → 16, ReLU between layers, final linear
+/// let spec = ModelSpec::new(ModelKind::Gcn, 64, &[32, 32], 16, 3).unwrap();
+/// assert_eq!(spec.depth(), 3);
+/// assert_eq!((spec.feat_in(), spec.feat_out()), (64, 16));
+/// assert!(spec.layers[0].activation.is_some());
+/// assert!(spec.layers[2].activation.is_none());
+///
+/// // inconsistent hidden chains are shape-carrying errors
+/// let err = ModelSpec::new(ModelKind::Gcn, 64, &[32], 16, 3).unwrap_err();
+/// assert!(err.contains("3-layer"));
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub kind: ModelKind,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl ModelSpec {
+    /// Resolve a depth + hidden-width chain into per-layer specs.
+    ///
+    /// * `depth` is clamped to ≥ 1; `hidden` must list exactly
+    ///   `depth − 1` widths, or be empty (every hidden width defaults to
+    ///   `feat_out`).
+    /// * Models with [`ModelKind::requires_square`] (GGNN's GRU) keep
+    ///   every layer at `feat_in × feat_in` — `feat_out` is coerced as
+    ///   in the single-layer path, but an explicit conflicting hidden
+    ///   width is rejected with the offending shapes.
+    pub fn new(
+        kind: ModelKind,
+        feat_in: u32,
+        hidden: &[u32],
+        feat_out: u32,
+        depth: u32,
+    ) -> Result<ModelSpec, String> {
+        let depth = depth.max(1) as usize;
+        if let Some((i, &h)) = hidden.iter().enumerate().find(|&(_, &h)| h == 0) {
+            return Err(format!("{}: hidden[{i}] = {h}, widths must be ≥ 1", kind.name()));
         }
+        if !hidden.is_empty() && hidden.len() != depth - 1 {
+            return Err(format!(
+                "{}: {} hidden width(s) given, but a {depth}-layer pipeline \
+                 {feat_in} → … → {feat_out} needs exactly {}",
+                kind.name(),
+                hidden.len(),
+                depth - 1,
+            ));
+        }
+        let widths: Vec<u32> = if kind.requires_square() {
+            if let Some((i, &h)) = hidden.iter().enumerate().find(|&(_, &h)| h != feat_in) {
+                return Err(format!(
+                    "{}: hidden[{i}] = {h} conflicts with feat_in = {feat_in}; the GRU \
+                     update needs square layers, so every width of a {}-layer {} \
+                     pipeline must equal feat_in",
+                    kind.name(),
+                    depth,
+                    kind.name(),
+                ));
+            }
+            vec![feat_in; depth + 1]
+        } else if hidden.is_empty() {
+            let mut w = vec![feat_in];
+            w.resize(depth, feat_out);
+            w.push(feat_out);
+            w
+        } else {
+            // hidden.len() == depth - 1, checked above
+            let mut w = Vec::with_capacity(depth + 1);
+            w.push(feat_in);
+            w.extend_from_slice(hidden);
+            w.push(feat_out);
+            w
+        };
+        let layers = (0..depth)
+            .map(|l| LayerSpec {
+                feat_in: widths[l],
+                feat_out: widths[l + 1],
+                activation: if l + 1 < depth { Some(ElwUnary::Relu) } else { None },
+            })
+            .collect();
+        Ok(ModelSpec { kind, layers })
+    }
+
+    /// The depth-1 special case (always valid; no hidden widths).
+    pub fn single(kind: ModelKind, feat_in: u32, feat_out: u32) -> ModelSpec {
+        Self::new(kind, feat_in, &[], feat_out, 1).expect("depth-1 specs are always valid")
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// First layer's input embedding width.
+    pub fn feat_in(&self) -> u32 {
+        self.layers[0].feat_in
+    }
+
+    /// Final layer's output embedding width.
+    pub fn feat_out(&self) -> u32 {
+        self.layers[self.layers.len() - 1].feat_out
+    }
+
+    /// Build layer `l`'s tensor-level DAG (body + activation).
+    pub fn build_layer(&self, l: usize) -> ModelGraph {
+        self.kind.build_layer(self.layers[l].activation)
+    }
+
+    /// Per-layer weight seed: layer 0 uses the run seed verbatim (the
+    /// depth-1 path is bit-exact with the pre-pipeline behavior), deeper
+    /// layers decorrelate so stacked layers don't share weights.
+    pub fn layer_seed(seed: u64, layer: usize) -> u64 {
+        seed ^ (layer as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
     }
 }
 
 /// GCN (paper Fig 1a): SpMM (Scatter+Gather) then GEMM.
 pub fn gcn() -> ModelGraph {
-    let mut g = ModelGraph::new("gcn");
+    ModelKind::Gcn.build()
+}
+
+fn gcn_body(g: &mut ModelGraph) -> NodeId {
     let x = g.input_v("x");
     let w = g.weight("w", FDim::In, FDim::Out);
     let ex = g.scatter_out(x);
     let agg = g.gather_sum(ex);
-    let h = g.gemm(agg, w);
-    g.output_v(h, "h");
-    g
+    g.gemm(agg, w)
 }
 
 /// GAT single head (paper Fig 1b), naive: per-edge GEMMs before E2V.
 pub fn gat() -> ModelGraph {
-    let mut g = ModelGraph::new("gat");
+    ModelKind::Gat.build()
+}
+
+fn gat_body(g: &mut ModelGraph) -> NodeId {
     let x = g.input_v("x");
     let w = g.weight("w", FDim::In, FDim::Out);
     let a_s = g.weight("a_src", FDim::Out, FDim::One);
@@ -116,14 +276,15 @@ pub fn gat() -> ModelGraph {
     let den = g.gather_sum(e);
     // zero-guarded normalize: empty destinations yield 0, not 0/0
     let den_r = g.unary(ElwUnary::Recip0, den);
-    let out = g.bcast(ElwBinary::Mul, num, den_r);
-    g.output_v(out, "h");
-    g
+    g.bcast(ElwBinary::Mul, num, den_r)
 }
 
 /// GraphSAGE-maxpool (paper §8.1), naive: pool transform on edges.
 pub fn sage() -> ModelGraph {
-    let mut g = ModelGraph::new("sage");
+    ModelKind::Sage.build()
+}
+
+fn sage_body(g: &mut ModelGraph) -> NodeId {
     let x = g.input_v("x");
     let w_pool = g.weight("w_pool", FDim::In, FDim::Out);
     let w_self = g.weight("w_self", FDim::In, FDim::Out);
@@ -134,14 +295,15 @@ pub fn sage() -> ModelGraph {
     let h_n = g.gather_max(pe);
     let hn_t = g.gemm(h_n, w_neigh);
     let self_t = g.gemm(x, w_self);
-    let out = g.binary(ElwBinary::Add, self_t, hn_t);
-    g.output_v(out, "h");
-    g
+    g.binary(ElwBinary::Add, self_t, hn_t)
 }
 
 /// GGNN (paper §8.1): gathered message + GRU in explicit GEMM/ELW ops.
 pub fn ggnn() -> ModelGraph {
-    let mut g = ModelGraph::new("ggnn");
+    ModelKind::Ggnn.build()
+}
+
+fn ggnn_body(g: &mut ModelGraph) -> NodeId {
     let x = g.input_v("x");
     let w_msg = g.weight("w_msg", FDim::In, FDim::In);
     let w_z = g.weight("w_z", FDim::In, FDim::In);
@@ -171,21 +333,20 @@ pub fn ggnn() -> ModelGraph {
     let zc = g.unary(ElwUnary::OneMinus, z);
     let keep = g.binary(ElwBinary::Mul, zc, x);
     let new = g.binary(ElwBinary::Mul, z, h_t);
-    let out = g.binary(ElwBinary::Add, keep, new);
-    g.output_v(out, "h");
-    g
+    g.binary(ElwBinary::Add, keep, new)
 }
 
 /// R-GCN with NUM_RELATIONS edge types: index-guided BMM stays per-edge.
 pub fn rgcn() -> ModelGraph {
-    let mut g = ModelGraph::new("rgcn");
+    ModelKind::Rgcn.build()
+}
+
+fn rgcn_body(g: &mut ModelGraph) -> NodeId {
     let x = g.input_v("x");
     let wset = g.weight_set("w_rel", FDim::In, FDim::Out, NUM_RELATIONS);
     let ex = g.scatter_out(x);
     let te = g.bmm_by_type(ex, wset); // genuinely per-edge; E2V leaves it
-    let agg = g.gather_sum(te);
-    g.output_v(agg, "h");
-    g
+    g.gather_sum(te)
 }
 
 /// Deterministic weight synthesis for functional execution: one f32
@@ -298,6 +459,79 @@ mod tests {
     #[test]
     fn model_kind_parse() {
         assert_eq!(ModelKind::parse("GAT"), Some(ModelKind::Gat));
+        assert_eq!(ModelKind::parse("Gcn"), Some(ModelKind::Gcn));
         assert_eq!(ModelKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn build_layer_none_is_the_classic_dag() {
+        for m in ModelKind::ALL {
+            assert_eq!(m.build().nodes, m.build_layer(None).nodes, "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn build_layer_appends_exactly_one_activation() {
+        for m in ModelKind::ALL {
+            let base = m.build();
+            let act = m.build_layer(Some(ElwUnary::Relu));
+            assert_eq!(act.nodes.len(), base.nodes.len() + 1, "{}", m.name());
+            act.spans().unwrap_or_else(|e| panic!("{}: {e}", m.name()));
+            // the activation feeds the output
+            let relu_id = act
+                .nodes
+                .iter()
+                .find_map(|n| match n.op {
+                    crate::ir::Op::ElwU { op: ElwUnary::Relu, .. } => Some(n.id),
+                    _ => None,
+                })
+                .expect("activated layer has a ReLU");
+            assert!(act
+                .nodes
+                .iter()
+                .any(|n| matches!(n.op, crate::ir::Op::OutputV { x, .. } if x == relu_id)));
+        }
+    }
+
+    #[test]
+    fn model_spec_resolves_width_chains() {
+        let s = ModelSpec::new(ModelKind::Gcn, 64, &[], 16, 3).unwrap();
+        let dims: Vec<(u32, u32)> = s.layers.iter().map(|l| (l.feat_in, l.feat_out)).collect();
+        assert_eq!(dims, vec![(64, 16), (16, 16), (16, 16)]);
+        let s = ModelSpec::new(ModelKind::Gat, 64, &[32, 8], 16, 3).unwrap();
+        let dims: Vec<(u32, u32)> = s.layers.iter().map(|l| (l.feat_in, l.feat_out)).collect();
+        assert_eq!(dims, vec![(64, 32), (32, 8), (8, 16)]);
+        assert_eq!(s.layers[0].activation, Some(ElwUnary::Relu));
+        assert_eq!(s.layers[2].activation, None);
+        assert_eq!(ModelSpec::single(ModelKind::Gcn, 8, 4).depth(), 1);
+    }
+
+    #[test]
+    fn model_spec_rejects_bad_chains_with_shapes() {
+        let err = ModelSpec::new(ModelKind::Gcn, 64, &[32], 16, 3).unwrap_err();
+        assert!(err.contains("3-layer") && err.contains("64") && err.contains("16"), "{err}");
+        // GGNN: a wrong-COUNT chain is rejected like any other model…
+        let err = ModelSpec::new(ModelKind::Ggnn, 16, &[32], 16, 3).unwrap_err();
+        assert!(err.contains("3-layer") && err.contains("exactly 2"), "{err}");
+        // …and a right-count chain still enforces the square rule
+        let err = ModelSpec::new(ModelKind::Ggnn, 16, &[32, 16], 16, 3).unwrap_err();
+        assert!(err.contains("square") && err.contains("32") && err.contains("16"), "{err}");
+        let err = ModelSpec::new(ModelKind::Gcn, 8, &[0], 8, 2).unwrap_err();
+        assert!(err.contains("≥ 1"), "{err}");
+        // GGNN feat_out is coerced (single-layer compatibility), not an error
+        let s = ModelSpec::new(ModelKind::Ggnn, 16, &[], 32, 2).unwrap();
+        assert!(s.layers.iter().all(|l| (l.feat_in, l.feat_out) == (16, 16)));
+    }
+
+    #[test]
+    fn layer_seeds_distinct_and_layer0_is_the_run_seed() {
+        assert_eq!(ModelSpec::layer_seed(42, 0), 42);
+        assert_ne!(ModelSpec::layer_seed(42, 1), 42);
+        assert_ne!(ModelSpec::layer_seed(42, 1), ModelSpec::layer_seed(42, 2));
+        // distinct weights per layer
+        let g = gcn();
+        let a = WeightStore::synthesize(&g, 16, 16, ModelSpec::layer_seed(7, 0));
+        let b = WeightStore::synthesize(&g, 16, 16, ModelSpec::layer_seed(7, 1));
+        assert_ne!(a.tensors[0].data, b.tensors[0].data);
     }
 }

@@ -1,14 +1,16 @@
 //! Compile-once execution plans (the paper's core systems claim).
 //!
 //! ZIPPER's compiler fixes the expensive decisions — tiling, operator
-//! scheduling, buffer assignment — *once* per (model, graph, arch
-//! operating point); the runtime then only maps the immutable IR program
-//! onto hardware blocks per request. [`ExecPlan`] is that artifact: an
-//! `Arc`-able bundle of compiled [`Program`] + [`Tiling`] +
-//! [`WeightStore`] + derived dimensions, produced once and shared by any
+//! scheduling, buffer assignment — *once* per (model spec, graph, arch
+//! operating point); the runtime then only maps the immutable IR
+//! programs onto hardware blocks per request. [`ExecPlan`] is that
+//! artifact: an `Arc`-able pipeline of per-layer [`LayerStage`]s
+//! (compiled [`Program`] + [`WeightStore`] each) over ONE shared
+//! [`Tiling`] + derived dimensions, produced once and shared by any
 //! number of concurrent simulation runs. Per-request state lives
 //! entirely in the caller's [`ExecScratch`], so serving is re-entrant
-//! and allocation-light.
+//! and allocation-light — including the inter-layer activation chain of
+//! multi-layer runs (DESIGN.md §3.4).
 //!
 //! [`PlanCache`] is the serving-side cache: a concurrent map from the
 //! structured [`PlanKey`] to `Arc<ExecPlan>`, with hit/miss counters so
@@ -17,9 +19,9 @@
 use crate::compiler::{compile, OptLevel, Program};
 use crate::config::{ArchConfig, RunConfig};
 use crate::graph::{datasets, Graph};
-use crate::models::{ModelKind, WeightStore, NUM_RELATIONS};
-use crate::sim::parallel::BatchScratch;
-use crate::sim::{ExecScratch, SimOptions, SimResult, Simulator, Workload};
+use crate::models::{ModelKind, ModelSpec, WeightStore, NUM_RELATIONS};
+use crate::sim::parallel::{BatchScratch, StageWl};
+use crate::sim::{ExecScratch, LayerMetrics, SimOptions, SimResult, Simulator, Workload};
 use crate::tiling::{tile, Reorder, Tiling, TilingConfig, TilingMode};
 use crate::util::Rng;
 use std::collections::HashMap;
@@ -35,8 +37,17 @@ pub struct PlanKey {
     pub model: String,
     pub dataset: String,
     pub scale: u64,
+    /// Raw request dims (kept for key continuity with the pre-pipeline
+    /// cache and the stable `Display` rendering; note GGNN's square
+    /// coercion happens in `layers`, not here).
     pub feat_in: u32,
     pub feat_out: u32,
+    /// Resolved per-layer (in, out) dims — the layer signature.
+    /// Different depths or hidden widths never alias (one entry per
+    /// layer, depth-1 = `[(feat_in, feat_out)]`), and equivalent
+    /// spellings of the same hidden chain (`hidden = []` vs the
+    /// explicit default widths) resolve identically.
+    pub layers: Vec<(u32, u32)>,
     pub tiling: TilingConfig,
     pub e2v: bool,
     pub seed: u64,
@@ -50,6 +61,7 @@ impl PlanKey {
             scale: run.scale,
             feat_in: run.feat_in,
             feat_out: run.feat_out,
+            layers: layer_signature(run),
             // normalized: `TilingConfig::threads` is a host compile-
             // latency knob that never changes the artifact, so it must
             // not fragment the cache
@@ -58,6 +70,25 @@ impl PlanKey {
             seed: run.seed,
         }
     }
+}
+
+/// The resolved per-layer (in, out) dims of a run — normalized through
+/// [`ModelSpec`] so equivalent spellings (`hidden = []` vs an explicit
+/// all-default chain) share one cache entry. Runs that cannot resolve
+/// (unknown model, inconsistent chain — they fail compile anyway) fall
+/// back to the raw width chain so the key still distinguishes them.
+fn layer_signature(run: &RunConfig) -> Vec<(u32, u32)> {
+    if let Some(kind) = ModelKind::parse(&run.model) {
+        if let Ok(spec) = ModelSpec::new(kind, run.feat_in, &run.hidden, run.feat_out, run.layers)
+        {
+            return spec.layers.iter().map(|l| (l.feat_in, l.feat_out)).collect();
+        }
+    }
+    let mut widths = Vec::with_capacity(run.hidden.len() + 2);
+    widths.push(run.feat_in);
+    widths.extend_from_slice(&run.hidden);
+    widths.push(run.feat_out);
+    widths.windows(2).map(|w| (w[0], w[1])).collect()
 }
 
 impl fmt::Display for PlanKey {
@@ -72,14 +103,21 @@ impl fmt::Display for PlanKey {
             Reorder::InDegree => "in_degree",
             Reorder::OutDegree => "out_degree",
         };
+        let layers = self
+            .layers
+            .iter()
+            .map(|&(i, o)| format!("{i}x{o}"))
+            .collect::<Vec<_>>()
+            .join(",");
         write!(
             f,
-            "model={};dataset={};scale={};feat={}x{};dst_part={};src_part={};mode={};reorder={};e2v={};seed={}",
+            "model={};dataset={};scale={};feat={}x{};layers={};dst_part={};src_part={};mode={};reorder={};e2v={};seed={}",
             self.model,
             self.dataset,
             self.scale,
             self.feat_in,
             self.feat_out,
+            layers,
             self.tiling.dst_part,
             self.tiling.src_part,
             mode,
@@ -106,16 +144,36 @@ pub struct PlanDims {
     pub output_len: usize,
 }
 
-/// Immutable, shareable execution plan: everything reusable across
-/// requests for one (model, graph, tiling, features) operating point.
-pub struct ExecPlan {
-    pub key: PlanKey,
-    pub model: ModelKind,
-    pub graph: Graph,
-    pub tiling: Tiling,
+/// One compiled layer of a plan's pipeline: the layer's SDE program and
+/// weights at its `(feat_in, feat_out)` operating point. Stages never
+/// own graph-side state — the plan's single [`Tiling`] (and its E2V
+/// vertex permutation) is shared by every stage.
+pub struct LayerStage {
     pub program: Program,
     pub weights: WeightStore,
     pub feat_in: u32,
+    pub feat_out: u32,
+}
+
+/// Immutable, shareable execution plan: everything reusable across
+/// requests for one (model spec, graph, tiling, features) operating
+/// point. Multi-layer models compile into a *pipeline* of
+/// [`LayerStage`]s over ONE shared tiling — the expensive graph-side
+/// work (sparse tiling + reorder permutation) is computed exactly once
+/// per plan and amortized across every layer of every request.
+pub struct ExecPlan {
+    pub key: PlanKey,
+    pub model: ModelKind,
+    /// Resolved layer chain (depth, widths, activations).
+    pub spec: ModelSpec,
+    pub graph: Graph,
+    /// The single tiling every stage executes over.
+    pub tiling: Tiling,
+    /// Per-layer compiled programs + weights, execution order.
+    pub stages: Vec<LayerStage>,
+    /// First layer's input embedding width.
+    pub feat_in: u32,
+    /// Final layer's output embedding width.
     pub feat_out: u32,
     pub dims: PlanDims,
 }
@@ -134,11 +192,28 @@ impl ExecPlan {
 
     /// Compile a plan around an explicit graph (tests, examples).
     pub fn from_graph(model: ModelKind, graph: Graph, run: &RunConfig) -> Result<ExecPlan, String> {
-        let feat_out = if model.requires_square() { run.feat_in } else { run.feat_out };
+        let spec = ModelSpec::new(model, run.feat_in, &run.hidden, run.feat_out, run.layers)?;
+        // the ONE graph-side compile step, shared by every stage
         let tiling = tile(&graph, run.tiling);
         let opt = if run.e2v { OptLevel::E2v } else { OptLevel::None };
-        let program = compile(&model.build(), opt).map_err(|e| e.to_string())?;
-        let weights = WeightStore::synthesize(&model.build(), run.feat_in, feat_out, run.seed);
+        let mut stages = Vec::with_capacity(spec.depth());
+        for (l, layer) in spec.layers.iter().enumerate() {
+            let dag = spec.build_layer(l);
+            let program = compile(&dag, opt).map_err(|e| format!("layer {l}: {e}"))?;
+            let weights = WeightStore::synthesize(
+                &dag,
+                layer.feat_in,
+                layer.feat_out,
+                ModelSpec::layer_seed(run.seed, l),
+            );
+            stages.push(LayerStage {
+                program,
+                weights,
+                feat_in: layer.feat_in,
+                feat_out: layer.feat_out,
+            });
+        }
+        let (feat_in, feat_out) = (spec.feat_in(), spec.feat_out());
         let dims = PlanDims {
             num_vertices: tiling.num_vertices,
             num_edges: tiling.num_edges,
@@ -146,20 +221,25 @@ impl ExecPlan {
             num_tiles: tiling.num_tiles(),
             max_tile_src: tiling.max_tile_src(),
             max_tile_edges: tiling.max_tile_edges(),
-            input_len: tiling.num_vertices as usize * run.feat_in as usize,
+            input_len: tiling.num_vertices as usize * feat_in as usize,
             output_len: tiling.num_vertices as usize * feat_out as usize,
         };
         Ok(ExecPlan {
             key: PlanKey::of(run),
             model,
+            spec,
             graph,
             tiling,
-            program,
-            weights,
-            feat_in: run.feat_in,
+            stages,
+            feat_in,
             feat_out,
             dims,
         })
+    }
+
+    /// Pipeline depth (number of compiled layer stages, ≥ 1).
+    pub fn depth(&self) -> usize {
+        self.stages.len()
     }
 
     /// Deterministic input embeddings for this plan's graph.
@@ -168,16 +248,25 @@ impl ExecPlan {
         (0..self.dims.input_len).map(|_| rng.next_f32_sym() * 0.5).collect()
     }
 
-    /// Borrow this plan as a simulator workload.
-    pub fn workload<'a>(&'a self, x: Option<&'a [f32]>) -> Workload<'a> {
+    /// Borrow one pipeline stage as a simulator workload (the engine
+    /// executes one layer program at a time; `ExecPlan::simulate_with`
+    /// chains the stages).
+    pub fn stage_workload<'a>(&'a self, l: usize, x: Option<&'a [f32]>) -> Workload<'a> {
+        let stage = &self.stages[l];
         Workload {
-            program: &self.program,
+            program: &stage.program,
             tiling: &self.tiling,
-            weights: &self.weights,
-            feat_in: self.feat_in,
-            feat_out: self.feat_out,
+            weights: &stage.weights,
+            feat_in: stage.feat_in,
+            feat_out: stage.feat_out,
             x,
         }
+    }
+
+    /// Borrow the first stage as a simulator workload (the whole model
+    /// for depth-1 plans; kept for single-layer tests and tools).
+    pub fn workload<'a>(&'a self, x: Option<&'a [f32]>) -> Workload<'a> {
+        self.stage_workload(0, x)
     }
 
     /// Run the cycle-level simulation (optionally functional), allocating
@@ -196,6 +285,12 @@ impl ExecPlan {
     /// Re-entrant simulation: the plan is only read, all run-local state
     /// lives in `scratch`. Any number of threads may call this on the
     /// same `Arc<ExecPlan>` concurrently, each with its own scratch.
+    ///
+    /// Multi-layer plans chain the engine: layer *l*'s output embeddings
+    /// (ORIGINAL vertex order, stashed in the scratch's pooled chain
+    /// buffer) become layer *l+1*'s `x`, timing/energy/DRAM accumulate
+    /// across layers, and `SimResult::layers` carries the per-layer
+    /// breakdown. Depth 1 is bit-exact with the pre-pipeline behavior.
     pub fn simulate_with(
         &self,
         arch: &ArchConfig,
@@ -204,19 +299,113 @@ impl ExecPlan {
         trace_window: u64,
         scratch: &mut ExecScratch,
     ) -> Result<SimResult, String> {
-        let wl = self.workload(x);
-        Simulator::new(arch, &wl, SimOptions { functional, trace_window }).run_with(scratch)
+        if self.stages.len() == 1 {
+            // depth-1 fast path: one engine run, no chaining
+            let wl = self.stage_workload(0, x);
+            let opts = SimOptions { functional, trace_window, emit_output: true };
+            let mut res = Simulator::new(arch, &wl, opts).run_with(scratch)?;
+            res.layers = vec![layer_metrics(&self.stages[0], &res)];
+            return Ok(res);
+        }
+        // detach the pooled chain buffer so the in-flight layer can
+        // borrow it as input while the scratch stays mutably borrowed
+        let mut chain = std::mem::take(&mut scratch.chain);
+        let result = self.simulate_chain(arch, functional, x, trace_window, scratch, &mut chain);
+        scratch.chain = chain;
+        result
+    }
+
+    fn simulate_chain(
+        &self,
+        arch: &ArchConfig,
+        functional: bool,
+        x: Option<&[f32]>,
+        trace_window: u64,
+        scratch: &mut ExecScratch,
+        chain: &mut Vec<f32>,
+    ) -> Result<SimResult, String> {
+        let depth = self.stages.len();
+        let mut acc = SimResult::default();
+        for (l, stage) in self.stages.iter().enumerate() {
+            let last = l + 1 == depth;
+            let input: Option<&[f32]> = if !functional {
+                None
+            } else if l == 0 {
+                x
+            } else {
+                Some(chain.as_slice())
+            };
+            let wl = Workload {
+                program: &stage.program,
+                tiling: &self.tiling,
+                weights: &stage.weights,
+                feat_in: stage.feat_in,
+                feat_out: stage.feat_out,
+                x: input,
+            };
+            let opts = SimOptions {
+                functional,
+                // the windowed trace covers the first layer
+                trace_window: if l == 0 { trace_window } else { 0 },
+                emit_output: last,
+            };
+            let mut res = Simulator::new(arch, &wl, opts).run_with(scratch)?;
+            if functional && !last {
+                scratch.stash_output(&self.tiling, stage.feat_out, chain);
+            }
+            acc.layers.push(layer_metrics(stage, &res));
+            acc.cycles += res.cycles;
+            acc.instructions += res.instructions;
+            acc.mu_busy += res.mu_busy;
+            acc.vu_busy += res.vu_busy;
+            acc.mem_busy += res.mem_busy;
+            acc.dram_read_bytes += res.dram_read_bytes;
+            acc.dram_write_bytes += res.dram_write_bytes;
+            acc.counters += res.counters;
+            if l == 0 {
+                acc.trace = std::mem::take(&mut res.trace);
+            }
+            if last {
+                acc.output = res.output.take();
+            }
+        }
+        acc.peak_uem_bytes = self.aggregate_peak(&acc.layers);
+        Ok(acc)
+    }
+
+    /// Fig 2-style footprint aggregate: a layer's tile-resident peak
+    /// plus the inter-layer activation images resident across its
+    /// boundaries (the previous layer's output while it is consumed, and
+    /// this layer's own output image while it is produced). Depth-1
+    /// plans have no inter-layer activations, so this reduces to the
+    /// engine's own peak.
+    fn aggregate_peak(&self, layers: &[LayerMetrics]) -> u64 {
+        let v = self.dims.num_vertices as u64;
+        let depth = layers.len();
+        layers
+            .iter()
+            .enumerate()
+            .map(|(l, lm)| {
+                let inp = if l > 0 { v * lm.feat_in as u64 * 4 } else { 0 };
+                let out = if l + 1 < depth { v * lm.feat_out as u64 * 4 } else { 0 };
+                lm.peak_uem_bytes + inp + out
+            })
+            .max()
+            .unwrap_or(0)
     }
 
     /// Tile-parallel batched functional execution (no timing): one input
     /// embedding per request lane, each partition's tiles sharded across
     /// `exec_threads` OS threads, reductions folded in deterministic tile
-    /// order. Returns one output vector per lane, bit-identical for every
-    /// `exec_threads` value and batch grouping — and bit-identical to a
-    /// functional [`ExecPlan::simulate_with`] run: both executors share
-    /// the single instruction-dispatch core (see [`sim::parallel`]).
-    /// Timing for these lanes comes from a `functional: false`
-    /// [`ExecPlan::simulate_with`] run, which is input-independent.
+    /// order. Multi-layer plans run the whole stage pipeline per lane
+    /// (`sim::parallel::run_pipeline`), chaining layer outputs through
+    /// the scratch's pooled buffers. Returns one output vector per lane,
+    /// bit-identical for every `exec_threads` value and batch grouping —
+    /// and bit-identical to a functional [`ExecPlan::simulate_with`]
+    /// run: both executors share the single instruction-dispatch core
+    /// (see [`sim::parallel`]). Timing for these lanes comes from a
+    /// `functional: false` [`ExecPlan::simulate_with`] run, which is
+    /// input-independent.
     ///
     /// [`sim::parallel`]: crate::sim::parallel
     pub fn execute_batch_with(
@@ -225,12 +414,41 @@ impl ExecPlan {
         exec_threads: usize,
         scratch: &mut BatchScratch,
     ) -> Result<Vec<Vec<f32>>, String> {
-        let wl = self.workload(None);
-        crate::sim::parallel::run_batch(&wl, inputs, exec_threads, scratch)
+        let stages: Vec<StageWl> = self
+            .stages
+            .iter()
+            .map(|s| StageWl {
+                program: &s.program,
+                weights: &s.weights,
+                feat_in: s.feat_in,
+                feat_out: s.feat_out,
+            })
+            .collect();
+        crate::sim::parallel::run_pipeline(&self.tiling, &stages, inputs, exec_threads, scratch)
     }
 }
 
-/// Snapshot of cache effectiveness counters.
+/// Per-layer slice of an engine run for `SimResult::layers`.
+fn layer_metrics(stage: &LayerStage, res: &SimResult) -> LayerMetrics {
+    LayerMetrics {
+        feat_in: stage.feat_in,
+        feat_out: stage.feat_out,
+        cycles: res.cycles,
+        instructions: res.instructions,
+        dram_read_bytes: res.dram_read_bytes,
+        dram_write_bytes: res.dram_write_bytes,
+        peak_uem_bytes: res.peak_uem_bytes,
+        counters: res.counters,
+    }
+}
+
+/// Snapshot of cache effectiveness counters. A *hit* means the whole
+/// layered artifact was reused: one [`PlanKey`] (which carries the full
+/// per-layer dim signature) maps to one compiled pipeline — shared
+/// tiling plus every [`LayerStage`] — so a warm request skips retiling
+/// AND every layer's compile/weight synthesis. Misses count one per
+/// distinct key, i.e. exactly one `tile()` invocation each, regardless
+/// of depth.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
@@ -292,7 +510,10 @@ impl PlanCache {
     }
 
     /// Fetch the plan for `run`, compiling it on first use. Returns the
-    /// shared plan and whether this call was a cache hit.
+    /// shared plan and whether this call was a cache hit. The key is the
+    /// layered [`PlanKey`]: runs differing only in depth or hidden
+    /// widths compile separate pipelines (never alias), while equivalent
+    /// spellings of the same hidden chain share one entry.
     pub fn get_or_compile(&self, run: &RunConfig) -> Result<(Arc<ExecPlan>, bool), String> {
         let key = PlanKey::of(run);
         if let Some(p) = self.lookup(&key) {
@@ -343,6 +564,8 @@ mod tests {
             scale: 16,
             feat_in: 16,
             feat_out: 16,
+            layers: 1,
+            hidden: Vec::new(),
             tiling: TilingConfig {
                 dst_part: 64,
                 src_part: 64,
@@ -417,6 +640,74 @@ mod tests {
         let (_, hit) = cache.get_or_compile(&seeded).unwrap();
         assert!(!hit, "different seed must not reuse a cached graph");
         assert_eq!(cache.stats().entries, 3);
+    }
+
+    #[test]
+    fn plan_key_carries_the_layer_signature() {
+        let mut deep = run_cfg("gcn");
+        deep.layers = 3;
+        let key = PlanKey::of(&deep);
+        assert_eq!(key.layers, vec![(16, 16), (16, 16), (16, 16)]);
+        assert!(key.to_string().contains("layers=16x16,16x16,16x16"));
+        // equivalent spellings of the default chain share one key
+        let mut explicit = deep.clone();
+        explicit.hidden = vec![16, 16];
+        assert_eq!(key, PlanKey::of(&explicit));
+        // …but real differences never alias
+        let mut narrow = deep.clone();
+        narrow.hidden = vec![8, 8];
+        assert_ne!(key, PlanKey::of(&narrow));
+        assert_ne!(key, PlanKey::of(&run_cfg("gcn")));
+    }
+
+    #[test]
+    fn cache_never_aliases_depths() {
+        let cache = PlanCache::new();
+        cache.get_or_compile(&run_cfg("gcn")).unwrap();
+        let mut deep = run_cfg("gcn");
+        deep.layers = 2;
+        let (plan, hit) = cache.get_or_compile(&deep).unwrap();
+        assert!(!hit, "a 2-layer run must not reuse the depth-1 plan");
+        assert_eq!(plan.depth(), 2);
+        let mut hid = deep.clone();
+        hid.hidden = vec![8];
+        let (plan8, hit) = cache.get_or_compile(&hid).unwrap();
+        assert!(!hit, "different hidden widths must not alias");
+        assert_eq!((plan8.stages[0].feat_out, plan8.stages[1].feat_in), (8, 8));
+        assert_eq!(cache.stats().entries, 3);
+    }
+
+    #[test]
+    fn multi_layer_plan_shares_one_tiling_and_stacks_stages() {
+        let mut run = run_cfg("gat");
+        run.layers = 3;
+        run.functional = true;
+        let plan = ExecPlan::compile(&run).unwrap();
+        assert_eq!(plan.depth(), 3);
+        assert_eq!(plan.spec.depth(), 3);
+        // stage weights are per-layer decorrelated
+        assert_ne!(
+            plan.stages[0].weights.tensors[0].data,
+            plan.stages[1].weights.tensors[0].data
+        );
+        // hidden layers carry the activation, final is linear
+        assert!(plan.spec.layers[0].activation.is_some());
+        assert!(plan.spec.layers[2].activation.is_none());
+        // chained simulation: per-layer breakdown sums to the total
+        let x = plan.make_input(5);
+        let res = plan.simulate(&ArchConfig::default(), true, Some(&x), 0).unwrap();
+        assert_eq!(res.layers.len(), 3);
+        assert_eq!(res.cycles, res.layers.iter().map(|l| l.cycles).sum::<u64>());
+        assert_eq!(
+            res.dram_read_bytes,
+            res.layers.iter().map(|l| l.dram_read_bytes).sum::<u64>()
+        );
+        let out = res.output.unwrap();
+        assert_eq!(out.len(), plan.dims.output_len);
+        assert!(out.iter().all(|v| v.is_finite()));
+        // aggregate peak covers at least one inter-layer activation image
+        let act = plan.dims.num_vertices as u64 * 16 * 4;
+        assert!(res.peak_uem_bytes >= act, "{} < {act}", res.peak_uem_bytes);
     }
 
     #[test]

@@ -145,10 +145,12 @@ impl<'a, 's> Engine<'a, 's> {
         if let Some(t) = self.trace.take() {
             self.res.trace = t.finish();
         }
-        if self.opts.functional {
+        if self.opts.functional && self.opts.emit_output {
             // un-permute output to original vertex order
             self.res.output = Some(self.scratch.func.take_output(self.wl.tiling, self.wl.feat_out));
         }
+        // !emit_output (hidden pipeline layers): the tiled output image
+        // stays pooled in the scratch for `ExecScratch::stash_output`
         Ok(self.res)
     }
 

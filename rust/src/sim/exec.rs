@@ -52,11 +52,25 @@ impl<'a> Env<'a> {
 /// buffers are recycled between runs instead of reallocated.
 pub struct ExecScratch {
     pub(crate) func: FuncState,
+    /// Pooled inter-layer activation image (ORIGINAL vertex order):
+    /// layer *l* of a multi-layer pipeline stashes its output here and
+    /// layer *l+1* reads it back as `x`. Capacity persists across
+    /// layers, runs, and plans, so warm multi-layer requests allocate
+    /// nothing (`alloc_events` counts its growth).
+    pub(crate) chain: Vec<f32>,
 }
 
 impl ExecScratch {
     pub fn new() -> ExecScratch {
-        ExecScratch { func: FuncState::new() }
+        ExecScratch { func: FuncState::new(), chain: Vec::new() }
+    }
+
+    /// Un-permute the last functional run's (still-tiled, `emit_output:
+    /// false`) output image into `dst`, reusing `dst`'s capacity — the
+    /// inter-layer chaining step of a pipeline run.
+    pub(crate) fn stash_output(&mut self, tiling: &Tiling, feat_out: u32, dst: &mut Vec<f32>) {
+        let grew = unpermute_into(tiling, feat_out, &self.func.out_tiled, dst);
+        self.func.allocs += grew as u64;
     }
 
     /// Pool-growth events since this scratch was created: +1 every time
@@ -149,6 +163,28 @@ impl Frame {
 
 pub(crate) fn part_slot(buf: BufId) -> usize {
     (buf.0 - PART_FRAME_BASE) as usize
+}
+
+/// Un-permute a tiled (V × feat) image back to ORIGINAL vertex order into
+/// `dst`, reusing `dst`'s capacity. THE single un-permute site shared by
+/// the engine, the pipeline chain, and the batched executor's lanes.
+/// Returns whether `dst`'s backing allocation had to grow.
+pub(crate) fn unpermute_into(
+    tiling: &Tiling,
+    feat_out: u32,
+    tiled: &[f32],
+    dst: &mut Vec<f32>,
+) -> bool {
+    let n = tiling.num_vertices as usize;
+    let f = feat_out as usize;
+    let grew = n * f > dst.capacity();
+    dst.clear();
+    dst.resize(n * f, 0.0);
+    for new in 0..n {
+        let old = tiling.inv_perm[new] as usize;
+        dst[old * f..(old + 1) * f].copy_from_slice(&tiled[new * f..(new + 1) * f]);
+    }
+    grew
 }
 
 /// Functional state of one run, recycled across runs via `ExecScratch`.
@@ -354,15 +390,11 @@ impl FuncState {
         frame
     }
 
-    /// Un-permute the tiled output back to original vertex order.
+    /// Un-permute the tiled output back to original vertex order. The
+    /// returned vector is caller-owned (excluded from `alloc_events`).
     pub fn take_output(&self, tiling: &Tiling, feat_out: u32) -> Vec<f32> {
-        let n = tiling.num_vertices as usize;
-        let f = feat_out as usize;
-        let mut out = vec![0.0f32; n * f];
-        for new in 0..n {
-            let old = tiling.inv_perm[new] as usize;
-            out[old * f..(old + 1) * f].copy_from_slice(&self.out_tiled[new * f..(new + 1) * f]);
-        }
+        let mut out = Vec::new();
+        unpermute_into(tiling, feat_out, &self.out_tiled, &mut out);
         out
     }
 

@@ -37,13 +37,21 @@
 //! runs, and plans; [`BatchScratch::alloc_events`] counts growth events
 //! and `rust/tests/parallel_batch.rs` asserts a warm batch adds zero —
 //! per worker thread, via [`BatchScratch::worker_alloc_events`].
+//!
+//! **Layer pipelines.** [`run_pipeline`] chains multiple [`StageWl`]
+//! stages (one compiled layer program each) over ONE shared tiling:
+//! stage *l*'s per-lane outputs (original vertex order) become stage
+//! *l+1*'s inputs via the scratch's pooled ping-pong chain buffers, so
+//! warm multi-layer batches stay allocation-free and single-stage
+//! pipelines are exactly [`run_batch`] (DESIGN.md §3.4).
 
 use super::dispatch::{self, BufAccess};
-use super::exec::{part_slot, Env, Frame};
+use super::exec::{part_slot, unpermute_into, Env, Frame};
 use super::tensor::Tensor;
 use super::types::Workload;
-use crate::compiler::AccKind;
+use crate::compiler::{AccKind, Program};
 use crate::isa::{BufId, Dim, DimCtx, Instr, StreamClass};
+use crate::models::WeightStore;
 use crate::tiling::{Partition, Tile, Tiling};
 
 /// Per-request ("lane") state of a batched run: permuted input/output
@@ -141,14 +149,16 @@ impl LaneState {
     /// Un-permute the tiled output back to original vertex order. The
     /// returned vector is caller-owned (excluded from `alloc_events`).
     fn take_output(&self, tiling: &Tiling, feat_out: u32) -> Vec<f32> {
-        let n = tiling.num_vertices as usize;
-        let f = feat_out as usize;
-        let mut out = vec![0.0f32; n * f];
-        for new in 0..n {
-            let old = tiling.inv_perm[new] as usize;
-            out[old * f..(old + 1) * f].copy_from_slice(&self.out_tiled[new * f..(new + 1) * f]);
-        }
+        let mut out = Vec::new();
+        unpermute_into(tiling, feat_out, &self.out_tiled, &mut out);
         out
+    }
+
+    /// Un-permute the tiled output into `dst`, reusing its capacity —
+    /// the inter-layer chaining step of [`run_pipeline`]. Returns the
+    /// number of pool-growth events (0 or 1).
+    fn write_output_into(&self, tiling: &Tiling, feat_out: u32, dst: &mut Vec<f32>) -> u64 {
+        unpermute_into(tiling, feat_out, &self.out_tiled, dst) as u64
     }
 
     fn alloc_events(&self) -> u64 {
@@ -181,6 +191,12 @@ pub struct BatchScratch {
     lanes: Vec<LaneState>,
     workers: Vec<WorkerScratch>,
     acc_meta: Vec<(usize, AccKind, u32)>,
+    /// Pooled inter-layer activation images (ORIGINAL vertex order, one
+    /// per lane) for [`run_pipeline`]: the stage ping-pong pair. Their
+    /// growth is tracked in `allocs`, so warm multi-layer batches stay
+    /// at zero.
+    chain_prev: Vec<Vec<f32>>,
+    chain_next: Vec<Vec<f32>>,
     allocs: u64,
 }
 
@@ -275,13 +291,110 @@ pub fn run_batch(
     scratch: &mut BatchScratch,
 ) -> Result<Vec<Vec<f32>>, String> {
     let env = Env::of(wl);
+    let out = run_stage(&env, inputs, exec_threads.max(1), scratch, None)?;
+    Ok(out.expect("run_stage without a sink returns outputs"))
+}
+
+/// One pipeline stage's immutable pieces for [`run_pipeline`]: the
+/// compiled layer program plus that layer's weights and feature dims.
+/// The tiling is deliberately *not* here — it is shared by every stage
+/// of a pipeline and passed once.
+pub struct StageWl<'a> {
+    pub program: &'a Program,
+    pub weights: &'a WeightStore,
+    pub feat_in: u32,
+    pub feat_out: u32,
+}
+
+/// Execute a multi-layer pipeline functionally for a batch of lanes:
+/// every stage runs the full tile-parallel [`run_batch`] machinery over
+/// the **same** shared `tiling`, and stage *l*'s per-lane output
+/// (ORIGINAL vertex order) becomes stage *l+1*'s input. Hidden-stage
+/// outputs live in the scratch's pooled chain buffers (warm pipelines
+/// allocate nothing); only the final stage's outputs are fresh
+/// caller-owned vectors. Single-stage pipelines are exactly
+/// [`run_batch`], so depth 1 is bit-exact with the pre-pipeline path.
+pub fn run_pipeline(
+    tiling: &Tiling,
+    stages: &[StageWl],
+    inputs: &[&[f32]],
+    exec_threads: usize,
+    scratch: &mut BatchScratch,
+) -> Result<Vec<Vec<f32>>, String> {
+    if stages.is_empty() {
+        return Err("run_pipeline: empty stage list".into());
+    }
     let nlanes = inputs.len();
     if nlanes == 0 {
         return Ok(Vec::new());
     }
     let threads = exec_threads.max(1);
-    scratch.reserve(&env, nlanes, threads);
-    let BatchScratch { lanes, workers, acc_meta, .. } = scratch;
+    // ping-pong the pooled chain buffers around the borrow on `scratch`
+    let mut prev = std::mem::take(&mut scratch.chain_prev);
+    let mut next = std::mem::take(&mut scratch.chain_next);
+    let result = pipeline_stages(tiling, stages, inputs, threads, scratch, &mut prev, &mut next);
+    scratch.chain_prev = prev;
+    scratch.chain_next = next;
+    result
+}
+
+/// The stage loop of [`run_pipeline`], with the chain buffers detached
+/// from the scratch so a stage can read `prev` while `run_stage`
+/// mutably borrows the scratch.
+fn pipeline_stages(
+    tiling: &Tiling,
+    stages: &[StageWl],
+    inputs: &[&[f32]],
+    threads: usize,
+    scratch: &mut BatchScratch,
+    prev: &mut Vec<Vec<f32>>,
+    next: &mut Vec<Vec<f32>>,
+) -> Result<Vec<Vec<f32>>, String> {
+    let nlanes = inputs.len();
+    let last = stages.len() - 1;
+    for (l, st) in stages.iter().enumerate() {
+        let env = Env {
+            program: st.program,
+            tiling,
+            weights: st.weights,
+            feat_in: st.feat_in,
+            feat_out: st.feat_out,
+        };
+        let owned: Vec<&[f32]>;
+        let lane_inputs: &[&[f32]] = if l == 0 {
+            inputs
+        } else {
+            owned = prev.iter().take(nlanes).map(|v| v.as_slice()).collect();
+            &owned
+        };
+        if l == last {
+            let out = run_stage(&env, lane_inputs, threads, scratch, None)?;
+            return Ok(out.expect("run_stage without a sink returns outputs"));
+        }
+        run_stage(&env, lane_inputs, threads, scratch, Some(&mut *next))?;
+        std::mem::swap(prev, next);
+    }
+    unreachable!("the final stage returns from the loop")
+}
+
+/// One stage (= one compiled layer program) of a batched run: the core
+/// the public [`run_batch`] / [`run_pipeline`] entry points share. With
+/// `sink: None` the per-lane outputs come back as fresh caller-owned
+/// vectors; with `Some(bufs)` they are written into the pooled chain
+/// buffers instead (growth tracked in the scratch's alloc counter).
+fn run_stage(
+    env: &Env,
+    inputs: &[&[f32]],
+    threads: usize,
+    scratch: &mut BatchScratch,
+    sink: Option<&mut Vec<Vec<f32>>>,
+) -> Result<Option<Vec<Vec<f32>>>, String> {
+    let nlanes = inputs.len();
+    if nlanes == 0 {
+        return Ok(sink.is_none().then(Vec::new));
+    }
+    scratch.reserve(env, nlanes, threads);
+    let BatchScratch { lanes, workers, acc_meta, allocs, .. } = scratch;
     for (lane, x) in lanes.iter_mut().zip(inputs) {
         lane.init_input(env.tiling, x, env.feat_in)?;
         lane.prepare_output(env.tiling.num_vertices, env.feat_out);
@@ -303,7 +416,7 @@ pub fn run_batch(
         for lane in lanes.iter_mut().take(nlanes) {
             lane.begin_partition(acc_meta, part.num_dst());
             for instr in d_pre {
-                exec_part_instr(&env, part, &pdims, lane, instr)?;
+                exec_part_instr(env, part, &pdims, lane, instr)?;
             }
         }
 
@@ -312,9 +425,9 @@ pub fn run_batch(
             // ---- tile phase: round-robin shard across exec threads ----
             let lane_view: &[LaneState] = &lanes[..nlanes];
             if threads == 1 || tiles.len() == 1 {
-                worker_pass(&env, lane_view, part, 1, 0, &mut workers[0])?;
+                worker_pass(env, lane_view, part, 1, 0, &mut workers[0])?;
             } else {
-                let env_ref = &env;
+                let env_ref = env;
                 let results: Vec<Result<(), String>> = std::thread::scope(|s| {
                     let handles: Vec<_> = workers
                         .iter_mut()
@@ -356,17 +469,34 @@ pub fn run_batch(
         for lane in lanes.iter_mut().take(nlanes) {
             lane.fixup_max_accs(acc_meta);
             for instr in d_post {
-                exec_part_instr(&env, part, &pdims, lane, instr)?;
+                exec_part_instr(env, part, &pdims, lane, instr)?;
             }
-            lane.commit_partition(&env, part)?;
+            lane.commit_partition(env, part)?;
         }
     }
 
-    Ok(lanes
-        .iter()
-        .take(nlanes)
-        .map(|l| l.take_output(env.tiling, env.feat_out))
-        .collect())
+    match sink {
+        None => Ok(Some(
+            lanes
+                .iter()
+                .take(nlanes)
+                .map(|l| l.take_output(env.tiling, env.feat_out))
+                .collect(),
+        )),
+        Some(out) => {
+            // pooled chain buffers: one image per lane, capacity reused
+            if nlanes > out.capacity() {
+                *allocs += 1;
+            }
+            if out.len() < nlanes {
+                out.resize_with(nlanes, Vec::new);
+            }
+            for (lane, dst) in lanes.iter().take(nlanes).zip(out.iter_mut()) {
+                *allocs += lane.write_output_into(env.tiling, env.feat_out, dst);
+            }
+            Ok(None)
+        }
+    }
 }
 
 /// One worker's share of a partition's tile phase: tiles

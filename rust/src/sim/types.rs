@@ -24,12 +24,33 @@ pub struct SimOptions {
     pub functional: bool,
     /// Trace window in cycles (0 = no trace).
     pub trace_window: u64,
+    /// Materialize `SimResult::output` as a fresh caller-owned vector
+    /// (functional runs). Hidden layers of a multi-layer pipeline set
+    /// this to `false`: the still-tiled output image stays pooled in the
+    /// scratch and is chained into the next layer without allocating.
+    pub emit_output: bool,
 }
 
 impl Default for SimOptions {
     fn default() -> Self {
-        SimOptions { functional: false, trace_window: 0 }
+        SimOptions { functional: false, trace_window: 0, emit_output: true }
     }
+}
+
+/// Per-layer slice of a multi-layer pipeline run (`SimResult::layers`):
+/// the Fig 2-style depth-cost breakdown. Cycles/DRAM/energy counters are
+/// additive across layers; `peak_uem_bytes` is this layer's tile-resident
+/// peak (the plan-level aggregate adds inter-layer activation footprint).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LayerMetrics {
+    pub feat_in: u32,
+    pub feat_out: u32,
+    pub cycles: u64,
+    pub instructions: u64,
+    pub dram_read_bytes: u64,
+    pub dram_write_bytes: u64,
+    pub peak_uem_bytes: u64,
+    pub counters: EnergyCounters,
 }
 
 /// Simulation result: timing, utilization, energy events, output.
@@ -47,8 +68,14 @@ pub struct SimResult {
     pub trace: Vec<TraceSample>,
     /// Output embeddings in ORIGINAL vertex order (functional runs).
     pub output: Option<Vec<f32>>,
-    /// Peak resident UEM bytes observed (Fig 2-style footprint).
+    /// Peak resident UEM bytes observed (Fig 2-style footprint). For
+    /// multi-layer pipeline runs this includes the inter-layer
+    /// activation images resident across layer boundaries.
     pub peak_uem_bytes: u64,
+    /// Per-layer breakdown for pipeline runs driven through
+    /// `plan::ExecPlan` (one entry per layer, depth-1 included). Empty
+    /// when the engine is driven directly with a single `Workload`.
+    pub layers: Vec<LayerMetrics>,
 }
 
 impl SimResult {

@@ -359,10 +359,23 @@ fn build_partitions(
     partitions
 }
 
+/// Process-wide count of [`tile`] invocations. Tiling is the expensive
+/// graph-side compile step a multi-layer `plan::ExecPlan` amortizes
+/// across every layer, so single-process drivers (benches, the CI
+/// `perf_layers --smoke` step) assert this moves by exactly one per
+/// compiled plan and not at all on warm requests. Monotonic and global:
+/// don't assert exact deltas from concurrently-running tests.
+pub fn tile_invocations() -> u64 {
+    TILE_INVOCATIONS.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+static TILE_INVOCATIONS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
 /// Tile a graph under `cfg`. The graph is relabeled first if reordering
 /// is requested; `Tiling::perm` records the mapping so embeddings can be
 /// permuted consistently (the coordinator does this once at load time).
 pub fn tile(graph: &Graph, cfg: TilingConfig) -> Tiling {
+    TILE_INVOCATIONS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let n = graph.num_vertices();
     let perm: Vec<u32> = match cfg.reorder {
         Reorder::None => (0..n).collect(),

@@ -26,6 +26,8 @@ fn run_cfg(model: &str, dataset: &str) -> RunConfig {
         e2v: true,
         functional: false,
         seed: 11,
+        layers: 1,
+        hidden: Vec::new(),
         serving: Default::default(),
     }
 }
@@ -188,6 +190,8 @@ mod properties {
                     e2v: true,
                     functional: true,
                     seed: 9,
+                    layers: 1,
+                    hidden: Vec::new(),
                     serving: Default::default(),
                 };
                 let session =
@@ -236,6 +240,8 @@ mod properties {
                         e2v,
                         functional: true,
                         seed: 3,
+                        layers: 1,
+                        hidden: Vec::new(),
                         serving: Default::default(),
                     };
                     let s = Session::from_graph(m, g.clone(), &cfg).unwrap();
@@ -331,6 +337,32 @@ mod pjrt {
                 r.model, r.max_abs_err, r.rows_compared
             );
             assert!(r.mean_abs_err.is_finite());
+        }
+    }
+
+    #[test]
+    fn multi_layer_models_match_pjrt_oracle() {
+        // the extended AOT oracle: 2- and 3-layer GCN/GAT/SAGE chains,
+        // per-layer weights + hidden ReLU, vs the stacked ExecPlan
+        let Some(mut rt) = oracle() else { return };
+        let shape = TileShape {
+            num_src: 64,
+            num_dst: 64,
+            num_edges: 256,
+            feat_in: 32,
+            feat_out: 32,
+        };
+        for m in [ModelKind::Gcn, ModelKind::Gat, ModelKind::Sage] {
+            for depth in [2u32, 3] {
+                let r = validate::validate_model_depth(&mut rt, m, &shape, 29, depth)
+                    .unwrap_or_else(|e| panic!("{} depth {depth}: {e}", m.name()));
+                assert_eq!(r.layers, depth);
+                assert!(
+                    r.pass,
+                    "{} depth {depth}: max err {} over {} rows",
+                    r.model, r.max_abs_err, r.rows_compared
+                );
+            }
         }
     }
 

@@ -1,0 +1,302 @@
+//! Multi-layer pipeline tests: depth-1 bit-exactness with the
+//! pre-pipeline single-layer path, an in-repo layer-chaining oracle
+//! (hand-chained single-layer plans with host-side ReLU must be
+//! bit-exact with the stacked `ExecPlan`), engine ↔ batched-path
+//! equivalence at depth, and the shared-tiling / cache-key guarantees.
+
+use zipper::compiler::{compile, OptLevel};
+use zipper::config::{ArchConfig, RunConfig};
+use zipper::coordinator::{Coordinator, InferenceRequest};
+use zipper::graph::datasets;
+use zipper::models::{ModelKind, ModelSpec, WeightStore, NUM_RELATIONS};
+use zipper::plan::ExecPlan;
+use zipper::sim::parallel::BatchScratch;
+use zipper::sim::{ExecScratch, SimOptions, Simulator, Workload};
+use zipper::tiling::{Reorder, TilingConfig, TilingMode};
+
+const MODELS: [&str; 5] = ["gcn", "gat", "sage", "ggnn", "rgcn"];
+
+fn run_cfg(model: &str, layers: u32, hidden: Vec<u32>) -> RunConfig {
+    RunConfig {
+        model: model.into(),
+        dataset: "CR".into(),
+        scale: 16,
+        feat_in: 16,
+        feat_out: 16,
+        layers,
+        hidden,
+        tiling: TilingConfig {
+            dst_part: 64,
+            src_part: 64,
+            mode: TilingMode::Sparse,
+            reorder: Reorder::InDegree,
+            threads: 1,
+        },
+        e2v: true,
+        functional: true,
+        seed: 3,
+        serving: Default::default(),
+    }
+}
+
+/// Depth-1 pipelines must be bit-exact with the pre-pipeline path:
+/// one program compiled from `ModelKind::build()`, one `WeightStore`
+/// synthesized at the run seed, driven through the engine directly.
+#[test]
+fn depth1_pipeline_bit_exact_with_direct_single_layer_run() {
+    let arch = ArchConfig::default();
+    for m in MODELS {
+        let run = run_cfg(m, 1, vec![]);
+        let plan = ExecPlan::compile(&run).unwrap();
+        assert_eq!(plan.depth(), 1, "{m}");
+        let x = plan.make_input(7);
+        let pipe = plan.simulate(&arch, true, Some(&x), 0).unwrap();
+
+        let kind = ModelKind::parse(m).unwrap();
+        let prog = compile(&kind.build(), OptLevel::E2v).unwrap();
+        let ws = WeightStore::synthesize(&kind.build(), 16, 16, run.seed);
+        let wl = Workload {
+            program: &prog,
+            tiling: &plan.tiling,
+            weights: &ws,
+            feat_in: 16,
+            feat_out: 16,
+            x: Some(&x),
+        };
+        let direct = Simulator::new(&arch, &wl, SimOptions { functional: true, ..Default::default() })
+            .run()
+            .unwrap();
+        assert_eq!(pipe.cycles, direct.cycles, "{m}: depth-1 timing must be unchanged");
+        assert_eq!(pipe.instructions, direct.instructions, "{m}");
+        assert_eq!(pipe.dram_read_bytes, direct.dram_read_bytes, "{m}");
+        assert_eq!(pipe.peak_uem_bytes, direct.peak_uem_bytes, "{m}");
+        assert_eq!(
+            pipe.output.unwrap(),
+            direct.output.unwrap(),
+            "{m}: depth-1 output must be bit-exact with the single-layer path"
+        );
+        assert_eq!(pipe.layers.len(), 1, "{m}: depth-1 still reports one layer");
+    }
+}
+
+/// The in-repo layer-chaining oracle: a depth-K plan must be bit-exact
+/// with K hand-chained single-layer plans — same shared graph, layer
+/// weights at `ModelSpec::layer_seed`, hidden activations applied
+/// host-side with the exact kernel expression (`v.max(0.0)`).
+#[test]
+fn multi_layer_pipeline_matches_hand_chained_layers() {
+    let arch = ArchConfig::default();
+    for m in MODELS {
+        for depth in [2u32, 3] {
+            let base = run_cfg(m, depth, vec![]);
+            let plan = ExecPlan::compile(&base).unwrap();
+            assert_eq!(plan.depth(), depth as usize, "{m}");
+            let x = plan.make_input(11);
+            let res = plan.simulate(&arch, true, Some(&x), 0).unwrap();
+            let got = res.output.unwrap();
+            assert_eq!(res.layers.len(), depth as usize, "{m} depth {depth}");
+
+            // hand chain: single-layer plans over the SAME graph
+            let kind = ModelKind::parse(m).unwrap();
+            let etypes = if kind.uses_etypes() { NUM_RELATIONS } else { 0 };
+            let graph = datasets::by_id(&base.dataset)
+                .unwrap()
+                .instantiate_typed(base.scale, etypes, base.seed);
+            let mut cur = x.clone();
+            for l in 0..depth as usize {
+                let mut run_l = base.clone();
+                run_l.layers = 1;
+                run_l.hidden = Vec::new();
+                run_l.seed = ModelSpec::layer_seed(base.seed, l);
+                let lp = ExecPlan::from_graph(kind, graph.clone(), &run_l).unwrap();
+                let mut out = lp.simulate(&arch, true, Some(&cur), 0).unwrap().output.unwrap();
+                if l + 1 < depth as usize {
+                    // hidden-layer ReLU, exactly the VU kernel's expression
+                    for v in &mut out {
+                        *v = v.max(0.0);
+                    }
+                }
+                cur = out;
+            }
+            assert_eq!(got, cur, "{m} depth {depth}: pipeline vs hand-chained layers");
+        }
+    }
+}
+
+/// Engine and batched `run_batch` pipelines stay bit-exact at depth,
+/// for every thread count and batch grouping.
+#[test]
+fn multi_layer_engine_and_batched_path_bit_exact() {
+    let arch = ArchConfig::default();
+    for m in ["gcn", "gat", "sage"] {
+        for depth in [2u32, 3] {
+            let plan = ExecPlan::compile(&run_cfg(m, depth, vec![])).unwrap();
+            let inputs: Vec<Vec<f32>> = (0..6).map(|s| plan.make_input(s)).collect();
+            let engine: Vec<Vec<f32>> = inputs
+                .iter()
+                .map(|x| plan.simulate(&arch, true, Some(x), 0).unwrap().output.unwrap())
+                .collect();
+            for threads in [1usize, 2, 4] {
+                for batch in [1usize, 3, 8] {
+                    let mut scratch = BatchScratch::new();
+                    let mut got: Vec<Vec<f32>> = Vec::new();
+                    for chunk in inputs.chunks(batch) {
+                        let lanes: Vec<&[f32]> = chunk.iter().map(|v| v.as_slice()).collect();
+                        got.extend(
+                            plan.execute_batch_with(&lanes, threads, &mut scratch).unwrap(),
+                        );
+                    }
+                    assert_eq!(got.len(), engine.len());
+                    for (i, (g, e)) in got.iter().zip(&engine).enumerate() {
+                        assert_eq!(
+                            g, e,
+                            "{m} depth={depth} threads={threads} batch={batch} lane={i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Hidden activations must actually bite: a 2-layer pipeline's hidden
+/// image is ReLU-clamped, so the stacked output differs from chaining
+/// the layers linearly.
+#[test]
+fn hidden_relu_changes_the_result() {
+    let arch = ArchConfig::default();
+    let base = run_cfg("gcn", 2, vec![]);
+    let plan = ExecPlan::compile(&base).unwrap();
+    let x = plan.make_input(2);
+    let got = plan.simulate(&arch, true, Some(&x), 0).unwrap().output.unwrap();
+
+    let graph = datasets::by_id("CR").unwrap().instantiate_typed(base.scale, 0, base.seed);
+    let mut cur = x;
+    for l in 0..2usize {
+        let mut run_l = base.clone();
+        run_l.layers = 1;
+        run_l.seed = ModelSpec::layer_seed(base.seed, l);
+        let lp = ExecPlan::from_graph(ModelKind::Gcn, graph.clone(), &run_l).unwrap();
+        cur = lp.simulate(&arch, true, Some(&cur), 0).unwrap().output.unwrap();
+        // deliberately NO activation between layers
+    }
+    assert_ne!(got, cur, "fixture too weak: hidden ReLU never clamped anything");
+}
+
+/// Warm multi-layer requests are allocation-free on the engine path:
+/// the chain buffer and all frames pool across layers and runs.
+#[test]
+fn warm_depth3_engine_runs_are_allocation_free() {
+    let arch = ArchConfig::default();
+    for m in MODELS {
+        let plan = ExecPlan::compile(&run_cfg(m, 3, vec![])).unwrap();
+        let x = plan.make_input(1);
+        let mut scratch = ExecScratch::new();
+        let cold = plan.simulate_with(&arch, true, Some(&x), 0, &mut scratch).unwrap();
+        let after_cold = scratch.alloc_events();
+        assert!(after_cold > 0, "{m}: the cold run must size the pool");
+        for _ in 0..3 {
+            let warm = plan.simulate_with(&arch, true, Some(&x), 0, &mut scratch).unwrap();
+            assert_eq!(warm.output, cold.output, "{m}: warm runs must be bit-identical");
+        }
+        assert_eq!(
+            scratch.alloc_events(),
+            after_cold,
+            "{m}: warm depth-3 runs must not grow the pool"
+        );
+    }
+}
+
+/// Warm multi-layer batches are allocation-free on the batched path too,
+/// per exec-thread worker.
+#[test]
+fn warm_depth3_batches_are_allocation_free() {
+    for m in MODELS {
+        let plan = ExecPlan::compile(&run_cfg(m, 3, vec![])).unwrap();
+        let inputs: Vec<Vec<f32>> = (0..3).map(|s| plan.make_input(s)).collect();
+        let lanes: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let mut scratch = BatchScratch::new();
+        let cold = plan.execute_batch_with(&lanes, 4, &mut scratch).unwrap();
+        let cold_total = scratch.alloc_events();
+        let cold_per_worker = scratch.worker_alloc_events();
+        assert!(cold_total > 0, "{m}: the cold batch must size the pools");
+        for _ in 0..3 {
+            let warm = plan.execute_batch_with(&lanes, 4, &mut scratch).unwrap();
+            assert_eq!(warm, cold, "{m}: warm batches must be bit-identical");
+        }
+        assert_eq!(scratch.alloc_events(), cold_total, "{m}: warm depth-3 batch grew the pool");
+        assert_eq!(
+            scratch.worker_alloc_events(),
+            cold_per_worker,
+            "{m}: warm depth-3 batch grew a worker pool"
+        );
+    }
+}
+
+/// Non-uniform hidden widths flow through every layer of the stack
+/// (engine + batched paths agree; dims land where the spec says).
+#[test]
+fn non_uniform_hidden_widths_execute_end_to_end() {
+    let arch = ArchConfig::default();
+    for m in ["gcn", "gat", "sage", "rgcn"] {
+        let mut run = run_cfg(m, 3, vec![32, 8]);
+        run.feat_in = 16;
+        run.feat_out = 4;
+        let plan = ExecPlan::compile(&run).unwrap();
+        let dims: Vec<(u32, u32)> =
+            plan.stages.iter().map(|s| (s.feat_in, s.feat_out)).collect();
+        assert_eq!(dims, vec![(16, 32), (32, 8), (8, 4)], "{m}");
+        assert_eq!(plan.dims.output_len, plan.dims.num_vertices as usize * 4);
+        let x = plan.make_input(9);
+        let engine = plan.simulate(&arch, true, Some(&x), 0).unwrap().output.unwrap();
+        assert_eq!(engine.len(), plan.dims.output_len, "{m}");
+        assert!(engine.iter().all(|v| v.is_finite()), "{m}");
+        let mut scratch = BatchScratch::new();
+        let batched = plan
+            .execute_batch_with(&[x.as_slice()], 3, &mut scratch)
+            .unwrap()
+            .remove(0);
+        assert_eq!(engine, batched, "{m}: engine and batched disagree at mixed widths");
+    }
+}
+
+/// End-to-end through the coordinator: a 2-layer GCN/GAT/SAGE serves
+/// through both the engine timing path and the batched functional path,
+/// warm requests hit the plan cache, and batched outputs are
+/// bit-identical to sequential ones.
+#[test]
+fn two_layer_models_serve_through_the_coordinator() {
+    use zipper::config::ServingConfig;
+    use zipper::plan::PlanCache;
+    use std::sync::Arc;
+
+    for m in ["gcn", "gat", "sage"] {
+        let cache = Arc::new(PlanCache::new());
+        let reqs: Vec<InferenceRequest> = (0..6)
+            .map(|i| InferenceRequest { id: i, run: run_cfg(m, 2, vec![]), input_seed: i % 3 })
+            .collect();
+        let serve = |serving: ServingConfig| {
+            let mut c = Coordinator::with_serving(
+                ArchConfig::default(),
+                2,
+                serving,
+                Arc::clone(&cache),
+            );
+            for r in &reqs {
+                c.submit(r.clone());
+            }
+            let mut resp = c.drain();
+            resp.sort_by_key(|r| r.id);
+            resp
+        };
+        let seq = serve(ServingConfig { exec_threads: 1, max_batch: 1 });
+        let bat = serve(ServingConfig { exec_threads: 4, max_batch: 3 });
+        for (s, b) in seq.iter().zip(&bat) {
+            assert!(s.error.is_none() && b.error.is_none(), "{m}: {:?} {:?}", s.error, b.error);
+            assert_eq!(s.output_checksum, b.output_checksum, "{m} id={}", s.id);
+            assert_eq!(s.sim_cycles, b.sim_cycles, "{m}");
+            assert_eq!(b.layers.len(), 2, "{m}: depth-2 breakdown expected");
+            assert!(b.plan_cache_hit, "{m}: second pass must be warm");
+        }
+    }
+}

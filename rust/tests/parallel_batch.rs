@@ -41,6 +41,8 @@ fn run_cfg(model: &str) -> RunConfig {
         e2v: true,
         functional: true,
         seed: 3,
+        layers: 1,
+        hidden: Vec::new(),
         serving: Default::default(),
     }
 }
@@ -109,6 +111,44 @@ fn batched_path_is_bit_exact_with_the_engine() {
                         "{m} threads={threads} batch={batch} lane={i}: \
                          engine and batched outputs must be bit-exact"
                     );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_layer_batched_path_bit_exact_with_engine_across_threads_and_batches() {
+    // the stacked-layer pipeline inherits the determinism contract: for
+    // depths 2 and 3, engine and batched outputs stay bit-exact for
+    // every thread count and batch grouping
+    let arch = ArchConfig::default();
+    for m in MODELS {
+        for depth in [2u32, 3] {
+            let mut run = run_cfg(m);
+            run.layers = depth;
+            let plan = ExecPlan::compile(&run).unwrap();
+            let inputs: Vec<Vec<f32>> = (0..8).map(|s| plan.make_input(s)).collect();
+            let engine: Vec<Vec<f32>> = inputs
+                .iter()
+                .map(|x| plan.simulate(&arch, true, Some(x), 0).unwrap().output.unwrap())
+                .collect();
+            for threads in THREADS {
+                for batch in BATCHES {
+                    let mut scratch = BatchScratch::new();
+                    let mut got: Vec<Vec<f32>> = Vec::new();
+                    for chunk in inputs.chunks(batch) {
+                        let lanes: Vec<&[f32]> = chunk.iter().map(|v| v.as_slice()).collect();
+                        got.extend(
+                            plan.execute_batch_with(&lanes, threads, &mut scratch).unwrap(),
+                        );
+                    }
+                    for (i, (g, e)) in got.iter().zip(&engine).enumerate() {
+                        assert_eq!(
+                            g, e,
+                            "{m} depth={depth} threads={threads} batch={batch} lane={i}"
+                        );
+                    }
                 }
             }
         }
@@ -216,7 +256,7 @@ fn aliased_in_place_ops_execute_identically_on_engine_and_batched_path() {
         x: Some(&x),
     };
     let arch = ArchConfig::default();
-    let engine = Simulator::new(&arch, &wl, SimOptions { functional: true, trace_window: 0 })
+    let engine = Simulator::new(&arch, &wl, SimOptions { functional: true, ..Default::default() })
         .run()
         .expect("aliased ops must execute on the engine")
         .output

@@ -16,6 +16,8 @@ fn run_cfg(model: &str, seed: u64) -> RunConfig {
         scale: 16,
         feat_in: 16,
         feat_out: 16,
+        layers: 1,
+        hidden: Vec::new(),
         tiling: TilingConfig {
             dst_part: 64,
             src_part: 64,

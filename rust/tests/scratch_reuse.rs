@@ -27,6 +27,8 @@ fn run_cfg(model: &str) -> RunConfig {
         e2v: true,
         functional: true,
         seed: 3,
+        layers: 1,
+        hidden: Vec::new(),
         serving: Default::default(),
     }
 }
@@ -98,6 +100,58 @@ fn warm_runs_do_not_grow_the_pool() {
             after_cold,
             "{m}: warm runs must not grow the pool"
         );
+    }
+}
+
+#[test]
+fn warm_depth3_runs_do_not_grow_the_pool() {
+    // the multi-layer chain buffer and all per-layer frames must pool:
+    // a warm 3-layer request does zero allocation, same as depth 1
+    let arch = ArchConfig::default();
+    for m in MODELS {
+        let mut run = run_cfg(m);
+        run.layers = 3;
+        let plan = ExecPlan::compile(&run).unwrap();
+        let x = plan.make_input(1);
+        let mut scratch = ExecScratch::new();
+        plan.simulate_with(&arch, true, Some(&x), 0, &mut scratch)
+            .unwrap();
+        let after_cold = scratch.alloc_events();
+        assert!(after_cold > 0, "{m}: the cold run must size the pool");
+        for _ in 0..3 {
+            plan.simulate_with(&arch, true, Some(&x), 0, &mut scratch)
+                .unwrap();
+        }
+        assert_eq!(
+            scratch.alloc_events(),
+            after_cold,
+            "{m}: warm depth-3 runs must not grow the pool"
+        );
+    }
+}
+
+#[test]
+fn one_scratch_serves_mixed_depths_bit_identically() {
+    // depth-pooling hazard: interleave depth-1 and depth-3 plans of the
+    // same model through ONE scratch and compare with fresh scratches
+    let arch = ArchConfig::default();
+    let mut scratch = ExecScratch::new();
+    for m in ["gcn", "gat"] {
+        let shallow = ExecPlan::compile(&run_cfg(m)).unwrap();
+        let mut deep_run = run_cfg(m);
+        deep_run.layers = 3;
+        let deep = ExecPlan::compile(&deep_run).unwrap();
+        for round in 0..2u64 {
+            for plan in [&shallow, &deep] {
+                let x = plan.make_input(round);
+                let fresh = plan.simulate(&arch, true, Some(&x), 0).unwrap();
+                let reused = plan
+                    .simulate_with(&arch, true, Some(&x), 0, &mut scratch)
+                    .unwrap();
+                assert_eq!(fresh.cycles, reused.cycles, "{m} round {round}");
+                assert_eq!(fresh.output.unwrap(), reused.output.unwrap(), "{m} round {round}");
+            }
+        }
     }
 }
 

@@ -36,7 +36,7 @@ fn run_model(m: ModelKind, opt: OptLevel, functional: bool) -> (SimResult, Progr
         feat_out: fo,
         x: functional.then_some(x.as_slice()),
     };
-    let res = Simulator::new(&arch, &wl, SimOptions { functional, trace_window: 0 })
+    let res = Simulator::new(&arch, &wl, SimOptions { functional, ..Default::default() })
         .run()
         .unwrap_or_else(|e| panic!("{}: {e}", m.name()));
     (res, prog)
@@ -134,7 +134,7 @@ fn more_streams_dont_break_correctness() {
         feat_out: 8,
         x: Some(&x),
     };
-    let res = Simulator::new(&arch, &wl, SimOptions { functional: true, trace_window: 0 })
+    let res = Simulator::new(&arch, &wl, SimOptions { functional: true, ..Default::default() })
         .run()
         .unwrap();
     assert!(res.output.unwrap().iter().all(|v| v.is_finite()));
@@ -170,7 +170,7 @@ fn scratch_reuse_matches_fresh_runs() {
             feat_out: 8,
             x: Some(&x),
         };
-        let sim = Simulator::new(&arch, &wl, SimOptions { functional: true, trace_window: 0 });
+        let sim = Simulator::new(&arch, &wl, SimOptions { functional: true, ..Default::default() });
         let fresh = sim.run().unwrap();
         let reused = sim.run_with(&mut scratch).unwrap();
         assert_eq!(fresh.cycles, reused.cycles, "{}", m.name());
@@ -193,7 +193,7 @@ fn trace_produces_samples() {
         feat_out: 32,
         x: None,
     };
-    let res = Simulator::new(&arch, &wl, SimOptions { functional: false, trace_window: 256 })
+    let res = Simulator::new(&arch, &wl, SimOptions { functional: false, trace_window: 256, ..Default::default() })
         .run()
         .unwrap();
     assert!(!res.trace.is_empty());
