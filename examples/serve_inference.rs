@@ -58,6 +58,7 @@ fn request(i: u64) -> InferenceRequest {
         layers: 1,
         hidden: Vec::new(),
         serving: Default::default(),
+        kernels: Default::default(),
     };
     InferenceRequest { id: i, run, input_seed: i }
 }

@@ -50,6 +50,7 @@ fn request(model: &str, dataset: &str, scale: u64, depth: u32, id: u64) -> Infer
         functional: true,
         seed: 7,
         serving: Default::default(),
+        kernels: Default::default(),
     };
     InferenceRequest { id, run, input_seed: id % 4 }
 }

@@ -97,6 +97,104 @@ impl Default for ServingConfig {
     }
 }
 
+/// Storage precision for weights and inter-layer activations
+/// (`[kernels] dtype`). Accumulation is always f32; a non-f32 dtype only
+/// narrows what is *stored* across the load boundary, with
+/// round-to-nearest-even conversion (see `sim::tensor` and DESIGN.md
+/// "Kernel policies" for the error bound).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StorageDtype {
+    F32,
+    F16,
+    Bf16,
+}
+
+impl StorageDtype {
+    pub fn name(self) -> &'static str {
+        match self {
+            StorageDtype::F32 => "f32",
+            StorageDtype::F16 => "f16",
+            StorageDtype::Bf16 => "bf16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<StorageDtype> {
+        match s {
+            "f32" => Some(StorageDtype::F32),
+            "f16" => Some(StorageDtype::F16),
+            "bf16" => Some(StorageDtype::Bf16),
+            _ => None,
+        }
+    }
+
+    /// Bytes per stored element.
+    pub fn bytes(self) -> u64 {
+        match self {
+            StorageDtype::F32 => 4,
+            StorageDtype::F16 | StorageDtype::Bf16 => 2,
+        }
+    }
+
+    /// Unit roundoff u of the storage format: |q(v) − v| ≤ u·|v| for
+    /// finite v in range (f16: 2⁻¹¹, bf16: 2⁻⁸, f32: 0 — identity).
+    pub fn unit_roundoff(self) -> f32 {
+        match self {
+            StorageDtype::F32 => 0.0,
+            StorageDtype::F16 => 1.0 / 2048.0,
+            StorageDtype::Bf16 => 1.0 / 256.0,
+        }
+    }
+}
+
+/// Per-plan kernel policy (`[kernels]` section / `--simd` / `--dtype` /
+/// `--sparse-skip`). Unlike the serving knobs this IS part of the plan
+/// identity (`plan::PlanKey`): variants never alias in the plan cache.
+///
+/// * `simd` — use the lane-array kernels in `sim::tensor`; bit-exact
+///   with the scalar reference on identical inputs (asserted in tests
+///   and `perf_hotpath`).
+/// * `sparse_skip` — skip untouched source-row blocks of partially
+///   occupied tiles in tile-phase GEMM compute and LD.SRC traffic
+///   (final outputs are invariant; see `tiling::Tile::occupancy`).
+/// * `dtype` — storage precision for weights + inter-layer activations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct KernelPolicy {
+    pub simd: bool,
+    pub sparse_skip: bool,
+    pub dtype: StorageDtype,
+}
+
+impl Default for KernelPolicy {
+    fn default() -> Self {
+        KernelPolicy {
+            // The `simd` cargo feature (on by default) selects the
+            // vectorized kernels by default; scalar stays available as
+            // the reference oracle either way.
+            simd: cfg!(feature = "simd"),
+            // Off by default: keeps the paper-faithful regular-mode
+            // cycle numbers unless a run opts in.
+            sparse_skip: false,
+            dtype: StorageDtype::F32,
+        }
+    }
+}
+
+impl KernelPolicy {
+    /// Reject dtypes whose config surface is not compiled in. The
+    /// conversion routines are always built (dependency-free); the
+    /// `half` feature only gates *selecting* them, so CI's feature
+    /// matrix keeps every combination building.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.dtype != StorageDtype::F32 && !cfg!(feature = "half") {
+            return Err(ConfigError(format!(
+                "dtype {} requires a build with --features half",
+                self.dtype.name()
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// Run parameters: model, dataset, tiling, optimization toggles.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
@@ -121,6 +219,8 @@ pub struct RunConfig {
     pub seed: u64,
     /// Coordinator serving knobs (never part of the plan identity).
     pub serving: ServingConfig,
+    /// Kernel policy (part of the plan identity — see `plan::PlanKey`).
+    pub kernels: KernelPolicy,
 }
 
 impl Default for RunConfig {
@@ -138,6 +238,7 @@ impl Default for RunConfig {
             functional: false,
             seed: 42,
             serving: ServingConfig::default(),
+            kernels: KernelPolicy::default(),
         }
     }
 }
@@ -238,6 +339,14 @@ pub fn apply(
             ("run", "seed") => run.seed = num()? as u64,
             ("serving", "exec_threads") => run.serving.exec_threads = num()? as u32,
             ("serving", "max_batch") => run.serving.max_batch = num()? as u32,
+            ("kernels", "simd") => run.kernels.simd = boolean()?,
+            ("kernels", "sparse_skip") => run.kernels.sparse_skip = boolean()?,
+            ("kernels", "dtype") => {
+                run.kernels.dtype = StorageDtype::parse(&value).ok_or_else(|| {
+                    ConfigError(format!("unknown dtype {value} (f32 | f16 | bf16)"))
+                })?;
+                run.kernels.validate()?;
+            }
             ("tiling", "dst_part") => run.tiling.dst_part = num()? as u32,
             ("tiling", "src_part") => run.tiling.src_part = num()? as u32,
             ("tiling", "threads") => run.tiling.threads = num()? as u32,
@@ -285,6 +394,7 @@ pub fn show(arch: &ArchConfig, run: &RunConfig) -> String {
          layers = {}\nhidden = {}\n\
          e2v = {}\nfunctional = {}\nseed = {}\n\n\
          [serving]\nexec_threads = {}\nmax_batch = {}\n\n\
+         [kernels]\nsimd = {}\nsparse_skip = {}\ndtype = {}\n\n\
          [tiling]\ndst_part = {}\nsrc_part = {}\nmode = {:?}\nreorder = {:?}\nthreads = {}\n",
         arch.freq_hz,
         arch.mu_count,
@@ -313,6 +423,9 @@ pub fn show(arch: &ArchConfig, run: &RunConfig) -> String {
         run.seed,
         run.serving.exec_threads,
         run.serving.max_batch,
+        run.kernels.simd,
+        run.kernels.sparse_skip,
+        run.kernels.dtype.name(),
         run.tiling.dst_part,
         run.tiling.src_part,
         run.tiling.mode,
@@ -354,6 +467,9 @@ mod tests {
             [serving]
             exec_threads = 4
             max_batch = 8
+            [kernels]
+            simd = false
+            sparse_skip = true
             [tiling]
             mode = regular
             reorder = none
@@ -369,8 +485,35 @@ mod tests {
         assert_eq!(run.layers, 3);
         assert_eq!(run.hidden, vec![64, 32]);
         assert_eq!(run.serving, ServingConfig { exec_threads: 4, max_batch: 8 });
+        assert!(!run.kernels.simd);
+        assert!(run.kernels.sparse_skip);
+        assert_eq!(run.kernels.dtype, StorageDtype::F32);
         assert_eq!(run.tiling.mode, crate::tiling::TilingMode::Regular);
         assert_eq!(run.tiling.threads, 4);
+    }
+
+    #[test]
+    fn kernels_dtype_parses_or_reports_missing_feature() {
+        let mut arch = ArchConfig::default();
+        let mut run = RunConfig::default();
+        let res = apply("[kernels]\ndtype = f16\n", &mut arch, &mut run);
+        if cfg!(feature = "half") {
+            res.unwrap();
+            assert_eq!(run.kernels.dtype, StorageDtype::F16);
+        } else {
+            assert!(res.unwrap_err().to_string().contains("--features half"));
+        }
+        assert!(apply("[kernels]\ndtype = f8\n", &mut arch, &mut run).is_err());
+    }
+
+    #[test]
+    fn dtype_facts() {
+        assert_eq!(StorageDtype::parse("bf16"), Some(StorageDtype::Bf16));
+        assert_eq!(StorageDtype::F16.bytes(), 2);
+        assert_eq!(StorageDtype::F32.bytes(), 4);
+        assert_eq!(StorageDtype::F16.unit_roundoff(), 2f32.powi(-11));
+        assert_eq!(StorageDtype::Bf16.unit_roundoff(), 2f32.powi(-8));
+        assert_eq!(StorageDtype::F32.unit_roundoff(), 0.0);
     }
 
     #[test]
@@ -388,6 +531,7 @@ mod tests {
         assert!(s.contains("mu_count = 1 (32x128)"));
         assert!(s.contains("21.00 MB"));
         assert!(s.contains("[serving]") && s.contains("max_batch = 1"));
+        assert!(s.contains("[kernels]") && s.contains("dtype = f32"));
         assert!(s.contains("layers = 1") && s.contains("hidden = (default)"));
         let run = RunConfig { layers: 3, hidden: vec![64, 32], ..RunConfig::default() };
         let s = show(&ArchConfig::default(), &run);

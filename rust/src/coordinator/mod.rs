@@ -712,6 +712,7 @@ mod tests {
             functional,
             seed: 3,
             serving: Default::default(),
+            kernels: Default::default(),
         }
     }
 

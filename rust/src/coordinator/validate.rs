@@ -32,7 +32,7 @@
 //! (DESIGN.md §6); with the test-scale weights the difference is ≪ 1e-3.
 
 use super::Session;
-use crate::config::{ArchConfig, RunConfig};
+use crate::config::{ArchConfig, KernelPolicy, RunConfig};
 use crate::graph::generators;
 use crate::models::{ModelKind, ModelSpec, WeightStore};
 use crate::runtime::{pack, ArgValue, Runtime, TileShape};
@@ -83,6 +83,26 @@ pub fn validate_model_depth(
     seed: u64,
     depth: u32,
 ) -> Result<ValidationReport, String> {
+    validate_model_depth_with(rt, model, shape, seed, depth, KernelPolicy::default())
+}
+
+/// [`validate_model_depth`] under an explicit kernel policy. The f32
+/// policies (any `simd`/`sparse_skip` combination) are bit-exact with
+/// each other, so they share the baseline tolerance; reduced-precision
+/// storage widens it by the documented bound: per layer, quantizing
+/// weights and the incoming activation perturbs each GEMM output by at
+/// most `(2u + u²)·Σ_k|x_k||w_kj|` (u = the dtype's unit roundoff,
+/// 2⁻¹¹ for f16 / 2⁻⁸ for bf16 — derivation in DESIGN.md "Kernel
+/// policies"), which the `64·u` per-layer term over-approximates at the
+/// validation scale (|Σ|x||w|| ≲ 64 with the 0.1-scaled test weights).
+pub fn validate_model_depth_with(
+    rt: &mut Runtime,
+    model: ModelKind,
+    shape: &TileShape,
+    seed: u64,
+    depth: u32,
+    kernels: KernelPolicy,
+) -> Result<ValidationReport, String> {
     let depth = depth.max(1);
     if depth > 1 && shape.feat_in != shape.feat_out {
         return Err(format!(
@@ -116,6 +136,7 @@ pub fn validate_model_depth(
         functional: true,
         seed,
         serving: Default::default(),
+        kernels,
     };
     let session = Session::from_graph(model, graph, &run).map_err(|e| format!("session: {e}"))?;
     let x = session.make_input(seed ^ 0x5eed);
@@ -148,8 +169,10 @@ pub fn validate_model_depth(
         sum_err += e as f64;
     }
     // the existing single-layer tolerance, widened per extra layer
-    // (hidden-layer error propagates through the next layer's GEMMs)
-    let tol = 2e-3 * depth as f32;
+    // (hidden-layer error propagates through the next layer's GEMMs) and
+    // per the storage dtype's unit roundoff (0 for f32 — see the
+    // `validate_model_depth_with` docs for the bound)
+    let tol = (2e-3 + 64.0 * kernels.dtype.unit_roundoff()) * depth as f32;
     Ok(ValidationReport {
         model: model.name().into(),
         layers: depth,

@@ -17,7 +17,7 @@ use std::path::Path;
 use std::process::ExitCode;
 
 use zipper::compiler::{compile, OptLevel};
-use zipper::config::{self, ArchConfig, RunConfig};
+use zipper::config::{self, ArchConfig, RunConfig, StorageDtype};
 use zipper::coordinator::{validate, Coordinator, InferenceRequest, Session};
 use zipper::energy::EnergyModel;
 use zipper::graph::datasets;
@@ -119,12 +119,25 @@ fn build_configs(args: &Args) -> Result<(ArchConfig, RunConfig), String> {
     if let Some(v) = args.get("vu") {
         arch.vu_count = v.parse().map_err(|_| "bad --vu")?;
     }
+    if let Some(v) = args.get("dtype") {
+        run.kernels.dtype = StorageDtype::parse(v).ok_or("bad --dtype (f32 | f16 | bf16)")?;
+    }
+    if args.flag("simd") {
+        run.kernels.simd = true;
+    }
+    if args.flag("no-simd") {
+        run.kernels.simd = false;
+    }
+    if args.flag("sparse-skip") {
+        run.kernels.sparse_skip = true;
+    }
     if args.flag("no-e2v") {
         run.e2v = false;
     }
     if args.flag("functional") {
         run.functional = true;
     }
+    run.kernels.validate().map_err(|e| e.to_string())?;
     Ok((arch, run))
 }
 
@@ -384,6 +397,15 @@ fn real_main(argv: &[String]) -> Result<(), String> {
                  layers-1 entries; default: feat_out) [run]\n  \
                  --no-e2v             disable the E2V compiler optimization\n  \
                  --functional         also execute on f32 embeddings (checksums)\n  \
+                 --simd / --no-simd   force the SIMD kernel variants on or off\n                       \
+                 (default: on when built with the `simd`\n                       \
+                 feature; bit-exact either way)     [kernels]\n  \
+                 --sparse-skip        skip empty 8-row source blocks inside\n                       \
+                 partially occupied tiles (timing and\n                       \
+                 DRAM credit; outputs unchanged)    [kernels]\n  \
+                 --dtype D            f32 | f16 | bf16 storage for weights and\n                       \
+                 hidden activations (16-bit needs the\n                       \
+                 `half` feature; f32 accumulate)    [kernels]\n  \
                  --mu N / --vu N      matrix / vector unit counts          [arch]\n  \
                  --s-streams N / --e-streams N   stream counts             [arch]\n\n\
                  serving flags (serve; all host-side, never change outputs):\n  \

@@ -382,6 +382,17 @@ impl WeightStore {
         }
         WeightStore { tensors }
     }
+
+    /// Round-trip every weight through the storage dtype in place
+    /// (`sim::tensor::quantize_slice`): the resident f32 image becomes
+    /// exactly what 16-bit storage plus convert-at-load would yield.
+    /// No-op for [`crate::config::StorageDtype::F32`]. Called once at
+    /// plan build (`plan::ExecPlan::from_graph`).
+    pub fn quantize(&mut self, dtype: crate::config::StorageDtype) {
+        for t in &mut self.tensors {
+            crate::sim::tensor::quantize_slice(dtype, &mut t.data);
+        }
+    }
 }
 
 fn dim(d: FDim, feat_in: u32, feat_out: u32) -> u32 {
@@ -521,6 +532,26 @@ mod tests {
         // GGNN feat_out is coerced (single-layer compatibility), not an error
         let s = ModelSpec::new(ModelKind::Ggnn, 16, &[], 32, 2).unwrap();
         assert!(s.layers.iter().all(|l| (l.feat_in, l.feat_out) == (16, 16)));
+    }
+
+    #[test]
+    fn quantize_roundtrips_weights_in_place() {
+        use crate::config::StorageDtype;
+        let mut ws = WeightStore::synthesize(&gcn(), 16, 16, 7);
+        let full = ws.tensors[0].data.clone();
+        ws.quantize(StorageDtype::F32);
+        assert_eq!(ws.tensors[0].data, full, "f32 quantize must be a no-op");
+        ws.quantize(StorageDtype::Bf16);
+        let q = &ws.tensors[0].data;
+        assert_ne!(q, &full, "bf16 quantize must actually reduce precision");
+        for (&qv, &fv) in q.iter().zip(&full) {
+            // bf16 keeps 8 mantissa bits: relative error ≤ 2^-8
+            assert!((qv - fv).abs() <= fv.abs() / 256.0 + 1e-30, "{qv} vs {fv}");
+        }
+        // idempotent: already-quantized values are fixed points
+        let once = ws.tensors[0].data.clone();
+        ws.quantize(StorageDtype::Bf16);
+        assert_eq!(ws.tensors[0].data, once);
     }
 
     #[test]

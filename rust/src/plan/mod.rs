@@ -17,7 +17,7 @@
 //! benches can prove warm requests skip recompile/retile entirely.
 
 use crate::compiler::{compile, OptLevel, Program};
-use crate::config::{ArchConfig, RunConfig};
+use crate::config::{ArchConfig, KernelPolicy, RunConfig};
 use crate::graph::{datasets, Graph};
 use crate::models::{ModelKind, ModelSpec, WeightStore, NUM_RELATIONS};
 use crate::sim::parallel::{BatchScratch, StageWl};
@@ -51,6 +51,11 @@ pub struct PlanKey {
     pub tiling: TilingConfig,
     pub e2v: bool,
     pub seed: u64,
+    /// Kernel-variant selection (SIMD / sparsity skipping / storage
+    /// dtype). Part of the key because the compiled artifact differs:
+    /// weights are quantized at plan build and both executors read the
+    /// policy from the plan — variants must never alias in the cache.
+    pub kernels: KernelPolicy,
 }
 
 impl PlanKey {
@@ -68,6 +73,7 @@ impl PlanKey {
             tiling: run.tiling.cache_key(),
             e2v: run.e2v,
             seed: run.seed,
+            kernels: run.kernels,
         }
     }
 }
@@ -111,7 +117,7 @@ impl fmt::Display for PlanKey {
             .join(",");
         write!(
             f,
-            "model={};dataset={};scale={};feat={}x{};layers={};dst_part={};src_part={};mode={};reorder={};e2v={};seed={}",
+            "model={};dataset={};scale={};feat={}x{};layers={};dst_part={};src_part={};mode={};reorder={};e2v={};seed={};simd={};skip={};dtype={}",
             self.model,
             self.dataset,
             self.scale,
@@ -124,6 +130,9 @@ impl fmt::Display for PlanKey {
             reorder,
             self.e2v,
             self.seed,
+            self.kernels.simd,
+            self.kernels.sparse_skip,
+            self.kernels.dtype.name(),
         )
     }
 }
@@ -192,6 +201,7 @@ impl ExecPlan {
 
     /// Compile a plan around an explicit graph (tests, examples).
     pub fn from_graph(model: ModelKind, graph: Graph, run: &RunConfig) -> Result<ExecPlan, String> {
+        run.kernels.validate().map_err(|e| e.to_string())?;
         let spec = ModelSpec::new(model, run.feat_in, &run.hidden, run.feat_out, run.layers)?;
         // the ONE graph-side compile step, shared by every stage
         let tiling = tile(&graph, run.tiling);
@@ -200,12 +210,18 @@ impl ExecPlan {
         for (l, layer) in spec.layers.iter().enumerate() {
             let dag = spec.build_layer(l);
             let program = compile(&dag, opt).map_err(|e| format!("layer {l}: {e}"))?;
-            let weights = WeightStore::synthesize(
+            let mut weights = WeightStore::synthesize(
                 &dag,
                 layer.feat_in,
                 layer.feat_out,
                 ModelSpec::layer_seed(run.seed, l),
             );
+            // Reduced-precision storage: weights are quantized ONCE at
+            // plan build (round-trip through the storage dtype), so the
+            // resident f32 image is exactly what 16-bit storage plus
+            // convert-at-load would produce — and every executor reads
+            // the same values. F32 policy is a no-op.
+            weights.quantize(run.kernels.dtype);
             stages.push(LayerStage {
                 program,
                 weights,
@@ -260,6 +276,7 @@ impl ExecPlan {
             feat_in: stage.feat_in,
             feat_out: stage.feat_out,
             x,
+            kernels: self.key.kernels,
         }
     }
 
@@ -342,6 +359,7 @@ impl ExecPlan {
                 feat_in: stage.feat_in,
                 feat_out: stage.feat_out,
                 x: input,
+                kernels: self.key.kernels,
             };
             let opts = SimOptions {
                 functional,
@@ -352,6 +370,12 @@ impl ExecPlan {
             let mut res = Simulator::new(arch, &wl, opts).run_with(scratch)?;
             if functional && !last {
                 scratch.stash_output(&self.tiling, stage.feat_out, chain);
+                // hidden-layer activations round-trip through the
+                // storage dtype at exactly this chain boundary — the
+                // same point `run_stage`'s sink quantizes, so the
+                // engine and `run_batch` stay bit-identical under
+                // f16/bf16 too (no-op for f32)
+                crate::sim::tensor::quantize_slice(self.key.kernels.dtype, chain);
             }
             acc.layers.push(layer_metrics(stage, &res));
             acc.cycles += res.cycles;
@@ -382,12 +406,16 @@ impl ExecPlan {
     fn aggregate_peak(&self, layers: &[LayerMetrics]) -> u64 {
         let v = self.dims.num_vertices as u64;
         let depth = layers.len();
+        // inter-layer activation images are stored at the policy dtype
+        // (2 bytes for f16/bf16), which is half the reduced-precision
+        // path's footprint win; tile-resident peaks stay f32
+        let act_bytes = self.key.kernels.dtype.bytes() as u64;
         layers
             .iter()
             .enumerate()
             .map(|(l, lm)| {
-                let inp = if l > 0 { v * lm.feat_in as u64 * 4 } else { 0 };
-                let out = if l + 1 < depth { v * lm.feat_out as u64 * 4 } else { 0 };
+                let inp = if l > 0 { v * lm.feat_in as u64 * act_bytes } else { 0 };
+                let out = if l + 1 < depth { v * lm.feat_out as u64 * act_bytes } else { 0 };
                 lm.peak_uem_bytes + inp + out
             })
             .max()
@@ -422,6 +450,7 @@ impl ExecPlan {
                 weights: &s.weights,
                 feat_in: s.feat_in,
                 feat_out: s.feat_out,
+                kernels: self.key.kernels,
             })
             .collect();
         crate::sim::parallel::run_pipeline(&self.tiling, &stages, inputs, exec_threads, scratch)
@@ -577,6 +606,7 @@ mod tests {
             functional: false,
             seed: 3,
             serving: Default::default(),
+            kernels: Default::default(),
         }
     }
 
@@ -708,6 +738,49 @@ mod tests {
         // aggregate peak covers at least one inter-layer activation image
         let act = plan.dims.num_vertices as u64 * 16 * 4;
         assert!(res.peak_uem_bytes >= act, "{} < {act}", res.peak_uem_bytes);
+    }
+
+    #[test]
+    fn cache_never_aliases_kernel_policies() {
+        let cache = PlanCache::new();
+        cache.get_or_compile(&run_cfg("gcn")).unwrap();
+        let mut simd_off = run_cfg("gcn");
+        simd_off.kernels.simd = !simd_off.kernels.simd;
+        let (_, hit) = cache.get_or_compile(&simd_off).unwrap();
+        assert!(!hit, "simd policy must not alias in the plan cache");
+        let mut skip = run_cfg("gcn");
+        skip.kernels.sparse_skip = true;
+        let (_, hit) = cache.get_or_compile(&skip).unwrap();
+        assert!(!hit, "sparse_skip policy must not alias in the plan cache");
+        assert_eq!(cache.stats().entries, 3);
+        let key = PlanKey::of(&skip);
+        assert!(key.to_string().contains("skip=true"), "{key}");
+    }
+
+    #[cfg(feature = "half")]
+    #[test]
+    fn reduced_precision_plan_quantizes_weights_and_keys_separately() {
+        use crate::config::StorageDtype;
+        use crate::sim::tensor::{f16_bits_to_f32, f32_to_f16_bits};
+        let mut run = run_cfg("gcn");
+        run.kernels.dtype = StorageDtype::F16;
+        assert_ne!(PlanKey::of(&run), PlanKey::of(&run_cfg("gcn")));
+        let plan = ExecPlan::compile(&run).unwrap();
+        let f32_plan = ExecPlan::compile(&run_cfg("gcn")).unwrap();
+        for (q, full) in plan.stages[0]
+            .weights
+            .tensors
+            .iter()
+            .zip(&f32_plan.stages[0].weights.tensors)
+        {
+            for (&qv, &fv) in q.data.iter().zip(&full.data) {
+                assert_eq!(
+                    qv.to_bits(),
+                    f16_bits_to_f32(f32_to_f16_bits(fv)).to_bits(),
+                    "weight not an f16 round-trip of the f32 weight"
+                );
+            }
+        }
     }
 
     #[test]

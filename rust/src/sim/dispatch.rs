@@ -41,6 +41,7 @@
 
 use super::exec::{part_slot, Frame};
 use super::tensor::{self, Tensor};
+use crate::config::KernelPolicy;
 use crate::isa::{BufId, Dim, DimCtx, Instr, LdTarget};
 use crate::models::WeightStore;
 use crate::tiling::{Partition, Tile};
@@ -102,8 +103,18 @@ fn copy_vertex_rows(x_tiled: &[f32], vs: &[u32], f: usize, t: &mut Tensor) {
 /// re-attach. `part` / `t_meta` are the bound partition / tile (callers
 /// resolve them; instructions that need a missing binding error out).
 ///
+/// `policy` selects the kernel variants (DESIGN.md "Kernel policies"):
+/// `simd` flips every compute arm to the lane-array kernels (bit-exact
+/// with scalar by construction), and `sparse_skip` routes TileSrc-row
+/// GEMMs on partially occupied tiles through the masked kernel, which
+/// computes only edge-touched source rows. Untouched rows only ever
+/// leave the tile frame through edge-indexed GTHR/SCTR, so skipping
+/// them is invisible in the final output (soundness argument in
+/// DESIGN.md).
+///
 /// This is THE per-instruction semantics site. Do not re-implement any
 /// arm elsewhere — extend the [`BufAccess`] adapters instead.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn exec_instr<A: BufAccess>(
     a: &mut A,
     weights: &WeightStore,
@@ -111,6 +122,7 @@ pub(crate) fn exec_instr<A: BufAccess>(
     part: Option<&Partition>,
     t_meta: Option<&Tile>,
     dims: &DimCtx,
+    policy: KernelPolicy,
     instr: &Instr,
 ) -> Result<(), String> {
     let rd = |d: Dim| d.resolve(dims);
@@ -140,11 +152,11 @@ pub(crate) fn exec_instr<A: BufAccess>(
             let (mut out, was_set) = a.take_dst(*dst)?;
             if src == dst {
                 require_set(was_set, *src, instr)?;
-                tensor::apply_unary_inplace(*op, &mut out);
+                tensor::apply_unary_inplace_with(policy.simd, *op, &mut out);
                 a.put_back(*dst, out, false)
             } else {
                 let x = a.read(*src)?;
-                let grew = tensor::apply_unary(*op, x, &mut out);
+                let grew = tensor::apply_unary_with(policy.simd, *op, x, &mut out);
                 a.put_back(*dst, out, grew)
             }
         }
@@ -154,27 +166,27 @@ pub(crate) fn exec_instr<A: BufAccess>(
                 (false, false) => {
                     let at = a.read(*lhs)?;
                     let bt = a.read(*rhs)?;
-                    let grew =
-                        tensor::apply_binary(*op, at, bt, &mut out).map_err(|e| ctx(instr, e))?;
+                    let grew = tensor::apply_binary_with(policy.simd, *op, at, bt, &mut out)
+                        .map_err(|e| ctx(instr, e))?;
                     a.put_back(*dst, out, grew)
                 }
                 (true, false) => {
                     require_set(was_set, *lhs, instr)?;
                     let bt = a.read(*rhs)?;
-                    tensor::apply_binary_lhs_inplace(*op, &mut out, bt)
+                    tensor::apply_binary_lhs_inplace_with(policy.simd, *op, &mut out, bt)
                         .map_err(|e| ctx(instr, e))?;
                     a.put_back(*dst, out, false)
                 }
                 (false, true) => {
                     require_set(was_set, *rhs, instr)?;
                     let at = a.read(*lhs)?;
-                    tensor::apply_binary_rhs_inplace(*op, at, &mut out)
+                    tensor::apply_binary_rhs_inplace_with(policy.simd, *op, at, &mut out)
                         .map_err(|e| ctx(instr, e))?;
                     a.put_back(*dst, out, false)
                 }
                 (true, true) => {
                     require_set(was_set, *lhs, instr)?;
-                    tensor::apply_binary_self_inplace(*op, &mut out);
+                    tensor::apply_binary_self_inplace_with(policy.simd, *op, &mut out);
                     a.put_back(*dst, out, false)
                 }
             }
@@ -187,13 +199,14 @@ pub(crate) fn exec_instr<A: BufAccess>(
             if lhs == dst {
                 require_set(was_set, *lhs, instr)?;
                 let vt = a.read(*vec)?;
-                tensor::apply_bcast_inplace(*op, &mut out, vt).map_err(|e| ctx(instr, e))?;
+                tensor::apply_bcast_inplace_with(policy.simd, *op, &mut out, vt)
+                    .map_err(|e| ctx(instr, e))?;
                 a.put_back(*dst, out, false)
             } else {
                 let at = a.read(*lhs)?;
                 let vt = a.read(*vec)?;
-                let grew =
-                    tensor::apply_bcast(*op, at, vt, &mut out).map_err(|e| ctx(instr, e))?;
+                let grew = tensor::apply_bcast_with(policy.simd, *op, at, vt, &mut out)
+                    .map_err(|e| ctx(instr, e))?;
                 a.put_back(*dst, out, grew)
             }
         }
@@ -203,11 +216,12 @@ pub(crate) fn exec_instr<A: BufAccess>(
             }
             let (mut out, _) = a.take_dst(*dst)?;
             let x = a.read(*src)?;
-            let grew = tensor::gemv(x, &weights.tensors[w.0 as usize].data, &mut out)
-                .map_err(|e| ctx(instr, e))?;
+            let grew =
+                tensor::gemv_with(x, &weights.tensors[w.0 as usize].data, &mut out, policy.simd)
+                    .map_err(|e| ctx(instr, e))?;
             a.put_back(*dst, out, grew)
         }
-        Instr::Gemm { src, weight: w, dst, k, n, accumulate, .. } => {
+        Instr::Gemm { src, weight: w, dst, m, k, n, accumulate } => {
             if src == dst {
                 return Err(alias_err(instr, *src));
             }
@@ -216,14 +230,32 @@ pub(crate) fn exec_instr<A: BufAccess>(
                 return Err(format!("{instr}: accumulate into unset buffer b{}", dst.0));
             }
             let x = a.read(*src)?;
-            let grew = tensor::matmul(
-                x,
-                &weights.tensors[w.0 as usize].data,
-                rd(*k),
-                rd(*n),
-                &mut out,
-                *accumulate,
-            )
+            let wd = &weights.tensors[w.0 as usize].data;
+            // Sparsity skipping: a TileSrc-row GEMM on a partially
+            // occupied tile only computes edge-touched source rows
+            // (untouched rows are zeroed on overwrite, left alone on
+            // accumulate — either way they are never consumed, because
+            // tile values reach the partition only via edge-indexed
+            // GTHR). Sparse-mode tiles are fully occupied by
+            // construction, so this triggers only in Regular mode.
+            let masked = policy.sparse_skip
+                && matches!(m, Dim::TileSrc)
+                && t_meta.is_some_and(|t| !t.fully_occupied());
+            let grew = if masked {
+                let tm = t_meta.expect("masked implies tile bound");
+                tensor::matmul_masked(
+                    x,
+                    wd,
+                    rd(*k),
+                    rd(*n),
+                    &mut out,
+                    *accumulate,
+                    policy.simd,
+                    &tm.src_occ,
+                )
+            } else {
+                tensor::matmul_with(x, wd, rd(*k), rd(*n), &mut out, *accumulate, policy.simd)
+            }
             .map_err(|e| ctx(instr, e))?;
             a.put_back(*dst, out, grew)
         }
@@ -234,13 +266,14 @@ pub(crate) fn exec_instr<A: BufAccess>(
             let tm = t_meta.ok_or("BMM w/o tile")?;
             let (mut out, _) = a.take_dst(*dst)?;
             let x = a.read(*src)?;
-            let grew = tensor::bmm_by_type(
+            let grew = tensor::bmm_by_type_with(
                 x,
                 &weights.tensors[w.0 as usize].data,
                 rd(*k),
                 rd(*n),
                 tm.etypes.as_deref(),
                 &mut out,
+                policy.simd,
             )
             .map_err(|e| ctx(instr, e))?;
             a.put_back(*dst, out, grew)
@@ -303,6 +336,11 @@ mod tests {
     const FO: u32 = 4;
     const P0: BufId = BufId(PART_FRAME_BASE);
     const P1: BufId = BufId(PART_FRAME_BASE + 1);
+    // Scalar f32 policy: the adapter-agreement tests pin functional
+    // semantics, so they run the reference kernels regardless of which
+    // cargo features (and hence which KernelPolicy defaults) are on.
+    const POL: KernelPolicy =
+        KernelPolicy { simd: false, sparse_skip: false, dtype: crate::config::StorageDtype::F32 };
 
     fn fixture() -> (WeightStore, Partition, Tile, DimCtx, Vec<f32>) {
         let mut rng = Rng::new(42);
@@ -314,13 +352,13 @@ mod tests {
                 WeightTensor { name: "rel", rows: FI, cols: FO, count: 2, data: mk(32) },
             ],
         };
-        let tile = Tile {
-            partition_id: 0,
-            tile_id: 0,
-            src_vertices: vec![0, 1, 2],
-            edges: vec![(0, 0), (1, 1), (2, 0), (1, 0)],
-            etypes: Some(vec![0, 1, 0, 1]),
-        };
+        let tile = Tile::new(
+            0,
+            0,
+            vec![0, 1, 2],
+            vec![(0, 0), (1, 1), (2, 0), (1, 0)],
+            Some(vec![0, 1, 0, 1]),
+        );
         let part = Partition { partition_id: 0, dst_start: 0, dst_end: 2, tiles: Vec::new() };
         let dims = DimCtx { tile_src: 3, tile_edges: 4, part_dst: 2, feat_in: FI, feat_out: FO };
         let x_tiled = mk(4 * FI as usize);
@@ -415,7 +453,7 @@ mod tests {
                 allocs: &mut eng_allocs,
             };
             for instr in &tile_phase_program() {
-                exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, instr)
+                exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, POL, instr)
                     .unwrap_or_else(|e| panic!("engine adapter: {e}"));
             }
         }
@@ -434,7 +472,7 @@ mod tests {
                 allocs: 0,
             };
             for instr in &tile_phase_program() {
-                exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, instr)
+                exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, POL, instr)
                     .unwrap_or_else(|e| panic!("tile adapter: {e}"));
             }
             tile_allocs = a.allocs;
@@ -491,7 +529,7 @@ mod tests {
                 allocs: &mut eng_allocs,
             };
             for instr in &prog {
-                exec_instr(&mut a, &weights, FI, Some(&part), None, &dims, instr)
+                exec_instr(&mut a, &weights, FI, Some(&part), None, &dims, POL, instr)
                     .unwrap_or_else(|e| panic!("engine adapter: {e}"));
             }
         }
@@ -505,7 +543,7 @@ mod tests {
                 allocs: &mut d_allocs,
             };
             for instr in &prog {
-                exec_instr(&mut a, &weights, FI, Some(&part), None, &dims, instr)
+                exec_instr(&mut a, &weights, FI, Some(&part), None, &dims, POL, instr)
                     .unwrap_or_else(|e| panic!("dFunction adapter: {e}"));
             }
         }
@@ -532,7 +570,7 @@ mod tests {
         frame.slot_mut(0).reset_filled(3, FI, 1.0);
         let lane_part = Frame::default();
         let mut a = TileAccess { lane_part: &lane_part, x_tiled: &x_tiled, frame: &mut frame, allocs: 0 };
-        let err = exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, &to_part)
+        let err = exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, POL, &to_part)
             .unwrap_err();
         assert!(err.contains("tile phase cannot write partition buffer"), "{err}");
 
@@ -544,7 +582,7 @@ mod tests {
         let mut allocs = 0u64;
         let mut a = PartAccess { part_frame: &mut part_frame, x_tiled: &x_tiled, allocs: &mut allocs };
         let err =
-            exec_instr(&mut a, &weights, FI, Some(&part), None, &dims, &to_tile).unwrap_err();
+            exec_instr(&mut a, &weights, FI, Some(&part), None, &dims, POL, &to_tile).unwrap_err();
         assert!(err.contains("dFunction write to tile buffer"), "{err}");
     }
 
@@ -562,15 +600,66 @@ mod tests {
             src: BufId(0), weight: WeightId(0), dst: BufId(0),
             m: Dim::TileSrc, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
         };
-        let err =
-            exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, &gemm).unwrap_err();
+        let err = exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, POL, &gemm)
+            .unwrap_err();
         assert!(err.contains("cannot run in place"), "{err}");
 
         let relu_unset = Instr::ElwU {
             op: ElwUnary::Relu, src: BufId(2), dst: BufId(2), rows: Dim::TileSrc, cols: Dim::FeatIn,
         };
-        let err = exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, &relu_unset)
-            .unwrap_err();
+        let err =
+            exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, POL, &relu_unset)
+                .unwrap_err();
         assert!(err.contains("unset"), "{err}");
+    }
+
+    /// `sparse_skip` routes TileSrc-row GEMMs on a partially occupied
+    /// tile through the masked kernel: edge-touched rows are bit-exact
+    /// with the dense kernel, untouched rows come out zeroed (they are
+    /// never consumed downstream — GTHR/SCTR egress is edge-indexed).
+    #[test]
+    fn sparse_skip_gemm_matches_dense_on_touched_rows() {
+        let (weights, part, _tile, _dims, _x) = fixture();
+        // 5 source rows, edges touching only rows 0 and 3
+        let tile = Tile::new(0, 0, vec![0, 1, 2, 3, 4], vec![(0, 1), (3, 0)], None);
+        assert!(!tile.fully_occupied());
+        let dims = DimCtx { tile_src: 5, tile_edges: 2, part_dst: 2, feat_in: FI, feat_out: FO };
+        let mut rng = Rng::new(7);
+        let x_tiled: Vec<f32> = (0..5 * FI as usize).map(|_| rng.next_f32_sym()).collect();
+        let prog = vec![
+            Instr::Ld {
+                target: LdTarget::Src, dst: BufId(0), rows: Dim::TileSrc, cols: Dim::FeatIn,
+            },
+            Instr::Gemm {
+                src: BufId(0), weight: WeightId(0), dst: BufId(1),
+                m: Dim::TileSrc, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+            },
+        ];
+        let run = |policy: KernelPolicy| -> Vec<f32> {
+            let lane_part = Frame::default();
+            let mut frame = Frame::default();
+            let mut a = TileAccess {
+                lane_part: &lane_part,
+                x_tiled: &x_tiled,
+                frame: &mut frame,
+                allocs: 0,
+            };
+            for instr in &prog {
+                exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, policy, instr)
+                    .unwrap_or_else(|e| panic!("{e}"));
+            }
+            frame.get(1).expect("gemm output").data.clone()
+        };
+        let dense = run(POL);
+        let skipped = run(KernelPolicy { sparse_skip: true, ..POL });
+        let f = FO as usize;
+        for r in 0..5usize {
+            let (d, s) = (&dense[r * f..(r + 1) * f], &skipped[r * f..(r + 1) * f]);
+            if r == 0 || r == 3 {
+                assert_eq!(d, s, "touched row {r} diverged");
+            } else {
+                assert!(s.iter().all(|&v| v == 0.0), "untouched row {r} not zeroed: {s:?}");
+            }
+        }
     }
 }

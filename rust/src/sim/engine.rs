@@ -11,7 +11,7 @@ use super::timing;
 use super::types::{SimOptions, SimResult, Workload};
 use super::units::Units;
 use crate::config::ArchConfig;
-use crate::isa::{DimCtx, Instr, LdTarget, StreamClass, UnitClass};
+use crate::isa::{Dim, DimCtx, Instr, LdTarget, StreamClass, UnitClass};
 use crate::metrics::{Phase, Trace};
 
 /// Stable facade over the event loop: construct once per (arch,
@@ -167,11 +167,16 @@ impl<'a, 's> Engine<'a, 's> {
         self.res.instructions += 1;
 
         let dims = self.stream_dims(sid);
+        // Timing-only dims: under `sparse_skip` a TileSrc-row instruction
+        // on a partially occupied tile is charged for the occupied
+        // row-blocks only. Functional execution below always uses the
+        // real `dims` — the skip changes accounting, never values.
+        let tdims = self.timing_dims(sid, &dims, &instr);
 
         match instr.unit() {
             UnitClass::Sync => self.exec_sync(sid, &instr, t0)?,
             UnitClass::Mem => {
-                let bytes = instr.dram_bytes(&dims);
+                let bytes = instr.dram_bytes(&tdims);
                 let start = t0;
                 let end = self.units.issue_transfer(
                     self.wl.tiling,
@@ -191,7 +196,7 @@ impl<'a, 's> Engine<'a, 's> {
                         if target == LdTarget::Edge {
                             self.res.counters.th_bytes += bytes;
                         } else {
-                            self.res.counters.uem_bytes += timing::uem_bytes(&instr, &dims);
+                            self.res.counters.uem_bytes += timing::uem_bytes(&instr, &tdims);
                         }
                         if self.opts.functional {
                             let env = Env::of(self.wl);
@@ -207,7 +212,7 @@ impl<'a, 's> Engine<'a, 's> {
                     }
                     Instr::St { .. } => {
                         self.res.dram_write_bytes += bytes;
-                        self.res.counters.uem_bytes += timing::uem_bytes(&instr, &dims);
+                        self.res.counters.uem_bytes += timing::uem_bytes(&instr, &tdims);
                         // functional store happens at UPD.PTT commit
                     }
                     _ => unreachable!(),
@@ -217,7 +222,7 @@ impl<'a, 's> Engine<'a, 's> {
                 self.sched.advance(sid, end, 1);
             }
             UnitClass::Mu | UnitClass::Vu => {
-                let dur = timing::compute_cycles(self.arch, &instr, &dims);
+                let dur = timing::compute_cycles(self.arch, &instr, &tdims);
                 let (start, end) = if instr.unit() == UnitClass::Mu {
                     self.res.mu_busy += dur;
                     self.units.issue_mu(t0, dur)
@@ -225,9 +230,9 @@ impl<'a, 's> Engine<'a, 's> {
                     self.res.vu_busy += dur;
                     self.units.issue_vu(t0, dur)
                 };
-                self.res.counters.macs += timing::macs(&instr, &dims);
-                self.res.counters.vu_ops += timing::vu_ops(&instr, &dims);
-                self.res.counters.uem_bytes += timing::uem_bytes(&instr, &dims);
+                self.res.counters.macs += timing::macs(&instr, &tdims);
+                self.res.counters.vu_ops += timing::vu_ops(&instr, &tdims);
+                self.res.counters.uem_bytes += timing::uem_bytes(&instr, &tdims);
                 if matches!(instr, Instr::Sctr { .. } | Instr::Gthr { .. }) {
                     // edge-list reads from the tile hub
                     self.res.counters.th_bytes += dims.tile_edges as u64 * 8;
@@ -237,7 +242,7 @@ impl<'a, 's> Engine<'a, 's> {
                     Instr::Sctr { .. } | Instr::Gthr { .. } => Phase::Gop,
                     _ => Phase::Elw,
                 };
-                self.record_trace(start, end, instr.flops(&dims), 0, phase);
+                self.record_trace(start, end, instr.flops(&tdims), 0, phase);
                 if self.opts.functional {
                     // GTHR is a no-op here: its reduction is deferred to
                     // the tile-ordered fold at the dStream wait boundary
@@ -261,6 +266,40 @@ impl<'a, 's> Engine<'a, 's> {
         } else {
             DimCtx { feat_in: self.wl.feat_in, feat_out: self.wl.feat_out, ..Default::default() }
         }
+    }
+
+    /// The dims an instruction is *charged* with. Under the
+    /// `sparse_skip` kernel policy, instructions whose row extent is
+    /// `Dim::TileSrc` (LD.SRC, the source-side GEMM/GEMV/elementwise
+    /// ops) on a partially occupied tile are billed for the occupied
+    /// row-blocks only (`tiling::SKIP_BLOCK` granularity) — modeling
+    /// compute and DRAM traffic the masked kernels actually skip.
+    /// Edge-extent ops (SCTR/GTHR/BMM) already scale with real work and
+    /// are charged as-is, as is everything when the tile is dense.
+    fn timing_dims(&self, sid: usize, dims: &DimCtx, instr: &Instr) -> DimCtx {
+        if !self.wl.kernels.sparse_skip {
+            return *dims;
+        }
+        let Some(tc) = &self.sched.streams[sid].tile else {
+            return *dims;
+        };
+        let src_rows = match instr {
+            Instr::Ld { target: LdTarget::Src, rows, .. }
+            | Instr::Gemv { rows, .. }
+            | Instr::ElwU { rows, .. }
+            | Instr::ElwB { rows, .. }
+            | Instr::ElwBcast { rows, .. } => matches!(rows, Dim::TileSrc),
+            Instr::Gemm { m, .. } => matches!(m, Dim::TileSrc),
+            _ => false,
+        };
+        if !src_rows {
+            return *dims;
+        }
+        let tile = &self.wl.tiling.partitions[tc.part_idx].tiles[tc.tile_idx];
+        if tile.fully_occupied() {
+            return *dims;
+        }
+        DimCtx { tile_src: tile.occupied_block_rows(crate::tiling::SKIP_BLOCK), ..*dims }
     }
 
     fn exec_sync(&mut self, sid: usize, instr: &Instr, t0: u64) -> Result<(), String> {

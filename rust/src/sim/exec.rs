@@ -33,6 +33,7 @@ pub(crate) struct Env<'a> {
     pub weights: &'a WeightStore,
     pub feat_in: u32,
     pub feat_out: u32,
+    pub kernels: crate::config::KernelPolicy,
 }
 
 impl<'a> Env<'a> {
@@ -43,6 +44,7 @@ impl<'a> Env<'a> {
             weights: wl.weights,
             feat_in: wl.feat_in,
             feat_out: wl.feat_out,
+            kernels: wl.kernels,
         }
     }
 }
@@ -425,7 +427,16 @@ impl FuncState {
             has_input: self.has_input,
             allocs: &mut self.allocs,
         };
-        dispatch::exec_instr(&mut a, env.weights, env.feat_in, part, t_meta, dims, instr)
+        dispatch::exec_instr(
+            &mut a,
+            env.weights,
+            env.feat_in,
+            part,
+            t_meta,
+            dims,
+            env.kernels,
+            instr,
+        )
     }
 
     /// dStream wait boundary: all tiles of the partition have retired,

@@ -47,9 +47,10 @@
 
 use super::dispatch::{self, BufAccess};
 use super::exec::{part_slot, unpermute_into, Env, Frame};
-use super::tensor::Tensor;
+use super::tensor::{self, Tensor};
 use super::types::Workload;
 use crate::compiler::{AccKind, Program};
+use crate::config::KernelPolicy;
 use crate::isa::{BufId, Dim, DimCtx, Instr, StreamClass};
 use crate::models::WeightStore;
 use crate::tiling::{Partition, Tile, Tiling};
@@ -304,6 +305,7 @@ pub struct StageWl<'a> {
     pub weights: &'a WeightStore,
     pub feat_in: u32,
     pub feat_out: u32,
+    pub kernels: KernelPolicy,
 }
 
 /// Execute a multi-layer pipeline functionally for a batch of lanes:
@@ -359,6 +361,7 @@ fn pipeline_stages(
             weights: st.weights,
             feat_in: st.feat_in,
             feat_out: st.feat_out,
+            kernels: st.kernels,
         };
         let owned: Vec<&[f32]>;
         let lane_inputs: &[&[f32]] = if l == 0 {
@@ -493,6 +496,13 @@ fn run_stage(
             }
             for (lane, dst) in lanes.iter().take(nlanes).zip(out.iter_mut()) {
                 *allocs += lane.write_output_into(env.tiling, env.feat_out, dst);
+                // Reduced-precision storage: hidden-layer activation
+                // images are quantized to the policy dtype at exactly
+                // this chain boundary (the engine path quantizes at its
+                // stash_output call), so both executors feed the next
+                // stage bit-identical inputs. Final-stage outputs stay
+                // f32 (the no-sink branch above).
+                tensor::quantize_slice(env.kernels.dtype, dst);
             }
             Ok(None)
         }
@@ -598,6 +608,7 @@ fn exec_tile(
                 Some(part),
                 Some(t_meta),
                 &dims,
+                env.kernels,
                 other,
             )?,
         }
@@ -614,6 +625,7 @@ fn exec_tile(
                 Some(part),
                 Some(t_meta),
                 &dims,
+                env.kernels,
                 other,
             )?,
         }
@@ -730,5 +742,14 @@ fn exec_part_instr(
         x_tiled: &lane.x_tiled,
         allocs: &mut lane.allocs,
     };
-    dispatch::exec_instr(&mut a, env.weights, env.feat_in, Some(part), None, dims, instr)
+    dispatch::exec_instr(
+        &mut a,
+        env.weights,
+        env.feat_in,
+        Some(part),
+        None,
+        dims,
+        env.kernels,
+        instr,
+    )
 }

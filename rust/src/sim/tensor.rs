@@ -27,6 +27,7 @@
 //! detached destination tensor, so results are bit-identical to the
 //! out-of-place kernels.
 
+use crate::config::StorageDtype;
 use crate::isa::{ElwBinary, ElwUnary, Reduce, SctrDir};
 
 /// Row-major dense matrix.
@@ -256,6 +257,305 @@ fn binop(op: ElwBinary) -> fn(f32, f32) -> f32 {
     }
 }
 
+// ---- lane-array elementwise kernels (KernelPolicy::simd) -------------------
+//
+// The scalar family above dispatches through the `unop`/`binop`
+// fn-pointer tables; a pointer call per element blocks vectorization, so
+// the SIMD variants monomorphize the loop body per op via the
+// `with_unop!`/`with_binop!` macros below and process `[f32; LANES]`
+// chunks with constant-trip inner loops. The closure bodies MUST mirror
+// the fn-pointer tables exactly; the
+// `simd_elementwise_is_bit_exact_with_scalar` test pins them together
+// (bit-exactness is trivial: the same per-element function is applied
+// in both policies, only the loop structure differs).
+
+/// Monomorphize `$body` once per unary op, binding `$f` to an inlinable
+/// closure with the same semantics as `unop($op)`.
+macro_rules! with_unop {
+    ($op:expr, $f:ident => $body:expr) => {
+        match $op {
+            ElwUnary::Exp => {
+                let $f = |v: f32| v.exp();
+                $body
+            }
+            ElwUnary::Relu => {
+                let $f = |v: f32| v.max(0.0);
+                $body
+            }
+            ElwUnary::LeakyRelu => {
+                let $f = |v: f32| if v >= 0.0 { v } else { 0.2 * v };
+                $body
+            }
+            ElwUnary::Sigmoid => {
+                let $f = |v: f32| 1.0 / (1.0 + (-v).exp());
+                $body
+            }
+            ElwUnary::Tanh => {
+                let $f = |v: f32| v.tanh();
+                $body
+            }
+            ElwUnary::Neg => {
+                let $f = |v: f32| -v;
+                $body
+            }
+            ElwUnary::OneMinus => {
+                let $f = |v: f32| 1.0 - v;
+                $body
+            }
+            ElwUnary::Recip => {
+                let $f = |v: f32| 1.0 / v;
+                $body
+            }
+            ElwUnary::Recip0 => {
+                let $f = |v: f32| if v == 0.0 { 0.0 } else { 1.0 / v };
+                $body
+            }
+        }
+    };
+}
+
+/// Monomorphize `$body` once per binary op, binding `$f` to an
+/// inlinable closure with the same semantics as `binop($op)`.
+macro_rules! with_binop {
+    ($op:expr, $f:ident => $body:expr) => {
+        match $op {
+            ElwBinary::Add => {
+                let $f = |x: f32, y: f32| x + y;
+                $body
+            }
+            ElwBinary::Sub => {
+                let $f = |x: f32, y: f32| x - y;
+                $body
+            }
+            ElwBinary::Mul => {
+                let $f = |x: f32, y: f32| x * y;
+                $body
+            }
+            ElwBinary::Div => {
+                let $f = |x: f32, y: f32| x / y;
+                $body
+            }
+            ElwBinary::Max => {
+                let $f = |x: f32, y: f32| x.max(y);
+                $body
+            }
+        }
+    };
+}
+
+#[inline(always)]
+fn lanes_map1<F: Fn(f32) -> f32>(f: F, src: &[f32], dst: &mut [f32]) {
+    let head = src.len() - src.len() % LANES;
+    for (d, s) in dst[..head]
+        .chunks_exact_mut(LANES)
+        .zip(src[..head].chunks_exact(LANES))
+    {
+        let mut lane = [0.0f32; LANES];
+        for (l, &v) in lane.iter_mut().zip(s) {
+            *l = f(v);
+        }
+        d.copy_from_slice(&lane);
+    }
+    for (d, &v) in dst[head..].iter_mut().zip(&src[head..]) {
+        *d = f(v);
+    }
+}
+
+#[inline(always)]
+fn lanes_map1_inplace<F: Fn(f32) -> f32>(f: F, data: &mut [f32]) {
+    let head = data.len() - data.len() % LANES;
+    for chunk in data[..head].chunks_exact_mut(LANES) {
+        let mut lane = [0.0f32; LANES];
+        lane.copy_from_slice(chunk);
+        for l in &mut lane {
+            *l = f(*l);
+        }
+        chunk.copy_from_slice(&lane);
+    }
+    for v in &mut data[head..] {
+        *v = f(*v);
+    }
+}
+
+#[inline(always)]
+fn lanes_map2<F: Fn(f32, f32) -> f32>(f: F, a: &[f32], b: &[f32], dst: &mut [f32]) {
+    let head = a.len() - a.len() % LANES;
+    for ((d, x), y) in dst[..head]
+        .chunks_exact_mut(LANES)
+        .zip(a[..head].chunks_exact(LANES))
+        .zip(b[..head].chunks_exact(LANES))
+    {
+        let mut lane = [0.0f32; LANES];
+        for ((l, &xv), &yv) in lane.iter_mut().zip(x).zip(y) {
+            *l = f(xv, yv);
+        }
+        d.copy_from_slice(&lane);
+    }
+    for ((d, &xv), &yv) in dst[head..].iter_mut().zip(&a[head..]).zip(&b[head..]) {
+        *d = f(xv, yv);
+    }
+}
+
+#[inline(always)]
+fn lanes_map2_lhs<F: Fn(f32, f32) -> f32>(f: F, a: &mut [f32], b: &[f32]) {
+    let head = a.len() - a.len() % LANES;
+    for (x, y) in a[..head]
+        .chunks_exact_mut(LANES)
+        .zip(b[..head].chunks_exact(LANES))
+    {
+        let mut lane = [0.0f32; LANES];
+        for ((l, &xv), &yv) in lane.iter_mut().zip(x.iter()).zip(y) {
+            *l = f(xv, yv);
+        }
+        x.copy_from_slice(&lane);
+    }
+    for (x, &yv) in a[head..].iter_mut().zip(&b[head..]) {
+        *x = f(*x, yv);
+    }
+}
+
+#[inline(always)]
+fn lanes_map2_rhs<F: Fn(f32, f32) -> f32>(f: F, a: &[f32], b: &mut [f32]) {
+    let head = a.len() - a.len() % LANES;
+    for (x, y) in a[..head]
+        .chunks_exact(LANES)
+        .zip(b[..head].chunks_exact_mut(LANES))
+    {
+        let mut lane = [0.0f32; LANES];
+        for ((l, &xv), &yv) in lane.iter_mut().zip(x).zip(y.iter()) {
+            *l = f(xv, yv);
+        }
+        y.copy_from_slice(&lane);
+    }
+    for (&xv, y) in a[head..].iter().zip(&mut b[head..]) {
+        *y = f(xv, *y);
+    }
+}
+
+/// Policy-dispatched unary (see `apply_unary`).
+pub fn apply_unary_with(simd: bool, op: ElwUnary, x: &Tensor, out: &mut Tensor) -> bool {
+    if !simd {
+        return apply_unary(op, x, out);
+    }
+    let grew = out.reshape(x.rows, x.cols);
+    with_unop!(op, f => lanes_map1(f, &x.data, &mut out.data));
+    grew
+}
+
+/// Policy-dispatched in-place unary (see `apply_unary_inplace`).
+pub fn apply_unary_inplace_with(simd: bool, op: ElwUnary, t: &mut Tensor) {
+    if !simd {
+        return apply_unary_inplace(op, t);
+    }
+    with_unop!(op, f => lanes_map1_inplace(f, &mut t.data));
+}
+
+/// Policy-dispatched binary (see `apply_binary`).
+pub fn apply_binary_with(
+    simd: bool,
+    op: ElwBinary,
+    a: &Tensor,
+    b: &Tensor,
+    out: &mut Tensor,
+) -> Result<bool, String> {
+    if !simd {
+        return apply_binary(op, a, b, out);
+    }
+    binary_shapes_match(a, b)?;
+    let grew = out.reshape(a.rows, a.cols);
+    with_binop!(op, f => lanes_map2(f, &a.data, &b.data, &mut out.data));
+    Ok(grew)
+}
+
+/// Policy-dispatched `a = f(a, b)` (see `apply_binary_lhs_inplace`).
+pub fn apply_binary_lhs_inplace_with(
+    simd: bool,
+    op: ElwBinary,
+    a: &mut Tensor,
+    b: &Tensor,
+) -> Result<(), String> {
+    if !simd {
+        return apply_binary_lhs_inplace(op, a, b);
+    }
+    binary_shapes_match(a, b)?;
+    with_binop!(op, f => lanes_map2_lhs(f, &mut a.data, &b.data));
+    Ok(())
+}
+
+/// Policy-dispatched `b = f(a, b)` (see `apply_binary_rhs_inplace`).
+pub fn apply_binary_rhs_inplace_with(
+    simd: bool,
+    op: ElwBinary,
+    a: &Tensor,
+    b: &mut Tensor,
+) -> Result<(), String> {
+    if !simd {
+        return apply_binary_rhs_inplace(op, a, b);
+    }
+    binary_shapes_match(a, b)?;
+    with_binop!(op, f => lanes_map2_rhs(f, &a.data, &mut b.data));
+    Ok(())
+}
+
+/// Policy-dispatched `t = f(t, t)` (see `apply_binary_self_inplace`).
+pub fn apply_binary_self_inplace_with(simd: bool, op: ElwBinary, t: &mut Tensor) {
+    if !simd {
+        return apply_binary_self_inplace(op, t);
+    }
+    with_binop!(op, f => lanes_map1_inplace(|v| f(v, v), &mut t.data));
+}
+
+/// Policy-dispatched broadcast (see `apply_bcast`).
+pub fn apply_bcast_with(
+    simd: bool,
+    op: ElwBinary,
+    a: &Tensor,
+    vec: &Tensor,
+    out: &mut Tensor,
+) -> Result<bool, String> {
+    if !simd {
+        return apply_bcast(op, a, vec, out);
+    }
+    bcast_shapes_match(a, vec)?;
+    let grew = out.reshape(a.rows, a.cols);
+    let c = a.cols as usize;
+    if c > 0 {
+        with_binop!(op, f => {
+            for ((dst, src), &v) in out
+                .data
+                .chunks_exact_mut(c)
+                .zip(a.data.chunks_exact(c))
+                .zip(&vec.data)
+            {
+                lanes_map1(|s| f(s, v), src, dst);
+            }
+        });
+    }
+    Ok(grew)
+}
+
+/// Policy-dispatched in-place broadcast (see `apply_bcast_inplace`).
+pub fn apply_bcast_inplace_with(
+    simd: bool,
+    op: ElwBinary,
+    a: &mut Tensor,
+    vec: &Tensor,
+) -> Result<(), String> {
+    if !simd {
+        return apply_bcast_inplace(op, a, vec);
+    }
+    bcast_shapes_match(a, vec)?;
+    let c = a.cols as usize;
+    if c > 0 {
+        with_binop!(op, f => {
+            for (row, &v) in a.data.chunks_exact_mut(c).zip(&vec.data) {
+                lanes_map1_inplace(|s| f(s, v), row);
+            }
+        });
+    }
+    Ok(())
+}
+
 /// Row block of the GEMM microkernel.
 const MR: usize = 4;
 /// Column panel of the GEMM microkernel: 4×16 f32 accumulators fit the
@@ -279,6 +579,21 @@ pub fn matmul(
     out: &mut Tensor,
     accumulate: bool,
 ) -> Result<bool, String> {
+    let grew = gemm_validate(x, w, k, n, out, accumulate)?;
+    matmul_block(x, w, k as usize, n as usize, out, accumulate, 0, x.rows as usize);
+    Ok(grew)
+}
+
+/// Shared GEMM shape validation; reshapes `out` (non-accumulate) and
+/// returns the grew flag.
+fn gemm_validate(
+    x: &Tensor,
+    w: &[f32],
+    k: u32,
+    n: u32,
+    out: &mut Tensor,
+    accumulate: bool,
+) -> Result<bool, String> {
     if x.cols != k {
         return Err(format!(
             "GEMM inner-dim mismatch: src is {}x{}, k = {k}",
@@ -291,22 +606,37 @@ pub fn matmul(
             w.len()
         ));
     }
-    let grew = if accumulate {
+    if accumulate {
         if (out.rows, out.cols) != (x.rows, n) {
             return Err(format!(
                 "GEMM accumulate destination is {}x{}, want {}x{n}",
                 out.rows, out.cols, x.rows
             ));
         }
-        false
+        Ok(false)
     } else {
-        out.reshape(x.rows, n)
-    };
-    let m = x.rows as usize;
-    let (k, n) = (k as usize, n as usize);
-    let mut r = 0;
-    while r < m {
-        let mr = MR.min(m - r);
+        Ok(out.reshape(x.rows, n))
+    }
+}
+
+/// Scalar reference microkernel over output rows `[r0, r1)`. Each output
+/// element is one sequential ascending-k accumulation, which is the
+/// bit-exactness contract every other GEMM variant in this module must
+/// reproduce.
+#[allow(clippy::too_many_arguments)]
+fn matmul_block(
+    x: &Tensor,
+    w: &[f32],
+    k: usize,
+    n: usize,
+    out: &mut Tensor,
+    accumulate: bool,
+    r0: usize,
+    r1: usize,
+) {
+    let mut r = r0;
+    while r < r1 {
+        let mr = MR.min(r1 - r);
         let mut j0 = 0;
         while j0 < n {
             let nr = NR.min(n - j0);
@@ -349,6 +679,180 @@ pub fn matmul(
         }
         r += mr;
     }
+}
+
+/// SIMD lane width of the vectorized kernels: `[f32; 8]` accumulators
+/// (one AVX2 ymm / two NEON q registers), written so the inner loops are
+/// constant-trip over lane arrays and autovectorize on stable Rust.
+pub const LANES: usize = 8;
+
+/// Lane-array microkernel over output rows `[r0, r1)`. Same MR×NR
+/// blocking as `matmul_block` but the column panel is held as explicit
+/// `[f32; LANES]` pairs. Per output element the accumulation is still
+/// one sequential ascending-k chain, so results are bit-exact with the
+/// scalar reference (asserted in tests and `perf_hotpath`).
+#[allow(clippy::too_many_arguments)]
+fn matmul_block_simd(
+    x: &Tensor,
+    w: &[f32],
+    k: usize,
+    n: usize,
+    out: &mut Tensor,
+    accumulate: bool,
+    r0: usize,
+    r1: usize,
+) {
+    let mut r = r0;
+    while r < r1 {
+        let mr = MR.min(r1 - r);
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            if mr == MR && nr == NR {
+                // full tile: MR rows × 2 lane arrays of LANES columns
+                let mut acc = [[[0.0f32; LANES]; 2]; MR];
+                for kk in 0..k {
+                    let wp = &w[kk * n + j0..kk * n + j0 + NR];
+                    let w0: &[f32; LANES] = wp[..LANES].try_into().unwrap();
+                    let w1: &[f32; LANES] = wp[LANES..].try_into().unwrap();
+                    for (i, [a0, a1]) in acc.iter_mut().enumerate() {
+                        let xv = x.data[(r + i) * k + kk];
+                        for (av, &wv) in a0.iter_mut().zip(w0) {
+                            *av += xv * wv;
+                        }
+                        for (av, &wv) in a1.iter_mut().zip(w1) {
+                            *av += xv * wv;
+                        }
+                    }
+                }
+                for (i, [a0, a1]) in acc.iter().enumerate() {
+                    let orow = &mut out.data[(r + i) * n + j0..(r + i) * n + j0 + NR];
+                    let (o0, o1) = orow.split_at_mut(LANES);
+                    if accumulate {
+                        for (o, &v) in o0.iter_mut().zip(a0) {
+                            *o += v;
+                        }
+                        for (o, &v) in o1.iter_mut().zip(a1) {
+                            *o += v;
+                        }
+                    } else {
+                        o0.copy_from_slice(a0);
+                        o1.copy_from_slice(a1);
+                    }
+                }
+            } else {
+                // ragged edge tile: defer to the scalar path (bit-exact
+                // per element, and never hot at model dims)
+                matmul_block_ragged(x, w, k, n, out, accumulate, r, r + mr, j0, j0 + nr);
+            }
+            j0 += nr;
+        }
+        r += mr;
+    }
+}
+
+/// Ragged-remainder helper shared by the SIMD kernel: scalar MR×NR
+/// accumulation over rows `[r0, r1)` and columns `[j0, j1)`.
+#[allow(clippy::too_many_arguments)]
+fn matmul_block_ragged(
+    x: &Tensor,
+    w: &[f32],
+    k: usize,
+    n: usize,
+    out: &mut Tensor,
+    accumulate: bool,
+    r0: usize,
+    r1: usize,
+    j0: usize,
+    j1: usize,
+) {
+    let (mr, nr) = (r1 - r0, j1 - j0);
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..k {
+        let wrow = &w[kk * n + j0..kk * n + j1];
+        for (i, arow) in acc[..mr].iter_mut().enumerate() {
+            let xv = x.data[(r0 + i) * k + kk];
+            for (av, &wv) in arow[..nr].iter_mut().zip(wrow) {
+                *av += xv * wv;
+            }
+        }
+    }
+    for (i, arow) in acc[..mr].iter().enumerate() {
+        let orow = &mut out.data[(r0 + i) * n + j0..(r0 + i) * n + j1];
+        if accumulate {
+            for (o, &v) in orow.iter_mut().zip(&arow[..nr]) {
+                *o += v;
+            }
+        } else {
+            orow.copy_from_slice(&arow[..nr]);
+        }
+    }
+}
+
+/// Policy-dispatched GEMM: `simd` selects the lane-array kernel,
+/// otherwise the scalar reference. Both are bit-exact on identical
+/// inputs.
+pub fn matmul_with(
+    x: &Tensor,
+    w: &[f32],
+    k: u32,
+    n: u32,
+    out: &mut Tensor,
+    accumulate: bool,
+    simd: bool,
+) -> Result<bool, String> {
+    if !simd {
+        return matmul(x, w, k, n, out, accumulate);
+    }
+    let grew = gemm_validate(x, w, k, n, out, accumulate)?;
+    matmul_block_simd(x, w, k as usize, n as usize, out, accumulate, 0, x.rows as usize);
+    Ok(grew)
+}
+
+/// Sparsity-masked GEMM: compute only the rows whose bit is set in
+/// `mask` (bit r of word r/64), zero the untouched rows of a
+/// non-accumulating store, and leave untouched rows alone when
+/// accumulating (a masked non-accumulate GEMM earlier in the chain has
+/// already zeroed them). Touched rows are bit-exact with the unmasked
+/// kernels; untouched rows are deterministic zeros. Sound only for
+/// tile-phase tensors whose untouched source rows are never consumed —
+/// see `tiling::Tile::src_occ` and DESIGN.md "Kernel policies".
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_masked(
+    x: &Tensor,
+    w: &[f32],
+    k: u32,
+    n: u32,
+    out: &mut Tensor,
+    accumulate: bool,
+    simd: bool,
+    mask: &[u64],
+) -> Result<bool, String> {
+    let grew = gemm_validate(x, w, k, n, out, accumulate)?;
+    let m = x.rows as usize;
+    debug_assert!(mask.len() * 64 >= m, "occupancy mask shorter than row count");
+    let (ku, nu) = (k as usize, n as usize);
+    let touched = |r: usize| mask[r / 64] >> (r % 64) & 1 == 1;
+    let mut r = 0;
+    while r < m {
+        if touched(r) {
+            let mut r1 = r + 1;
+            while r1 < m && touched(r1) {
+                r1 += 1;
+            }
+            if simd {
+                matmul_block_simd(x, w, ku, nu, out, accumulate, r, r1);
+            } else {
+                matmul_block(x, w, ku, nu, out, accumulate, r, r1);
+            }
+            r = r1;
+        } else {
+            if !accumulate {
+                out.data[r * nu..(r + 1) * nu].fill(0.0);
+            }
+            r += 1;
+        }
+    }
     Ok(grew)
 }
 
@@ -361,6 +865,50 @@ pub fn bmm_by_type(
     n: u32,
     etypes: Option<&[u8]>,
     out: &mut Tensor,
+) -> Result<bool, String> {
+    bmm_by_type_with(x, wset, k, n, etypes, out, false)
+}
+
+/// One BMM output row with `[f32; LANES]` panel-resident accumulators:
+/// per output element a single sequential ascending-k chain starting at
+/// 0.0, exactly like the scalar `orow.fill(0.0)` + k-loop — bit-exact.
+fn bmm_row_simd(xrow: &[f32], w: &[f32], n: usize, orow: &mut [f32]) {
+    let mut j0 = 0;
+    while j0 < n {
+        let nr = LANES.min(n - j0);
+        let mut acc = [0.0f32; LANES];
+        if nr == LANES {
+            for (kk, &xv) in xrow.iter().enumerate() {
+                let wp: &[f32; LANES] =
+                    w[kk * n + j0..kk * n + j0 + LANES].try_into().unwrap();
+                for (a, &wv) in acc.iter_mut().zip(wp) {
+                    *a += xv * wv;
+                }
+            }
+            orow[j0..j0 + LANES].copy_from_slice(&acc);
+        } else {
+            for (kk, &xv) in xrow.iter().enumerate() {
+                let wp = &w[kk * n + j0..kk * n + j0 + nr];
+                for (a, &wv) in acc[..nr].iter_mut().zip(wp) {
+                    *a += xv * wv;
+                }
+            }
+            orow[j0..j0 + nr].copy_from_slice(&acc[..nr]);
+        }
+        j0 += nr;
+    }
+}
+
+/// Policy-dispatched BMM (see `bmm_by_type`); `simd = false` is the
+/// scalar reference path.
+pub fn bmm_by_type_with(
+    x: &Tensor,
+    wset: &[f32],
+    k: u32,
+    n: u32,
+    etypes: Option<&[u8]>,
+    out: &mut Tensor,
+    simd: bool,
 ) -> Result<bool, String> {
     if x.cols != k {
         return Err(format!(
@@ -404,19 +952,22 @@ pub fn bmm_by_type(
         let w = &wset[ty * mat..(ty + 1) * mat];
         let xrow = &x.data[r * k..(r + 1) * k];
         let orow = &mut out.data[r * n..(r + 1) * n];
-        orow.fill(0.0);
-        for (kk, &xv) in xrow.iter().enumerate() {
-            let wrow = &w[kk * n..(kk + 1) * n];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += xv * wv;
+        if simd {
+            bmm_row_simd(xrow, w, n, orow);
+        } else {
+            orow.fill(0.0);
+            for (kk, &xv) in xrow.iter().enumerate() {
+                let wrow = &w[kk * n..(kk + 1) * n];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
             }
         }
     }
     Ok(grew)
 }
 
-/// GEMV: `x (rows×cols) @ w (cols×1)` → (rows×1), in place.
-pub fn gemv(x: &Tensor, w: &[f32], out: &mut Tensor) -> Result<bool, String> {
+fn gemv_validate(x: &Tensor, w: &[f32]) -> Result<(), String> {
     if w.len() != x.cols as usize {
         return Err(format!(
             "GEMV weight length {} != src cols {} (src is {}x{})",
@@ -426,6 +977,12 @@ pub fn gemv(x: &Tensor, w: &[f32], out: &mut Tensor) -> Result<bool, String> {
             x.cols
         ));
     }
+    Ok(())
+}
+
+/// GEMV: `x (rows×cols) @ w (cols×1)` → (rows×1), in place.
+pub fn gemv(x: &Tensor, w: &[f32], out: &mut Tensor) -> Result<bool, String> {
+    gemv_validate(x, w)?;
     let grew = out.reshape(x.rows, 1);
     let c = x.cols as usize;
     if c == 0 {
@@ -434,6 +991,45 @@ pub fn gemv(x: &Tensor, w: &[f32], out: &mut Tensor) -> Result<bool, String> {
         for (o, xrow) in out.data.iter_mut().zip(x.data.chunks_exact(c)) {
             *o = xrow.iter().zip(w).map(|(&a, &b)| a * b).sum();
         }
+    }
+    Ok(grew)
+}
+
+/// Policy-dispatched GEMV. The SIMD variant vectorizes ACROSS rows —
+/// `LANES` independent per-row accumulators with the k-loop outer —
+/// never across k: the scalar dot is a sequential ascending-k sum, and
+/// splitting it into lane partials would change the rounding sequence.
+/// Each row's accumulation order is identical to scalar, so results are
+/// bit-exact.
+pub fn gemv_with(x: &Tensor, w: &[f32], out: &mut Tensor, simd: bool) -> Result<bool, String> {
+    if !simd {
+        return gemv(x, w, out);
+    }
+    gemv_validate(x, w)?;
+    let grew = out.reshape(x.rows, 1);
+    let c = x.cols as usize;
+    if c == 0 {
+        out.data.fill(0.0);
+        return Ok(grew);
+    }
+    let m = x.rows as usize;
+    let mut r = 0;
+    while r + LANES <= m {
+        let mut acc = [0.0f32; LANES];
+        for (kk, &wv) in w.iter().enumerate() {
+            for (l, a) in acc.iter_mut().enumerate() {
+                *a += x.data[(r + l) * c + kk] * wv;
+            }
+        }
+        out.data[r..r + LANES].copy_from_slice(&acc);
+        r += LANES;
+    }
+    for rr in r..m {
+        out.data[rr] = x.data[rr * c..(rr + 1) * c]
+            .iter()
+            .zip(w)
+            .map(|(&a, &b)| a * b)
+            .sum();
     }
     Ok(grew)
 }
@@ -511,6 +1107,122 @@ pub fn gather_rows(
         }
     }
     Ok(())
+}
+
+// ---- reduced-precision storage (KernelPolicy::dtype) -----------------------
+//
+// Hand-rolled IEEE 754 binary16 / bfloat16 conversions (the crate is
+// dependency-free; no `half` crate). Narrowing rounds to nearest, ties
+// to even — the same rounding a hardware store unit performs. The
+// simulator keeps the *dequantized* f32 image resident and re-narrows at
+// every storage boundary, which is numerically identical to storing 16
+// bits and widening at load: f16→f32 is exact, and quantization is
+// idempotent (q(q(v)) == q(v), tested below).
+
+/// Narrow an f32 to IEEE binary16 bits, round-to-nearest-even.
+/// NaN payload top bits are kept (with the quiet bit forced); values
+/// beyond ±65504 that round past the largest normal become ±Inf;
+/// |v| < 2⁻²⁵ rounds to ±0.
+pub fn f32_to_f16_bits(v: f32) -> u16 {
+    let x = v.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let abs = x & 0x7fff_ffff;
+    if abs >= 0x7f80_0000 {
+        // Inf / NaN
+        return if abs > 0x7f80_0000 {
+            sign | 0x7e00 | ((abs >> 13) & 0x03ff) as u16
+        } else {
+            sign | 0x7c00
+        };
+    }
+    if abs >= 0x4780_0000 {
+        // |v| ≥ 65536: past the largest f16 normal even before rounding
+        return sign | 0x7c00;
+    }
+    if abs >= 0x3880_0000 {
+        // normal range: rebias exponent, round 23→10 mantissa bits; a
+        // mantissa carry propagates into the exponent (and to Inf for
+        // values in [65520, 65536)) by construction of the encoding
+        let e = ((abs >> 23) as i32 - 127 + 15) as u32;
+        let m = abs & 0x007f_ffff;
+        let base = (e << 10) | (m >> 13);
+        let rem = m & 0x1fff;
+        let round = (rem > 0x1000 || (rem == 0x1000 && base & 1 == 1)) as u32;
+        return sign | (base + round) as u16;
+    }
+    if abs < 0x3300_0000 {
+        // |v| < 2⁻²⁵: below half the smallest subnormal → ±0
+        return sign;
+    }
+    // subnormal: target mantissa is round(|v| · 2²⁴); shifting the
+    // 24-bit significand right by (126 − e) ∈ [14, 24] aligns it
+    let e = (abs >> 23) as i32;
+    let m = (abs & 0x007f_ffff) | 0x0080_0000;
+    let shift = (126 - e) as u32;
+    let base = m >> shift;
+    let rem = m & ((1 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    let round = (rem > half || (rem == half && base & 1 == 1)) as u32;
+    sign | (base + round) as u16
+}
+
+/// Widen IEEE binary16 bits to f32 (exact).
+pub fn f16_bits_to_f32(b: u16) -> f32 {
+    let sign = ((b as u32) & 0x8000) << 16;
+    let exp = ((b >> 10) & 0x1f) as u32;
+    let man = (b & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal (man · 2⁻²⁴): normalize into an f32 normal
+            let shift = man.leading_zeros() - 21;
+            sign | ((113 - shift) << 23) | (((man << shift) & 0x03ff) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Narrow an f32 to bfloat16 bits, round-to-nearest-even. NaNs keep
+/// their top payload bits with the quiet bit forced.
+pub fn f32_to_bf16_bits(v: f32) -> u16 {
+    let x = v.to_bits();
+    if v.is_nan() {
+        return ((x >> 16) as u16) | 0x0040;
+    }
+    let round = (x >> 16 & 1).wrapping_add(0x7fff);
+    (x.wrapping_add(round) >> 16) as u16
+}
+
+/// Widen bfloat16 bits to f32 (exact).
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round-trip a buffer through the 16-bit storage format in place
+/// (no-op for f32). The resident f32 image becomes the exact
+/// dequantization of the stored values. Per element the relative error
+/// is bounded by the format's unit roundoff
+/// (`StorageDtype::unit_roundoff`): |q(v) − v| ≤ u·|v| for finite
+/// in-range v.
+pub fn quantize_slice(dtype: StorageDtype, data: &mut [f32]) {
+    match dtype {
+        StorageDtype::F32 => {}
+        StorageDtype::F16 => {
+            for v in data {
+                *v = f16_bits_to_f32(f32_to_f16_bits(*v));
+            }
+        }
+        StorageDtype::Bf16 => {
+            for v in data {
+                *v = bf16_bits_to_f32(f32_to_bf16_bits(*v));
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -700,5 +1412,316 @@ mod tests {
         got = a.clone();
         apply_bcast_inplace(ElwBinary::Div, &mut got, &v).unwrap();
         assert_eq!(got, want);
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what} elem {i}: {x} vs {y}");
+        }
+    }
+
+    fn rand_tensor(rng: &mut Rng, r: u32, c: u32) -> Tensor {
+        Tensor::from_rows(
+            r,
+            c,
+            (0..r as usize * c as usize).map(|_| rng.next_f32_sym()).collect(),
+        )
+    }
+
+    #[test]
+    fn remainder_tile_gemm_matches_naive() {
+        // dims not divisible by MR=4 / NR=16, exercising the ragged
+        // scalar tail, including the accumulate store path
+        let mut rng = Rng::new(11);
+        let mut out = Tensor::default();
+        let shapes =
+            [(5u32, 7usize, 17usize), (3, 2, 1), (1, 4, 16), (5, 17, 3), (2, 3, 1), (1, 1, 1)];
+        for (m, k, n) in shapes {
+            let x = rand_tensor(&mut rng, m, k as u32);
+            let w: Vec<f32> = (0..k * n).map(|_| rng.next_f32_sym()).collect();
+            let mut expect = Vec::new();
+            matmul_naive(&x, &w, k, n, &mut expect);
+            matmul(&x, &w, k as u32, n as u32, &mut out, false).unwrap();
+            assert_eq!((out.rows, out.cols), (m, n as u32), "{m}x{k}x{n}");
+            // both accumulate each output element in one sequential
+            // ascending-k chain → bit-exact, not merely close
+            assert_bits_eq(&out.data, &expect, "ragged gemm");
+            // accumulate folds a second product on top: expect + expect
+            matmul(&x, &w, k as u32, n as u32, &mut out, true).unwrap();
+            let doubled: Vec<f32> = expect.iter().map(|&v| v + v).collect();
+            assert_bits_eq(&out.data, &doubled, "ragged gemm accumulate");
+        }
+    }
+
+    #[test]
+    fn simd_gemm_bit_exact_with_scalar() {
+        let mut rng = Rng::new(21);
+        let mut scalar = Tensor::default();
+        let mut simd = Tensor::default();
+        let shapes =
+            [(1u32, 1usize, 1usize), (5, 7, 17), (8, 16, 32), (33, 128, 128), (9, 5, 1)];
+        for (m, k, n) in shapes {
+            let x = rand_tensor(&mut rng, m, k as u32);
+            let w: Vec<f32> = (0..k * n).map(|_| rng.next_f32_sym()).collect();
+            matmul_with(&x, &w, k as u32, n as u32, &mut scalar, false, false).unwrap();
+            matmul_with(&x, &w, k as u32, n as u32, &mut simd, false, true).unwrap();
+            assert_bits_eq(&simd.data, &scalar.data, "gemm");
+            matmul_with(&x, &w, k as u32, n as u32, &mut scalar, true, false).unwrap();
+            matmul_with(&x, &w, k as u32, n as u32, &mut simd, true, true).unwrap();
+            assert_bits_eq(&simd.data, &scalar.data, "gemm accumulate");
+        }
+    }
+
+    #[test]
+    fn simd_gemv_and_bmm_bit_exact_with_scalar() {
+        let mut rng = Rng::new(22);
+        let mut scalar = Tensor::default();
+        let mut simd = Tensor::default();
+        for (m, k) in [(1u32, 3usize), (7, 16), (64, 128), (13, 1)] {
+            let x = rand_tensor(&mut rng, m, k as u32);
+            let w: Vec<f32> = (0..k).map(|_| rng.next_f32_sym()).collect();
+            gemv_with(&x, &w, &mut scalar, false).unwrap();
+            gemv_with(&x, &w, &mut simd, true).unwrap();
+            assert_bits_eq(&simd.data, &scalar.data, "gemv");
+        }
+        for (m, k, n) in [(4u32, 3usize, 5usize), (9, 16, 16), (17, 8, 1)] {
+            let x = rand_tensor(&mut rng, m, k as u32);
+            let wset: Vec<f32> = (0..3 * k * n).map(|_| rng.next_f32_sym()).collect();
+            let etypes: Vec<u8> = (0..m).map(|i| (i % 3) as u8).collect();
+            for et in [None, Some(etypes.as_slice())] {
+                bmm_by_type_with(&x, &wset, k as u32, n as u32, et, &mut scalar, false)
+                    .unwrap();
+                bmm_by_type_with(&x, &wset, k as u32, n as u32, et, &mut simd, true)
+                    .unwrap();
+                assert_bits_eq(&simd.data, &scalar.data, "bmm");
+            }
+        }
+    }
+
+    /// Satellite: NaN / ±0 / subnormal semantics. In-place vs
+    /// out-of-place and SIMD vs scalar must agree bit-for-bit on
+    /// special values for every op in the ISA.
+    #[test]
+    fn special_value_semantics_bit_exact_across_policies() {
+        let specials = [
+            f32::NAN,
+            -f32::NAN,
+            0.0,
+            -0.0,
+            1.0e-40,  // f32 subnormal
+            -1.0e-40,
+            f32::MIN_POSITIVE,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            1.5,
+            -2.5,
+        ];
+        // 3 rows × 11 cols so lane chunks mix specials and remainders
+        let rows: Vec<f32> = (0..3).flat_map(|_| specials).collect();
+        let a = Tensor::from_rows(3, 11, rows.clone());
+        let b = Tensor::from_rows(3, 11, rows.iter().rev().copied().collect());
+        let v = Tensor::from_rows(3, 1, vec![f32::NAN, -0.0, 2.0]);
+        let unary_ops = [
+            ElwUnary::Exp,
+            ElwUnary::Relu,
+            ElwUnary::LeakyRelu,
+            ElwUnary::Sigmoid,
+            ElwUnary::Tanh,
+            ElwUnary::Neg,
+            ElwUnary::OneMinus,
+            ElwUnary::Recip,
+            ElwUnary::Recip0,
+        ];
+        let binary_ops = [
+            ElwBinary::Add,
+            ElwBinary::Sub,
+            ElwBinary::Mul,
+            ElwBinary::Div,
+            ElwBinary::Max,
+        ];
+        let mut want = Tensor::default();
+        let mut got = Tensor::default();
+        for op in unary_ops {
+            apply_unary(op, &a, &mut want);
+            for simd in [false, true] {
+                apply_unary_with(simd, op, &a, &mut got);
+                assert_bits_eq(&got.data, &want.data, "unary");
+                let mut t = a.clone();
+                apply_unary_inplace_with(simd, op, &mut t);
+                assert_bits_eq(&t.data, &want.data, "unary inplace");
+            }
+        }
+        for op in binary_ops {
+            apply_binary(op, &a, &b, &mut want).unwrap();
+            for simd in [false, true] {
+                apply_binary_with(simd, op, &a, &b, &mut got).unwrap();
+                assert_bits_eq(&got.data, &want.data, "binary");
+                let mut t = a.clone();
+                apply_binary_lhs_inplace_with(simd, op, &mut t, &b).unwrap();
+                assert_bits_eq(&t.data, &want.data, "binary lhs inplace");
+                let mut t = b.clone();
+                apply_binary_rhs_inplace_with(simd, op, &a, &mut t).unwrap();
+                assert_bits_eq(&t.data, &want.data, "binary rhs inplace");
+            }
+            apply_binary(op, &a, &a, &mut want).unwrap();
+            for simd in [false, true] {
+                let mut t = a.clone();
+                apply_binary_self_inplace_with(simd, op, &mut t);
+                assert_bits_eq(&t.data, &want.data, "binary self inplace");
+            }
+            apply_bcast(op, &a, &v, &mut want).unwrap();
+            for simd in [false, true] {
+                apply_bcast_with(simd, op, &a, &v, &mut got).unwrap();
+                assert_bits_eq(&got.data, &want.data, "bcast");
+                let mut t = a.clone();
+                apply_bcast_inplace_with(simd, op, &mut t, &v).unwrap();
+                assert_bits_eq(&t.data, &want.data, "bcast inplace");
+            }
+        }
+    }
+
+    #[test]
+    fn masked_gemm_computes_touched_rows_and_zeroes_the_rest() {
+        let mut rng = Rng::new(31);
+        let (m, k, n) = (70u32, 9usize, 19usize);
+        let x = rand_tensor(&mut rng, m, k as u32);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.next_f32_sym()).collect();
+        // touch rows 0..3, 10, 63..66 (crosses the u64 word boundary)
+        let mut mask = vec![0u64; 2];
+        for r in [0usize, 1, 2, 10, 63, 64, 65] {
+            mask[r / 64] |= 1 << (r % 64);
+        }
+        let mut full = Tensor::default();
+        matmul(&x, &w, k as u32, n as u32, &mut full, false).unwrap();
+        for simd in [false, true] {
+            let mut out = Tensor::filled(m, n as u32, 7.0); // stale garbage
+            matmul_masked(&x, &w, k as u32, n as u32, &mut out, false, simd, &mask)
+                .unwrap();
+            for r in 0..m as usize {
+                let got = &out.data[r * n..(r + 1) * n];
+                if mask[r / 64] >> (r % 64) & 1 == 1 {
+                    assert_bits_eq(got, &full.data[r * n..(r + 1) * n], "touched row");
+                } else {
+                    assert!(got.iter().all(|&v| v == 0.0), "untouched row {r} not zeroed");
+                }
+            }
+            // accumulate on top: touched rows double, untouched stay 0
+            matmul_masked(&x, &w, k as u32, n as u32, &mut out, true, simd, &mask)
+                .unwrap();
+            for r in 0..m as usize {
+                let got = &out.data[r * n..(r + 1) * n];
+                if mask[r / 64] >> (r % 64) & 1 == 1 {
+                    let doubled: Vec<f32> =
+                        full.data[r * n..(r + 1) * n].iter().map(|&v| v + v).collect();
+                    assert_bits_eq(got, &doubled, "touched row accumulate");
+                } else {
+                    assert!(got.iter().all(|&v| v == 0.0), "untouched row {r} disturbed");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f16_roundtrip_is_identity_on_all_finite_bit_patterns() {
+        for b in 0..=u16::MAX {
+            let v = f16_bits_to_f32(b);
+            if v.is_nan() {
+                // NaNs stay NaNs (quiet bit may be forced)
+                assert!(f16_bits_to_f32(f32_to_f16_bits(v)).is_nan());
+                continue;
+            }
+            assert_eq!(
+                f32_to_f16_bits(v),
+                b,
+                "f16 bits {b:#06x} -> {v} failed to round-trip"
+            );
+        }
+    }
+
+    #[test]
+    fn f16_known_values_and_rne() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(0.5), 0x3800);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // largest normal
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00); // ties-to-even → Inf
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-24)), 0x0001); // min subnormal
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-26)), 0x0000); // underflow
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // RNE: 1 + 2⁻¹¹ ties down to 1.0, 1 + 3·2⁻¹² rounds up
+        assert_eq!(f32_to_f16_bits(1.0 + 2.0f32.powi(-11)), 0x3c00);
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 2.0f32.powi(-12)), 0x3c01);
+        assert_eq!(f32_to_bf16_bits(1.0), 0x3f80);
+        assert_eq!(f32_to_bf16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_bf16_bits(f32::INFINITY), 0x7f80);
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn quantization_error_bounded_by_unit_roundoff_and_idempotent() {
+        let mut rng = Rng::new(5);
+        for dtype in [StorageDtype::F16, StorageDtype::Bf16] {
+            let u = dtype.unit_roundoff();
+            for _ in 0..10_000 {
+                let v = rng.next_f32_sym() * 100.0;
+                if v.abs() < 1.0e-4 {
+                    // the relative bound holds for *normal* f16 values;
+                    // subnormals have a (tighter) absolute bound instead
+                    continue;
+                }
+                let mut q = [v];
+                quantize_slice(dtype, &mut q);
+                assert!(
+                    (q[0] - v).abs() <= u * v.abs(),
+                    "{dtype:?}: |q({v}) - {v}| = {} > u·|v| = {}",
+                    (q[0] - v).abs(),
+                    u * v.abs()
+                );
+                let mut q2 = q;
+                quantize_slice(dtype, &mut q2);
+                assert_eq!(q2[0].to_bits(), q[0].to_bits(), "{dtype:?} not idempotent");
+            }
+        }
+    }
+
+    /// Documented error bound of the reduced-precision GEMM path
+    /// (DESIGN.md "Kernel policies"): quantizing x and w to a storage
+    /// format with unit roundoff u perturbs each output element by at
+    /// most (2u + u²)·Σ_k |x_k|·|w_k| versus the f32 result (first
+    /// order in u; the f32 accumulation rounding of both runs adds
+    /// k·2⁻²³·Σ|xw|, folded into the 2⁻²⁰ slack term below).
+    #[test]
+    fn quantized_gemm_error_within_documented_bound() {
+        let mut rng = Rng::new(6);
+        let (m, k, n) = (12u32, 64usize, 24usize);
+        let x = rand_tensor(&mut rng, m, k as u32);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.next_f32_sym()).collect();
+        let mut exact = Tensor::default();
+        matmul(&x, &w, k as u32, n as u32, &mut exact, false).unwrap();
+        for dtype in [StorageDtype::F16, StorageDtype::Bf16] {
+            let u = dtype.unit_roundoff();
+            let mut xq = x.clone();
+            quantize_slice(dtype, &mut xq.data);
+            let mut wq = w.clone();
+            quantize_slice(dtype, &mut wq);
+            let mut got = Tensor::default();
+            matmul(&xq, &wq, k as u32, n as u32, &mut got, false).unwrap();
+            for r in 0..m as usize {
+                for j in 0..n {
+                    let mag: f32 = (0..k)
+                        .map(|kk| (x.data[r * k + kk] * w[kk * n + j]).abs())
+                        .sum();
+                    let bound = (2.0 * u + u * u + 2.0f32.powi(-20)) * mag;
+                    let err = (got.data[r * n + j] - exact.data[r * n + j]).abs();
+                    assert!(
+                        err <= bound,
+                        "{dtype:?} ({r},{j}): err {err} > bound {bound}"
+                    );
+                }
+            }
+        }
     }
 }

@@ -17,6 +17,9 @@ pub struct Workload<'a> {
     /// Input embeddings in ORIGINAL vertex order, (V × feat_in) row-major.
     /// Required when `SimOptions::functional` is set.
     pub x: Option<&'a [f32]>,
+    /// Kernel-variant selection (SIMD / sparsity skipping / storage
+    /// dtype). Part of the plan identity — see `plan::PlanKey`.
+    pub kernels: crate::config::KernelPolicy,
 }
 
 #[derive(Clone, Copy, Debug)]

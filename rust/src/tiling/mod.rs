@@ -69,6 +69,12 @@ impl TilingConfig {
     }
 }
 
+/// Row-block granularity of sparse skipping: occupancy is credited in
+/// blocks of this many source rows (a hardware skip unit works on burst
+/// or systolic-row granularity, not single rows). Used by the engine's
+/// `KernelPolicy::sparse_skip` timing model.
+pub const SKIP_BLOCK: u32 = 8;
+
 /// One tile: the edges between one source block and one destination
 /// partition, in local coordinates.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -83,15 +89,72 @@ pub struct Tile {
     pub edges: Vec<(u32, u32)>,
     /// Per-edge relation types if the graph has them (R-GCN), COO order.
     pub etypes: Option<Vec<u8>>,
+    /// Touched-source-row bitmap: bit r (word r/64, bit r%64) is set iff
+    /// local source row r appears as an edge source. Sparse-mode tiles
+    /// are fully occupied by construction (rows are compacted); regular
+    /// tiles record which rows of the full block carry edges, feeding
+    /// `KernelPolicy::sparse_skip` (see `Tile::new`).
+    pub src_occ: Vec<u64>,
+    /// Number of set bits in `src_occ`.
+    pub occ_rows: u32,
 }
 
 impl Tile {
+    /// Build a tile, deriving the source-row occupancy from the local
+    /// COO edge list. All construction sites go through here so the
+    /// occupancy can never drift out of sync with the edges.
+    pub fn new(
+        partition_id: u32,
+        tile_id: u32,
+        src_vertices: Vec<u32>,
+        edges: Vec<(u32, u32)>,
+        etypes: Option<Vec<u8>>,
+    ) -> Tile {
+        let words = src_vertices.len().div_ceil(64);
+        let mut src_occ = vec![0u64; words];
+        for &(ls, _) in &edges {
+            src_occ[ls as usize / 64] |= 1 << (ls % 64);
+        }
+        let occ_rows = src_occ.iter().map(|w| w.count_ones()).sum();
+        Tile { partition_id, tile_id, src_vertices, edges, etypes, src_occ, occ_rows }
+    }
+
     pub fn num_src(&self) -> u32 {
         self.src_vertices.len() as u32
     }
 
     pub fn num_edges(&self) -> u32 {
         self.edges.len() as u32
+    }
+
+    /// True iff every source row carries at least one edge (always the
+    /// case for sparse-mode tiles). Fully occupied tiles take the
+    /// unmasked kernel path even under `sparse_skip`.
+    pub fn fully_occupied(&self) -> bool {
+        self.occ_rows as usize == self.src_vertices.len()
+    }
+
+    /// Source rows counted at `block`-row skip granularity: every block
+    /// containing ≥1 touched row contributes its full `block` rows
+    /// (capped at the tile's row count). This is what the sparse-skip
+    /// timing model charges for TileSrc-row compute and LD.SRC traffic.
+    pub fn occupied_block_rows(&self, block: u32) -> u32 {
+        let n = self.src_vertices.len() as u32;
+        if block == 0 || n == 0 {
+            return n;
+        }
+        let mut rows = 0u32;
+        let mut blk_start = 0u32;
+        while blk_start < n {
+            let blk_end = (blk_start + block).min(n);
+            let touched = (blk_start..blk_end)
+                .any(|r| self.src_occ[r as usize / 64] >> (r % 64) & 1 == 1);
+            if touched {
+                rows += blk_end - blk_start;
+            }
+            blk_start = blk_end;
+        }
+        rows
     }
 
     /// Bytes of tile metadata held in the Tile Hub: COO pairs (+types).
@@ -258,13 +321,13 @@ fn build_partition(
                         types.push(et);
                     }
                 }
-                tiles.push(Tile {
-                    partition_id: p,
-                    tile_id: tiles.len() as u32,
+                tiles.push(Tile::new(
+                    p,
+                    tiles.len() as u32,
                     src_vertices,
-                    edges: coo,
-                    etypes: has_types.then_some(types),
-                });
+                    coo,
+                    has_types.then_some(types),
+                ));
             }
             TilingMode::Sparse => {
                 if edges.is_empty() {
@@ -301,13 +364,13 @@ fn build_partition(
                 for &s in &uniq {
                     scratch.local[(s - blk_start) as usize] = u32::MAX;
                 }
-                tiles.push(Tile {
-                    partition_id: p,
-                    tile_id: tiles.len() as u32,
-                    src_vertices: uniq,
-                    edges: coo,
-                    etypes: has_types.then_some(types),
-                });
+                tiles.push(Tile::new(
+                    p,
+                    tiles.len() as u32,
+                    uniq,
+                    coo,
+                    has_types.then_some(types),
+                ));
             }
         }
     }
@@ -580,6 +643,49 @@ mod tests {
         let b = TilingConfig { threads: 8, ..TilingConfig::default() };
         assert_ne!(a, b);
         assert_eq!(a.cache_key(), b.cache_key());
+    }
+
+    #[test]
+    fn occupancy_tracks_edge_sources() {
+        let g = generators::power_law(600, 2_400, 1.2, 1.2, 0, 7);
+        for mode in [TilingMode::Regular, TilingMode::Sparse] {
+            let t = tile(&g, TilingConfig { dst_part: 64, src_part: 64,
+                mode, reorder: Reorder::None, threads: 1 });
+            for p in &t.partitions {
+                for tl in &p.tiles {
+                    let mut touched = vec![false; tl.src_vertices.len()];
+                    for &(ls, _) in &tl.edges {
+                        touched[ls as usize] = true;
+                    }
+                    let expect = touched.iter().filter(|&&b| b).count() as u32;
+                    assert_eq!(tl.occ_rows, expect);
+                    for (r, &b) in touched.iter().enumerate() {
+                        assert_eq!(tl.src_occ[r / 64] >> (r % 64) & 1 == 1, b);
+                    }
+                    // block-granular count is between exact and full
+                    let blk = tl.occupied_block_rows(SKIP_BLOCK);
+                    assert!(blk >= tl.occ_rows && blk <= tl.num_src());
+                    if mode == TilingMode::Sparse {
+                        // sparse compaction ⇒ every row has an edge
+                        assert!(tl.fully_occupied());
+                        assert_eq!(blk, tl.num_src());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn occupied_block_rows_rounds_to_blocks() {
+        // 20 src rows, edges touch rows 0 and 17 only
+        let t = Tile::new(0, 0, (0..20).collect(), vec![(0, 0), (17, 1)], None);
+        assert_eq!(t.occ_rows, 2);
+        assert!(!t.fully_occupied());
+        // blocks of 8: [0..8) touched, [8..16) empty, [16..20) touched
+        assert_eq!(t.occupied_block_rows(8), 8 + 4);
+        assert_eq!(t.occupied_block_rows(1), 2);
+        assert_eq!(t.occupied_block_rows(0), 20, "0 disables skipping");
+        assert_eq!(t.occupied_block_rows(64), 20);
     }
 
     #[test]

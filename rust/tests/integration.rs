@@ -29,6 +29,7 @@ fn run_cfg(model: &str, dataset: &str) -> RunConfig {
         layers: 1,
         hidden: Vec::new(),
         serving: Default::default(),
+        kernels: Default::default(),
     }
 }
 
@@ -193,6 +194,7 @@ mod properties {
                     layers: 1,
                     hidden: Vec::new(),
                     serving: Default::default(),
+                    kernels: Default::default(),
                 };
                 let session =
                     Session::from_graph(ModelKind::Gcn, g.clone(), &cfg).unwrap();
@@ -243,6 +245,7 @@ mod properties {
                         layers: 1,
                         hidden: Vec::new(),
                         serving: Default::default(),
+                        kernels: Default::default(),
                     };
                     let s = Session::from_graph(m, g.clone(), &cfg).unwrap();
                     let x = s.make_input(21);

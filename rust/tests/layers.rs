@@ -36,6 +36,7 @@ fn run_cfg(model: &str, layers: u32, hidden: Vec<u32>) -> RunConfig {
         functional: true,
         seed: 3,
         serving: Default::default(),
+        kernels: Default::default(),
     }
 }
 
@@ -62,6 +63,7 @@ fn depth1_pipeline_bit_exact_with_direct_single_layer_run() {
             feat_in: 16,
             feat_out: 16,
             x: Some(&x),
+            kernels: Default::default(),
         };
         let direct = Simulator::new(&arch, &wl, SimOptions { functional: true, ..Default::default() })
             .run()

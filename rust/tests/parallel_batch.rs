@@ -44,6 +44,7 @@ fn run_cfg(model: &str) -> RunConfig {
         layers: 1,
         hidden: Vec::new(),
         serving: Default::default(),
+        kernels: Default::default(),
     }
 }
 
@@ -254,6 +255,7 @@ fn aliased_in_place_ops_execute_identically_on_engine_and_batched_path() {
         feat_in: fi,
         feat_out: fo,
         x: Some(&x),
+        kernels: Default::default(),
     };
     let arch = ArchConfig::default();
     let engine = Simulator::new(&arch, &wl, SimOptions { functional: true, ..Default::default() })
@@ -295,6 +297,7 @@ fn malformed_d_function_layouts_are_structured_errors() {
             feat_in: 8,
             feat_out: 8,
             x: None,
+            kernels: Default::default(),
         };
         run_batch(&wl, &[&x], 1, &mut scratch)
     };

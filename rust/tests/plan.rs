@@ -29,6 +29,7 @@ fn run_cfg(model: &str, seed: u64) -> RunConfig {
         functional: true,
         seed,
         serving: Default::default(),
+        kernels: Default::default(),
     }
 }
 

@@ -30,6 +30,7 @@ fn run_cfg(model: &str) -> RunConfig {
         layers: 1,
         hidden: Vec::new(),
         serving: Default::default(),
+        kernels: Default::default(),
     }
 }
 

@@ -35,6 +35,7 @@ fn run_model(m: ModelKind, opt: OptLevel, functional: bool) -> (SimResult, Progr
         feat_in: fi,
         feat_out: fo,
         x: functional.then_some(x.as_slice()),
+        kernels: Default::default(),
     };
     let res = Simulator::new(&arch, &wl, SimOptions { functional, ..Default::default() })
         .run()
@@ -133,6 +134,7 @@ fn more_streams_dont_break_correctness() {
         feat_in: 8,
         feat_out: 8,
         x: Some(&x),
+        kernels: Default::default(),
     };
     let res = Simulator::new(&arch, &wl, SimOptions { functional: true, ..Default::default() })
         .run()
@@ -169,6 +171,7 @@ fn scratch_reuse_matches_fresh_runs() {
             feat_in: 8,
             feat_out: 8,
             x: Some(&x),
+            kernels: Default::default(),
         };
         let sim = Simulator::new(&arch, &wl, SimOptions { functional: true, ..Default::default() });
         let fresh = sim.run().unwrap();
@@ -192,6 +195,7 @@ fn trace_produces_samples() {
         feat_in: 32,
         feat_out: 32,
         x: None,
+        kernels: Default::default(),
     };
     let res = Simulator::new(&arch, &wl, SimOptions { functional: false, trace_window: 256, ..Default::default() })
         .run()
