@@ -27,9 +27,11 @@
 
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 use zipper::config::{ArchConfig, RunConfig, ServingConfig};
-use zipper::coordinator::{validate, Coordinator, InferenceRequest, InferenceResponse};
+use zipper::coordinator::{
+    validate, Coordinator, InferenceRequest, InferenceResponse, RejectReason, ZipperService,
+};
 use zipper::metrics::Table;
 use zipper::plan::PlanCache;
 use zipper::runtime::{Runtime, TileShape};
@@ -183,7 +185,7 @@ fn main() -> Result<(), String> {
 
     // ---- phase 4: batched + tile-parallel serving ------------------------
     println!("\n== phase 4: batched serving (max_batch=8, exec_threads=4) ==");
-    let serving = ServingConfig { exec_threads: 4, max_batch: 8 };
+    let serving = ServingConfig { exec_threads: 4, max_batch: 8, ..Default::default() };
     let mut c = Coordinator::with_serving(arch, workers, serving, Arc::clone(&cache));
     let t0 = Instant::now();
     for i in 0..n_requests {
@@ -217,7 +219,7 @@ fn main() -> Result<(), String> {
 
     // ---- phase 5: stacked-layer pipelines --------------------------------
     println!("\n== phase 5: 3-layer pipelines (one shared tiling per plan) ==");
-    let serving = ServingConfig { exec_threads: 4, max_batch: 4 };
+    let serving = ServingConfig { exec_threads: 4, max_batch: 4, ..Default::default() };
     let mut c = Coordinator::with_serving(arch, workers, serving, Arc::clone(&cache));
     for i in 0..3u64 {
         // request(0..3) lands on gcn/gat/sage
@@ -261,6 +263,60 @@ fn main() -> Result<(), String> {
         "aggregate peak UEM incl. inter-layer activations: {:.1} KB \
          (depth cost is visible per layer above)",
         peak as f64 / 1024.0
+    );
+
+    // ---- phase 6: always-on service (admission, deadlines, shutdown) -----
+    println!("\n== phase 6: always-on service (timer batching, deadlines, graceful stop) ==");
+    let serving = ServingConfig {
+        exec_threads: 2,
+        max_batch: 8,
+        max_wait_us: 500,
+        queue_cap: 256,
+        ..Default::default()
+    };
+    let svc = ZipperService::new(arch, workers, serving, Arc::clone(&cache))?;
+    // submission overlaps execution here: early tickets resolve while
+    // later requests are still being admitted, and partially filled
+    // batches flush on the 500 us timer instead of waiting for a drain
+    let mut tickets = Vec::new();
+    for i in 0..n_requests {
+        tickets.push(svc.submit(request(i)));
+    }
+    // a probe with an already-exhausted latency budget: admission sheds
+    // it with a structured reason instead of wasting a worker on it
+    let doomed = svc.submit_with_deadline(request(0), Some(Instant::now()));
+    for t in tickets {
+        let r = t.wait();
+        if let Some(e) = &r.error {
+            return Err(format!("service request {} failed: {e}", r.id));
+        }
+        assert!(r.wall_seconds >= r.queue_seconds, "wall must contain queue wait");
+    }
+    let shed = doomed.wait();
+    assert_eq!(shed.reject, Some(RejectReason::DeadlineExceeded));
+    println!(
+        "expired-deadline probe rejected at admission: {}",
+        shed.error.as_deref().unwrap_or("(no error)")
+    );
+    let report = svc.shutdown(Duration::from_secs(30));
+    assert!(report.graceful, "drain must finish within the grace period");
+    let m = svc.metrics();
+    assert_eq!(
+        m.completed + m.failed + m.rejected_total(),
+        m.submitted,
+        "every submitted request must be answered or structurally rejected"
+    );
+    println!(
+        "served {} requests: p50/p95 latency {}/{} us, mean batch {:.1}, peak queue {}",
+        m.completed,
+        m.latency_p50_us,
+        m.latency_p95_us,
+        m.mean_batch_size(),
+        m.peak_queue_depth
+    );
+    println!(
+        "graceful shutdown in {:.3}s ({} shed)",
+        report.wall_seconds, report.shed
     );
 
     println!(

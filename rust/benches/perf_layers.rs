@@ -64,7 +64,7 @@ fn serve(
     depth: u32,
     n: u64,
 ) -> (Vec<InferenceResponse>, f64) {
-    let serving = ServingConfig { exec_threads: 2, max_batch: 4 };
+    let serving = ServingConfig { exec_threads: 2, max_batch: 4, ..Default::default() };
     let mut c = Coordinator::with_serving(arch, 2, serving, Arc::clone(cache));
     let t0 = Instant::now();
     for i in 0..n {

@@ -4,27 +4,34 @@
 //! cache (every request may compile a plan) vs a **warm** cache (every
 //! request reuses a shared `Arc<ExecPlan>` and a per-worker scratch),
 //! across worker counts; times plan compilation vs cache lookup
-//! directly; and sweeps **batched + tile-parallel** serving
+//! directly; sweeps **batched + tile-parallel** serving
 //! (`--max-batch` × `--exec-threads`) against sequential warm serving on
 //! the largest bundled dataset, asserting bit-identical per-request
-//! outputs for every combination and ≥ 2× throughput at 4 exec threads.
-//! Emits `BENCH_serving.json` so future PRs have a trajectory for the
-//! serving hot path.
+//! outputs for every combination and ≥ 2× throughput at 4 exec threads;
+//! and runs a **sustained-load open-loop** scenario against the
+//! always-on `ZipperService` (seeded deterministic arrival process, not
+//! wall-clock-derived) at a steady, an overload, and a tight-deadline
+//! operating point, asserting the accounting identity
+//! `submitted == completed + failed + rejected` (nothing lost, nothing
+//! hung) and reporting tail latency + shed rate. Emits
+//! `BENCH_serving.json` so future PRs have a trajectory for the serving
+//! hot path.
 //!
 //! ```bash
 //! cargo bench --bench perf_serving            # full run (asserts 2x)
-//! cargo bench --bench perf_serving -- --smoke # tiny CI-sized run
+//! cargo bench --bench perf_serving -- --smoke # tiny CI-sized soak
 //! ```
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
-use std::time::Instant;
-use zipper::config::{ArchConfig, RunConfig, ServingConfig};
-use zipper::coordinator::{Coordinator, InferenceRequest, InferenceResponse};
+use std::time::{Duration, Instant};
+use zipper::config::{ArchConfig, OverflowPolicy, RunConfig, ServingConfig};
+use zipper::coordinator::{Coordinator, InferenceRequest, InferenceResponse, ZipperService};
 use zipper::metrics::Table;
 use zipper::plan::{ExecPlan, PlanCache};
 use zipper::tiling::{tile, Reorder, TilingConfig, TilingMode};
 use zipper::util::json::Json;
+use zipper::util::Rng;
 
 fn smoke() -> bool {
     std::env::args().any(|a| a == "--smoke")
@@ -102,6 +109,112 @@ fn serve(
 
 fn num(v: f64) -> Json {
     Json::Num(v)
+}
+
+/// One open-loop operating point against the always-on service:
+/// arrivals follow a seeded exponential inter-arrival process
+/// (deterministic offered load — the gap sequence depends only on
+/// `seed`, never on the wall clock), submission never waits for
+/// completions, and every ticket is awaited afterwards so response
+/// accounting is exact.
+#[allow(clippy::too_many_arguments)]
+fn open_loop_point(
+    arch: ArchConfig,
+    label: &str,
+    workers: usize,
+    serving: ServingConfig,
+    n: u64,
+    mean_gap_us: f64,
+    seed: u64,
+    table: &mut Table,
+) -> (zipper::coordinator::ServiceMetrics, Json) {
+    // warm the plan: the scenario measures the runtime, not compilation
+    let run = {
+        let mut r = request(0).run;
+        r.model = "gcn".into();
+        r.dataset = "CR".into();
+        r
+    };
+    let cache = Arc::new(PlanCache::new());
+    cache.get_or_compile(&run).expect("precompile");
+    let svc = ZipperService::new(arch, workers, serving, Arc::clone(&cache)).expect("service");
+
+    let mut rng = Rng::new(seed);
+    let mut tickets = Vec::with_capacity(n as usize);
+    let t0 = Instant::now();
+    for i in 0..n {
+        tickets.push(svc.submit(InferenceRequest { id: i, run: run.clone(), input_seed: i }));
+        if mean_gap_us > 0.0 {
+            let gap = -(1.0 - rng.next_f64()).ln() * mean_gap_us;
+            let gap_us = gap.min(mean_gap_us * 8.0) as u64;
+            if gap_us > 0 {
+                std::thread::sleep(Duration::from_micros(gap_us));
+            }
+        }
+    }
+    let submit_wall = t0.elapsed().as_secs_f64();
+
+    // every submitted request must resolve to exactly one response
+    let mut completed = 0u64;
+    let mut failed = 0u64;
+    let mut shed = 0u64;
+    for t in tickets {
+        let r = t.wait();
+        if r.reject.is_some() {
+            shed += 1;
+        } else if r.error.is_some() {
+            failed += 1;
+        } else {
+            completed += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let report = svc.shutdown(Duration::from_secs(120));
+    assert!(report.graceful, "{label}: backlog must drain within grace");
+    let m = svc.metrics();
+    assert_eq!(m.submitted, n, "{label}: submitted accounting");
+    assert_eq!(
+        m.completed + m.failed + m.rejected_total(),
+        n,
+        "{label}: submitted == completed + failed + rejected must hold exactly"
+    );
+    assert_eq!((completed, failed, shed), (m.completed, m.failed, m.rejected_total()));
+    assert_eq!(failed, 0, "{label}: no request may fail with an error");
+
+    table.row(&[
+        label.to_string(),
+        format!("{n}"),
+        format!("{completed}"),
+        format!("{:.1}%", m.shed_rate() * 100.0),
+        format!("{}", m.latency_p50_us),
+        format!("{}", m.latency_p95_us),
+        format!("{}", m.latency_p99_us),
+        format!("{}", m.peak_queue_depth),
+        format!("{:.1}", m.mean_batch_size()),
+    ]);
+    let mut row = BTreeMap::new();
+    row.insert("label".to_string(), Json::Str(label.to_string()));
+    row.insert("workers".to_string(), num(workers as f64));
+    row.insert("requests".to_string(), num(n as f64));
+    row.insert("mean_gap_us".to_string(), num(mean_gap_us));
+    row.insert("arrival_seed".to_string(), num(seed as f64));
+    row.insert("submit_wall_s".to_string(), num(submit_wall));
+    row.insert("wall_s".to_string(), num(wall));
+    row.insert("completed".to_string(), num(m.completed as f64));
+    row.insert("rejected_queue_full".to_string(), num(m.rejected_queue_full as f64));
+    row.insert(
+        "rejected_deadline".to_string(),
+        num((m.rejected_deadline + m.shed_deadline) as f64),
+    );
+    row.insert("rejected_shutdown".to_string(), num(m.rejected_shutdown as f64));
+    row.insert("shed_rate".to_string(), num(m.shed_rate()));
+    row.insert("latency_p50_us".to_string(), num(m.latency_p50_us as f64));
+    row.insert("latency_p95_us".to_string(), num(m.latency_p95_us as f64));
+    row.insert("latency_p99_us".to_string(), num(m.latency_p99_us as f64));
+    row.insert("latency_max_us".to_string(), num(m.latency_max_us as f64));
+    row.insert("peak_queue_depth".to_string(), num(m.peak_queue_depth as f64));
+    row.insert("mean_batch_size".to_string(), num(m.mean_batch_size()));
+    (m, Json::Obj(row))
 }
 
 fn main() {
@@ -233,7 +346,7 @@ fn main() {
         (resp, wall)
     };
     let bcache = Arc::new(PlanCache::new());
-    let seq_cfg = ServingConfig { exec_threads: 1, max_batch: 1 };
+    let seq_cfg = ServingConfig { exec_threads: 1, max_batch: 1, ..Default::default() };
     let _ = serve_batched(seq_cfg, &bcache); // cold pass compiles the plan
     let (seq_resp, seq_wall) = serve_batched(seq_cfg, &bcache);
     let seq_rps = batch_requests as f64 / seq_wall;
@@ -242,7 +355,7 @@ fn main() {
     let mut speedup_4x8 = 0.0;
     for exec_threads in [1u32, 2, 4] {
         for max_batch in [1u32, 3, 8] {
-            let serving = ServingConfig { exec_threads, max_batch };
+            let serving = ServingConfig { exec_threads, max_batch, ..Default::default() };
             let (resp, wall) = serve_batched(serving, &bcache);
             for (r, s) in resp.iter().zip(&seq_resp) {
                 assert_eq!(
@@ -282,6 +395,68 @@ fn main() {
         );
     }
 
+    // ---- sustained-load open-loop serving (always-on runtime) ------------
+    // Three operating points through the `ZipperService`: a steady point
+    // (offered load below capacity, queue never fills — zero sheds), an
+    // overload point (burst arrivals into a queue_cap-4 admission queue —
+    // must shed with structured QueueFull, never hang, never lose a
+    // response), and a tight-deadline point (burst into an unbounded-ish
+    // queue with a 2 ms deadline — the queue wait consumes the budget and
+    // dispatch sheds with DeadlineExceeded). The accounting identity is
+    // asserted inside `open_loop_point` for every point.
+    let mut ot = Table::new(&[
+        "scenario", "requests", "completed", "shed", "p50 us", "p95 us", "p99 us", "peak q",
+        "mean batch",
+    ]);
+    let mut orows: Vec<Json> = Vec::new();
+    let open_n: u64 = if smoke() { 80 } else { 400 };
+    let steady_serving = ServingConfig {
+        exec_threads: 1,
+        max_batch: 8,
+        max_wait_us: 200,
+        queue_cap: 4096,
+        overflow: OverflowPolicy::Reject,
+        default_deadline_us: 0,
+    };
+    let (steady_m, row) =
+        open_loop_point(arch, "steady", 4, steady_serving, open_n, 150.0, 0xa11, &mut ot);
+    assert_eq!(
+        steady_m.rejected_total(),
+        0,
+        "steady point (queue_cap >= n, no deadline) must not shed"
+    );
+    orows.push(row);
+    let overload_serving = ServingConfig {
+        exec_threads: 1,
+        max_batch: 4,
+        max_wait_us: 100,
+        queue_cap: 4,
+        overflow: OverflowPolicy::Reject,
+        default_deadline_us: 0,
+    };
+    let (over_m, row) =
+        open_loop_point(arch, "overload", 2, overload_serving, open_n, 0.0, 0xb22, &mut ot);
+    assert!(
+        over_m.rejected_queue_full > 0,
+        "burst arrivals into a depth-4 queue must shed QueueFull"
+    );
+    orows.push(row);
+    let deadline_serving = ServingConfig {
+        exec_threads: 1,
+        max_batch: 1,
+        max_wait_us: 0,
+        queue_cap: 8192,
+        overflow: OverflowPolicy::Reject,
+        default_deadline_us: 2_000,
+    };
+    let (dl_m, row) =
+        open_loop_point(arch, "deadline", 1, deadline_serving, open_n, 0.0, 0xc33, &mut ot);
+    assert!(
+        dl_m.rejected_deadline + dl_m.shed_deadline > 0,
+        "a 2 ms deadline under burst load must shed DeadlineExceeded"
+    );
+    orows.push(row);
+
     println!("== serving throughput: cold vs warm plan cache ({n_req} requests) ==");
     print!("{}", table.render());
     println!(
@@ -304,6 +479,11 @@ fn main() {
     );
     print!("{}", bt.render());
     println!("sequential warm baseline: {seq_rps:.1} req/s");
+    println!(
+        "\n== open-loop sustained load ({open_n} requests/point, seeded arrivals, \
+         exact response accounting asserted) =="
+    );
+    print!("{}", ot.render());
 
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("perf_serving".to_string()));
@@ -318,6 +498,7 @@ fn main() {
     root.insert("batch_requests".to_string(), num(batch_requests as f64));
     root.insert("batch_sequential_req_per_s".to_string(), num(seq_rps));
     root.insert("batch_sweep".to_string(), Json::Arr(brows));
+    root.insert("open_loop".to_string(), Json::Arr(orows));
     let path = "BENCH_serving.json";
     std::fs::write(path, Json::Obj(root).to_string_pretty()).expect("write BENCH_serving.json");
     println!("wrote {path}");

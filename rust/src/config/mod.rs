@@ -76,24 +76,77 @@ impl ArchConfig {
     }
 }
 
-/// Serving-layer execution knobs (`[serving]` section / `--exec-threads`
-/// / `--max-batch`). Host-side only: like `TilingConfig::threads`, these
-/// never change compiled artifacts or outputs — `exec_threads` shards
-/// each partition's tiles across OS threads inside the coordinator's
-/// batched functional pass (bit-identical for every value, see
-/// `sim::parallel`), and `max_batch` bounds how many queued requests
-/// sharing one plan the `BatchPlanner` groups into a single pass.
+/// What a full admission queue does to the next submit
+/// (`[serving] overflow`). `Reject` sheds it immediately with a
+/// structured `QueueFull` reason; `Block` parks the submitting thread
+/// until capacity frees or the service shuts down.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OverflowPolicy {
+    Reject,
+    Block,
+}
+
+impl OverflowPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            OverflowPolicy::Reject => "reject",
+            OverflowPolicy::Block => "block",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<OverflowPolicy> {
+        match s {
+            "reject" => Some(OverflowPolicy::Reject),
+            "block" => Some(OverflowPolicy::Block),
+            _ => None,
+        }
+    }
+}
+
+/// Serving-layer knobs (`[serving]` section / `--exec-threads`,
+/// `--max-batch`, `--max-wait-us`, `--queue-cap`, `--overflow`,
+/// `--deadline-us`). Host-side only: like `TilingConfig::threads`, these
+/// never change compiled artifacts or outputs — they shape *when* work
+/// runs and what gets shed under load, not what it computes.
+///
+/// * `exec_threads` / `max_batch` — the batched functional pass (PR 3):
+///   tile-parallel execution width and the per-plan batch cap.
+/// * `max_wait_us` — the second batching trigger: a partial batch
+///   flushes once its oldest request has waited this long (dispatcher
+///   timer in `coordinator::service`). 0 disables the timer: partial
+///   batches flush only when full or at drain/shutdown, the classic
+///   closed-loop `Coordinator` behavior.
+/// * `queue_cap` — bounded admission: max requests admitted but not yet
+///   picked up by a worker (accumulating + ready batches).
+/// * `overflow` — what a full queue does to the next submit.
+/// * `default_deadline_us` — deadline applied to requests that don't
+///   carry their own. 0 = no default deadline.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ServingConfig {
     /// OS threads for tile-parallel functional execution per batch.
     pub exec_threads: u32,
     /// Max requests sharing one `ExecPlan` grouped into one batch.
     pub max_batch: u32,
+    /// Partial-batch flush timer in microseconds (0 = disabled).
+    pub max_wait_us: u64,
+    /// Bounded admission-queue capacity (requests, not batches).
+    pub queue_cap: u32,
+    /// Full-queue policy: shed (`Reject`) or backpressure (`Block`).
+    pub overflow: OverflowPolicy,
+    /// Default per-request deadline in microseconds (0 = none).
+    pub default_deadline_us: u64,
 }
 
 impl Default for ServingConfig {
     fn default() -> Self {
-        ServingConfig { exec_threads: 1, max_batch: 1 }
+        ServingConfig {
+            exec_threads: 1,
+            max_batch: 1,
+            max_wait_us: 0,
+            queue_cap: 1024,
+            overflow: OverflowPolicy::Reject,
+            default_deadline_us: 0,
+        }
     }
 }
 
@@ -339,6 +392,16 @@ pub fn apply(
             ("run", "seed") => run.seed = num()? as u64,
             ("serving", "exec_threads") => run.serving.exec_threads = num()? as u32,
             ("serving", "max_batch") => run.serving.max_batch = num()? as u32,
+            ("serving", "max_wait_us") => run.serving.max_wait_us = num()? as u64,
+            ("serving", "queue_cap") => run.serving.queue_cap = num()? as u32,
+            ("serving", "overflow") => {
+                run.serving.overflow = OverflowPolicy::parse(&value).ok_or_else(|| {
+                    ConfigError(format!("unknown overflow policy {value} (reject | block)"))
+                })?;
+            }
+            ("serving", "default_deadline_us") => {
+                run.serving.default_deadline_us = num()? as u64;
+            }
             ("kernels", "simd") => run.kernels.simd = boolean()?,
             ("kernels", "sparse_skip") => run.kernels.sparse_skip = boolean()?,
             ("kernels", "dtype") => {
@@ -393,7 +456,8 @@ pub fn show(arch: &ArchConfig, run: &RunConfig) -> String {
          [run]\nmodel = {}\ndataset = {}\nscale = 1/{}\nfeat = {}x{}\n\
          layers = {}\nhidden = {}\n\
          e2v = {}\nfunctional = {}\nseed = {}\n\n\
-         [serving]\nexec_threads = {}\nmax_batch = {}\n\n\
+         [serving]\nexec_threads = {}\nmax_batch = {}\nmax_wait_us = {}\n\
+         queue_cap = {}\noverflow = {}\ndefault_deadline_us = {}\n\n\
          [kernels]\nsimd = {}\nsparse_skip = {}\ndtype = {}\n\n\
          [tiling]\ndst_part = {}\nsrc_part = {}\nmode = {:?}\nreorder = {:?}\nthreads = {}\n",
         arch.freq_hz,
@@ -423,6 +487,10 @@ pub fn show(arch: &ArchConfig, run: &RunConfig) -> String {
         run.seed,
         run.serving.exec_threads,
         run.serving.max_batch,
+        run.serving.max_wait_us,
+        run.serving.queue_cap,
+        run.serving.overflow.name(),
+        run.serving.default_deadline_us,
         run.kernels.simd,
         run.kernels.sparse_skip,
         run.kernels.dtype.name(),
@@ -467,6 +535,10 @@ mod tests {
             [serving]
             exec_threads = 4
             max_batch = 8
+            max_wait_us = 250
+            queue_cap = 64
+            overflow = block
+            default_deadline_us = 20000
             [kernels]
             simd = false
             sparse_skip = true
@@ -484,7 +556,17 @@ mod tests {
         assert_eq!(run.scale, 16);
         assert_eq!(run.layers, 3);
         assert_eq!(run.hidden, vec![64, 32]);
-        assert_eq!(run.serving, ServingConfig { exec_threads: 4, max_batch: 8 });
+        assert_eq!(
+            run.serving,
+            ServingConfig {
+                exec_threads: 4,
+                max_batch: 8,
+                max_wait_us: 250,
+                queue_cap: 64,
+                overflow: OverflowPolicy::Block,
+                default_deadline_us: 20_000,
+            }
+        );
         assert!(!run.kernels.simd);
         assert!(run.kernels.sparse_skip);
         assert_eq!(run.kernels.dtype, StorageDtype::F32);
@@ -517,6 +599,18 @@ mod tests {
     }
 
     #[test]
+    fn overflow_policy_parses_or_rejects() {
+        let mut arch = ArchConfig::default();
+        let mut run = RunConfig::default();
+        apply("[serving]\noverflow = block\n", &mut arch, &mut run).unwrap();
+        assert_eq!(run.serving.overflow, OverflowPolicy::Block);
+        let err = apply("[serving]\noverflow = drop\n", &mut arch, &mut run).unwrap_err();
+        assert!(err.to_string().contains("reject | block"), "{err}");
+        assert_eq!(OverflowPolicy::parse("reject"), Some(OverflowPolicy::Reject));
+        assert_eq!(OverflowPolicy::Reject.name(), "reject");
+    }
+
+    #[test]
     fn unknown_key_rejected() {
         let mut arch = ArchConfig::default();
         let mut run = RunConfig::default();
@@ -531,6 +625,8 @@ mod tests {
         assert!(s.contains("mu_count = 1 (32x128)"));
         assert!(s.contains("21.00 MB"));
         assert!(s.contains("[serving]") && s.contains("max_batch = 1"));
+        assert!(s.contains("queue_cap = 1024") && s.contains("overflow = reject"));
+        assert!(s.contains("max_wait_us = 0") && s.contains("default_deadline_us = 0"));
         assert!(s.contains("[kernels]") && s.contains("dtype = f32"));
         assert!(s.contains("layers = 1") && s.contains("hidden = (default)"));
         let run = RunConfig { layers: 3, hidden: vec![64, 32], ..RunConfig::default() };

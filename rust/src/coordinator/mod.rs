@@ -4,36 +4,39 @@
 //!   * **Plans** — compile-once bundles (`plan::ExecPlan`): dataset →
 //!     graph → tiling → compiled SDE program → weights, cached per
 //!     structured `PlanKey` and shared across workers as `Arc`s.
-//!   * **Serving** — a worker pool consuming *batches* of inference
-//!     requests from a queue. [`BatchPlanner`] groups queued requests
-//!     that share one execution plan; a worker serves a batch with a
-//!     single input-independent timing simulation plus one tile-parallel
-//!     batched functional pass (`sim::parallel`), amortizing plan
-//!     lookup, LD.SRC/LD.DST tile traversal, and the cycle-level
-//!     simulation across the batch while keeping per-request responses
-//!     and latency accounting.
+//!   * **Serving** — the always-on [`service::ZipperService`] runtime:
+//!     bounded admission, dual-trigger batching (fill or `max_wait_us`
+//!     timer), per-request deadlines with structured load shedding, and
+//!     graceful shutdown. A worker serves a plan-compatible batch with
+//!     a single input-independent timing simulation plus one
+//!     tile-parallel batched functional pass (`sim::parallel`),
+//!     amortizing plan lookup, LD.SRC/LD.DST tile traversal, and the
+//!     cycle-level simulation across the batch while keeping
+//!     per-request responses and latency accounting. The closed-loop
+//!     [`Coordinator`] (submit a burst, block in `drain`) is kept as a
+//!     thin compatibility wrapper over the service.
 //!   * **Validation** — the three-layer glue: execute the same tiles
 //!     through the PJRT-loaded JAX artifacts and compare against the
 //!     simulator's functional output (paper §8.1: "validate ... the
 //!     functionality of each operation and the tiling-based execution
 //!     against DGL" — our DGL is the L2 JAX model).
 
+pub mod service;
 pub mod validate;
+
+pub use service::{ServiceMetrics, ShutdownReport, Ticket, ZipperService};
 
 use crate::compiler::Program;
 use crate::config::{ArchConfig, RunConfig, ServingConfig};
-use crate::energy::EnergyModel;
 use crate::graph::Graph;
 use crate::models::{ModelKind, ModelSpec, WeightStore};
 use crate::plan::{CacheStats, ExecPlan, PlanCache, PlanKey};
-use crate::sim::parallel::BatchScratch;
 use crate::sim::{ExecScratch, SimResult};
 use crate::tiling::Tiling;
 use std::collections::HashMap;
-use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::fmt;
+use std::sync::Arc;
+use std::time::Duration;
 
 /// A prepared inference session: a thin handle over a shared, immutable
 /// [`ExecPlan`]. Cheap to clone; all per-run state lives in the caller's
@@ -173,6 +176,39 @@ pub struct InferenceRequest {
     pub input_seed: u64,
 }
 
+/// Why the serving runtime shed a request instead of executing it.
+/// Carried structurally on [`InferenceResponse::reject`] so callers can
+/// branch on overload vs. deadline vs. shutdown without parsing the
+/// human-readable `error` string.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The admission queue was at `queue_cap` under
+    /// [`crate::config::OverflowPolicy::Reject`].
+    QueueFull,
+    /// The request's deadline expired — at admission, or shed at
+    /// dispatch after the queue wait consumed the budget.
+    DeadlineExceeded,
+    /// The service stopped admission (shutdown), or the request was
+    /// still queued when the shutdown grace period ran out.
+    ShuttingDown,
+}
+
+impl RejectReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue_full",
+            RejectReason::DeadlineExceeded => "deadline_exceeded",
+            RejectReason::ShuttingDown => "shutting_down",
+        }
+    }
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// One layer's slice of a response's cost (Fig 2-style depth
 /// breakdown): cycles/DRAM/energy are additive across a pipeline's
 /// layers, so `sum(layers[i].cycles) == sim_cycles`.
@@ -202,8 +238,12 @@ pub struct InferenceResponse {
     /// Peak UEM residency across the whole pipeline, inter-layer
     /// activation images included (Fig 2's footprint story).
     pub peak_uem_bytes: u64,
-    /// Wall-clock serving latency (queue + prepare + simulate).
+    /// End-to-end wall-clock serving latency, submit → response
+    /// (queue wait + prepare + simulate).
     pub wall_seconds: f64,
+    /// Time spent queued between admission and worker pickup (part of
+    /// `wall_seconds`).
+    pub queue_seconds: f64,
     /// Whether the execution plan came from the cache (warm request).
     pub plan_cache_hit: bool,
     /// Host seconds spent compiling the plan (0 on a warm request).
@@ -212,11 +252,14 @@ pub struct InferenceResponse {
     pub batch_size: usize,
     /// Checksum of the output embeddings (functional runs).
     pub output_checksum: Option<f64>,
+    /// Structured shed reason, if the runtime rejected this request
+    /// instead of executing it (`error` then carries the human string).
+    pub reject: Option<RejectReason>,
     pub error: Option<String>,
 }
 
 impl InferenceResponse {
-    fn empty(id: u64, model: &str, dataset: &str) -> InferenceResponse {
+    pub(crate) fn empty(id: u64, model: &str, dataset: &str) -> InferenceResponse {
         InferenceResponse {
             id,
             model: model.to_string(),
@@ -227,15 +270,17 @@ impl InferenceResponse {
             layers: Vec::new(),
             peak_uem_bytes: 0,
             wall_seconds: 0.0,
+            queue_seconds: 0.0,
             plan_cache_hit: false,
             prepare_seconds: 0.0,
             batch_size: 1,
             output_checksum: None,
+            reject: None,
             error: None,
         }
     }
 
-    fn failed(id: u64, model: &str, dataset: &str, error: String) -> InferenceResponse {
+    pub(crate) fn failed(id: u64, model: &str, dataset: &str, error: String) -> InferenceResponse {
         InferenceResponse { error: Some(error), ..Self::empty(id, model, dataset) }
     }
 }
@@ -290,17 +335,19 @@ impl BatchPlanner {
     }
 }
 
-/// Multi-threaded serving coordinator over a shared [`PlanCache`].
+/// Closed-loop serving harness: submit a burst, block in
+/// [`Coordinator::drain`]. Kept as a thin compatibility wrapper over the
+/// always-on [`ZipperService`] (same worker pool, same batched
+/// execution core) for benches, examples, and tests that want the
+/// simple submit/drain shape.
 ///
-/// Requests are grouped into plan-compatible batches: a group is
-/// dispatched to the worker pool as soon as it reaches `max_batch`
-/// pending requests (immediately, with the default `max_batch = 1`),
-/// and partially filled groups are flushed through the [`BatchPlanner`]
-/// at [`Coordinator::drain`]. Workers execute batch-at-a-time: one
-/// timing simulation plus one tile-parallel batched functional pass per
-/// batch (see the module docs). With the default [`ServingConfig`]
-/// (`max_batch = 1`, `exec_threads = 1`) behavior degenerates to
-/// classic one-request-per-worker serving.
+/// Semantics are unchanged from the pre-service coordinator: with the
+/// default [`ServingConfig`] (`max_batch = 1`, `max_wait_us = 0`) every
+/// submit dispatches immediately; with batching enabled a plan group is
+/// dispatched when it reaches `max_batch`, and partially filled groups
+/// flush at `drain` (the wrapper's `max_wait_us` default of 0 disables
+/// the service's timer trigger, so partial groups wait exactly as they
+/// used to).
 ///
 /// # Examples
 ///
@@ -325,29 +372,17 @@ impl BatchPlanner {
 /// assert_eq!(c.cache_stats().entries, 1);
 /// ```
 pub struct Coordinator {
-    tx: Option<mpsc::Sender<Vec<InferenceRequest>>>,
-    rx_resp: mpsc::Receiver<InferenceResponse>,
-    workers: Vec<std::thread::JoinHandle<()>>,
-    /// (id, model, dataset) per submitted request, so drain can report
-    /// losses instead of silently truncating.
-    submitted: Vec<(u64, String, String)>,
-    /// Requests buffered until their plan group fills or the queue is
-    /// flushed at drain.
-    pending: Vec<InferenceRequest>,
-    /// Pending-request count per batch key, for eager dispatch.
-    pending_counts: HashMap<(PlanKey, bool), usize>,
-    /// Responses synthesized locally (e.g. when the queue is gone).
+    service: Option<ZipperService>,
+    /// One ticket per submitted request, in submit order.
+    tickets: Vec<Ticket>,
+    /// Responses synthesized locally (e.g. when the service is gone).
     local: Vec<InferenceResponse>,
-    planner: BatchPlanner,
+    /// Set when the serving config failed validation at construction:
+    /// every submit then fails with this message instead of panicking.
+    init_error: Option<String>,
+    /// Metrics snapshot taken at the last `drain`.
+    last_metrics: Option<ServiceMetrics>,
     cache: Arc<PlanCache>,
-}
-
-/// Per-worker pooled state: the timing-simulation scratch plus the
-/// batched functional executor's scratch, both reused for every batch
-/// this worker serves.
-struct WorkerState {
-    timing: ExecScratch,
-    batch: BatchScratch,
 }
 
 impl Coordinator {
@@ -362,75 +397,26 @@ impl Coordinator {
 
     /// Full constructor: worker count plus the serving knobs
     /// (`exec_threads` for the tile-parallel functional pass,
-    /// `max_batch` for the batch planner).
+    /// `max_batch` for the batch planner; the always-on knobs keep
+    /// their defaults unless set). Never panics: an invalid serving
+    /// config turns every subsequent submit into an error response.
     pub fn with_serving(
         arch: ArchConfig,
         num_workers: usize,
         serving: ServingConfig,
         cache: Arc<PlanCache>,
     ) -> Coordinator {
-        let (tx, rx) = mpsc::channel::<Vec<InferenceRequest>>();
-        let (tx_resp, rx_resp) = mpsc::channel::<InferenceResponse>();
-        let rx = Arc::new(Mutex::new(rx));
-        let mut workers = Vec::new();
-        for _ in 0..num_workers.max(1) {
-            let rx = Arc::clone(&rx);
-            let tx_resp = tx_resp.clone();
-            let cache = Arc::clone(&cache);
-            workers.push(std::thread::spawn(move || {
-                // per-worker pooled scratches: reused across every batch
-                // this worker serves (the allocation-light hot path)
-                let mut state =
-                    WorkerState { timing: ExecScratch::new(), batch: BatchScratch::new() };
-                'serve: loop {
-                    let batch = {
-                        let guard = match rx.lock() {
-                            Ok(g) => g,
-                            // a peer panicked while holding the queue
-                            // lock; the queue itself is still sound
-                            Err(poisoned) => poisoned.into_inner(),
-                        };
-                        guard.recv()
-                    };
-                    let Ok(batch) = batch else { break };
-                    let t0 = Instant::now();
-                    let responses = catch_unwind(AssertUnwindSafe(|| {
-                        handle_batch(&arch, &cache, serving, &batch, t0, &mut state)
-                    }))
-                    .unwrap_or_else(|panic| {
-                        let msg = format!(
-                            "worker panicked: {}",
-                            panic_message(panic.as_ref())
-                        );
-                        batch
-                            .iter()
-                            .map(|r| {
-                                InferenceResponse::failed(
-                                    r.id,
-                                    &r.run.model,
-                                    &r.run.dataset,
-                                    msg.clone(),
-                                )
-                            })
-                            .collect::<Vec<_>>()
-                    });
-                    for resp in responses {
-                        if tx_resp.send(resp).is_err() {
-                            break 'serve;
-                        }
-                    }
-                }
-            }));
-        }
+        let (service, init_error) =
+            match ZipperService::new(arch, num_workers, serving, Arc::clone(&cache)) {
+                Ok(s) => (Some(s), None),
+                Err(e) => (None, Some(e)),
+            };
         Coordinator {
-            tx: Some(tx),
-            rx_resp,
-            workers,
-            submitted: Vec::new(),
-            pending: Vec::new(),
-            pending_counts: HashMap::new(),
+            service,
+            tickets: Vec::new(),
             local: Vec::new(),
-            planner: BatchPlanner::new(serving.max_batch as usize),
+            init_error,
+            last_metrics: None,
             cache,
         }
     }
@@ -443,6 +429,12 @@ impl Coordinator {
         self.cache.stats()
     }
 
+    /// Service metrics captured by the last [`Coordinator::drain`]
+    /// (latency percentiles, batch-size histogram, shed counters).
+    pub fn last_metrics(&self) -> Option<&ServiceMetrics> {
+        self.last_metrics.as_ref()
+    }
+
     /// Enqueue a request. Never panics: if the worker pool is gone (all
     /// workers exited or already drained) the failure is reported as an
     /// error response from `drain`.
@@ -453,139 +445,39 @@ impl Coordinator {
     /// default `max_batch = 1` every submit dispatches immediately).
     /// Partially filled groups ride along at the next [`Coordinator::drain`].
     pub fn submit(&mut self, req: InferenceRequest) {
-        self.submitted.push((req.id, req.run.model.clone(), req.run.dataset.clone()));
-        // structured front-door validation: inconsistent layer chains
-        // (wrong hidden-width count, non-square GGNN widths) fail here
-        // with shape-carrying errors instead of deep in a worker compile
-        if let Err(e) = validate::check_layer_chain(&req.run) {
+        let Some(service) = &self.service else {
+            let msg = match &self.init_error {
+                Some(e) => format!("worker pool unavailable (invalid serving config: {e})"),
+                None => "worker pool unavailable (already drained or all workers exited)".into(),
+            };
             self.local.push(InferenceResponse::failed(
                 req.id,
                 &req.run.model,
                 &req.run.dataset,
-                e,
+                msg,
             ));
             return;
-        }
-        if self.tx.is_none() {
-            self.local.push(InferenceResponse::failed(
-                req.id,
-                &req.run.model,
-                &req.run.dataset,
-                "worker pool unavailable (already drained or all workers exited)".into(),
-            ));
-            return;
-        }
-        let key = (PlanKey::of(&req.run), req.run.functional);
-        let count = self.pending_counts.entry(key.clone()).or_insert(0);
-        *count += 1;
-        let group_full = *count >= self.planner.max_batch();
-        self.pending.push(req);
-        if group_full {
-            self.pending_counts.remove(&key);
-            let mut batch = Vec::with_capacity(self.planner.max_batch());
-            let mut rest = Vec::with_capacity(self.pending.len());
-            for r in std::mem::take(&mut self.pending) {
-                if (PlanKey::of(&r.run), r.run.functional) == key {
-                    batch.push(r);
-                } else {
-                    rest.push(r);
-                }
-            }
-            self.pending = rest;
-            self.dispatch(batch);
-        }
-    }
-
-    /// Send one batch to the worker pool, degrading to local error
-    /// responses if every worker is gone.
-    fn dispatch(&mut self, batch: Vec<InferenceRequest>) {
-        let sent = match &self.tx {
-            Some(tx) => tx.send(batch).map_err(|e| e.0),
-            None => Err(batch),
         };
-        if let Err(batch) = sent {
-            for req in batch {
-                self.local.push(InferenceResponse::failed(
-                    req.id,
-                    &req.run.model,
-                    &req.run.dataset,
-                    "worker pool unavailable (already drained or all workers exited)".into(),
-                ));
-            }
-        }
+        self.tickets.push(service.submit(req));
     }
 
-    /// Group the remaining (partially filled) buffered requests into
-    /// batches and hand them to the worker pool.
-    fn flush(&mut self) {
-        if self.pending.is_empty() {
-            return;
-        }
-        self.pending_counts.clear();
-        let pending = std::mem::take(&mut self.pending);
-        for batch in self.planner.plan(pending) {
-            self.dispatch(batch);
-        }
-    }
-
-    /// Close the queue and collect all responses (arrival order). Every
-    /// submitted request yields exactly one response: requests lost to a
-    /// worker failure come back as error responses instead of being
+    /// Close the queue and collect all responses (submit order). Every
+    /// submitted request yields exactly one response: requests lost to
+    /// a worker failure come back as error responses instead of being
     /// silently dropped.
     pub fn drain(&mut self) -> Vec<InferenceResponse> {
-        self.flush();
-        drop(self.tx.take());
-        let expected = self.submitted.len();
         let mut out = std::mem::take(&mut self.local);
-        while out.len() < expected {
-            match self.rx_resp.recv() {
-                Ok(r) => out.push(r),
-                Err(_) => break, // all workers gone; report losses below
-            }
+        if let Some(service) = self.service.take() {
+            // long grace: the closed-loop contract is "wait for all"
+            service.shutdown(Duration::from_secs(600));
+            self.last_metrics = Some(service.metrics());
         }
-        let mut panics = Vec::new();
-        for w in self.workers.drain(..) {
-            if let Err(p) = w.join() {
-                panics.push(panic_message(p.as_ref()).to_string());
-            }
-        }
-        if out.len() < expected {
-            let detail = if panics.is_empty() {
-                "worker exited early".to_string()
-            } else {
-                format!("worker panicked: {}", panics.join("; "))
-            };
-            // per-id multiset accounting: ids are caller-chosen and may
-            // repeat, so count received responses per id instead of
-            // testing mere presence
-            let mut received: HashMap<u64, usize> = HashMap::new();
-            for r in &out {
-                *received.entry(r.id).or_insert(0) += 1;
-            }
-            let submitted = std::mem::take(&mut self.submitted);
-            for (id, model, dataset) in submitted {
-                match received.get_mut(&id) {
-                    Some(n) if *n > 0 => *n -= 1,
-                    _ => out.push(InferenceResponse::failed(id, &model, &dataset, detail.clone())),
-                }
-            }
-        } else {
-            self.submitted.clear();
-        }
+        out.extend(std::mem::take(&mut self.tickets).into_iter().map(Ticket::wait));
         out
     }
 }
 
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        drop(self.tx.take());
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
-    }
-}
-
-fn panic_message(panic: &(dyn std::any::Any + Send)) -> &str {
+pub(crate) fn panic_message(panic: &(dyn std::any::Any + Send)) -> &str {
     if let Some(s) = panic.downcast_ref::<&str>() {
         s
     } else if let Some(s) = panic.downcast_ref::<String>() {
@@ -593,98 +485,6 @@ fn panic_message(panic: &(dyn std::any::Any + Send)) -> &str {
     } else {
         "non-string panic payload"
     }
-}
-
-/// Fail every member of a batch with the same error.
-fn fail_batch(batch: &[InferenceRequest], error: &str, t0: Instant) -> Vec<InferenceResponse> {
-    batch
-        .iter()
-        .map(|r| InferenceResponse {
-            wall_seconds: t0.elapsed().as_secs_f64(),
-            ..InferenceResponse::failed(r.id, &r.run.model, &r.run.dataset, error.to_string())
-        })
-        .collect()
-}
-
-/// Serve one plan-compatible batch: a single plan lookup, a single
-/// input-independent timing simulation, and (for functional requests)
-/// one tile-parallel batched functional pass covering every lane. The
-/// per-request accounting (wall clock, cache hit, prepare time, output
-/// checksum) is preserved in each response.
-fn handle_batch(
-    arch: &ArchConfig,
-    cache: &PlanCache,
-    serving: ServingConfig,
-    batch: &[InferenceRequest],
-    t0: Instant,
-    state: &mut WorkerState,
-) -> Vec<InferenceResponse> {
-    let first = &batch[0];
-    let (plan, hit) = match cache.get_or_compile(&first.run) {
-        Ok(p) => p,
-        Err(e) => return fail_batch(batch, &e, t0),
-    };
-    let prepare_seconds = if hit { 0.0 } else { t0.elapsed().as_secs_f64() };
-
-    // Timing is a pure function of (arch, plan) — input embeddings never
-    // reach the cycle-level model — so one simulation covers the batch
-    // (all layers of the pipeline, summed).
-    let timing = match plan.simulate_with(arch, false, None, 0, &mut state.timing) {
-        Ok(t) => t,
-        Err(e) => return fail_batch(batch, &e, t0),
-    };
-    let energy = EnergyModel::default();
-    let energy_j = energy.evaluate(&timing.counters, arch.freq_hz).total_j();
-    let layer_costs: Vec<LayerCost> = timing
-        .layers
-        .iter()
-        .map(|lm| LayerCost {
-            feat_in: lm.feat_in,
-            feat_out: lm.feat_out,
-            cycles: lm.cycles,
-            dram_read_bytes: lm.dram_read_bytes,
-            dram_write_bytes: lm.dram_write_bytes,
-            energy_j: energy.evaluate(&lm.counters, arch.freq_hz).total_j(),
-        })
-        .collect();
-
-    // Functional lanes: one scratch-resident batched pass for all
-    // requests, tiles sharded across `serving.exec_threads`.
-    let mut checksums: Vec<Option<f64>> = vec![None; batch.len()];
-    if first.run.functional {
-        let inputs: Vec<Vec<f32>> =
-            batch.iter().map(|r| plan.make_input(r.input_seed)).collect();
-        let lanes: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
-        let outs = match plan.execute_batch_with(
-            &lanes,
-            serving.exec_threads.max(1) as usize,
-            &mut state.batch,
-        ) {
-            Ok(o) => o,
-            Err(e) => return fail_batch(batch, &e, t0),
-        };
-        for (slot, out) in checksums.iter_mut().zip(&outs) {
-            *slot = Some(out.iter().map(|&v| v as f64).sum::<f64>());
-        }
-    }
-
-    batch
-        .iter()
-        .zip(checksums)
-        .map(|(req, output_checksum)| InferenceResponse {
-            sim_cycles: timing.cycles,
-            sim_seconds: timing.seconds(arch),
-            energy_j,
-            layers: layer_costs.clone(),
-            peak_uem_bytes: timing.peak_uem_bytes,
-            wall_seconds: t0.elapsed().as_secs_f64(),
-            plan_cache_hit: hit,
-            prepare_seconds,
-            batch_size: batch.len(),
-            output_checksum,
-            ..InferenceResponse::empty(req.id, &req.run.model, &req.run.dataset)
-        })
-        .collect()
 }
 
 #[cfg(test)]
@@ -744,6 +544,7 @@ mod tests {
             assert!(r.sim_cycles > 0);
             assert!(r.energy_j > 0.0);
             assert_eq!(r.batch_size, 1);
+            assert!(r.wall_seconds >= r.queue_seconds);
         }
     }
 
@@ -829,6 +630,25 @@ mod tests {
     }
 
     #[test]
+    fn invalid_serving_config_degrades_to_error_responses() {
+        // zero queue_cap is rejected by check_serving; the wrapper keeps
+        // the no-panic contract and reports it per request
+        let serving = ServingConfig { queue_cap: 0, ..Default::default() };
+        let mut c = Coordinator::with_serving(
+            ArchConfig::default(),
+            1,
+            serving,
+            Arc::new(PlanCache::new()),
+        );
+        c.submit(InferenceRequest { id: 7, run: small_run("gcn", false), input_seed: 0 });
+        let resp = c.drain();
+        assert_eq!(resp.len(), 1);
+        let err = resp[0].error.as_deref().unwrap();
+        assert!(err.contains("invalid serving config"), "{err}");
+        assert!(err.contains("queue_cap"), "{err}");
+    }
+
+    #[test]
     fn batch_planner_groups_by_plan_and_caps_size() {
         let planner = BatchPlanner::new(3);
         let reqs: Vec<InferenceRequest> = (0..7)
@@ -874,7 +694,7 @@ mod tests {
 
     #[test]
     fn batched_compile_error_fails_every_member() {
-        let serving = ServingConfig { exec_threads: 2, max_batch: 4 };
+        let serving = ServingConfig { exec_threads: 2, max_batch: 4, ..Default::default() };
         let mut c = Coordinator::with_serving(
             ArchConfig::default(),
             1,
@@ -893,7 +713,7 @@ mod tests {
 
     #[test]
     fn batched_responses_report_batch_size_and_shared_timing() {
-        let serving = ServingConfig { exec_threads: 2, max_batch: 8 };
+        let serving = ServingConfig { exec_threads: 2, max_batch: 8, ..Default::default() };
         let mut c = Coordinator::with_serving(
             ArchConfig::default(),
             1,
@@ -919,5 +739,10 @@ mod tests {
         }
         // different seeds → different embeddings → different checksums
         assert_ne!(resp[0].output_checksum, resp[1].output_checksum);
+        // the compat wrapper surfaces the service metrics after drain
+        let m = c.last_metrics().expect("metrics after drain");
+        assert_eq!(m.submitted, 5);
+        assert_eq!(m.completed, 5);
+        assert_eq!(m.batch_size_hist[5], 1);
     }
 }

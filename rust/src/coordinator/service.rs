@@ -1,0 +1,966 @@
+//! Always-on serving runtime: bounded admission, dual-trigger batching,
+//! per-request deadlines, load shedding, graceful shutdown.
+//!
+//! [`ZipperService`] is the long-lived front-end the ROADMAP's serving
+//! item calls for: unlike the closed-loop [`super::Coordinator`]
+//! (submit a burst, block in `drain`), the service accepts requests
+//! *while previous batches execute* and answers each one through its
+//! own [`Ticket`]. The request life cycle is a four-stage state
+//! machine (DESIGN.md §3.6):
+//!
+//! ```text
+//! submit ──► ADMIT ──► ACCUMULATE ──► DISPATCH ──► respond
+//!              │            │             │
+//!              │ queue full │ timer/fill  │ deadline expired
+//!              ▼            ▼             ▼
+//!         QueueFull      (flush)     DeadlineExceeded
+//! ```
+//!
+//! * **Bounded admission** — at most `queue_cap` requests may be
+//!   admitted-but-not-picked-up. Overflow either sheds the submit with
+//!   a structured [`RejectReason::QueueFull`]
+//!   ([`crate::config::OverflowPolicy::Reject`], the default) or parks
+//!   the submitting thread until capacity frees
+//!   ([`crate::config::OverflowPolicy::Block`]).
+//! * **Dual-trigger batching** — requests accumulate per
+//!   `(PlanKey, functional)` group. A group flushes to the worker pool
+//!   when it reaches `max_batch` (fill trigger, checked at submit) *or*
+//!   when its oldest member has waited `max_wait_us` (timer trigger,
+//!   driven by a dedicated dispatcher thread waiting on a condvar with
+//!   timeout — no busy-wait).
+//! * **Deadlines** — a request past its deadline is rejected at
+//!   admission and shed again at dispatch (the queue wait may have
+//!   consumed the budget), always with
+//!   [`RejectReason::DeadlineExceeded`].
+//! * **Graceful shutdown** — [`ZipperService::shutdown`] stops
+//!   admission, flushes every partial batch, waits up to the grace
+//!   period for the backlog to drain, then deterministically fails
+//!   whatever is still queued with [`RejectReason::ShuttingDown`].
+//! * **Metrics** — [`ZipperService::metrics`] snapshots p50/p95/p99
+//!   end-to-end latency (fixed-bucket [`LogHistogram`]), current/peak
+//!   queue depth, the batch-size histogram, per-reason shed counters,
+//!   and the plan-cache hit rate.
+//!
+//! Every submitted request yields **exactly one** outcome — completed,
+//! failed (validation/compile/panic error), or rejected with a
+//! structured reason. Nothing hangs, nothing is dropped silently:
+//! `submitted == completed + failed + rejected` holds at every
+//! quiescent point (asserted by the sustained-load `perf_serving`
+//! scenario and `rust/tests/service.rs`).
+
+use super::{
+    panic_message, validate, InferenceRequest, InferenceResponse, LayerCost, RejectReason,
+};
+use crate::config::{ArchConfig, OverflowPolicy, ServingConfig};
+use crate::energy::EnergyModel;
+use crate::plan::{CacheStats, PlanCache, PlanKey};
+use crate::sim::parallel::BatchScratch;
+use crate::sim::ExecScratch;
+use crate::util::stats::LogHistogram;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Test-only panic injection: a request whose `run.seed` equals this
+/// sentinel panics inside the worker's guarded execution region, after
+/// admission and batching. Integration tests use it to prove the
+/// exactly-once response accounting under worker failure (poisoned
+/// batches fail with a structured error, the worker survives, queued
+/// and later requests are unaffected) without a special build. The
+/// seed participates in the plan key, so poisoned requests never share
+/// a batch with healthy ones.
+#[doc(hidden)]
+pub const INJECT_PANIC_SEED: u64 = 0x7a69_7070_6572_2121; // "zipper!!"
+
+/// One admitted request: the public request plus the service-side
+/// accounting state (enqueue instant for queue/wall latency, resolved
+/// absolute deadline, and the response channel backing its [`Ticket`]).
+struct Pending {
+    req: InferenceRequest,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+    tx: mpsc::Sender<InferenceResponse>,
+}
+
+impl Pending {
+    fn failed(&self, error: &str, picked_up: Instant) -> InferenceResponse {
+        InferenceResponse {
+            wall_seconds: self.enqueued.elapsed().as_secs_f64(),
+            queue_seconds: picked_up.duration_since(self.enqueued).as_secs_f64(),
+            ..InferenceResponse::failed(
+                self.req.id,
+                &self.req.run.model,
+                &self.req.run.dataset,
+                error.to_string(),
+            )
+        }
+    }
+
+    /// A structured rejection: the whole lifetime was queue time.
+    fn rejected(&self, reason: RejectReason) -> InferenceResponse {
+        let waited = self.enqueued.elapsed().as_secs_f64();
+        InferenceResponse {
+            wall_seconds: waited,
+            queue_seconds: waited,
+            reject: Some(reason),
+            ..InferenceResponse::failed(
+                self.req.id,
+                &self.req.run.model,
+                &self.req.run.dataset,
+                format!("rejected: {reason}"),
+            )
+        }
+    }
+}
+
+/// A per-`(PlanKey, functional)` accumulator group (always < max_batch
+/// members — fill-triggered groups move to the ready queue at submit).
+struct Accum {
+    reqs: Vec<Pending>,
+    /// Enqueue instant of the oldest member — the timer trigger's base.
+    oldest: Instant,
+}
+
+/// Counters owned by the state mutex (no atomics: every writer already
+/// holds the lock).
+struct Counters {
+    submitted: u64,
+    completed: u64,
+    failed: u64,
+    rejected_queue_full: u64,
+    rejected_deadline: u64,
+    shed_deadline: u64,
+    rejected_shutdown: u64,
+    peak_queue_depth: usize,
+    batches: u64,
+    /// Dispatched-batch size histogram, index = size (0 unused).
+    batch_sizes: Vec<u64>,
+    /// End-to-end (submit → response) latency of served requests, µs.
+    latency: LogHistogram,
+}
+
+impl Counters {
+    fn new(max_batch: usize) -> Counters {
+        Counters {
+            submitted: 0,
+            completed: 0,
+            failed: 0,
+            rejected_queue_full: 0,
+            rejected_deadline: 0,
+            shed_deadline: 0,
+            rejected_shutdown: 0,
+            peak_queue_depth: 0,
+            batches: 0,
+            batch_sizes: vec![0; max_batch + 1],
+            latency: LogHistogram::new(),
+        }
+    }
+
+    fn count_reject(&mut self, reason: RejectReason) {
+        match reason {
+            RejectReason::QueueFull => self.rejected_queue_full += 1,
+            RejectReason::DeadlineExceeded => self.rejected_deadline += 1,
+            RejectReason::ShuttingDown => self.rejected_shutdown += 1,
+        }
+    }
+}
+
+struct State {
+    accum: HashMap<(PlanKey, bool), Accum>,
+    ready: VecDeque<Vec<Pending>>,
+    /// Requests admitted but not yet picked up (accum + ready).
+    queued: usize,
+    /// Requests picked up by a worker, response not yet recorded.
+    in_flight: usize,
+    /// Admission stopped (shutdown started).
+    stop_admission: bool,
+    /// Workers and dispatcher exit (ready queue is empty by then).
+    halt: bool,
+    metrics: Counters,
+}
+
+struct Inner {
+    state: Mutex<State>,
+    /// Workers wait here for ready batches.
+    work: Condvar,
+    /// The dispatcher waits here (with timeout) for the next flush.
+    timer: Condvar,
+    /// Blocked submitters (`OverflowPolicy::Block`) wait here for space.
+    space: Condvar,
+    /// `shutdown` waits here for `queued == 0 && in_flight == 0`.
+    done: Condvar,
+}
+
+impl Inner {
+    fn lock(&self) -> MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// The receipt for one submitted request: resolves to **exactly one**
+/// [`InferenceResponse`] — completed, failed, or rejected with a
+/// structured [`RejectReason`]. Waiting never hangs: if the serving
+/// side is torn down without answering (a bug, not a code path), a
+/// synthesized error response is returned instead.
+pub struct Ticket {
+    id: u64,
+    model: String,
+    dataset: String,
+    rx: mpsc::Receiver<InferenceResponse>,
+}
+
+impl Ticket {
+    /// Block until the response arrives (or synthesize an error if the
+    /// serving side vanished without answering).
+    pub fn wait(self) -> InferenceResponse {
+        self.rx.recv().unwrap_or_else(|_| {
+            InferenceResponse::failed(
+                self.id,
+                &self.model,
+                &self.dataset,
+                "response channel closed: worker lost without answering".into(),
+            )
+        })
+    }
+
+    /// Non-blocking poll: `Some(response)` once resolved.
+    pub fn poll(&self) -> Option<InferenceResponse> {
+        self.rx.try_recv().ok()
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+/// Point-in-time service metrics (all counters monotone except
+/// `queue_depth`/`in_flight`). The accounting identity
+/// `submitted == completed + failed + rejected_total() + queue_depth +
+/// in_flight` holds at every snapshot.
+#[derive(Clone, Debug)]
+pub struct ServiceMetrics {
+    pub submitted: u64,
+    /// Served without error.
+    pub completed: u64,
+    /// Answered with an error (validation, compile, worker panic).
+    pub failed: u64,
+    pub rejected_queue_full: u64,
+    /// Deadline rejections at admission.
+    pub rejected_deadline: u64,
+    /// Deadline sheds at dispatch (queue wait consumed the budget).
+    pub shed_deadline: u64,
+    pub rejected_shutdown: u64,
+    pub queue_depth: usize,
+    pub peak_queue_depth: usize,
+    pub in_flight: usize,
+    /// Batches dispatched to workers (post-shed sizes).
+    pub batches: u64,
+    /// Dispatched-batch size histogram, index = batch size (0 unused).
+    pub batch_size_hist: Vec<u64>,
+    /// End-to-end latency percentiles of served requests, µs
+    /// (fixed-bucket log₂ histogram — see [`LogHistogram`]).
+    pub latency_p50_us: u64,
+    pub latency_p95_us: u64,
+    pub latency_p99_us: u64,
+    pub latency_max_us: u64,
+    pub latency_count: u64,
+    pub plan_cache: CacheStats,
+}
+
+impl ServiceMetrics {
+    /// All structured rejections (admission + dispatch sheds).
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected_queue_full
+            + self.rejected_deadline
+            + self.shed_deadline
+            + self.rejected_shutdown
+    }
+
+    /// Fraction of submitted requests shed with a structured reason.
+    pub fn shed_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.rejected_total() as f64 / self.submitted as f64
+        }
+    }
+
+    /// Mean dispatched batch size (0 when nothing was dispatched).
+    pub fn mean_batch_size(&self) -> f64 {
+        let (mut n, mut sum) = (0u64, 0u64);
+        for (size, &count) in self.batch_size_hist.iter().enumerate() {
+            n += count;
+            sum += size as u64 * count;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum as f64 / n as f64
+        }
+    }
+}
+
+/// What [`ZipperService::shutdown`] observed.
+#[derive(Clone, Copy, Debug)]
+pub struct ShutdownReport {
+    /// The backlog drained within the grace period.
+    pub graceful: bool,
+    /// Requests still queued past grace, failed with `ShuttingDown`.
+    pub shed: u64,
+    pub wall_seconds: f64,
+}
+
+/// Per-worker pooled scratches, reused across every batch the worker
+/// serves (the allocation-light hot path).
+struct WorkerState {
+    timing: ExecScratch,
+    batch: BatchScratch,
+}
+
+/// The always-on serving runtime. See the [module docs](self) for the
+/// state machine and guarantees.
+///
+/// # Examples
+///
+/// Submit while serving, then shut down gracefully:
+///
+/// ```
+/// use std::sync::Arc;
+/// use std::time::Duration;
+/// use zipper::config::{ArchConfig, RunConfig, ServingConfig};
+/// use zipper::coordinator::service::ZipperService;
+/// use zipper::coordinator::InferenceRequest;
+/// use zipper::plan::PlanCache;
+///
+/// let mut run = RunConfig::default();
+/// run.dataset = "CR".into(); // tiny citation-graph stand-in
+/// run.scale = 64;
+/// run.feat_in = 8;
+/// run.feat_out = 8;
+///
+/// // batch up to 4 requests, flush partial batches after 500 µs
+/// let serving = ServingConfig { max_batch: 4, max_wait_us: 500, ..Default::default() };
+/// let svc =
+///     ZipperService::new(ArchConfig::default(), 2, serving, Arc::new(PlanCache::new())).unwrap();
+/// let tickets: Vec<_> = (0..3)
+///     .map(|id| svc.submit(InferenceRequest { id, run: run.clone(), input_seed: id }))
+///     .collect();
+/// let report = svc.shutdown(Duration::from_secs(60));
+/// assert!(report.graceful);
+/// for t in tickets {
+///     let resp = t.wait();
+///     assert!(resp.error.is_none() && resp.reject.is_none());
+/// }
+/// let m = svc.metrics();
+/// assert_eq!((m.submitted, m.completed), (3, 3));
+/// assert_eq!(m.queue_depth, 0);
+/// ```
+pub struct ZipperService {
+    inner: Arc<Inner>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    serving: ServingConfig,
+    cache: Arc<PlanCache>,
+}
+
+impl ZipperService {
+    /// Spawn the worker pool (`num_workers`, clamped to ≥ 1) and the
+    /// batching dispatcher. Fails fast on self-contradictory serving
+    /// knobs (see [`validate::check_serving`]).
+    pub fn new(
+        arch: ArchConfig,
+        num_workers: usize,
+        serving: ServingConfig,
+        cache: Arc<PlanCache>,
+    ) -> Result<ZipperService, String> {
+        validate::check_serving(&serving)?;
+        let max_batch = serving.max_batch.max(1) as usize;
+        let inner = Arc::new(Inner {
+            state: Mutex::new(State {
+                accum: HashMap::new(),
+                ready: VecDeque::new(),
+                queued: 0,
+                in_flight: 0,
+                stop_admission: false,
+                halt: false,
+                metrics: Counters::new(max_batch),
+            }),
+            work: Condvar::new(),
+            timer: Condvar::new(),
+            space: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let mut threads = Vec::new();
+        for i in 0..num_workers.max(1) {
+            let inner = Arc::clone(&inner);
+            let cache = Arc::clone(&cache);
+            let handle = std::thread::Builder::new()
+                .name(format!("zipper-worker-{i}"))
+                .spawn(move || worker_loop(&inner, arch, serving, &cache))
+                .map_err(|e| format!("spawn worker: {e}"))?;
+            threads.push(handle);
+        }
+        {
+            let inner = Arc::clone(&inner);
+            let max_wait = Duration::from_micros(serving.max_wait_us);
+            let handle = std::thread::Builder::new()
+                .name("zipper-dispatch".into())
+                .spawn(move || dispatcher_loop(&inner, max_wait))
+                .map_err(|e| format!("spawn dispatcher: {e}"))?;
+            threads.push(handle);
+        }
+        Ok(ZipperService { inner, threads: Mutex::new(threads), serving, cache })
+    }
+
+    pub fn cache(&self) -> &Arc<PlanCache> {
+        &self.cache
+    }
+
+    pub fn serving(&self) -> ServingConfig {
+        self.serving
+    }
+
+    /// Admit a request under the service's `default_deadline_us`.
+    pub fn submit(&self, req: InferenceRequest) -> Ticket {
+        self.submit_with_deadline(req, None)
+    }
+
+    /// Admit a request with an explicit absolute deadline (`None` =
+    /// fall back to the service default; a default of 0 means no
+    /// deadline). Always returns a [`Ticket`] that resolves to exactly
+    /// one response; admission rejections resolve it immediately.
+    ///
+    /// Under `OverflowPolicy::Block` this call parks until queue
+    /// capacity frees, the deadline expires, or shutdown begins.
+    pub fn submit_with_deadline(
+        &self,
+        req: InferenceRequest,
+        deadline: Option<Instant>,
+    ) -> Ticket {
+        let (tx, rx) = mpsc::channel();
+        let ticket = Ticket {
+            id: req.id,
+            model: req.run.model.clone(),
+            dataset: req.run.dataset.clone(),
+            rx,
+        };
+        let enqueued = Instant::now();
+        let deadline = deadline.or_else(|| match self.serving.default_deadline_us {
+            0 => None,
+            us => Some(enqueued + Duration::from_micros(us)),
+        });
+        // structured front-door validation: malformed layer chains and
+        // unknown models never reach the worker pool
+        if let Err(e) = validate::check_layer_chain(&req.run) {
+            let mut st = self.inner.lock();
+            st.metrics.submitted += 1;
+            st.metrics.failed += 1;
+            drop(st);
+            let _ = tx.send(InferenceResponse::failed(req.id, &req.run.model, &req.run.dataset, e));
+            return ticket;
+        }
+        let p = Pending { req, enqueued, deadline, tx };
+        let mut st = self.inner.lock();
+        st.metrics.submitted += 1;
+        if st.stop_admission {
+            Self::reject(&mut st, p, RejectReason::ShuttingDown);
+            return ticket;
+        }
+        if p.deadline.is_some_and(|d| d <= Instant::now()) {
+            Self::reject(&mut st, p, RejectReason::DeadlineExceeded);
+            return ticket;
+        }
+        let cap = self.serving.queue_cap.max(1) as usize;
+        if st.queued >= cap {
+            match self.serving.overflow {
+                OverflowPolicy::Reject => {
+                    Self::reject(&mut st, p, RejectReason::QueueFull);
+                    return ticket;
+                }
+                OverflowPolicy::Block => {
+                    // backpressure: park until space frees or shutdown
+                    while st.queued >= cap && !st.stop_admission {
+                        st = self.inner.space.wait(st).unwrap_or_else(|e| e.into_inner());
+                    }
+                    if st.stop_admission {
+                        Self::reject(&mut st, p, RejectReason::ShuttingDown);
+                        return ticket;
+                    }
+                    if p.deadline.is_some_and(|d| d <= Instant::now()) {
+                        Self::reject(&mut st, p, RejectReason::DeadlineExceeded);
+                        return ticket;
+                    }
+                }
+            }
+        }
+        // admit into the request's accumulator group
+        st.queued += 1;
+        st.metrics.peak_queue_depth = st.metrics.peak_queue_depth.max(st.queued);
+        let key = (PlanKey::of(&p.req.run), p.req.run.functional);
+        let max_batch = self.serving.max_batch.max(1) as usize;
+        let full = {
+            let acc = st.accum.entry(key.clone()).or_insert_with(|| Accum {
+                reqs: Vec::with_capacity(max_batch),
+                oldest: enqueued,
+            });
+            acc.reqs.push(p);
+            acc.reqs.len() >= max_batch
+        };
+        if full {
+            // fill trigger: hand the whole group to the worker pool now
+            if let Some(acc) = st.accum.remove(&key) {
+                st.ready.push_back(acc.reqs);
+            }
+            self.inner.work.notify_all();
+        } else {
+            // timer trigger: let the dispatcher re-arm for this group
+            self.inner.timer.notify_all();
+        }
+        ticket
+    }
+
+    fn reject(st: &mut State, p: Pending, reason: RejectReason) {
+        st.metrics.count_reject(reason);
+        let resp = p.rejected(reason);
+        let _ = p.tx.send(resp);
+    }
+
+    /// Snapshot the service counters (callable at any time, including
+    /// after shutdown).
+    pub fn metrics(&self) -> ServiceMetrics {
+        let st = self.inner.lock();
+        let m = &st.metrics;
+        ServiceMetrics {
+            submitted: m.submitted,
+            completed: m.completed,
+            failed: m.failed,
+            rejected_queue_full: m.rejected_queue_full,
+            rejected_deadline: m.rejected_deadline,
+            shed_deadline: m.shed_deadline,
+            rejected_shutdown: m.rejected_shutdown,
+            queue_depth: st.queued,
+            peak_queue_depth: m.peak_queue_depth,
+            in_flight: st.in_flight,
+            batches: m.batches,
+            batch_size_hist: m.batch_sizes.clone(),
+            latency_p50_us: m.latency.percentile(50.0),
+            latency_p95_us: m.latency.percentile(95.0),
+            latency_p99_us: m.latency.percentile(99.0),
+            latency_max_us: m.latency.max(),
+            latency_count: m.latency.count(),
+            plan_cache: self.cache.stats(),
+        }
+    }
+
+    /// Graceful shutdown: stop admission, flush every partial batch,
+    /// wait up to `grace` for the backlog to drain, then
+    /// deterministically fail whatever is still queued with
+    /// [`RejectReason::ShuttingDown`] and join the threads. In-flight
+    /// batches always finish and answer their requests (a worker is
+    /// never killed mid-batch); the grace period bounds only the wait
+    /// for *queued* work. Idempotent — later calls return immediately.
+    pub fn shutdown(&self, grace: Duration) -> ShutdownReport {
+        let t0 = Instant::now();
+        {
+            let mut st = self.inner.lock();
+            if st.halt {
+                return ShutdownReport { graceful: true, shed: 0, wall_seconds: 0.0 };
+            }
+            st.stop_admission = true;
+            // flush partial batches so the drain below can finish them
+            let groups: Vec<Vec<Pending>> = st.accum.drain().map(|(_, acc)| acc.reqs).collect();
+            for g in groups {
+                st.ready.push_back(g);
+            }
+        }
+        self.inner.work.notify_all();
+        self.inner.timer.notify_all();
+        self.inner.space.notify_all();
+
+        let st = self.inner.lock();
+        let (mut st, _) = self
+            .inner
+            .done
+            .wait_timeout_while(st, grace, |s| s.queued > 0 || s.in_flight > 0)
+            .unwrap_or_else(|e| e.into_inner());
+        let graceful = st.queued == 0 && st.in_flight == 0;
+        // past grace: fail the remaining backlog deterministically
+        let mut shed = 0u64;
+        let leftovers: Vec<Vec<Pending>> = st.ready.drain(..).collect();
+        for batch in leftovers {
+            for p in batch {
+                shed += 1;
+                Self::reject(&mut st, p, RejectReason::ShuttingDown);
+            }
+        }
+        st.queued = 0;
+        st.halt = true;
+        drop(st);
+        self.inner.work.notify_all();
+        self.inner.timer.notify_all();
+        self.inner.space.notify_all();
+        for h in self.threads.lock().unwrap_or_else(|e| e.into_inner()).drain(..) {
+            let _ = h.join();
+        }
+        ShutdownReport { graceful, shed, wall_seconds: t0.elapsed().as_secs_f64() }
+    }
+}
+
+impl Drop for ZipperService {
+    fn drop(&mut self) {
+        self.shutdown(Duration::from_millis(100));
+    }
+}
+
+/// The dispatcher thread: drives the `max_wait_us` timer trigger with a
+/// condvar-with-timeout — it sleeps until the oldest accumulated
+/// request's flush deadline (or indefinitely when nothing is pending /
+/// the timer is disabled) and is re-armed by `submit`. It never blocks
+/// on workers and never holds the lock while sleeping, so it cannot
+/// deadlock with them (DESIGN.md §3.6).
+fn dispatcher_loop(inner: &Inner, max_wait: Duration) {
+    let timer_on = max_wait > Duration::ZERO;
+    let mut st = inner.lock();
+    loop {
+        if st.halt {
+            return;
+        }
+        let mut next: Option<Instant> = None;
+        if timer_on {
+            let now = Instant::now();
+            let expired: Vec<(PlanKey, bool)> = st
+                .accum
+                .iter()
+                .filter(|(_, acc)| now.duration_since(acc.oldest) >= max_wait)
+                .map(|(k, _)| k.clone())
+                .collect();
+            let flushed = !expired.is_empty();
+            for key in expired {
+                if let Some(acc) = st.accum.remove(&key) {
+                    st.ready.push_back(acc.reqs);
+                }
+            }
+            if flushed {
+                inner.work.notify_all();
+            }
+            next = st.accum.values().map(|acc| acc.oldest + max_wait).min();
+        }
+        st = match next {
+            Some(deadline) => {
+                let wait = deadline.saturating_duration_since(Instant::now());
+                let (g, _) = inner.timer.wait_timeout(st, wait).unwrap_or_else(|e| e.into_inner());
+                g
+            }
+            None => inner.timer.wait(st).unwrap_or_else(|e| e.into_inner()),
+        };
+    }
+}
+
+/// A worker thread: pop a ready batch, shed expired members, execute
+/// the rest in one batched pass, answer every member, record metrics.
+/// Panics inside execution are caught per batch — the members fail
+/// with a structured error and the worker keeps serving.
+fn worker_loop(inner: &Inner, arch: ArchConfig, serving: ServingConfig, cache: &Arc<PlanCache>) {
+    let mut ws = WorkerState { timing: ExecScratch::new(), batch: BatchScratch::new() };
+    loop {
+        let batch = {
+            let mut st = inner.lock();
+            loop {
+                if let Some(b) = st.ready.pop_front() {
+                    st.queued = st.queued.saturating_sub(b.len());
+                    st.in_flight += b.len();
+                    break Some(b);
+                }
+                if st.halt {
+                    break None;
+                }
+                st = inner.work.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let Some(batch) = batch else { return };
+        // queue capacity freed — wake blocked submitters
+        inner.space.notify_all();
+        let picked_up = Instant::now();
+        let total = batch.len();
+
+        // shed members whose deadline expired while queued
+        let mut live: Vec<Pending> = Vec::with_capacity(total);
+        let mut shed_resps: Vec<(Pending, InferenceResponse)> = Vec::new();
+        for p in batch {
+            if p.deadline.is_some_and(|d| d <= picked_up) {
+                let resp = p.rejected(RejectReason::DeadlineExceeded);
+                shed_resps.push((p, resp));
+            } else {
+                live.push(p);
+            }
+        }
+        let shed = shed_resps.len() as u64;
+        for (p, resp) in shed_resps {
+            let _ = p.tx.send(resp);
+        }
+
+        let responses = if live.is_empty() {
+            Vec::new()
+        } else {
+            catch_unwind(AssertUnwindSafe(|| {
+                execute_batch(&arch, cache, serving, &live, picked_up, &mut ws)
+            }))
+            .unwrap_or_else(|panic| {
+                let msg = format!("worker panicked: {}", panic_message(panic.as_ref()));
+                live.iter().map(|p| p.failed(&msg, picked_up)).collect()
+            })
+        };
+
+        let mut ok = 0u64;
+        let mut failed = 0u64;
+        let mut lat_us: Vec<u64> = Vec::with_capacity(live.len());
+        let live_len = live.len();
+        for (p, resp) in live.iter().zip(responses) {
+            if resp.error.is_none() {
+                ok += 1;
+            } else {
+                failed += 1;
+            }
+            lat_us.push((resp.wall_seconds * 1e6) as u64);
+            let _ = p.tx.send(resp);
+        }
+
+        let mut st = inner.lock();
+        st.in_flight = st.in_flight.saturating_sub(total);
+        st.metrics.shed_deadline += shed;
+        st.metrics.completed += ok;
+        st.metrics.failed += failed;
+        for us in lat_us {
+            st.metrics.latency.record(us);
+        }
+        if live_len > 0 {
+            st.metrics.batches += 1;
+            let idx = live_len.min(st.metrics.batch_sizes.len() - 1);
+            st.metrics.batch_sizes[idx] += 1;
+        }
+        if st.queued == 0 && st.in_flight == 0 {
+            inner.done.notify_all();
+        }
+    }
+}
+
+/// Serve one plan-compatible batch: a single plan lookup, a single
+/// input-independent timing simulation, and (for functional requests)
+/// one tile-parallel batched functional pass covering every lane.
+/// Per-request accounting: `wall_seconds` spans submit → response
+/// (queue wait included), `queue_seconds` is the admission-to-pickup
+/// slice, `prepare_seconds` is the cold plan-compile cost.
+fn execute_batch(
+    arch: &ArchConfig,
+    cache: &PlanCache,
+    serving: ServingConfig,
+    batch: &[Pending],
+    picked_up: Instant,
+    state: &mut WorkerState,
+) -> Vec<InferenceResponse> {
+    for p in batch {
+        assert_ne!(
+            p.req.run.seed,
+            INJECT_PANIC_SEED,
+            "injected worker panic (INJECT_PANIC_SEED test hook)"
+        );
+    }
+    let first = &batch[0];
+    let (plan, hit) = match cache.get_or_compile(&first.req.run) {
+        Ok(p) => p,
+        Err(e) => return batch.iter().map(|p| p.failed(&e, picked_up)).collect(),
+    };
+    let prepare_seconds = if hit { 0.0 } else { picked_up.elapsed().as_secs_f64() };
+
+    // Timing is a pure function of (arch, plan) — input embeddings never
+    // reach the cycle-level model — so one simulation covers the batch
+    // (all layers of the pipeline, summed).
+    let timing = match plan.simulate_with(arch, false, None, 0, &mut state.timing) {
+        Ok(t) => t,
+        Err(e) => return batch.iter().map(|p| p.failed(&e, picked_up)).collect(),
+    };
+    let energy = EnergyModel::default();
+    let energy_j = energy.evaluate(&timing.counters, arch.freq_hz).total_j();
+    let layer_costs: Vec<LayerCost> = timing
+        .layers
+        .iter()
+        .map(|lm| LayerCost {
+            feat_in: lm.feat_in,
+            feat_out: lm.feat_out,
+            cycles: lm.cycles,
+            dram_read_bytes: lm.dram_read_bytes,
+            dram_write_bytes: lm.dram_write_bytes,
+            energy_j: energy.evaluate(&lm.counters, arch.freq_hz).total_j(),
+        })
+        .collect();
+
+    // Functional lanes: one scratch-resident batched pass for all
+    // requests, tiles sharded across `serving.exec_threads`.
+    let mut checksums: Vec<Option<f64>> = vec![None; batch.len()];
+    if first.req.run.functional {
+        let inputs: Vec<Vec<f32>> =
+            batch.iter().map(|p| plan.make_input(p.req.input_seed)).collect();
+        let lanes: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let outs = match plan.execute_batch_with(
+            &lanes,
+            serving.exec_threads.max(1) as usize,
+            &mut state.batch,
+        ) {
+            Ok(o) => o,
+            Err(e) => return batch.iter().map(|p| p.failed(&e, picked_up)).collect(),
+        };
+        for (slot, out) in checksums.iter_mut().zip(&outs) {
+            *slot = Some(out.iter().map(|&v| v as f64).sum::<f64>());
+        }
+    }
+
+    batch
+        .iter()
+        .zip(checksums)
+        .map(|(p, output_checksum)| InferenceResponse {
+            sim_cycles: timing.cycles,
+            sim_seconds: timing.seconds(arch),
+            energy_j,
+            layers: layer_costs.clone(),
+            peak_uem_bytes: timing.peak_uem_bytes,
+            wall_seconds: p.enqueued.elapsed().as_secs_f64(),
+            queue_seconds: picked_up.duration_since(p.enqueued).as_secs_f64(),
+            plan_cache_hit: hit,
+            prepare_seconds,
+            batch_size: batch.len(),
+            output_checksum,
+            ..InferenceResponse::empty(p.req.id, &p.req.run.model, &p.req.run.dataset)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::tiling::{Reorder, TilingConfig, TilingMode};
+
+    fn small_run(model: &str, functional: bool) -> RunConfig {
+        RunConfig {
+            model: model.into(),
+            dataset: "CR".into(),
+            scale: 16,
+            feat_in: 16,
+            feat_out: 16,
+            layers: 1,
+            hidden: Vec::new(),
+            tiling: TilingConfig {
+                dst_part: 64,
+                src_part: 64,
+                mode: TilingMode::Sparse,
+                reorder: Reorder::InDegree,
+                threads: 1,
+            },
+            e2v: true,
+            functional,
+            seed: 3,
+            serving: Default::default(),
+            kernels: Default::default(),
+        }
+    }
+
+    fn req(id: u64, run: RunConfig) -> InferenceRequest {
+        InferenceRequest { id, run, input_seed: id }
+    }
+
+    fn service(workers: usize, serving: ServingConfig) -> ZipperService {
+        ZipperService::new(
+            ArchConfig::default(),
+            workers,
+            serving,
+            Arc::new(PlanCache::new()),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn serves_and_accounts_exactly_once() {
+        let svc = service(2, ServingConfig::default());
+        let tickets: Vec<Ticket> =
+            (0..4).map(|i| svc.submit(req(i, small_run("gcn", true)))).collect();
+        let resps: Vec<InferenceResponse> = tickets.into_iter().map(Ticket::wait).collect();
+        for r in &resps {
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert!(r.reject.is_none());
+            assert!(r.output_checksum.is_some());
+            assert!(r.wall_seconds >= r.queue_seconds);
+        }
+        let report = svc.shutdown(Duration::from_secs(30));
+        assert!(report.graceful);
+        assert_eq!(report.shed, 0);
+        let m = svc.metrics();
+        assert_eq!((m.submitted, m.completed, m.failed), (4, 4, 0));
+        assert_eq!(m.rejected_total(), 0);
+        assert_eq!((m.queue_depth, m.in_flight), (0, 0));
+        assert_eq!(m.latency_count, 4);
+        assert!(m.latency_p99_us >= m.latency_p50_us);
+        assert_eq!(m.batch_size_hist.iter().sum::<u64>(), m.batches);
+    }
+
+    #[test]
+    fn queue_full_rejects_deterministically() {
+        // max_batch 8 with a far timer: the first request accumulates
+        // and is NOT picked up, so the depth-1 queue is provably full
+        // when the second arrives — no racing against workers.
+        let serving = ServingConfig {
+            max_batch: 8,
+            max_wait_us: 60_000_000,
+            queue_cap: 1,
+            ..Default::default()
+        };
+        let svc = service(1, serving);
+        let t0 = svc.submit(req(0, small_run("gcn", false)));
+        let t1 = svc.submit(req(1, small_run("gcn", false)));
+        let r1 = t1.wait(); // resolved immediately at admission
+        assert_eq!(r1.reject, Some(RejectReason::QueueFull));
+        assert!(r1.error.as_deref().unwrap().contains("queue_full"), "{:?}", r1.error);
+        let report = svc.shutdown(Duration::from_secs(30));
+        assert!(report.graceful);
+        let r0 = t0.wait(); // flushed and served by the shutdown drain
+        assert!(r0.error.is_none(), "{:?}", r0.error);
+        let m = svc.metrics();
+        assert_eq!(m.rejected_queue_full, 1);
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.peak_queue_depth, 1);
+    }
+
+    #[test]
+    fn expired_deadline_rejected_at_admission() {
+        let svc = service(1, ServingConfig::default());
+        let t = svc.submit_with_deadline(req(0, small_run("gcn", false)), Some(Instant::now()));
+        let r = t.wait();
+        assert_eq!(r.reject, Some(RejectReason::DeadlineExceeded));
+        svc.shutdown(Duration::from_secs(5));
+        assert_eq!(svc.metrics().rejected_deadline, 1);
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_rejected_structurally() {
+        let svc = service(1, ServingConfig::default());
+        svc.shutdown(Duration::from_secs(5));
+        let t = svc.submit(req(0, small_run("gcn", false)));
+        let r = t.wait();
+        assert_eq!(r.reject, Some(RejectReason::ShuttingDown));
+        assert_eq!(svc.metrics().rejected_shutdown, 1);
+    }
+
+    #[test]
+    fn malformed_request_fails_fast_with_shape_error() {
+        let svc = service(1, ServingConfig::default());
+        let mut bad = small_run("gcn", false);
+        bad.layers = 3;
+        bad.hidden = vec![8]; // needs 2 widths
+        let r = svc.submit(req(0, bad)).wait();
+        assert!(r.error.as_deref().unwrap().contains("3-layer"), "{:?}", r.error);
+        assert!(r.reject.is_none(), "validation failures are errors, not sheds");
+        svc.shutdown(Duration::from_secs(5));
+        let m = svc.metrics();
+        assert_eq!((m.submitted, m.failed), (1, 1));
+    }
+}

@@ -32,7 +32,7 @@
 //! (DESIGN.md §6); with the test-scale weights the difference is ≪ 1e-3.
 
 use super::Session;
-use crate::config::{ArchConfig, KernelPolicy, RunConfig};
+use crate::config::{ArchConfig, KernelPolicy, OverflowPolicy, RunConfig, ServingConfig};
 use crate::graph::generators;
 use crate::models::{ModelKind, ModelSpec, WeightStore};
 use crate::runtime::{pack, ArgValue, Runtime, TileShape};
@@ -45,6 +45,57 @@ pub fn check_layer_chain(run: &RunConfig) -> Result<ModelSpec, String> {
     let kind = ModelKind::parse(&run.model)
         .ok_or_else(|| format!("unknown model {}", run.model))?;
     ModelSpec::new(kind, run.feat_in, &run.hidden, run.feat_out, run.layers)
+}
+
+/// Lower bound on a cold request's host-side latency: even the tiniest
+/// plan (CR @ scale 16) costs on the order of a millisecond to compile
+/// (dataset → graph → tiling → SDE program → weights), so a default
+/// deadline below this floor would shed every cold request before its
+/// plan exists. [`check_serving`] rejects such configs at construction.
+pub const COLD_COMPILE_FLOOR_US: u64 = 1_000;
+
+/// Fast-fail validation of the always-on serving knobs, mirroring
+/// [`check_layer_chain`]: self-contradictory configs are rejected at
+/// service construction with the offending values carried in the
+/// message, instead of surfacing later as a hung dispatcher, a queue
+/// that can never admit, or a deadline that sheds 100% of cold traffic.
+pub fn check_serving(serving: &ServingConfig) -> Result<(), String> {
+    if serving.queue_cap == 0 {
+        return Err(
+            "serving.queue_cap = 0 can never admit a request; use queue_cap >= 1 \
+             (default 1024)"
+                .into(),
+        );
+    }
+    if serving.max_wait_us > 0 && serving.max_batch <= 1 {
+        return Err(format!(
+            "serving.max_wait_us = {} with max_batch = {} is pure added latency: a \
+             1-request batch is already full on arrival, so the timer can never \
+             merge anything; set max_batch >= 2 or max_wait_us = 0",
+            serving.max_wait_us, serving.max_batch
+        ));
+    }
+    if serving.overflow == OverflowPolicy::Block
+        && serving.max_wait_us == 0
+        && serving.max_batch > serving.queue_cap
+    {
+        return Err(format!(
+            "serving.overflow = block with max_batch = {} > queue_cap = {} and no \
+             flush timer (max_wait_us = 0) deadlocks: the accumulator can never \
+             fill before admission blocks; raise queue_cap, lower max_batch, or \
+             enable max_wait_us",
+            serving.max_batch, serving.queue_cap
+        ));
+    }
+    if serving.default_deadline_us > 0 && serving.default_deadline_us < COLD_COMPILE_FLOOR_US {
+        return Err(format!(
+            "serving.default_deadline_us = {} is below the cold plan-compile floor \
+             (~{COLD_COMPILE_FLOOR_US} us): every cold request would be shed before \
+             its plan exists; use 0 (no deadline) or >= {COLD_COMPILE_FLOOR_US}",
+            serving.default_deadline_us
+        ));
+    }
+    Ok(())
 }
 
 #[derive(Clone, Debug)]
@@ -357,5 +408,69 @@ mod tests {
     fn unknown_model_is_rejected() {
         let err = check_layer_chain(&run("transformer", 16, vec![], 16, 1)).unwrap_err();
         assert!(err.contains("unknown model transformer"), "{err}");
+    }
+
+    #[test]
+    fn serving_defaults_and_sane_configs_pass() {
+        check_serving(&ServingConfig::default()).unwrap();
+        check_serving(&ServingConfig {
+            exec_threads: 4,
+            max_batch: 8,
+            max_wait_us: 200,
+            queue_cap: 64,
+            overflow: OverflowPolicy::Block,
+            default_deadline_us: 50_000,
+        })
+        .unwrap();
+        // block + small queue is fine when the timer can flush partials
+        check_serving(&ServingConfig {
+            max_batch: 8,
+            max_wait_us: 100,
+            queue_cap: 2,
+            overflow: OverflowPolicy::Block,
+            ..Default::default()
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn zero_queue_cap_is_rejected() {
+        let err =
+            check_serving(&ServingConfig { queue_cap: 0, ..Default::default() }).unwrap_err();
+        assert!(err.contains("queue_cap = 0"), "{err}");
+    }
+
+    #[test]
+    fn timer_without_batching_is_rejected_with_values() {
+        let serving = ServingConfig { max_wait_us: 500, max_batch: 1, ..Default::default() };
+        let err = check_serving(&serving).unwrap_err();
+        assert!(err.contains("500") && err.contains("max_batch = 1"), "{err}");
+    }
+
+    #[test]
+    fn blocking_overflow_deadlock_shape_is_rejected() {
+        // cap 2 < batch 8, no timer, block: the group can never fill
+        let serving = ServingConfig {
+            max_batch: 8,
+            queue_cap: 2,
+            overflow: OverflowPolicy::Block,
+            ..Default::default()
+        };
+        let err = check_serving(&serving).unwrap_err();
+        assert!(err.contains("max_batch = 8") && err.contains("queue_cap = 2"), "{err}");
+        assert!(err.contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn sub_floor_default_deadline_is_rejected() {
+        let serving = ServingConfig { default_deadline_us: 10, ..Default::default() };
+        let err = check_serving(&serving).unwrap_err();
+        assert!(err.contains("10") && err.contains("cold"), "{err}");
+        // at/above the floor passes
+        check_serving(&ServingConfig {
+            default_deadline_us: COLD_COMPILE_FLOOR_US,
+            ..Default::default()
+        })
+        .unwrap();
     }
 }

@@ -17,7 +17,7 @@ use std::path::Path;
 use std::process::ExitCode;
 
 use zipper::compiler::{compile, OptLevel};
-use zipper::config::{self, ArchConfig, RunConfig, StorageDtype};
+use zipper::config::{self, ArchConfig, OverflowPolicy, RunConfig, StorageDtype};
 use zipper::coordinator::{validate, Coordinator, InferenceRequest, Session};
 use zipper::energy::EnergyModel;
 use zipper::graph::datasets;
@@ -106,6 +106,19 @@ fn build_configs(args: &Args) -> Result<(ArchConfig, RunConfig), String> {
     }
     if let Some(v) = args.get("max-batch") {
         run.serving.max_batch = v.parse().map_err(|_| "bad --max-batch")?;
+    }
+    if let Some(v) = args.get("max-wait-us") {
+        run.serving.max_wait_us = v.parse().map_err(|_| "bad --max-wait-us")?;
+    }
+    if let Some(v) = args.get("queue-cap") {
+        run.serving.queue_cap = v.parse().map_err(|_| "bad --queue-cap")?;
+    }
+    if let Some(v) = args.get("overflow") {
+        run.serving.overflow =
+            OverflowPolicy::parse(v).ok_or("bad --overflow (reject | block)")?;
+    }
+    if let Some(v) = args.get("deadline-us") {
+        run.serving.default_deadline_us = v.parse().map_err(|_| "bad --deadline-us")?;
     }
     if let Some(v) = args.get("s-streams") {
         arch.s_streams = v.parse().map_err(|_| "bad --s-streams")?;
@@ -284,8 +297,9 @@ fn real_main(argv: &[String]) -> Result<(), String> {
             let mut resp = c.drain();
             let wall = t0.elapsed().as_secs_f64();
             resp.sort_by_key(|r| r.id);
-            let mut t =
-                Table::new(&["id", "model", "sim cycles", "sim time", "energy", "wall", "batch"]);
+            let mut t = Table::new(&[
+                "id", "model", "sim cycles", "sim time", "energy", "wall", "queue", "batch",
+            ]);
             for r in &resp {
                 t.row(&[
                     r.id.to_string(),
@@ -294,6 +308,7 @@ fn real_main(argv: &[String]) -> Result<(), String> {
                     format!("{:.3} ms", r.sim_seconds * 1e3),
                     format!("{:.3} mJ", r.energy_j * 1e3),
                     format!("{:.1} ms", r.wall_seconds * 1e3),
+                    format!("{:.1} ms", r.queue_seconds * 1e3),
                     r.batch_size.to_string(),
                 ]);
             }
@@ -305,9 +320,28 @@ fn real_main(argv: &[String]) -> Result<(), String> {
                 n as f64 / wall
             );
             println!(
-                "batching: max_batch={} exec_threads={}",
-                run.serving.max_batch, run.serving.exec_threads
+                "batching: max_batch={} exec_threads={} max_wait_us={} \
+                 queue_cap={} overflow={} deadline_us={}",
+                run.serving.max_batch,
+                run.serving.exec_threads,
+                run.serving.max_wait_us,
+                run.serving.queue_cap,
+                run.serving.overflow.name(),
+                run.serving.default_deadline_us
             );
+            if let Some(m) = c.last_metrics() {
+                println!(
+                    "service: p50/p95/p99 latency {}/{}/{} us, peak queue {}, \
+                     mean batch {:.2}, shed {} ({:.1}%)",
+                    m.latency_p50_us,
+                    m.latency_p95_us,
+                    m.latency_p99_us,
+                    m.peak_queue_depth,
+                    m.mean_batch_size(),
+                    m.rejected_total(),
+                    100.0 * m.shed_rate()
+                );
+            }
             if run.layers > 1 {
                 if let Some(r) = resp.iter().find(|r| r.error.is_none()) {
                     let per: Vec<String> =
@@ -417,6 +451,15 @@ fn real_main(argv: &[String]) -> Result<(), String> {
                  --exec-threads N     tile-parallel functional execution threads\n                       \
                  per batch; outputs are bit-identical for\n                       \
                  every value (default 1)              [serving]\n  \
+                 --max-wait-us N      flush a partially filled batch after N us\n                       \
+                 (default 0 = hold until fill/drain)  [serving]\n  \
+                 --queue-cap N        bounded admission queue depth\n                       \
+                 (default 1024)                       [serving]\n  \
+                 --overflow P         reject | block when the queue is full\n                       \
+                 (default reject)                     [serving]\n  \
+                 --deadline-us N      per-request latency budget; expired\n                       \
+                 requests are shed with a structured\n                       \
+                 reject reason (default 0 = none)     [serving]\n  \
                  --threads N          OS threads for parallel tiling when a plan\n                       \
                  is compiled (cold-start latency knob) [tiling]"
             );

@@ -47,6 +47,85 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (log_sum / xs.len() as f64).exp()
 }
 
+/// Fixed-bucket log₂ histogram over non-negative integer samples
+/// (microseconds in the serving runtime). Bucket `i` covers
+/// `[2^(i-1), 2^i)` with bucket 0 = the exact value 0, so recording is
+/// O(1), the memory footprint is constant, and percentile queries never
+/// allocate — the properties an always-on service needs from its latency
+/// accounting (`coordinator::service::ServiceMetrics`).
+///
+/// Percentiles are resolved to the recorded maximum within the bucket's
+/// range: exact for the top bucket, within a 2× factor elsewhere —
+/// plenty for p50/p95/p99 tail reporting.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: [u64; Self::BUCKETS],
+    total: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    /// 41 buckets: 0, then [2^0, 2^1) … [2^39, 2^40) — the last bucket
+    /// tops out above 12 days in microseconds.
+    pub const BUCKETS: usize = 41;
+
+    pub fn new() -> Self {
+        LogHistogram { counts: [0; Self::BUCKETS], total: 0, max: 0 }
+    }
+
+    fn bucket(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            ((64 - v.leading_zeros()) as usize).min(Self::BUCKETS - 1)
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket(v)] += 1;
+        self.total += 1;
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Nearest-rank percentile resolved to the containing bucket's upper
+    /// edge (clamped to the recorded maximum). Returns 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let upper = if i == 0 {
+                    0
+                } else if i == Self::BUCKETS - 1 {
+                    self.max // the top bucket is open-ended
+                } else {
+                    (1u64 << i) - 1
+                };
+                return upper.min(self.max);
+            }
+        }
+        self.max
+    }
+}
+
 /// Percentile over a copy of the data (nearest-rank).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
@@ -80,6 +159,34 @@ mod tests {
         assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
         assert!((geomean(&[10.0, 10.0, 10.0]) - 10.0).abs() < 1e-9);
         assert!(geomean(&[]).is_nan());
+    }
+
+    #[test]
+    fn log_histogram_buckets_and_percentiles() {
+        let mut h = LogHistogram::new();
+        assert_eq!(h.percentile(50.0), 0);
+        // 90 fast samples at 100us, 10 slow at 10_000us
+        for _ in 0..90 {
+            h.record(100);
+        }
+        for _ in 0..10 {
+            h.record(10_000);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.max(), 10_000);
+        // p50 lands in the [64, 128) bucket → upper edge 127
+        assert_eq!(h.percentile(50.0), 127);
+        // p95/p99 land in the slow bucket [8192, 16384), clamped to max
+        assert_eq!(h.percentile(95.0), 10_000);
+        assert_eq!(h.percentile(99.0), 10_000);
+        // exact zeros stay zero
+        let mut z = LogHistogram::new();
+        z.record(0);
+        assert_eq!(z.percentile(99.0), 0);
+        // huge values clamp into the top bucket without overflow
+        let mut big = LogHistogram::new();
+        big.record(u64::MAX);
+        assert_eq!(big.percentile(50.0), u64::MAX);
     }
 
     #[test]

@@ -291,8 +291,8 @@ fn two_layer_models_serve_through_the_coordinator() {
             resp.sort_by_key(|r| r.id);
             resp
         };
-        let seq = serve(ServingConfig { exec_threads: 1, max_batch: 1 });
-        let bat = serve(ServingConfig { exec_threads: 4, max_batch: 3 });
+        let seq = serve(ServingConfig { exec_threads: 1, max_batch: 1, ..Default::default() });
+        let bat = serve(ServingConfig { exec_threads: 4, max_batch: 3, ..Default::default() });
         for (s, b) in seq.iter().zip(&bat) {
             assert!(s.error.is_none() && b.error.is_none(), "{m}: {:?} {:?}", s.error, b.error);
             assert_eq!(s.output_checksum, b.output_checksum, "{m} id={}", s.id);

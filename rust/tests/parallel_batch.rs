@@ -418,15 +418,22 @@ fn batched_serving_bit_identical_to_sequential_for_all_combinations() {
         })
         .collect();
     let cache = Arc::new(PlanCache::new());
-    let sequential = serve(ServingConfig { exec_threads: 1, max_batch: 1 }, &cache, &reqs);
+    let sequential = serve(
+        ServingConfig { exec_threads: 1, max_batch: 1, ..Default::default() },
+        &cache,
+        &reqs,
+    );
     for r in &sequential {
         assert!(r.error.is_none(), "{:?}", r.error);
         assert!(r.output_checksum.is_some());
     }
     for threads in THREADS {
         for batch in BATCHES {
-            let serving =
-                ServingConfig { exec_threads: threads as u32, max_batch: batch as u32 };
+            let serving = ServingConfig {
+                exec_threads: threads as u32,
+                max_batch: batch as u32,
+                ..Default::default()
+            };
             let got = serve(serving, &cache, &reqs);
             assert_eq!(got.len(), sequential.len());
             for (g, s) in got.iter().zip(&sequential) {
@@ -452,8 +459,16 @@ fn all_models_batch_identically_through_the_coordinator() {
             .map(|i| InferenceRequest { id: i, run: run_cfg(m), input_seed: i % 2 })
             .collect();
         let cache = Arc::new(PlanCache::new());
-        let seq = serve(ServingConfig { exec_threads: 1, max_batch: 1 }, &cache, &reqs);
-        let bat = serve(ServingConfig { exec_threads: 4, max_batch: 3 }, &cache, &reqs);
+        let seq = serve(
+            ServingConfig { exec_threads: 1, max_batch: 1, ..Default::default() },
+            &cache,
+            &reqs,
+        );
+        let bat = serve(
+            ServingConfig { exec_threads: 4, max_batch: 3, ..Default::default() },
+            &cache,
+            &reqs,
+        );
         for (s, b) in seq.iter().zip(&bat) {
             assert!(s.error.is_none() && b.error.is_none());
             assert_eq!(s.output_checksum, b.output_checksum, "{m} id={}", s.id);

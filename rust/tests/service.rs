@@ -1,0 +1,300 @@
+//! Robustness tests for the always-on serving runtime
+//! (`coordinator::service::ZipperService`): dual-trigger batching,
+//! latency accounting, deadline shedding, graceful shutdown, and
+//! exactly-once response delivery under injected worker panics.
+//!
+//! CI reruns this file with `--test-threads=1` to catch timer/ordering
+//! races that parallel test scheduling can mask.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use zipper::config::{ArchConfig, OverflowPolicy, RunConfig, ServingConfig};
+use zipper::coordinator::service::INJECT_PANIC_SEED;
+use zipper::coordinator::{InferenceRequest, RejectReason, Ticket, ZipperService};
+use zipper::plan::PlanCache;
+use zipper::tiling::{Reorder, TilingConfig, TilingMode};
+
+fn small_run(model: &str, functional: bool) -> RunConfig {
+    RunConfig {
+        model: model.into(),
+        dataset: "CR".into(),
+        scale: 16,
+        feat_in: 16,
+        feat_out: 16,
+        layers: 1,
+        hidden: Vec::new(),
+        tiling: TilingConfig {
+            dst_part: 64,
+            src_part: 64,
+            mode: TilingMode::Sparse,
+            reorder: Reorder::InDegree,
+            threads: 1,
+        },
+        e2v: true,
+        functional,
+        seed: 3,
+        serving: Default::default(),
+        kernels: Default::default(),
+    }
+}
+
+fn req(id: u64, run: RunConfig) -> InferenceRequest {
+    InferenceRequest { id, run, input_seed: id }
+}
+
+fn service(workers: usize, serving: ServingConfig) -> ZipperService {
+    ZipperService::new(ArchConfig::default(), workers, serving, Arc::new(PlanCache::new()))
+        .expect("valid serving config")
+}
+
+#[test]
+fn timer_trigger_flushes_partial_batches_without_drain() {
+    // 3 same-plan requests into an 8-wide accumulator: the fill trigger
+    // can never fire, so only the max_wait_us dispatcher timer can
+    // deliver these responses — no drain/shutdown involved.
+    let serving = ServingConfig { max_batch: 8, max_wait_us: 5_000, ..Default::default() };
+    let svc = service(1, serving);
+    let tickets: Vec<Ticket> =
+        (0..3).map(|i| svc.submit(req(i, small_run("gcn", true)))).collect();
+    for t in tickets {
+        let r = t.wait(); // resolves via the timer flush
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.batch_size, 3, "timer must flush the whole partial group");
+    }
+    let report = svc.shutdown(Duration::from_secs(30));
+    assert!(report.graceful);
+    let m = svc.metrics();
+    assert_eq!((m.submitted, m.completed), (3, 3));
+    assert_eq!(m.batch_size_hist[3], 1);
+}
+
+#[test]
+fn fill_trigger_dispatches_full_batches_before_the_timer() {
+    // 8 submits into an 8-wide group with a far-future timer: the fill
+    // trigger must dispatch immediately; a 60 s max_wait would time the
+    // test out if the timer were the only path.
+    let serving = ServingConfig { max_batch: 8, max_wait_us: 60_000_000, ..Default::default() };
+    let svc = service(1, serving);
+    let tickets: Vec<Ticket> =
+        (0..8).map(|i| svc.submit(req(i, small_run("gcn", true)))).collect();
+    for t in tickets {
+        let r = t.wait();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.batch_size, 8);
+    }
+    svc.shutdown(Duration::from_secs(30));
+}
+
+#[test]
+fn queue_seconds_regression_delayed_dispatch_shows_queue_time() {
+    // Regression for the latency-accounting fix: wall_seconds used to
+    // start at worker batch-receipt, silently excluding queue wait. Hold
+    // a request in the accumulator for ~40 ms via the timer and check
+    // the wait is visible in queue_seconds and contained in
+    // wall_seconds.
+    let serving = ServingConfig { max_batch: 4, max_wait_us: 40_000, ..Default::default() };
+    let svc = service(1, serving);
+    let t = svc.submit(req(0, small_run("gcn", false)));
+    let r = t.wait();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert!(
+        r.queue_seconds >= 0.030,
+        "a ~40 ms timer hold must show up as queue time, got {}",
+        r.queue_seconds
+    );
+    assert!(
+        r.wall_seconds >= r.queue_seconds,
+        "wall ({}) must span submit→response and contain queue wait ({})",
+        r.wall_seconds,
+        r.queue_seconds
+    );
+    svc.shutdown(Duration::from_secs(30));
+}
+
+#[test]
+fn deadline_expired_in_queue_is_shed_at_dispatch() {
+    // The request is admitted with 20 ms of budget, parks in an 8-wide
+    // accumulator behind a 60 s timer, and is only flushed by shutdown
+    // after the budget is gone — dispatch must shed it, not execute it.
+    let serving = ServingConfig { max_batch: 8, max_wait_us: 60_000_000, ..Default::default() };
+    let svc = service(1, serving);
+    let deadline = Instant::now() + Duration::from_millis(20);
+    let t = svc.submit_with_deadline(req(0, small_run("gcn", false)), Some(deadline));
+    std::thread::sleep(Duration::from_millis(40));
+    let report = svc.shutdown(Duration::from_secs(30));
+    assert!(report.graceful);
+    let r = t.wait();
+    assert_eq!(r.reject, Some(RejectReason::DeadlineExceeded));
+    assert!(r.queue_seconds >= 0.020, "the whole lifetime was queue time");
+    let m = svc.metrics();
+    assert_eq!(m.shed_deadline, 1, "shed at dispatch, not rejected at admission");
+    assert_eq!(m.rejected_deadline, 0);
+    assert_eq!(m.completed, 0);
+}
+
+#[test]
+fn graceful_shutdown_answers_everything_within_grace() {
+    let serving = ServingConfig { max_batch: 4, ..Default::default() };
+    let svc = service(2, serving);
+    // 10 requests: two full batches dispatch eagerly, 2 leftovers are
+    // flushed by shutdown itself
+    let tickets: Vec<Ticket> =
+        (0..10).map(|i| svc.submit(req(i, small_run("gat", true)))).collect();
+    let report = svc.shutdown(Duration::from_secs(60));
+    assert!(report.graceful, "drain must finish within a 60 s grace");
+    assert_eq!(report.shed, 0);
+    for t in tickets {
+        let r = t.wait();
+        assert!(r.error.is_none() && r.reject.is_none(), "{:?}", r.error);
+    }
+    let m = svc.metrics();
+    assert_eq!((m.submitted, m.completed, m.failed), (10, 10, 0));
+    assert_eq!(m.rejected_total(), 0);
+    assert!(m.latency_count == 10 && m.latency_p99_us >= m.latency_p50_us);
+}
+
+#[test]
+fn zero_grace_shutdown_never_loses_a_response() {
+    // With grace 0 the queued backlog may be served (a worker won the
+    // race to pick it up) or shed with ShuttingDown — but every ticket
+    // must resolve exactly once and the accounting must balance.
+    let serving = ServingConfig { max_batch: 8, ..Default::default() };
+    let svc = service(1, serving);
+    let tickets: Vec<Ticket> =
+        (0..5).map(|i| svc.submit(req(i, small_run("gcn", false)))).collect();
+    let report = svc.shutdown(Duration::ZERO);
+    let mut served = 0u64;
+    let mut shed = 0u64;
+    for t in tickets {
+        let r = t.wait();
+        match r.reject {
+            None => {
+                assert!(r.error.is_none(), "{:?}", r.error);
+                served += 1;
+            }
+            Some(reason) => {
+                assert_eq!(reason, RejectReason::ShuttingDown);
+                shed += 1;
+            }
+        }
+    }
+    assert_eq!(served + shed, 5, "exactly one response per request");
+    assert_eq!(report.shed, shed);
+    let m = svc.metrics();
+    assert_eq!(m.completed + m.rejected_shutdown, 5);
+    assert_eq!((m.queue_depth, m.in_flight), (0, 0));
+}
+
+#[test]
+fn blocking_overflow_applies_backpressure_without_deadlock() {
+    // queue_cap 1 + Block: each submit may have to wait for the worker
+    // to take the previous request; the run must make progress and
+    // serve everything (nothing rejected, nothing stuck).
+    let serving = ServingConfig {
+        queue_cap: 1,
+        overflow: OverflowPolicy::Block,
+        ..Default::default()
+    };
+    let svc = service(1, serving);
+    let tickets: Vec<Ticket> =
+        (0..6).map(|i| svc.submit(req(i, small_run("gcn", false)))).collect();
+    for t in tickets {
+        let r = t.wait();
+        assert!(r.error.is_none() && r.reject.is_none(), "{:?}", r.error);
+    }
+    svc.shutdown(Duration::from_secs(30));
+    let m = svc.metrics();
+    assert_eq!((m.submitted, m.completed), (6, 6));
+    assert_eq!(m.rejected_total(), 0);
+}
+
+#[test]
+fn injected_panic_exactly_one_response_across_worker_and_batch_matrix() {
+    // The satellite robustness matrix: across workers {1,4} ×
+    // max_batch {1,8}, poison a middle tranche of requests with the
+    // panic-injection seed. Every request — queued before, poisoned,
+    // and submitted after the panic — must get exactly one response:
+    // healthy ones succeed, poisoned ones fail with the structured
+    // worker-panicked error, nothing hangs, nothing double-counts.
+    for workers in [1usize, 4] {
+        for max_batch in [1u32, 8] {
+            let serving = ServingConfig { max_batch, ..Default::default() };
+            let svc = service(workers, serving);
+            let mut tickets: Vec<(bool, Ticket)> = Vec::new();
+            // phase A: healthy requests, possibly still queued at panic
+            for i in 0..6 {
+                tickets.push((false, svc.submit(req(i, small_run("gcn", true)))));
+            }
+            // phase B: poisoned requests — the injection seed joins the
+            // plan key, so they batch together, never with healthy ones
+            for i in 6..10 {
+                let mut run = small_run("gcn", true);
+                run.seed = INJECT_PANIC_SEED;
+                tickets.push((true, svc.submit(req(i, run))));
+            }
+            // phase C: the worker must survive the panic and keep serving
+            for i in 10..16 {
+                tickets.push((false, svc.submit(req(i, small_run("gcn", true)))));
+            }
+            let report = svc.shutdown(Duration::from_secs(60));
+            assert!(report.graceful, "workers={workers} max_batch={max_batch}");
+            let mut responses = 0u64;
+            for (poisoned, t) in tickets {
+                let r = t.wait();
+                responses += 1;
+                assert!(r.reject.is_none(), "panics are failures, not sheds");
+                if poisoned {
+                    let err = r.error.as_deref().unwrap_or_else(|| {
+                        panic!("workers={workers} max_batch={max_batch} id={}", r.id)
+                    });
+                    assert!(
+                        err.contains("worker panicked") && err.contains("injected worker panic"),
+                        "workers={workers} max_batch={max_batch}: {err}"
+                    );
+                } else {
+                    assert!(
+                        r.error.is_none(),
+                        "workers={workers} max_batch={max_batch} id={}: {:?}",
+                        r.id,
+                        r.error
+                    );
+                    assert!(r.output_checksum.is_some());
+                }
+            }
+            assert_eq!(responses, 16, "exactly one response per submitted request");
+            let m = svc.metrics();
+            assert_eq!(m.submitted, 16);
+            assert_eq!((m.completed, m.failed), (12, 4));
+            assert_eq!(m.rejected_total(), 0);
+            assert_eq!(
+                m.completed + m.failed + m.rejected_total(),
+                m.submitted,
+                "accounting identity must balance after a panic"
+            );
+            assert_eq!((m.queue_depth, m.in_flight), (0, 0));
+        }
+    }
+}
+
+#[test]
+fn metrics_identity_holds_at_quiescent_snapshots() {
+    let serving = ServingConfig { max_batch: 4, max_wait_us: 500, ..Default::default() };
+    let svc = service(2, serving);
+    let tickets: Vec<Ticket> = (0..9)
+        .map(|i| {
+            let model = if i % 2 == 0 { "gcn" } else { "sage" };
+            svc.submit(req(i, small_run(model, false)))
+        })
+        .collect();
+    for t in tickets {
+        assert!(t.wait().error.is_none());
+    }
+    svc.shutdown(Duration::from_secs(30));
+    let m = svc.metrics();
+    assert_eq!(m.completed + m.failed + m.rejected_total(), m.submitted);
+    assert_eq!(m.batch_size_hist.iter().sum::<u64>(), m.batches);
+    assert_eq!(m.latency_count, m.completed);
+    assert!(m.peak_queue_depth >= 1);
+    assert!(m.latency_p50_us <= m.latency_p95_us && m.latency_p95_us <= m.latency_p99_us);
+    assert!(m.plan_cache.hits + m.plan_cache.misses >= m.batches);
+}
