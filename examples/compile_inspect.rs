@@ -1,16 +1,35 @@
 //! Compiler pipeline inspector: tensor DAG → IR segments → E2V → SDE
-//! functions, shown stage by stage (paper Fig 8's walk-through).
+//! functions → pipeline-optimizer passes, shown stage by stage (paper
+//! Fig 8's walk-through plus the DESIGN.md §3.7 plan-level passes).
 //!
 //! ```bash
-//! cargo run --release --example compile_inspect -- gat
+//! cargo run --release --example compile_inspect -- gat        # depth 2
+//! cargo run --release --example compile_inspect -- gcn 3      # depth 3
 //! ```
+//!
+//! The final section is a plan-level IR dump: the whole compiled layer
+//! stack is printed before any pass, then each optimizer pass runs in
+//! its fixed order (`load_elim → fuse → hoist → dbe`) with the
+//! disassembly and per-pass `OptReport` shown after every rewrite.
 
-use zipper::compiler::{compile, OptLevel};
+use zipper::compiler::{compile, optimize_pipeline, OptLevel, PassSet, Program};
 use zipper::ir::{self, e2v};
-use zipper::models::ModelKind;
+use zipper::models::{ModelKind, ModelSpec};
+
+fn dump_stages(stages: &[Program]) {
+    for (l, p) in stages.iter().enumerate() {
+        println!("; ----- layer {l} -----");
+        println!("{}", p.disassemble());
+    }
+}
 
 fn main() -> Result<(), String> {
     let name = std::env::args().nth(1).unwrap_or_else(|| "gat".into());
+    let depth: u32 = std::env::args()
+        .nth(2)
+        .map(|d| d.parse().map_err(|_| format!("bad depth {d}")))
+        .transpose()?
+        .unwrap_or(2);
     let model = ModelKind::parse(&name).ok_or(format!("unknown model {name}"))?;
     let g = model.build();
 
@@ -48,5 +67,34 @@ fn main() -> Result<(), String> {
         naive.instruction_count(),
         optim.instruction_count()
     );
+
+    // ---- plan-level pipeline optimizer (DESIGN.md §3.7) -----------------
+    let spec = ModelSpec::new(model, 32, &[], 32, depth)?;
+    let mut stages: Vec<Program> = (0..spec.depth())
+        .map(|l| compile(&spec.build_layer(l), OptLevel::Pipeline(PassSet::all())))
+        .collect::<Result<_, _>>()
+        .map_err(|e| e.to_string())?;
+    let count = |ps: &[Program]| ps.iter().map(Program::instruction_count).sum::<usize>();
+
+    println!("\n== pipeline optimizer: {name} depth-{depth} stack, before any pass ==");
+    println!("; {} instructions total\n", count(&stages));
+    dump_stages(&stages);
+
+    for (pass_name, pass) in PassSet::NAMED {
+        let rep = optimize_pipeline(&mut stages, pass);
+        let outcome = &rep.passes[0];
+        println!(
+            "== after {pass_name}: {} -> {} instructions \
+             (removed {} fused {} hoisted {} freed {}) ==\n",
+            rep.instructions_before,
+            outcome.instructions_after,
+            outcome.report.removed,
+            outcome.report.fused,
+            outcome.report.hoisted,
+            outcome.report.freed,
+        );
+        dump_stages(&stages);
+    }
+    println!("; final pipeline: {} instructions", count(&stages));
     Ok(())
 }

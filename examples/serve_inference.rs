@@ -55,6 +55,7 @@ fn request(i: u64) -> InferenceRequest {
             threads: 1,
         },
         e2v: true,
+        passes: Default::default(),
         functional: true,
         seed: 7,
         layers: 1,

@@ -1,20 +1,28 @@
 //! Fig 12 reproduction: E2V compiler-optimization speedup on GAT and
-//! SAGE (cit-Patents), on ZIPPER and on the GPU baseline.
+//! SAGE (cit-Patents), on ZIPPER and on the GPU baseline — plus the
+//! pipeline-optimizer per-pass attribution table (DESIGN.md §3.7).
 //!
 //! Paper: GAT 1.87× / SAGE 1.03× on ZIPPER; 2.36× / 1.62× for the same
 //! rewrite applied to DGL on the V100.
+//!
+//! `--smoke` runs only the (fast) per-pass attribution section and
+//! asserts the optimizer's contract: every pass's cycle delta is ≥ 0
+//! (no pass may regress), the all-passes depth-3 GCN pipeline executes
+//! strictly fewer instructions than plain E2v, and every tier stays
+//! bit-exact with the unoptimized plan on the cycle engine.
 
 use zipper::baselines::{whole_graph_ops, DeviceModel};
+use zipper::compiler::PassSet;
 use zipper::config::{ArchConfig, RunConfig};
 use zipper::coordinator::Session;
 use zipper::ir::e2v;
 use zipper::metrics::Table;
 use zipper::models::ModelKind;
+use zipper::plan::ExecPlan;
 
-fn main() {
+fn fig12_section(arch: &ArchConfig) {
     println!("== Fig 12: E2V compiler optimization (naive vs optimized, CP) ==");
     println!("paper: ZIPPER GAT 1.87x SAGE 1.03x; GPU GAT 2.36x SAGE 1.62x\n");
-    let arch = ArchConfig::default();
     let mut t = Table::new(&["model", "ZIPPER naive ms", "ZIPPER opt ms", "ZIPPER x", "GPU x"]);
 
     let mut zipper_gat_x = 0.0;
@@ -30,8 +38,8 @@ fn main() {
                 ..Default::default()
             };
             let session = Session::prepare(&run).expect("session");
-            let res = session.simulate(&arch, false, None, 0).expect("simulate");
-            (res.seconds(&arch), session.graph().num_vertices() as u64, session.graph().num_edges())
+            let res = session.simulate(arch, false, None, 0).expect("simulate");
+            (res.seconds(arch), session.graph().num_vertices() as u64, session.graph().num_edges())
         };
         let (naive_s, v, e) = mk(false);
         let (opt_s, _, _) = mk(true);
@@ -58,4 +66,111 @@ fn main() {
     print!("{}", t.render());
     println!("\nshape check: GAT benefits substantially, SAGE mildly (paper's ordering)");
     assert!(zipper_gat_x > 1.2, "GAT E2V speedup must be substantial");
+}
+
+fn pass_attribution(arch: &ArchConfig, model: ModelKind, layers: u32, assert_contract: bool) {
+    let mk_run = |passes: PassSet| RunConfig {
+        model: model.name().into(),
+        dataset: "CR".into(),
+        scale: 16,
+        feat_in: 32,
+        feat_out: 32,
+        layers,
+        passes,
+        ..Default::default()
+    };
+    let instr_count = |p: &ExecPlan| {
+        p.stages.iter().map(|s| s.program.instruction_count()).sum::<usize>()
+    };
+
+    let baseline = ExecPlan::compile(&mk_run(PassSet::none())).expect("baseline plan");
+    let base_instrs = instr_count(&baseline);
+    let base_cycles =
+        baseline.simulate(arch, false, None, 0).expect("baseline timing").cycles;
+    let x = baseline.make_input(7);
+    let base_out = baseline
+        .simulate(arch, true, Some(&x), 0)
+        .expect("baseline functional")
+        .output
+        .expect("baseline output");
+
+    println!(
+        "\n== Pipeline optimizer: per-pass attribution ({} depth-{layers}, CR/16) ==",
+        model.name()
+    );
+    println!("E2v baseline: {base_instrs} instructions, {base_cycles} cycles\n");
+    let mut t = Table::new(&[
+        "pass", "insns", "d insns", "cycles", "d cycles", "removed", "fused", "hoisted",
+        "freed",
+    ]);
+    let tiers = PassSet::NAMED.iter().copied().chain([("all", PassSet::all())]);
+    for (name, passes) in tiers {
+        let plan = ExecPlan::compile(&mk_run(passes)).expect("optimized plan");
+        let instrs = instr_count(&plan);
+        let cycles = plan.simulate(arch, false, None, 0).expect("timing").cycles;
+        let total = plan
+            .opt_report
+            .as_ref()
+            .map(|r| {
+                r.passes.iter().fold([0usize; 4], |acc, p| {
+                    [
+                        acc[0] + p.report.removed,
+                        acc[1] + p.report.fused,
+                        acc[2] + p.report.hoisted,
+                        acc[3] + p.report.freed,
+                    ]
+                })
+            })
+            .unwrap_or([0; 4]);
+        t.row(&[
+            name.into(),
+            instrs.to_string(),
+            format!("{}", base_instrs as i64 - instrs as i64),
+            cycles.to_string(),
+            format!("{}", base_cycles as i64 - cycles as i64),
+            total[0].to_string(),
+            total[1].to_string(),
+            total[2].to_string(),
+            total[3].to_string(),
+        ]);
+        if assert_contract {
+            assert!(
+                cycles <= base_cycles,
+                "pass {name} regressed cycles: {cycles} > {base_cycles}"
+            );
+            assert!(
+                instrs <= base_instrs,
+                "pass {name} grew the pipeline: {instrs} > {base_instrs}"
+            );
+            if name == "all" {
+                assert!(
+                    instrs < base_instrs,
+                    "all passes on a depth-{layers} {} pipeline must drop instructions",
+                    model.name()
+                );
+            }
+            let out = plan
+                .simulate(arch, true, Some(&x), 0)
+                .expect("optimized functional")
+                .output
+                .expect("optimized output");
+            assert_eq!(out, base_out, "pass {name} is not bit-exact with E2v");
+        }
+    }
+    print!("{}", t.render());
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let arch = ArchConfig::default();
+    if !smoke {
+        fig12_section(&arch);
+        // attribution on a weight-bearing model too (hoist is live here)
+        pass_attribution(&arch, ModelKind::Gat, 2, false);
+    }
+    // the asserted contract tier: depth-3 GCN (ISSUE acceptance shape)
+    pass_attribution(&arch, ModelKind::Gcn, 3, true);
+    if smoke {
+        println!("\nsmoke ok: no pass regresses cycles; all-passes shrinks the pipeline");
+    }
 }

@@ -110,6 +110,7 @@ fn small_run(model: &str) -> RunConfig {
             threads: 1,
         },
         e2v: true,
+        passes: Default::default(),
         functional: true,
         seed: 3,
         layers: 1,

@@ -47,6 +47,7 @@ fn request(model: &str, dataset: &str, scale: u64, depth: u32, id: u64) -> Infer
             threads: 1,
         },
         e2v: true,
+        passes: Default::default(),
         functional: true,
         seed: 7,
         serving: Default::default(),

@@ -63,6 +63,7 @@ fn request(i: u64) -> InferenceRequest {
             threads: 1,
         },
         e2v: true,
+        passes: Default::default(),
         // timing-only: the serving hot path benches the scheduler +
         // plan reuse, not the functional executor
         functional: false,

@@ -38,6 +38,10 @@ use crate::isa::{
 };
 use std::collections::BTreeMap;
 
+pub mod optimize;
+
+pub use optimize::{optimize_pipeline, OptReport, PassOutcome, PassSet, PipelineOptReport};
+
 /// Partition-frame buffers start here; below is the tile frame.
 pub const PART_FRAME_BASE: u16 = 0x100;
 
@@ -94,14 +98,56 @@ pub enum OptLevel {
     None,
     /// E2V + dead-op elimination (Fig 12 "optimized", the default).
     E2v,
+    /// E2V lowering plus the plan-level pipeline passes in `PassSet`.
+    /// Per-layer lowering is identical to `E2v`; the pipeline passes run
+    /// over the whole compiled layer stack in `plan::ExecPlan` (see
+    /// [`optimize::optimize_pipeline`]) because cross-layer facts are
+    /// invisible to a single-program compile.
+    Pipeline(PassSet),
 }
 
-#[derive(Debug)]
-pub struct CompileError(pub String);
+/// Structured compile failure: the message plus, when known, which model
+/// and which pipeline layer was being lowered.
+#[derive(Clone, Debug)]
+pub struct CompileError {
+    pub model: Option<String>,
+    pub layer: Option<usize>,
+    pub message: String,
+}
+
+impl CompileError {
+    pub fn new(message: impl Into<String>) -> CompileError {
+        CompileError { model: None, layer: None, message: message.into() }
+    }
+
+    /// Attach the model name (kept if already set by a deeper frame).
+    pub fn with_model(mut self, model: &str) -> CompileError {
+        if self.model.is_none() {
+            self.model = Some(model.to_string());
+        }
+        self
+    }
+
+    /// Attach the pipeline layer index the failure occurred in.
+    pub fn at_layer(mut self, layer: usize) -> CompileError {
+        self.layer = Some(layer);
+        self
+    }
+}
 
 impl std::fmt::Display for CompileError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "compile error: {}", self.0)
+        write!(f, "compile error")?;
+        if let Some(m) = &self.model {
+            write!(f, " [model {m}")?;
+            if let Some(l) = self.layer {
+                write!(f, ", layer {l}")?;
+            }
+            write!(f, "]")?;
+        } else if let Some(l) = self.layer {
+            write!(f, " [layer {l}]")?;
+        }
+        write!(f, ": {}", self.message)
     }
 }
 
@@ -109,14 +155,18 @@ impl std::error::Error for CompileError {}
 
 /// Compile a model DAG into a `Program`.
 pub fn compile(model: &ModelGraph, opt: OptLevel) -> Result<Program, CompileError> {
+    compile_inner(model, opt).map_err(|e| e.with_model(&model.name))
+}
+
+fn compile_inner(model: &ModelGraph, opt: OptLevel) -> Result<Program, CompileError> {
     let (g, e2v_stats) = match opt {
         OptLevel::None => (model.clone(), None),
-        OptLevel::E2v => {
+        OptLevel::E2v | OptLevel::Pipeline(_) => {
             let (g, stats) = ir::e2v::optimize(model);
             (g, Some(stats))
         }
     };
-    let spans = g.spans().map_err(|e| CompileError(e.to_string()))?;
+    let spans = g.spans().map_err(|e| CompileError::new(e.to_string()))?;
     let fdims = g.fdims();
     let live = g.live_set();
 
@@ -183,7 +233,7 @@ pub fn compile(model: &ModelGraph, opt: OptLevel) -> Result<Program, CompileErro
         if full_scatter_closure[i]
             && matches!(node.op, Op::GatherSum { .. } | Op::GatherMax { .. })
         {
-            return Err(CompileError(format!(
+            return Err(CompileError::new(format!(
                 "{}: scatter input depends on a gather — multi-round \
                  models must be compiled layer-by-layer",
                 g.name
@@ -349,13 +399,13 @@ pub fn compile(model: &ModelGraph, opt: OptLevel) -> Result<Program, CompileErro
     let out_node = *g
         .outputs()
         .first()
-        .ok_or_else(|| CompileError("model has no output".into()))?;
+        .ok_or_else(|| CompileError::new("model has no output"))?;
     let out_src = match g.node(out_node).op {
         Op::OutputV { x, .. } => x,
         _ => unreachable!(),
     };
     let output_buf = *part_buf_of.get(&out_src).ok_or_else(|| {
-        CompileError("output source not materialized in partition frame".into())
+        CompileError::new("output source not materialized in partition frame")
     })?;
     d_post.push(Instr::St {
         src: output_buf,
@@ -373,7 +423,7 @@ pub fn compile(model: &ModelGraph, opt: OptLevel) -> Result<Program, CompileErro
         match &g.node(id).op {
             Op::ScatterOut { v } => {
                 let src = *tile_buf_of.get(v).ok_or_else(|| {
-                    CompileError(format!("scatter-out source {:?} not in tile frame", v))
+                    CompileError::new(format!("scatter-out source {v:?} not in tile frame"))
                 })?;
                 let dst = alloc_tile(id, &mut tile_buf_of);
                 e_body.push(Instr::Sctr {
@@ -385,7 +435,7 @@ pub fn compile(model: &ModelGraph, opt: OptLevel) -> Result<Program, CompileErro
             }
             Op::ScatterIn { v } => {
                 let src = *part_buf_of.get(v).ok_or_else(|| {
-                    CompileError(format!("scatter-in source {:?} not in partition frame", v))
+                    CompileError::new(format!("scatter-in source {v:?} not in partition frame"))
                 })?;
                 let dst = alloc_tile(id, &mut tile_buf_of);
                 e_body.push(Instr::Sctr {
@@ -397,7 +447,7 @@ pub fn compile(model: &ModelGraph, opt: OptLevel) -> Result<Program, CompileErro
             }
             Op::GatherSum { e } | Op::GatherMax { e } => {
                 let src = *tile_buf_of.get(e).ok_or_else(|| {
-                    CompileError(format!("gather source {:?} not in tile frame", e))
+                    CompileError::new(format!("gather source {e:?} not in tile frame"))
                 })?;
                 let dst = part_buf_of[&id];
                 let reduce = match g.node(id).op {
@@ -438,11 +488,13 @@ pub fn compile(model: &ModelGraph, opt: OptLevel) -> Result<Program, CompileErro
     d_func.push(Instr::UpdPtt);
     d_func.push(Instr::Jump(-(d_func.len() as i32)));
 
-    // sFunction: WAIT; FCH.TILE(empty->back to WAIT); LD.SRC; ops; SIGNAL.E; JUMP ->FCH
+    // sFunction: WAIT; FCH.TILE(empty->back to WAIT); LD.W*; LD.SRC; ops;
+    // SIGNAL.E; JUMP ->FCH
     let mut s_func = vec![
         Instr::Wait { count: Dim::Const(1) },
         Instr::FchTile { on_empty: -1 },
     ];
+    s_func.extend(weight_loads(&s_body, &weights));
     s_func.extend(s_body);
     s_func.push(Instr::Signal { class: StreamClass::E });
     let back_to_fch = 1i32 - s_func.len() as i32;
@@ -458,6 +510,7 @@ pub fn compile(model: &ModelGraph, opt: OptLevel) -> Result<Program, CompileErro
             cols: Dim::Const(1),
         },
     ];
+    e_func.extend(weight_loads(&e_body, &weights));
     e_func.extend(e_body);
     e_func.push(Instr::ChkPtt);
     let back_to_wait = -(e_func.len() as i32);
@@ -492,7 +545,7 @@ fn lower_compute(
     let buf = |id: &NodeId| -> Result<BufId, CompileError> {
         bufs.get(id)
             .copied()
-            .ok_or_else(|| CompileError(format!("operand {:?} not materialized", id)))
+            .ok_or_else(|| CompileError::new(format!("operand {id:?} not materialized")))
     };
     Ok(match op {
         Op::Gemm { x, w } => Instr::Gemm {
@@ -503,6 +556,7 @@ fn lower_compute(
             k: col_dim(*x),
             n: fdim_to_dim(fdims[w.0 as usize]),
             accumulate: false,
+            act: None,
         },
         Op::Gemv { x, w } => Instr::Gemv {
             src: buf(x)?,
@@ -543,7 +597,7 @@ fn lower_compute(
             n: fdim_to_dim(fdims[wset.0 as usize]),
         },
         other => {
-            return Err(CompileError(format!(
+            return Err(CompileError::new(format!(
                 "unexpected op in compute lowering: {other:?}"
             )))
         }
@@ -556,6 +610,40 @@ fn fdim_to_dim(f: FDim) -> Dim {
         FDim::Out => Dim::FeatOut,
         FDim::One => Dim::Const(1),
     }
+}
+
+/// Per-tile weight fills for a tile-loop body: one `LD.W` per distinct
+/// weight slice the body's MU/VU instructions consume, in first-use
+/// order (a `count > 1` table entry — R-GCN's per-relation set — fills
+/// one slice per relation). The `dst` field encodes the *weight-table
+/// index*, not an embedding buffer (see `LdTarget::Weight`). dFunction
+/// bodies run once per partition, so their fill is amortized and not
+/// modeled; the pipeline optimizer's hoist pass lifts these per-tile
+/// fills to the same per-partition residency.
+fn weight_loads(body: &[Instr], weights: &[WeightMeta]) -> Vec<Instr> {
+    let mut seen: Vec<WeightId> = Vec::new();
+    let mut out = Vec::new();
+    for instr in body {
+        let w = match instr {
+            Instr::Gemm { weight, .. } | Instr::Gemv { weight, .. } => *weight,
+            Instr::Bmm { weights, .. } => *weights,
+            _ => continue,
+        };
+        if seen.contains(&w) {
+            continue;
+        }
+        seen.push(w);
+        let meta = &weights[w.0 as usize];
+        for _ in 0..meta.count {
+            out.push(Instr::Ld {
+                target: LdTarget::Weight,
+                dst: BufId(w.0),
+                rows: fdim_to_dim(meta.rows),
+                cols: fdim_to_dim(meta.cols),
+            });
+        }
+    }
+    out
 }
 
 fn topo_order(g: &ModelGraph, live: &[bool]) -> Vec<NodeId> {
@@ -594,6 +682,11 @@ fn topo_order(g: &ModelGraph, live: &[bool]) -> Vec<NodeId> {
 
 impl Program {
     /// Human-readable listing of all three functions.
+    ///
+    /// The output is deterministic for a given program: instructions
+    /// print in function order, the weight table in `WeightId` order,
+    /// and the accumulator/output footer in sorted buffer-id order —
+    /// golden-IR snapshot tests diff this text verbatim.
     pub fn disassemble(&self) -> String {
         let mut s = format!("; program {}\n", self.model_name);
         for (name, f) in [
@@ -611,6 +704,17 @@ impl Program {
             self.weights.iter().map(|w| w.name).collect::<Vec<_>>(),
             self.tile_bufs,
             self.part_bufs
+        ));
+        let mut accs: Vec<String> = self
+            .accumulators
+            .iter()
+            .map(|(b, k, _)| format!("b{}:{k:?}", b.0))
+            .collect();
+        accs.sort();
+        s.push_str(&format!(
+            "; accumulators: [{}] output: b{}\n",
+            accs.join(" "),
+            self.output_buf.0
         ));
         s
     }
@@ -752,6 +856,39 @@ mod tests {
             .count();
         assert!(post_gemms >= 4, "gather-dependent GEMMs, found {post_gemms}");
         assert!(all_gemms >= 6, "GRU has 6 GEMMs, found {all_gemms}");
+    }
+
+    #[test]
+    fn per_tile_weight_loads_emitted() {
+        let ldw = |f: &[Instr]| {
+            f.iter()
+                .filter(|i| matches!(i, Instr::Ld { target: LdTarget::Weight, .. }))
+                .count()
+        };
+        // GAT replicates z = xW per tile: its sFunction fills weights
+        let gat = compiled(ModelKind::Gat, OptLevel::E2v);
+        assert!(ldw(&gat.s_func) >= 1, "GAT sFunction uses weights per tile");
+        // GCN's only GEMM runs per partition in the dFunction: no LD.W
+        let gcn = compiled(ModelKind::Gcn, OptLevel::E2v);
+        assert_eq!(ldw(&gcn.s_func) + ldw(&gcn.e_func) + ldw(&gcn.d_func), 0);
+        // R-GCN's per-relation weight set fills one slice per relation
+        let rgcn = compiled(ModelKind::Rgcn, OptLevel::E2v);
+        assert!(ldw(&rgcn.e_func) >= 2, "one LD.W per relation slice");
+    }
+
+    #[test]
+    fn compile_error_carries_model_context() {
+        let mut g = ModelGraph::new("two_hop");
+        let x = g.input_v("x");
+        let e1 = g.scatter_out(x);
+        let h1 = g.gather_sum(e1);
+        let e2 = g.scatter_out(h1);
+        let h2 = g.gather_sum(e2);
+        g.output_v(h2, "h");
+        let err = compile(&g, OptLevel::None).unwrap_err();
+        assert_eq!(err.model.as_deref(), Some("two_hop"));
+        let msg = err.at_layer(1).to_string();
+        assert!(msg.contains("two_hop") && msg.contains("layer 1"), "{msg}");
     }
 
     #[test]

@@ -1,0 +1,830 @@
+//! Pipeline-level optimizer (DESIGN.md §3.7): passes that run over the
+//! *whole compiled layer stack* of an `ExecPlan`, after per-layer
+//! lowering and before the programs are zipped into `LayerStage`s.
+//!
+//! Per-layer compilation cannot see cross-layer facts: every stage of a
+//! multi-layer plan shares one `Tiling`, so work that is invariant
+//! across the layer loop — the tile edge lists, the per-tile weight
+//! fills — recurs N times when each layer is lowered in isolation. The
+//! four passes here close that gap:
+//!
+//! 1. **`load_elim`** — cross-layer invariant-load elimination. A load
+//!    whose source region is provably unchanged since the previous layer
+//!    over the same shared tiling is dropped. Of the load targets, only
+//!    `LD.EDGE` qualifies: the edge lists are a function of the tiling
+//!    alone, while `LD.SRC`/`LD.DST` read the layer's input activations
+//!    (rewritten by the previous layer) and `GTHR` reduces per-layer
+//!    edge values. Stage 0 keeps its loads; they stay resident in the
+//!    Tile Hub for every later stage.
+//! 2. **`fuse`** — elementwise fusion. A trailing `ELW` whose only input
+//!    is the immediately preceding GEMM's output (the hidden-layer ReLU)
+//!    folds into that GEMM's store as a fused-activation variant,
+//!    applied on the MU output path by the single dispatch core.
+//! 3. **`hoist`** — loop-invariant weight-load hoisting. Per-tile `LD.W`
+//!    fills in the s/eFunction tile loops are weight-table reads that
+//!    never change within a partition; they move to the dFunction
+//!    (once per partition), restoring whole-partition MU residency.
+//! 4. **`dbe`** — dead-buffer elimination. A liveness pass over `BufId`s
+//!    removes pure instructions whose destination is never read (fusion
+//!    orphans the old GEMM destination, for example) and shrinks the
+//!    frame high-water marks, freeing UEM slots.
+//!
+//! Pass ordering is fixed (`load_elim → fuse → hoist → dbe`): fusion
+//! creates the dead buffers that `dbe` sweeps, and `dbe` runs last so no
+//! pass ever observes — or resurrects — a buffer another pass killed.
+//! Every pass preserves the stream-protocol layout
+//! (`FCH.PTT; …; SIGNAL.S < WAIT < UPD.PTT` in the dFunction) and
+//! re-targets relative branches across every edit; the pass-invariant
+//! tests below pin both.
+//!
+//! All passes are semantics-preserving at the bit level: eliminated
+//! `LD.EDGE`/`LD.W` instructions are functional no-ops in dispatch, the
+//! fused activation runs the exact kernel the removed `ELW` would have,
+//! and `dbe` only deletes writes nothing reads. The differential fuzz
+//! test (`rust/tests/optimizer_diff.rs`) asserts bit-exact outputs
+//! against `OptLevel::E2v` on both executors for every pass subset.
+
+use super::{Program, PART_FRAME_BASE};
+use crate::isa::{BufId, Instr, LdTarget, StreamClass};
+use std::collections::BTreeSet;
+use std::fmt;
+
+/// A set of pipeline-optimizer passes (`OptLevel::Pipeline` payload).
+///
+/// Passes are individually toggleable; the set is a bitmask so plans
+/// compiled under different subsets never alias in the `PlanCache`
+/// (`PassSet` is part of `PlanKey`'s `Eq`/`Hash`).
+///
+/// ```
+/// use zipper::compiler::PassSet;
+///
+/// let p = PassSet::parse("load_elim,dbe").unwrap();
+/// assert!(p.contains(PassSet::LOAD_ELIM) && p.contains(PassSet::DBE));
+/// assert!(!p.contains(PassSet::FUSE));
+/// assert_eq!(p.to_string(), "load_elim,dbe");
+/// assert_eq!(PassSet::parse("all"), Some(PassSet::all()));
+/// assert_eq!(PassSet::parse("none"), Some(PassSet::none()));
+/// assert!(PassSet::parse("warp_drive").is_none());
+/// ```
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct PassSet(u8);
+
+impl PassSet {
+    /// Cross-layer redundant-load elimination.
+    pub const LOAD_ELIM: PassSet = PassSet(1 << 0);
+    /// Elementwise-activation fusion into the preceding GEMM.
+    pub const FUSE: PassSet = PassSet(1 << 1);
+    /// Loop-invariant weight-load hoisting out of per-tile bodies.
+    pub const HOIST: PassSet = PassSet(1 << 2);
+    /// Dead-buffer elimination (liveness over `BufId`s).
+    pub const DBE: PassSet = PassSet(1 << 3);
+
+    /// Every pass with its config/CLI name, in execution order.
+    pub const NAMED: [(&'static str, PassSet); 4] = [
+        ("load_elim", PassSet::LOAD_ELIM),
+        ("fuse", PassSet::FUSE),
+        ("hoist", PassSet::HOIST),
+        ("dbe", PassSet::DBE),
+    ];
+
+    pub const fn none() -> PassSet {
+        PassSet(0)
+    }
+
+    pub const fn all() -> PassSet {
+        PassSet(0b1111)
+    }
+
+    pub const fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    pub const fn contains(self, other: PassSet) -> bool {
+        self.0 & other.0 == other.0
+    }
+
+    pub const fn with(self, other: PassSet) -> PassSet {
+        PassSet(self.0 | other.0)
+    }
+
+    /// All 2⁴ subsets (differential-fuzz sweep order).
+    pub fn every_subset() -> impl Iterator<Item = PassSet> {
+        (0u8..16).map(PassSet)
+    }
+
+    /// Parse `"all"`, `"none"`, or a `,`/`+`-separated pass-name list.
+    pub fn parse(s: &str) -> Option<PassSet> {
+        match s.trim() {
+            "all" => return Some(PassSet::all()),
+            "" | "none" => return Some(PassSet::none()),
+            _ => {}
+        }
+        let mut out = PassSet::none();
+        for part in s.split([',', '+']) {
+            let name = part.trim();
+            let (_, p) = PassSet::NAMED.iter().find(|(n, _)| *n == name)?;
+            out = out.with(*p);
+        }
+        Some(out)
+    }
+}
+
+impl fmt::Display for PassSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_empty() {
+            return write!(f, "none");
+        }
+        if *self == PassSet::all() {
+            return write!(f, "all");
+        }
+        let names: Vec<&str> = PassSet::NAMED
+            .iter()
+            .filter(|(_, p)| self.contains(*p))
+            .map(|(n, _)| *n)
+            .collect();
+        write!(f, "{}", names.join(","))
+    }
+}
+
+/// What one pass did to the pipeline.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OptReport {
+    /// Instructions removed (invariant loads, dead writes).
+    pub removed: usize,
+    /// ELW instructions folded into a preceding GEMM.
+    pub fused: usize,
+    /// Per-tile weight fills lifted into the dFunction.
+    pub hoisted: usize,
+    /// Buffer slots no surviving instruction references.
+    pub freed: usize,
+}
+
+/// One executed pass with its per-pass attribution.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PassOutcome {
+    pub pass: &'static str,
+    pub report: OptReport,
+    /// Total pipeline instruction count after this pass ran.
+    pub instructions_after: usize,
+}
+
+/// Full attribution for one `optimize_pipeline` run.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PipelineOptReport {
+    /// Total pipeline instruction count before any pass ran.
+    pub instructions_before: usize,
+    /// Executed passes in execution order.
+    pub passes: Vec<PassOutcome>,
+}
+
+impl PipelineOptReport {
+    pub fn instructions_after(&self) -> usize {
+        self.passes.last().map_or(self.instructions_before, |p| p.instructions_after)
+    }
+}
+
+impl fmt::Display for PipelineOptReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut prev = self.instructions_before;
+        for p in &self.passes {
+            let r = p.report;
+            writeln!(
+                f,
+                "{:>9}: insns {prev} -> {} (removed {} fused {} hoisted {} freed {})",
+                p.pass, p.instructions_after, r.removed, r.fused, r.hoisted, r.freed
+            )?;
+            prev = p.instructions_after;
+        }
+        Ok(())
+    }
+}
+
+/// Run the selected passes, in fixed order, over the compiled per-layer
+/// programs of one plan (`programs[l]` is layer `l`). Mutates the
+/// programs in place and returns per-pass attribution.
+pub fn optimize_pipeline(programs: &mut [Program], passes: PassSet) -> PipelineOptReport {
+    let count =
+        |ps: &[Program]| ps.iter().map(|p| p.instruction_count()).sum::<usize>();
+    let mut rep =
+        PipelineOptReport { instructions_before: count(programs), passes: Vec::new() };
+    for (name, pass) in PassSet::NAMED {
+        if !passes.contains(pass) {
+            continue;
+        }
+        let report = match pass {
+            PassSet::LOAD_ELIM => eliminate_invariant_loads(programs),
+            PassSet::FUSE => fuse_activations(programs),
+            PassSet::HOIST => hoist_weight_loads(programs),
+            _ => eliminate_dead_buffers(programs),
+        };
+        rep.passes.push(PassOutcome {
+            pass: name,
+            report,
+            instructions_after: count(programs),
+        });
+    }
+    rep
+}
+
+// ---- function-edit helpers (branch-safe) --------------------------------
+
+const D_IDX: usize = 0;
+const S_IDX: usize = 1;
+const E_IDX: usize = 2;
+
+fn func_of(prog: &Program, idx: usize) -> &Vec<Instr> {
+    match idx {
+        D_IDX => &prog.d_func,
+        S_IDX => &prog.s_func,
+        _ => &prog.e_func,
+    }
+}
+
+fn func_of_mut(prog: &mut Program, idx: usize) -> &mut Vec<Instr> {
+    match idx {
+        D_IDX => &mut prog.d_func,
+        S_IDX => &mut prog.s_func,
+        _ => &mut prog.e_func,
+    }
+}
+
+/// Remove the instructions at `remove` (ascending, no duplicates),
+/// re-targeting every relative branch whose (pc → target) span straddles
+/// an edit. The passes only ever delete straight-line body instructions;
+/// deleting a branch target is a bug, caught here.
+fn remove_at(func: &mut Vec<Instr>, remove: &[usize]) {
+    if remove.is_empty() {
+        return;
+    }
+    let mut removed = vec![false; func.len()];
+    for &r in remove {
+        removed[r] = true;
+    }
+    // new index of every surviving old pc
+    let mut new_idx = vec![0usize; func.len()];
+    let mut k = 0usize;
+    for i in 0..func.len() {
+        new_idx[i] = k;
+        if !removed[i] {
+            k += 1;
+        }
+    }
+    for pc in 0..func.len() {
+        if removed[pc] {
+            continue;
+        }
+        let off = match &func[pc] {
+            Instr::Jump(off) => *off,
+            Instr::FchTile { on_empty } => *on_empty,
+            _ => continue,
+        };
+        let tgt = (pc as i64 + off as i64) as usize;
+        assert!(!removed[tgt], "optimizer removed a branch target (pc {pc} -> {tgt})");
+        let new_off = new_idx[tgt] as i32 - new_idx[pc] as i32;
+        match &mut func[pc] {
+            Instr::Jump(o) => *o = new_off,
+            Instr::FchTile { on_empty } => *on_empty = new_off,
+            _ => unreachable!(),
+        }
+    }
+    let mut i = 0;
+    func.retain(|_| {
+        let keep = !removed[i];
+        i += 1;
+        keep
+    });
+}
+
+/// Insert `items` before old index `at`, re-targeting relative branches
+/// that straddle the insertion point.
+fn insert_at(func: &mut Vec<Instr>, at: usize, items: Vec<Instr>) {
+    if items.is_empty() {
+        return;
+    }
+    let n = items.len() as i64;
+    for pc in 0..func.len() {
+        let off = match &func[pc] {
+            Instr::Jump(off) => *off,
+            Instr::FchTile { on_empty } => *on_empty,
+            _ => continue,
+        };
+        let tgt = pc as i64 + off as i64;
+        let pc_new = if pc >= at { pc as i64 + n } else { pc as i64 };
+        let tgt_new = if tgt >= at as i64 { tgt + n } else { tgt };
+        let new_off = (tgt_new - pc_new) as i32;
+        match &mut func[pc] {
+            Instr::Jump(o) => *o = new_off,
+            Instr::FchTile { on_empty } => *on_empty = new_off,
+            _ => unreachable!(),
+        }
+    }
+    func.splice(at..at, items);
+}
+
+// ---- dataflow facts ------------------------------------------------------
+
+/// Embedding buffers an instruction reads. `LD.EDGE`/`LD.W` destinations
+/// are sentinels (tile hub / weight-table index), not buffers.
+fn reads(ins: &Instr) -> Vec<BufId> {
+    match ins {
+        Instr::ElwU { src, .. } => vec![*src],
+        Instr::ElwB { a, b, .. } => vec![*a, *b],
+        Instr::ElwBcast { a, vec, .. } => vec![*a, *vec],
+        Instr::Gemv { src, .. }
+        | Instr::Gemm { src, .. }
+        | Instr::Bmm { src, .. }
+        | Instr::Sctr { src, .. }
+        | Instr::Gthr { src, .. }
+        | Instr::St { src, .. } => vec![*src],
+        _ => Vec::new(),
+    }
+}
+
+/// The embedding buffer an instruction writes, if any.
+fn writes(ins: &Instr) -> Option<BufId> {
+    match ins {
+        Instr::ElwU { dst, .. }
+        | Instr::ElwB { dst, .. }
+        | Instr::ElwBcast { dst, .. }
+        | Instr::Gemv { dst, .. }
+        | Instr::Gemm { dst, .. }
+        | Instr::Bmm { dst, .. }
+        | Instr::Sctr { dst, .. }
+        | Instr::Gthr { dst, .. } => Some(*dst),
+        Instr::Ld { target: LdTarget::Src | LdTarget::Dst, dst, .. } => Some(*dst),
+        _ => None,
+    }
+}
+
+fn read_count(prog: &Program, b: BufId) -> usize {
+    [&prog.d_func, &prog.s_func, &prog.e_func]
+        .iter()
+        .flat_map(|f| f.iter())
+        .map(|i| reads(i).iter().filter(|&&r| r == b).count())
+        .sum()
+}
+
+fn write_count(prog: &Program, b: BufId) -> usize {
+    [&prog.d_func, &prog.s_func, &prog.e_func]
+        .iter()
+        .flat_map(|f| f.iter())
+        .filter(|i| writes(i) == Some(b))
+        .count()
+}
+
+/// Every buffer slot the program still touches, plus the liveness roots
+/// the executors require regardless of instruction dataflow (the output
+/// buffer and the partition accumulators).
+fn referenced_bufs(prog: &Program) -> BTreeSet<BufId> {
+    let mut s = BTreeSet::new();
+    for f in [&prog.d_func, &prog.s_func, &prog.e_func] {
+        for ins in f.iter() {
+            s.extend(reads(ins));
+            s.extend(writes(ins));
+        }
+    }
+    s.insert(prog.output_buf);
+    s.extend(prog.accumulators.iter().map(|&(b, _, _)| b));
+    s
+}
+
+// ---- pass 1: cross-layer invariant-load elimination ----------------------
+
+/// Drop loads whose source is provably unchanged since the previous
+/// layer over the shared tiling. The invariance analysis is per load
+/// target: `LD.EDGE` streams the tile edge lists, which are a function
+/// of the `Tiling` alone — byte-identical for every stage — so once a
+/// stage has filled the Tile Hub, later stages reuse it. `LD.SRC` and
+/// `LD.DST` read the stage's input activations (the previous stage's
+/// output: *not* invariant), and `GTHR` reduces per-stage edge values,
+/// so neither is ever eligible.
+fn eliminate_invariant_loads(programs: &mut [Program]) -> OptReport {
+    let mut removed = 0;
+    let mut edge_resident = false;
+    for prog in programs.iter_mut() {
+        let has_edge_load = prog
+            .e_func
+            .iter()
+            .any(|i| matches!(i, Instr::Ld { target: LdTarget::Edge, .. }));
+        if edge_resident {
+            let drops: Vec<usize> = prog
+                .e_func
+                .iter()
+                .enumerate()
+                .filter(|(_, i)| matches!(i, Instr::Ld { target: LdTarget::Edge, .. }))
+                .map(|(pc, _)| pc)
+                .collect();
+            removed += drops.len();
+            remove_at(&mut prog.e_func, &drops);
+        }
+        edge_resident |= has_edge_load;
+    }
+    OptReport { removed, ..OptReport::default() }
+}
+
+// ---- pass 2: elementwise fusion into GEMM --------------------------------
+
+/// Fold `GEMM b → g; ELW.op g → e` pairs into `GEMM.op b → e` when the
+/// rewrite is invisible: the GEMM overwrites (no accumulate, no prior
+/// fusion), the ELW is its immediate successor and `g`'s only reader,
+/// `g` has no other writer and is neither the model output nor an
+/// accumulator, and `e` aliases nothing the GEMM reads. The fused
+/// activation runs the exact ELW kernel on the MU output path (single
+/// dispatch site), so outputs are bit-identical; the orphaned `g` is
+/// swept by `dbe`.
+fn fuse_activations(programs: &mut [Program]) -> OptReport {
+    let mut fused = 0;
+    for prog in programs.iter_mut() {
+        for fidx in [D_IDX, S_IDX, E_IDX] {
+            let mut i = 0;
+            loop {
+                let func = func_of(prog, fidx);
+                if i + 1 >= func.len() {
+                    break;
+                }
+                let candidate = match (&func[i], &func[i + 1]) {
+                    (
+                        Instr::Gemm {
+                            src: gs, dst: g, m, n, accumulate: false, act: None, ..
+                        },
+                        Instr::ElwU { op, src, dst: e, rows, cols },
+                    ) if src == g && rows == m && cols == n && e != g && e != gs => {
+                        Some((*g, *e, *op))
+                    }
+                    _ => None,
+                };
+                if let Some((g, e, op)) = candidate {
+                    let sound = read_count(prog, g) == 1
+                        && write_count(prog, g) == 1
+                        && write_count(prog, e) == 1
+                        && g != prog.output_buf
+                        && !prog.accumulators.iter().any(|&(b, _, _)| b == g);
+                    if sound {
+                        let func = func_of_mut(prog, fidx);
+                        if let Instr::Gemm { dst, act, .. } = &mut func[i] {
+                            *dst = e;
+                            *act = Some(op);
+                        }
+                        remove_at(func, &[i + 1]);
+                        fused += 1;
+                        continue; // new successor at i + 1: re-check
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+    OptReport { fused, ..OptReport::default() }
+}
+
+// ---- pass 3: loop-invariant weight-load hoisting -------------------------
+
+/// Lift per-tile `LD.W` fills out of the s/eFunction tile loops into the
+/// dFunction pre region (right after `FCH.PTT`): the weight table never
+/// changes within a partition, so one fill per partition replaces one
+/// per tile. A slice filled by both tile loops is inserted once (with
+/// its full multi-slice multiplicity for `count > 1` weight sets).
+fn hoist_weight_loads(programs: &mut [Program]) -> OptReport {
+    let mut hoisted = 0;
+    for prog in programs.iter_mut() {
+        // distinct fill instruction → max copies needed in one function
+        let mut lifted: Vec<(Instr, usize)> = Vec::new();
+        for fidx in [S_IDX, E_IDX] {
+            let func = func_of(prog, fidx);
+            let pcs: Vec<usize> = func
+                .iter()
+                .enumerate()
+                .filter(|(_, i)| matches!(i, Instr::Ld { target: LdTarget::Weight, .. }))
+                .map(|(pc, _)| pc)
+                .collect();
+            for &pc in &pcs {
+                let ins = func[pc].clone();
+                let copies = pcs.iter().filter(|&&p| func[p] == ins).count();
+                match lifted.iter_mut().find(|(l, _)| *l == ins) {
+                    Some((_, c)) => *c = (*c).max(copies),
+                    None => lifted.push((ins, copies)),
+                }
+            }
+            hoisted += pcs.len();
+            remove_at(func_of_mut(prog, fidx), &pcs);
+        }
+        let fills: Vec<Instr> = lifted
+            .into_iter()
+            .flat_map(|(ins, copies)| vec![ins; copies])
+            .collect();
+        insert_at(&mut prog.d_func, 1, fills);
+    }
+    OptReport { hoisted, ..OptReport::default() }
+}
+
+// ---- pass 4: dead-buffer elimination -------------------------------------
+
+/// Liveness over `BufId`s: iteratively remove pure compute/load
+/// instructions whose destination no surviving instruction reads (and
+/// which is neither the model output nor an accumulator — both are
+/// executor roots), then shrink the frame high-water marks. `GTHR`,
+/// `ST`, `LD.EDGE`, `LD.W`, and sync instructions are never removed.
+fn eliminate_dead_buffers(programs: &mut [Program]) -> OptReport {
+    let removable = |ins: &Instr| {
+        matches!(
+            ins,
+            Instr::ElwU { .. }
+                | Instr::ElwB { .. }
+                | Instr::ElwBcast { .. }
+                | Instr::Gemv { .. }
+                | Instr::Gemm { .. }
+                | Instr::Bmm { .. }
+                | Instr::Sctr { .. }
+                | Instr::Ld { target: LdTarget::Src | LdTarget::Dst, .. }
+        )
+    };
+    let mut removed = 0;
+    let mut freed = 0;
+    for prog in programs.iter_mut() {
+        let before = referenced_bufs(prog);
+        loop {
+            let mut live: BTreeSet<BufId> = BTreeSet::new();
+            for f in [&prog.d_func, &prog.s_func, &prog.e_func] {
+                for ins in f.iter() {
+                    live.extend(reads(ins));
+                }
+            }
+            live.insert(prog.output_buf);
+            live.extend(prog.accumulators.iter().map(|&(b, _, _)| b));
+            let mut any = false;
+            for fidx in [D_IDX, S_IDX, E_IDX] {
+                let dead: Vec<usize> = func_of(prog, fidx)
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, ins)| {
+                        removable(ins)
+                            && writes(ins).is_some_and(|b| !live.contains(&b))
+                    })
+                    .map(|(pc, _)| pc)
+                    .collect();
+                if !dead.is_empty() {
+                    removed += dead.len();
+                    remove_at(func_of_mut(prog, fidx), &dead);
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        let after = referenced_bufs(prog);
+        freed += before.difference(&after).count();
+        let tile_max = after.iter().filter(|b| !b.is_partition_frame()).map(|b| b.0).max();
+        prog.tile_bufs = tile_max.map_or(0, |m| m + 1);
+        let part_max = after.iter().filter(|b| b.is_partition_frame()).map(|b| b.0).max();
+        prog.part_bufs = part_max.map_or(0, |m| m - PART_FRAME_BASE + 1);
+    }
+    OptReport { removed, freed, ..OptReport::default() }
+}
+
+// ---- pass-invariant checks (shared by tests) -----------------------------
+
+/// The dFunction stream-protocol layout every pass must preserve:
+/// `FCH.PTT` first, then `SIGNAL.S < WAIT < UPD.PTT`.
+#[cfg(test)]
+fn d_layout_ok(prog: &Program) -> bool {
+    let d = &prog.d_func;
+    let sig = d
+        .iter()
+        .position(|i| matches!(i, Instr::Signal { class: StreamClass::S }));
+    let wait = d.iter().position(|i| matches!(i, Instr::Wait { .. }));
+    let upd = d.iter().position(|i| matches!(i, Instr::UpdPtt));
+    matches!(d.first(), Some(Instr::FchPtt))
+        && matches!((sig, wait, upd), (Some(s), Some(w), Some(u)) if s < w && w < u)
+}
+
+#[cfg(test)]
+fn offsets_ok(prog: &Program) -> bool {
+    [&prog.d_func, &prog.s_func, &prog.e_func].iter().all(|f| {
+        f.iter().enumerate().all(|(pc, i)| {
+            let tgt = match i {
+                Instr::Jump(off) => Some(pc as i64 + *off as i64),
+                Instr::FchTile { on_empty } => Some(pc as i64 + *on_empty as i64),
+                _ => None,
+            };
+            tgt.map_or(true, |t| t >= 0 && (t as usize) < f.len())
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{compile, OptLevel};
+    use super::*;
+    use crate::isa::{Dim, ElwUnary};
+    use crate::models::{ModelKind, ModelSpec, NUM_RELATIONS};
+
+    fn pipeline(kind: ModelKind, depth: u32) -> Vec<Program> {
+        let spec = ModelSpec::new(kind, 8, &[], 8, depth).unwrap();
+        (0..spec.depth())
+            .map(|l| compile(&spec.build_layer(l), OptLevel::E2v).unwrap())
+            .collect()
+    }
+
+    fn count_matching(f: &[Instr], pred: fn(&Instr) -> bool) -> usize {
+        f.iter().filter(|i| pred(i)).count()
+    }
+
+    fn is_edge_load(i: &Instr) -> bool {
+        matches!(i, Instr::Ld { target: LdTarget::Edge, .. })
+    }
+
+    fn is_weight_load(i: &Instr) -> bool {
+        matches!(i, Instr::Ld { target: LdTarget::Weight, .. })
+    }
+
+    #[test]
+    fn passset_parse_and_display() {
+        assert_eq!(PassSet::parse("load_elim+hoist").unwrap().to_string(), "load_elim,hoist");
+        assert_eq!(PassSet::all().to_string(), "all");
+        assert_eq!(PassSet::none().to_string(), "none");
+        assert_eq!(PassSet::parse("dbe, fuse").unwrap().to_string(), "fuse,dbe");
+        assert!(PassSet::parse("fuse,bogus").is_none());
+        assert_eq!(PassSet::every_subset().count(), 16);
+        for s in PassSet::every_subset() {
+            assert_eq!(PassSet::parse(&s.to_string()), Some(s), "{s} must round-trip");
+        }
+    }
+
+    #[test]
+    fn load_elim_drops_edge_loads_after_first_stage() {
+        let mut progs = pipeline(ModelKind::Gcn, 3);
+        let rep = optimize_pipeline(&mut progs, PassSet::LOAD_ELIM);
+        assert_eq!(rep.passes[0].report.removed, 2);
+        assert_eq!(count_matching(&progs[0].e_func, is_edge_load), 1, "stage 0 fills the hub");
+        assert_eq!(count_matching(&progs[1].e_func, is_edge_load), 0);
+        assert_eq!(count_matching(&progs[2].e_func, is_edge_load), 0);
+        for p in &progs {
+            assert!(d_layout_ok(p) && offsets_ok(p));
+        }
+        // idempotent: the hub is already resident
+        let again = optimize_pipeline(&mut progs, PassSet::LOAD_ELIM);
+        assert_eq!(again.passes[0].report.removed, 0);
+    }
+
+    #[test]
+    fn load_elim_is_noop_on_single_stage() {
+        let mut progs = pipeline(ModelKind::Gat, 1);
+        let rep = optimize_pipeline(&mut progs, PassSet::LOAD_ELIM);
+        assert_eq!(rep.passes[0].report.removed, 0);
+        assert_eq!(rep.instructions_before, rep.instructions_after());
+    }
+
+    #[test]
+    fn fuse_folds_hidden_relu_into_gemm() {
+        let mut progs = pipeline(ModelKind::Gcn, 2);
+        let relus = |p: &Program| {
+            count_matching(&p.d_func, |i| {
+                matches!(i, Instr::ElwU { op: ElwUnary::Relu, .. })
+            })
+        };
+        assert_eq!(relus(&progs[0]), 1, "hidden layer carries a trailing ReLU");
+        let rep = optimize_pipeline(&mut progs, PassSet::FUSE);
+        assert!(rep.passes[0].report.fused >= 1);
+        assert_eq!(relus(&progs[0]), 0);
+        let fused_gemm = progs[0].d_func.iter().find_map(|i| match i {
+            Instr::Gemm { dst, act: Some(op), .. } => Some((*dst, *op)),
+            _ => None,
+        });
+        let (dst, op) = fused_gemm.expect("hidden-layer GEMM carries the fused ReLU");
+        assert_eq!(op, ElwUnary::Relu);
+        assert_eq!(dst, progs[0].output_buf, "fused GEMM writes the old ELW destination");
+        // the final (linear) layer has nothing to fuse
+        assert!(!progs[1].d_func.iter().any(|i| matches!(i, Instr::Gemm { act: Some(_), .. })));
+        for p in &progs {
+            assert!(d_layout_ok(p) && offsets_ok(p));
+        }
+    }
+
+    #[test]
+    fn fuse_requires_sole_reader() {
+        // GGNN's GRU GEMMs all feed ELW.Add chains, never a sole-reader
+        // unary successor in the d_func — nothing may fuse there
+        let mut progs = pipeline(ModelKind::Ggnn, 1);
+        let rep = optimize_pipeline(&mut progs, PassSet::FUSE);
+        assert_eq!(
+            count_matching(&progs[0].d_func, |i| matches!(i, Instr::Gemm { act: Some(_), .. })),
+            0
+        );
+        let _ = rep;
+    }
+
+    #[test]
+    fn hoist_moves_weight_fills_to_dfunction() {
+        let mut progs = pipeline(ModelKind::Gat, 1);
+        let s_fills = count_matching(&progs[0].s_func, is_weight_load);
+        assert!(s_fills >= 1, "GAT fills weights per tile before hoisting");
+        let rep = optimize_pipeline(&mut progs, PassSet::HOIST);
+        assert_eq!(rep.passes[0].report.hoisted, s_fills);
+        assert_eq!(count_matching(&progs[0].s_func, is_weight_load), 0);
+        assert_eq!(count_matching(&progs[0].d_func, is_weight_load), s_fills);
+        // fills sit in the pre region: after FCH.PTT, before SIGNAL.S
+        assert!(is_weight_load(&progs[0].d_func[1]));
+        assert!(d_layout_ok(&progs[0]) && offsets_ok(&progs[0]));
+        // R-GCN keeps one fill per relation slice
+        let mut progs = pipeline(ModelKind::Rgcn, 1);
+        assert_eq!(count_matching(&progs[0].e_func, is_weight_load), NUM_RELATIONS as usize);
+        optimize_pipeline(&mut progs, PassSet::HOIST);
+        assert_eq!(count_matching(&progs[0].d_func, is_weight_load), NUM_RELATIONS as usize);
+        assert!(d_layout_ok(&progs[0]) && offsets_ok(&progs[0]));
+    }
+
+    #[test]
+    fn dbe_sweeps_fusion_orphans_and_never_resurrects() {
+        let mut progs = pipeline(ModelKind::Gcn, 2);
+        let rep = optimize_pipeline(&mut progs, PassSet::FUSE.with(PassSet::DBE));
+        let dbe = rep.passes.iter().find(|p| p.pass == "dbe").unwrap();
+        assert!(dbe.report.freed >= 1, "fusion orphans the old GEMM destination");
+        let after: Vec<BTreeSet<BufId>> = progs.iter().map(referenced_bufs).collect();
+        // a freed buffer stays dead: no instruction in any surviving
+        // program references a buffer outside its referenced set
+        for (p, bufs) in progs.iter().zip(&after) {
+            for f in [&p.d_func, &p.s_func, &p.e_func] {
+                for ins in f.iter() {
+                    for b in reads(ins).into_iter().chain(writes(ins)) {
+                        assert!(bufs.contains(&b));
+                    }
+                }
+            }
+            assert!(usize::from(p.part_bufs) >= 1);
+        }
+        // idempotent: a second sweep finds nothing
+        let again = optimize_pipeline(&mut progs, PassSet::DBE);
+        assert_eq!(again.passes[0].report.freed, 0);
+        assert_eq!(again.passes[0].report.removed, 0);
+    }
+
+    #[test]
+    fn dbe_removes_synthetic_dead_writes() {
+        let mut progs = pipeline(ModelKind::Gcn, 1);
+        let dead_buf = BufId(progs[0].tile_bufs);
+        progs[0].tile_bufs += 1;
+        insert_at(
+            &mut progs[0].s_func,
+            2,
+            vec![Instr::ElwU {
+                op: ElwUnary::Relu,
+                src: BufId(0),
+                dst: dead_buf,
+                rows: Dim::TileSrc,
+                cols: Dim::FeatIn,
+            }],
+        );
+        assert!(offsets_ok(&progs[0]), "insert_at re-targets branches");
+        let before = progs[0].instruction_count();
+        let rep = optimize_pipeline(&mut progs, PassSet::DBE);
+        assert_eq!(rep.passes[0].report.removed, 1);
+        assert_eq!(rep.passes[0].report.freed, 1);
+        assert_eq!(progs[0].instruction_count(), before - 1);
+        assert!(d_layout_ok(&progs[0]) && offsets_ok(&progs[0]));
+        assert_eq!(progs[0].tile_bufs, dead_buf.0, "high-water mark shrinks");
+    }
+
+    #[test]
+    fn every_subset_preserves_protocol_and_monotone_counts() {
+        for kind in ModelKind::ALL {
+            for depth in [1u32, 3] {
+                for passes in PassSet::every_subset() {
+                    let mut progs = pipeline(kind, depth);
+                    let gthr_before: usize = progs
+                        .iter()
+                        .map(|p| {
+                            count_matching(&p.e_func, |i| matches!(i, Instr::Gthr { .. }))
+                        })
+                        .sum();
+                    let rep = optimize_pipeline(&mut progs, passes);
+                    let tag = format!("{} depth {depth} passes {passes}", kind.name());
+                    // instruction counts monotonically non-increasing
+                    let mut prev = rep.instructions_before;
+                    for p in &rep.passes {
+                        assert!(p.instructions_after <= prev, "{tag}: {} grew", p.pass);
+                        prev = p.instructions_after;
+                    }
+                    for p in &progs {
+                        assert!(d_layout_ok(p), "{tag}: dFunction layout broken");
+                        assert!(offsets_ok(p), "{tag}: branch out of bounds");
+                        // one ST.DST, gathers and accumulators untouched
+                        assert_eq!(
+                            count_matching(&p.d_func, |i| matches!(i, Instr::St { .. })),
+                            1,
+                            "{tag}"
+                        );
+                        assert!(!p.accumulators.is_empty(), "{tag}");
+                    }
+                    let gthr_after: usize = progs
+                        .iter()
+                        .map(|p| {
+                            count_matching(&p.e_func, |i| matches!(i, Instr::Gthr { .. }))
+                        })
+                        .sum();
+                    assert_eq!(gthr_before, gthr_after, "{tag}: a pass removed a GTHR");
+                }
+            }
+        }
+    }
+}

@@ -267,6 +267,12 @@ pub struct RunConfig {
     pub tiling: crate::tiling::TilingConfig,
     /// Compiler optimization level.
     pub e2v: bool,
+    /// Pipeline-optimizer passes (`[run] passes`, `--passes`): run over
+    /// the whole compiled layer stack after per-layer lowering. Requires
+    /// `e2v` (the pipeline passes assume e2v-lowered programs). Part of
+    /// the plan identity — see `plan::PlanKey`. Empty = per-layer
+    /// lowering only (the pre-optimizer behavior).
+    pub passes: crate::compiler::PassSet,
     /// Execute functionally (compute embeddings) as well as timing.
     pub functional: bool,
     pub seed: u64,
@@ -288,6 +294,7 @@ impl Default for RunConfig {
             hidden: Vec::new(),
             tiling: crate::tiling::TilingConfig::default(),
             e2v: true,
+            passes: crate::compiler::PassSet::none(),
             functional: false,
             seed: 42,
             serving: ServingConfig::default(),
@@ -388,6 +395,14 @@ pub fn apply(
                     .collect::<Result<Vec<u32>, ConfigError>>()?;
             }
             ("run", "e2v") => run.e2v = boolean()?,
+            ("run", "passes") => {
+                run.passes =
+                    crate::compiler::PassSet::parse(&value).ok_or_else(|| {
+                        ConfigError(format!(
+                            "unknown pass set {value} (all | none | load_elim,fuse,hoist,dbe)"
+                        ))
+                    })?;
+            }
             ("run", "functional") => run.functional = boolean()?,
             ("run", "seed") => run.seed = num()? as u64,
             ("serving", "exec_threads") => run.serving.exec_threads = num()? as u32,
@@ -455,7 +470,7 @@ pub fn show(arch: &ArchConfig, run: &RunConfig) -> String {
          streams = 1d/{}s/{}e\npeak = {:.2} TFLOP/s\n\n\
          [run]\nmodel = {}\ndataset = {}\nscale = 1/{}\nfeat = {}x{}\n\
          layers = {}\nhidden = {}\n\
-         e2v = {}\nfunctional = {}\nseed = {}\n\n\
+         e2v = {}\npasses = {}\nfunctional = {}\nseed = {}\n\n\
          [serving]\nexec_threads = {}\nmax_batch = {}\nmax_wait_us = {}\n\
          queue_cap = {}\noverflow = {}\ndefault_deadline_us = {}\n\n\
          [kernels]\nsimd = {}\nsparse_skip = {}\ndtype = {}\n\n\
@@ -483,6 +498,7 @@ pub fn show(arch: &ArchConfig, run: &RunConfig) -> String {
         run.layers,
         hidden,
         run.e2v,
+        run.passes,
         run.functional,
         run.seed,
         run.serving.exec_threads,
@@ -611,6 +627,22 @@ mod tests {
     }
 
     #[test]
+    fn passes_parse_or_reject() {
+        use crate::compiler::PassSet;
+        let mut arch = ArchConfig::default();
+        let mut run = RunConfig::default();
+        assert_eq!(run.passes, PassSet::none());
+        apply("[run]\npasses = all\n", &mut arch, &mut run).unwrap();
+        assert_eq!(run.passes, PassSet::all());
+        apply("[run]\npasses = load_elim,dbe\n", &mut arch, &mut run).unwrap();
+        assert!(run.passes.contains(PassSet::LOAD_ELIM));
+        assert!(run.passes.contains(PassSet::DBE));
+        assert!(!run.passes.contains(PassSet::FUSE));
+        let err = apply("[run]\npasses = warp\n", &mut arch, &mut run).unwrap_err();
+        assert!(err.to_string().contains("unknown pass set"), "{err}");
+    }
+
+    #[test]
     fn unknown_key_rejected() {
         let mut arch = ArchConfig::default();
         let mut run = RunConfig::default();
@@ -629,6 +661,7 @@ mod tests {
         assert!(s.contains("max_wait_us = 0") && s.contains("default_deadline_us = 0"));
         assert!(s.contains("[kernels]") && s.contains("dtype = f32"));
         assert!(s.contains("layers = 1") && s.contains("hidden = (default)"));
+        assert!(s.contains("passes = none"));
         let run = RunConfig { layers: 3, hidden: vec![64, 32], ..RunConfig::default() };
         let s = show(&ArchConfig::default(), &run);
         assert!(s.contains("layers = 3") && s.contains("hidden = 64,32"));

@@ -509,6 +509,7 @@ mod tests {
                 threads: 1,
             },
             e2v: true,
+            passes: Default::default(),
             functional,
             seed: 3,
             serving: Default::default(),

@@ -184,6 +184,7 @@ pub fn validate_model_depth_with(
             threads: 1,
         },
         e2v: true,
+        passes: Default::default(),
         functional: true,
         seed,
         serving: Default::default(),

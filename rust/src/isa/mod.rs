@@ -17,8 +17,11 @@ use std::fmt;
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct BufId(pub u16);
 
-/// Model-weight table index (weights are resident in the MU weight buffer
-/// / UEM for the whole run; paper §7.1).
+/// Model-weight table index. Weights live in the UEM for the whole run
+/// (paper §7.1); the per-tile `LD.W` instructions emitted by the compiler
+/// model the on-chip UEM → MU weight-buffer fill before each use. The
+/// pipeline optimizer's hoist pass restores whole-partition residency by
+/// lifting those fills into the dFunction (see `compiler::optimize`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct WeightId(pub u16);
 
@@ -110,6 +113,10 @@ pub enum LdTarget {
     Src,
     /// Tile edge list into the Tile Hub (per tile).
     Edge,
+    /// Weight slice from the UEM into the MU weight buffer (on-chip
+    /// fill, no DRAM traffic; `dst` encodes the *weight-table index*,
+    /// not an embedding buffer — see `WeightId`).
+    Weight,
 }
 
 /// Which stream class a SIGNAL wakes (the paper's SIGNAL.E generalized:
@@ -166,6 +173,10 @@ pub enum Instr {
         n: Dim,
         /// Accumulate into dst instead of overwrite (partition acc).
         accumulate: bool,
+        /// Fused activation applied on the MU's output path as results
+        /// stream to `dst` (pipeline-optimizer fusion; `None` when the
+        /// activation is a separate ELW instruction).
+        act: Option<ElwUnary>,
     },
     /// Index-guided batched matmul (R-GCN): per-edge weight selected by
     /// the tile's edge-type array; src is per-edge features.
@@ -275,6 +286,9 @@ impl Instr {
                 // COO pair per edge (paper stores tiles in COO/CSC)
                 r(Dim::TileEdges) * 8
             }
+            // weights are UEM-resident (paper §7.1): LD.W is an on-chip
+            // fill, never an HBM transfer
+            Instr::Ld { target: LdTarget::Weight, .. } => 0,
             Instr::Ld { rows, cols, .. } | Instr::St { rows, cols, .. } => {
                 r(*rows) * r(*cols) * 4
             }
@@ -316,10 +330,11 @@ impl fmt::Display for Instr {
                 "GEMV b{} w{} -> b{} [{}x{}]",
                 src.0, weight.0, dst.0, d(*rows), d(*cols)
             ),
-            Instr::Gemm { src, weight, dst, m, k, n, accumulate } => write!(
+            Instr::Gemm { src, weight, dst, m, k, n, accumulate, act } => write!(
                 f,
-                "GEMM{} b{} w{} -> b{} [{}x{}x{}]",
+                "GEMM{}{} b{} w{} -> b{} [{}x{}x{}]",
                 if *accumulate { ".ACC" } else { "" },
+                act.map(|a| format!(".{a:?}")).unwrap_or_default(),
                 src.0, weight.0, dst.0, d(*m), d(*k), d(*n)
             ),
             Instr::Bmm { src, weights, dst, m, k, n } => write!(
@@ -340,6 +355,9 @@ impl fmt::Display for Instr {
                 if *accumulate { ".ACC" } else { "" },
                 src.0, dst.0, d(*cols)
             ),
+            Instr::Ld { target: LdTarget::Weight, dst, rows, cols } => {
+                write!(f, "LD.WGT w{} [{}x{}]", dst.0, d(*rows), d(*cols))
+            }
             Instr::Ld { target, dst, rows, cols } => write!(
                 f,
                 "LD.{} -> b{} [{}x{}]",
@@ -347,6 +365,7 @@ impl fmt::Display for Instr {
                     LdTarget::Dst => "DST",
                     LdTarget::Src => "SRC",
                     LdTarget::Edge => "EDGE",
+                    LdTarget::Weight => unreachable!(),
                 },
                 dst.0, d(*rows), d(*cols)
             ),
@@ -391,6 +410,7 @@ mod tests {
         let gemm = Instr::Gemm {
             src: BufId(0), weight: WeightId(0), dst: BufId(1),
             m: Dim::TileSrc, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+            act: None,
         };
         assert_eq!(gemm.unit(), UnitClass::Mu);
         let gthr = Instr::Gthr {
@@ -412,6 +432,7 @@ mod tests {
         let gemm = Instr::Gemm {
             src: BufId(0), weight: WeightId(0), dst: BufId(1),
             m: Dim::TileSrc, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+            act: None,
         };
         assert_eq!(gemm.flops(&c), 2 * 100 * 128 * 32);
     }
@@ -429,6 +450,12 @@ mod tests {
             rows: Dim::TileEdges, cols: Dim::Const(1),
         };
         assert_eq!(lde.dram_bytes(&c), 400 * 8);
+        // LD.W is an on-chip UEM -> MU fill: zero DRAM traffic
+        let ldw = Instr::Ld {
+            target: LdTarget::Weight, dst: BufId(0),
+            rows: Dim::FeatIn, cols: Dim::FeatOut,
+        };
+        assert_eq!(ldw.dram_bytes(&c), 0);
     }
 
     #[test]
@@ -437,5 +464,16 @@ mod tests {
             dir: SctrDir::OutEdge, src: BufId(2), dst: BufId(3), cols: Dim::FeatOut,
         };
         assert_eq!(format!("{i}"), "SCTR.OUTE b2 -> b3 [ExFo]");
+        let fused = Instr::Gemm {
+            src: BufId(0), weight: WeightId(1), dst: BufId(2),
+            m: Dim::PartDst, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+            act: Some(ElwUnary::Relu),
+        };
+        assert_eq!(format!("{fused}"), "GEMM.Relu b0 w1 -> b2 [DxFixFo]");
+        let ldw = Instr::Ld {
+            target: LdTarget::Weight, dst: BufId(3),
+            rows: Dim::FeatIn, cols: Dim::FeatOut,
+        };
+        assert_eq!(format!("{ldw}"), "LD.WGT w3 [FixFo]");
     }
 }

@@ -16,7 +16,7 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::process::ExitCode;
 
-use zipper::compiler::{compile, OptLevel};
+use zipper::compiler::{compile, optimize_pipeline, OptLevel, PassSet};
 use zipper::config::{self, ArchConfig, OverflowPolicy, RunConfig, StorageDtype};
 use zipper::coordinator::{validate, Coordinator, InferenceRequest, Session};
 use zipper::energy::EnergyModel;
@@ -147,6 +147,10 @@ fn build_configs(args: &Args) -> Result<(ArchConfig, RunConfig), String> {
     if args.flag("no-e2v") {
         run.e2v = false;
     }
+    if let Some(v) = args.get("passes") {
+        run.passes = PassSet::parse(v)
+            .ok_or("bad --passes (all | none | comma list of load_elim,fuse,hoist,dbe)")?;
+    }
     if args.flag("functional") {
         run.functional = true;
     }
@@ -192,11 +196,51 @@ fn real_main(argv: &[String]) -> Result<(), String> {
             let (_, run) = build_configs(&args)?;
             let model = ModelKind::parse(&run.model)
                 .ok_or_else(|| format!("unknown model {}", run.model))?;
-            let opt = if run.e2v { OptLevel::E2v } else { OptLevel::None };
-            let p = compile(&model.build(), opt).map_err(|e| e.to_string())?;
-            println!("{}", p.disassemble());
-            if let Some(stats) = p.e2v {
-                println!("; e2v: hoisted {} ops in {} rounds", stats.hoisted, stats.rounds);
+            if !run.passes.is_empty() && !run.e2v {
+                return Err("--passes requires e2v lowering (drop --no-e2v)".into());
+            }
+            let spec = zipper::models::ModelSpec::new(
+                model,
+                run.feat_in,
+                &run.hidden,
+                run.feat_out,
+                run.layers,
+            )?;
+            let opt = if !run.e2v {
+                OptLevel::None
+            } else if run.passes.is_empty() {
+                OptLevel::E2v
+            } else {
+                OptLevel::Pipeline(run.passes)
+            };
+            let mut programs = Vec::with_capacity(spec.depth());
+            for l in 0..spec.depth() {
+                programs
+                    .push(compile(&spec.build_layer(l), opt).map_err(|e| e.to_string())?);
+            }
+            let report = (!run.passes.is_empty())
+                .then(|| optimize_pipeline(&mut programs, run.passes));
+            for (l, p) in programs.iter().enumerate() {
+                if programs.len() > 1 {
+                    let lay = &spec.layers[l];
+                    println!("; ===== layer {l}: {}x{} =====", lay.feat_in, lay.feat_out);
+                }
+                println!("{}", p.disassemble());
+                if let Some(stats) = p.e2v {
+                    println!(
+                        "; e2v: hoisted {} ops in {} rounds",
+                        stats.hoisted, stats.rounds
+                    );
+                }
+            }
+            if let Some(rep) = report {
+                println!(
+                    "; pipeline optimizer ({}): {} -> {} instructions",
+                    run.passes,
+                    rep.instructions_before,
+                    rep.instructions_after()
+                );
+                print!("{rep}");
             }
             Ok(())
         }
@@ -430,6 +474,10 @@ fn real_main(argv: &[String]) -> Result<(), String> {
                  --hidden d1,d2,...   hidden widths between layers (exactly\n                       \
                  layers-1 entries; default: feat_out) [run]\n  \
                  --no-e2v             disable the E2V compiler optimization\n  \
+                 --passes P           pipeline-optimizer passes run over the whole\n                       \
+                 compiled layer stack: all | none | comma\n                       \
+                 list of load_elim,fuse,hoist,dbe\n                       \
+                 (requires e2v; default none)         [run]\n  \
                  --functional         also execute on f32 embeddings (checksums)\n  \
                  --simd / --no-simd   force the SIMD kernel variants on or off\n                       \
                  (default: on when built with the `simd`\n                       \

@@ -16,7 +16,7 @@
 //! structured [`PlanKey`] to `Arc<ExecPlan>`, with hit/miss counters so
 //! benches can prove warm requests skip recompile/retile entirely.
 
-use crate::compiler::{compile, OptLevel, Program};
+use crate::compiler::{compile, optimize_pipeline, OptLevel, PassSet, PipelineOptReport, Program};
 use crate::config::{ArchConfig, KernelPolicy, RunConfig};
 use crate::graph::{datasets, Graph};
 use crate::models::{ModelKind, ModelSpec, WeightStore, NUM_RELATIONS};
@@ -50,6 +50,10 @@ pub struct PlanKey {
     pub layers: Vec<(u32, u32)>,
     pub tiling: TilingConfig,
     pub e2v: bool,
+    /// Pipeline-optimizer pass selection. Part of the key because the
+    /// passes rewrite the compiled programs: plans built under different
+    /// pass subsets must never alias in the cache.
+    pub passes: PassSet,
     pub seed: u64,
     /// Kernel-variant selection (SIMD / sparsity skipping / storage
     /// dtype). Part of the key because the compiled artifact differs:
@@ -72,6 +76,7 @@ impl PlanKey {
             // not fragment the cache
             tiling: run.tiling.cache_key(),
             e2v: run.e2v,
+            passes: run.passes,
             seed: run.seed,
             kernels: run.kernels,
         }
@@ -117,7 +122,7 @@ impl fmt::Display for PlanKey {
             .join(",");
         write!(
             f,
-            "model={};dataset={};scale={};feat={}x{};layers={};dst_part={};src_part={};mode={};reorder={};e2v={};seed={};simd={};skip={};dtype={}",
+            "model={};dataset={};scale={};feat={}x{};layers={};dst_part={};src_part={};mode={};reorder={};e2v={};passes={};seed={};simd={};skip={};dtype={}",
             self.model,
             self.dataset,
             self.scale,
@@ -129,6 +134,7 @@ impl fmt::Display for PlanKey {
             mode,
             reorder,
             self.e2v,
+            self.passes,
             self.seed,
             self.kernels.simd,
             self.kernels.sparse_skip,
@@ -185,6 +191,9 @@ pub struct ExecPlan {
     /// Final layer's output embedding width.
     pub feat_out: u32,
     pub dims: PlanDims,
+    /// Per-pass attribution from the pipeline optimizer, when the run
+    /// selected a non-empty [`PassSet`] (`None` = no optimizer run).
+    pub opt_report: Option<PipelineOptReport>,
 }
 
 impl ExecPlan {
@@ -202,14 +211,29 @@ impl ExecPlan {
     /// Compile a plan around an explicit graph (tests, examples).
     pub fn from_graph(model: ModelKind, graph: Graph, run: &RunConfig) -> Result<ExecPlan, String> {
         run.kernels.validate().map_err(|e| e.to_string())?;
+        if !run.passes.is_empty() && !run.e2v {
+            return Err(format!(
+                "pipeline passes ({}) require e2v lowering (drop --no-e2v or --passes)",
+                run.passes
+            ));
+        }
         let spec = ModelSpec::new(model, run.feat_in, &run.hidden, run.feat_out, run.layers)?;
         // the ONE graph-side compile step, shared by every stage
         let tiling = tile(&graph, run.tiling);
-        let opt = if run.e2v { OptLevel::E2v } else { OptLevel::None };
-        let mut stages = Vec::with_capacity(spec.depth());
+        let opt = if !run.e2v {
+            OptLevel::None
+        } else if run.passes.is_empty() {
+            OptLevel::E2v
+        } else {
+            OptLevel::Pipeline(run.passes)
+        };
+        // per-layer lowering first: the pipeline optimizer needs the
+        // whole compiled layer stack before any stage is finalized
+        let mut programs = Vec::with_capacity(spec.depth());
+        let mut stores = Vec::with_capacity(spec.depth());
         for (l, layer) in spec.layers.iter().enumerate() {
             let dag = spec.build_layer(l);
-            let program = compile(&dag, opt).map_err(|e| format!("layer {l}: {e}"))?;
+            programs.push(compile(&dag, opt).map_err(|e| e.at_layer(l).to_string())?);
             let mut weights = WeightStore::synthesize(
                 &dag,
                 layer.feat_in,
@@ -222,13 +246,24 @@ impl ExecPlan {
             // convert-at-load would produce — and every executor reads
             // the same values. F32 policy is a no-op.
             weights.quantize(run.kernels.dtype);
-            stages.push(LayerStage {
+            stores.push(weights);
+        }
+        let opt_report = if run.passes.is_empty() {
+            None
+        } else {
+            Some(optimize_pipeline(&mut programs, run.passes))
+        };
+        let stages: Vec<LayerStage> = programs
+            .into_iter()
+            .zip(stores)
+            .zip(&spec.layers)
+            .map(|((program, weights), layer)| LayerStage {
                 program,
                 weights,
                 feat_in: layer.feat_in,
                 feat_out: layer.feat_out,
-            });
-        }
+            })
+            .collect();
         let (feat_in, feat_out) = (spec.feat_in(), spec.feat_out());
         let dims = PlanDims {
             num_vertices: tiling.num_vertices,
@@ -250,6 +285,7 @@ impl ExecPlan {
             feat_in,
             feat_out,
             dims,
+            opt_report,
         })
     }
 
@@ -603,6 +639,7 @@ mod tests {
                 threads: 1,
             },
             e2v: true,
+            passes: PassSet::none(),
             functional: false,
             seed: 3,
             serving: Default::default(),
@@ -781,6 +818,63 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn cache_never_aliases_pass_sets() {
+        let cache = PlanCache::new();
+        cache.get_or_compile(&run_cfg("gcn")).unwrap();
+        let mut opt = run_cfg("gcn");
+        opt.passes = PassSet::all();
+        let (plan, hit) = cache.get_or_compile(&opt).unwrap();
+        assert!(!hit, "pass sets must not alias in the plan cache");
+        assert!(plan.opt_report.is_some());
+        let mut partial = run_cfg("gcn");
+        partial.passes = PassSet::LOAD_ELIM;
+        let (_, hit) = cache.get_or_compile(&partial).unwrap();
+        assert!(!hit, "pass subsets must not alias either");
+        assert_eq!(cache.stats().entries, 3);
+        let key = PlanKey::of(&opt);
+        assert!(key.to_string().contains("passes=all"), "{key}");
+    }
+
+    #[test]
+    fn passes_require_e2v_lowering() {
+        let mut bad = run_cfg("gcn");
+        bad.e2v = false;
+        bad.passes = PassSet::all();
+        let err = ExecPlan::compile(&bad).unwrap_err();
+        assert!(err.contains("require e2v"), "{err}");
+    }
+
+    #[test]
+    fn optimized_plan_shrinks_and_matches_baseline() {
+        // the ISSUE.md acceptance shape: all passes on, depth-3 GCN —
+        // fewer instructions than E2v, bit-identical functional output
+        let mut base = run_cfg("gcn");
+        base.layers = 3;
+        let mut opt = base.clone();
+        opt.passes = PassSet::all();
+        let baseline = ExecPlan::compile(&base).unwrap();
+        let optimized = ExecPlan::compile(&opt).unwrap();
+        let count = |p: &ExecPlan| {
+            p.stages.iter().map(|s| s.program.instruction_count()).sum::<usize>()
+        };
+        assert!(
+            count(&optimized) < count(&baseline),
+            "all-passes depth-3 GCN must drop instructions ({} vs {})",
+            count(&optimized),
+            count(&baseline)
+        );
+        let rep = optimized.opt_report.as_ref().unwrap();
+        assert_eq!(rep.passes.len(), 4);
+        assert!(rep.instructions_after() < rep.instructions_before);
+        let x = baseline.make_input(11);
+        let arch = ArchConfig::default();
+        let a = baseline.simulate(&arch, true, Some(&x), 0).unwrap();
+        let b = optimized.simulate(&arch, true, Some(&x), 0).unwrap();
+        assert_eq!(a.output, b.output, "optimized plan must be bit-exact");
+        assert!(b.cycles <= a.cycles, "optimizer must not cost cycles");
     }
 
     #[test]

@@ -130,6 +130,9 @@ pub(crate) fn exec_instr<A: BufAccess>(
         // the edge list already lives in the Tile struct; LD.EDGE is
         // timing-only
         Instr::Ld { target: LdTarget::Edge, .. } => Ok(()),
+        // weights are read straight out of the WeightStore by the compute
+        // arms; LD.W models the UEM -> MU weight-buffer fill (timing-only)
+        Instr::Ld { target: LdTarget::Weight, .. } => Ok(()),
         Instr::Ld { target: LdTarget::Src, dst, .. } => {
             let tm = t_meta.ok_or("LD.SRC w/o tile")?;
             let (mut t, _) = a.take_dst(*dst)?;
@@ -221,7 +224,7 @@ pub(crate) fn exec_instr<A: BufAccess>(
                     .map_err(|e| ctx(instr, e))?;
             a.put_back(*dst, out, grew)
         }
-        Instr::Gemm { src, weight: w, dst, m, k, n, accumulate } => {
+        Instr::Gemm { src, weight: w, dst, m, k, n, accumulate, act } => {
             if src == dst {
                 return Err(alias_err(instr, *src));
             }
@@ -257,6 +260,13 @@ pub(crate) fn exec_instr<A: BufAccess>(
                 tensor::matmul_with(x, wd, rd(*k), rd(*n), &mut out, *accumulate, policy.simd)
             }
             .map_err(|e| ctx(instr, e))?;
+            // Fused activation (pipeline-optimizer fusion): applied on the
+            // detached output before re-attach — bit-exact with the
+            // separate ELW instruction it replaced, on every path, because
+            // this is the same kernel the ELW arm would have called.
+            if let Some(op) = act {
+                tensor::apply_unary_inplace_with(policy.simd, *op, &mut out);
+            }
             a.put_back(*dst, out, grew)
         }
         Instr::Bmm { src, weights: w, dst, k, n, .. } => {
@@ -396,11 +406,11 @@ mod tests {
             },
             Instr::Gemm {
                 src: BufId(0), weight: WeightId(0), dst: BufId(5),
-                m: r, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+                m: r, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false, act: None,
             },
             Instr::Gemm {
                 src: BufId(4), weight: WeightId(0), dst: BufId(5),
-                m: r, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: true,
+                m: r, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: true, act: None,
             },
             Instr::Sctr { dir: SctrDir::OutEdge, src: BufId(5), dst: BufId(6), cols: Dim::FeatOut },
             // partition-frame read from the tile phase (LD.DST-style data)
@@ -507,7 +517,7 @@ mod tests {
             Instr::Ld { target: LdTarget::Dst, dst: P0, rows: Dim::PartDst, cols: Dim::FeatIn },
             Instr::Gemm {
                 src: P0, weight: WeightId(0), dst: P1,
-                m: Dim::PartDst, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+                m: Dim::PartDst, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false, act: None,
             },
             // aliased in-place unary on a partition buffer
             Instr::ElwU {
@@ -598,10 +608,23 @@ mod tests {
         let mut a = TileAccess { lane_part: &lane_part, x_tiled: &x_tiled, frame: &mut frame, allocs: 0 };
         let gemm = Instr::Gemm {
             src: BufId(0), weight: WeightId(0), dst: BufId(0),
-            m: Dim::TileSrc, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+            m: Dim::TileSrc, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false, act: None,
         };
         let err = exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, POL, &gemm)
             .unwrap_err();
+        assert!(err.contains("cannot run in place"), "{err}");
+
+        // fusion never relaxes the structural aliasing rule (the PR 4
+        // case): a fused-activation GEMM aliasing src == dst is the same
+        // descriptive error, not a spurious "unset" or a silent in-place
+        let fused_aliased = Instr::Gemm {
+            src: BufId(0), weight: WeightId(0), dst: BufId(0),
+            m: Dim::TileSrc, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+            act: Some(ElwUnary::Relu),
+        };
+        let err =
+            exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, POL, &fused_aliased)
+                .unwrap_err();
         assert!(err.contains("cannot run in place"), "{err}");
 
         let relu_unset = Instr::ElwU {
@@ -611,6 +634,64 @@ mod tests {
             exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, POL, &relu_unset)
                 .unwrap_err();
         assert!(err.contains("unset"), "{err}");
+    }
+
+    /// A fused-activation GEMM is bit-exact with the unfused
+    /// GEMM-then-ELW sequence it replaces (the optimizer's fusion pass
+    /// relies on this), and LD.W is a functional no-op on every adapter.
+    #[test]
+    fn fused_activation_gemm_matches_unfused_sequence() {
+        let (weights, part, tile, dims, x_tiled) = fixture();
+        let ld = Instr::Ld {
+            target: LdTarget::Src, dst: BufId(0), rows: Dim::TileSrc, cols: Dim::FeatIn,
+        };
+        let ldw = Instr::Ld {
+            target: LdTarget::Weight, dst: BufId(0), rows: Dim::FeatIn, cols: Dim::FeatOut,
+        };
+        let run = |prog: &[Instr], out_buf: BufId| -> Vec<f32> {
+            let lane_part = Frame::default();
+            let mut frame = Frame::default();
+            let mut a = TileAccess {
+                lane_part: &lane_part,
+                x_tiled: &x_tiled,
+                frame: &mut frame,
+                allocs: 0,
+            };
+            for instr in prog {
+                exec_instr(&mut a, &weights, FI, Some(&part), Some(&tile), &dims, POL, instr)
+                    .unwrap_or_else(|e| panic!("{e}"));
+            }
+            frame.get(out_buf.0 as usize).expect("output").data.clone()
+        };
+        let unfused = run(
+            &[
+                ld.clone(),
+                ldw.clone(),
+                Instr::Gemm {
+                    src: BufId(0), weight: WeightId(0), dst: BufId(1),
+                    m: Dim::TileSrc, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+                    act: None,
+                },
+                Instr::ElwU {
+                    op: ElwUnary::Relu, src: BufId(1), dst: BufId(2),
+                    rows: Dim::TileSrc, cols: Dim::FeatOut,
+                },
+            ],
+            BufId(2),
+        );
+        let fused = run(
+            &[
+                ld,
+                ldw,
+                Instr::Gemm {
+                    src: BufId(0), weight: WeightId(0), dst: BufId(2),
+                    m: Dim::TileSrc, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+                    act: Some(ElwUnary::Relu),
+                },
+            ],
+            BufId(2),
+        );
+        assert_eq!(unfused, fused, "fused activation diverged from unfused sequence");
     }
 
     /// `sparse_skip` routes TileSrc-row GEMMs on a partially occupied
@@ -632,7 +713,7 @@ mod tests {
             },
             Instr::Gemm {
                 src: BufId(0), weight: WeightId(0), dst: BufId(1),
-                m: Dim::TileSrc, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+                m: Dim::TileSrc, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false, act: None,
             },
         ];
         let run = |policy: KernelPolicy| -> Vec<f32> {

@@ -121,7 +121,7 @@ mod tests {
         // (32 x 128 x 128): 1 block × 128 K-cycles + 160 fill
         let i = Instr::Gemm {
             src: BufId(0), weight: WeightId(0), dst: BufId(1),
-            m: Dim::Const(32), k: Dim::FeatIn, n: Dim::Const(128), accumulate: false,
+            m: Dim::Const(32), k: Dim::FeatIn, n: Dim::Const(128), accumulate: false, act: None,
         };
         assert_eq!(compute_cycles(&arch(), &i, &ctx()), 160 + 128);
     }
@@ -130,7 +130,7 @@ mod tests {
     fn gemm_timing_scales_with_blocks() {
         let i = Instr::Gemm {
             src: BufId(0), weight: WeightId(0), dst: BufId(1),
-            m: Dim::Const(64), k: Dim::FeatIn, n: Dim::Const(256), accumulate: false,
+            m: Dim::Const(64), k: Dim::FeatIn, n: Dim::Const(256), accumulate: false, act: None,
         };
         assert_eq!(compute_cycles(&arch(), &i, &ctx()), 160 + 4 * 128);
     }
@@ -139,7 +139,7 @@ mod tests {
     fn bmm_slower_than_gemm() {
         let g = Instr::Gemm {
             src: BufId(0), weight: WeightId(0), dst: BufId(1),
-            m: Dim::TileEdges, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+            m: Dim::TileEdges, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false, act: None,
         };
         let b = Instr::Bmm {
             src: BufId(0), weights: WeightId(0), dst: BufId(1),
@@ -183,7 +183,7 @@ mod tests {
         let c = ctx();
         let g = Instr::Gemm {
             src: BufId(0), weight: WeightId(0), dst: BufId(1),
-            m: Dim::TileSrc, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false,
+            m: Dim::TileSrc, k: Dim::FeatIn, n: Dim::FeatOut, accumulate: false, act: None,
         };
         assert_eq!(macs(&g, &c), 256 * 128 * 128);
         assert_eq!(vu_ops(&g, &c), 0);

@@ -9,7 +9,7 @@
 use super::hbm::{Hbm, HbmConfig};
 use super::scheduler::TileCtx;
 use crate::config::ArchConfig;
-use crate::isa::{Instr, LdTarget};
+use crate::isa::{DimCtx, Instr, LdTarget};
 use crate::tiling::Tiling;
 
 pub(crate) struct Units {
@@ -109,6 +109,17 @@ impl Units {
                 let addr =
                     EDGE_BASE + ((tc.part_idx as u64) << 28) + ((tc.tile_idx as u64) << 14);
                 Ok(self.hbm.access(start, addr, bytes))
+            }
+            Instr::Ld { target: LdTarget::Weight, rows, cols, .. } => {
+                // on-chip UEM -> MU weight-buffer fill: never touches HBM
+                // (weights are UEM-resident, paper §7.1). Streamed at the
+                // UEM port width, plus a fixed issue overhead. Weight dims
+                // only ever resolve against the feature widths.
+                const UEM_PORT_BYTES: u64 = 64;
+                const ISSUE_CYCLES: u64 = 4;
+                let ctx = DimCtx { feat_in, feat_out, ..Default::default() };
+                let fill = rows.resolve(&ctx) as u64 * cols.resolve(&ctx) as u64 * 4;
+                Ok(start + ISSUE_CYCLES + fill.div_ceil(UEM_PORT_BYTES))
             }
             Instr::St { .. } => {
                 let p = cur_part.ok_or("ST w/o partition")?;

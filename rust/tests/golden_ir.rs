@@ -1,0 +1,129 @@
+//! Golden IR snapshots: the disassembled SDE programs of every model at
+//! both optimization tiers (`e2v` and `pipeline` = all passes) are
+//! pinned as text files under `tests/golden/`. Any compiler or
+//! optimizer change that rewrites the emitted IR shows up as a readable
+//! text diff instead of a silent behavior change.
+//!
+//! Blessing:
+//! * a MISSING snapshot is written automatically and the test passes
+//!   with a notice (first run / new model);
+//! * `GOLDEN_BLESS=1 cargo test --test golden_ir` rewrites every
+//!   snapshot from the current compiler output;
+//! * a MISMATCH fails the test and leaves the fresh output next to the
+//!   snapshot as `<name>.actual` (CI uploads the directory on failure).
+
+use std::fs;
+use std::path::PathBuf;
+use zipper::compiler::{compile, optimize_pipeline, OptLevel, PassSet};
+use zipper::models::{ModelKind, ModelSpec};
+
+const DEPTH: u32 = 2;
+const FEAT: u32 = 8;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+/// Render one model × tier as stable snapshot text: a header plus every
+/// stage's deterministic disassembly.
+fn render(kind: ModelKind, passes: PassSet) -> String {
+    let spec = ModelSpec::new(kind, FEAT, &[], FEAT, DEPTH).expect("spec");
+    let opt = if passes.is_empty() {
+        OptLevel::E2v
+    } else {
+        OptLevel::Pipeline(passes)
+    };
+    let mut programs: Vec<_> = (0..spec.depth())
+        .map(|l| compile(&spec.build_layer(l), opt).expect("compile"))
+        .collect();
+    let mut out = format!(
+        "; golden IR: model {} depth {DEPTH} feat {FEAT}x{FEAT} passes {passes}\n",
+        kind.name()
+    );
+    if !passes.is_empty() {
+        let rep = optimize_pipeline(&mut programs, passes);
+        out.push_str(&format!(
+            "; optimizer: {} -> {} instructions\n",
+            rep.instructions_before,
+            rep.instructions_after()
+        ));
+        for p in &rep.passes {
+            out.push_str(&format!(
+                "; pass {}: removed {} fused {} hoisted {} freed {}\n",
+                p.pass, p.report.removed, p.report.fused, p.report.hoisted, p.report.freed
+            ));
+        }
+    }
+    for (l, p) in programs.iter().enumerate() {
+        out.push_str(&format!("\n; ----- layer {l} -----\n"));
+        out.push_str(&p.disassemble());
+    }
+    out
+}
+
+fn check_snapshot(name: &str, actual: &str) -> Result<(), String> {
+    let dir = golden_dir();
+    fs::create_dir_all(&dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let path = dir.join(format!("{name}.sde"));
+    let bless = std::env::var("GOLDEN_BLESS").map(|v| v == "1").unwrap_or(false);
+    match fs::read_to_string(&path) {
+        Ok(want) if !bless => {
+            if want == actual {
+                // stale .actual from a previous failing run is noise
+                let _ = fs::remove_file(dir.join(format!("{name}.actual")));
+                Ok(())
+            } else {
+                let actual_path = dir.join(format!("{name}.actual"));
+                fs::write(&actual_path, actual)
+                    .map_err(|e| format!("{}: {e}", actual_path.display()))?;
+                let diff_line = want
+                    .lines()
+                    .zip(actual.lines())
+                    .position(|(a, b)| a != b)
+                    .map(|i| i + 1)
+                    .unwrap_or(want.lines().count().min(actual.lines().count()) + 1);
+                Err(format!(
+                    "golden IR mismatch for {name} (first differing line {diff_line}).\n\
+                     expected: {}\n  actual: {}\n\
+                     If the IR change is intentional, re-bless with \
+                     GOLDEN_BLESS=1 cargo test --test golden_ir",
+                    path.display(),
+                    actual_path.display()
+                ))
+            }
+        }
+        _ => {
+            // missing or blessing: write the snapshot
+            fs::write(&path, actual).map_err(|e| format!("{}: {e}", path.display()))?;
+            println!("blessed golden snapshot {}", path.display());
+            Ok(())
+        }
+    }
+}
+
+#[test]
+fn golden_ir_snapshots_per_model_and_tier() {
+    let mut failures = Vec::new();
+    for kind in ModelKind::ALL {
+        for (tier, passes) in [("e2v", PassSet::none()), ("pipeline", PassSet::all())] {
+            let name = format!("{}_{tier}", kind.name());
+            let actual = render(kind, passes);
+            if let Err(e) = check_snapshot(&name, &actual) {
+                failures.push(e);
+            }
+        }
+    }
+    assert!(failures.is_empty(), "{}", failures.join("\n\n"));
+}
+
+/// `disassemble()` must be deterministic — byte-identical across
+/// repeated compiles of the same layer — or the snapshots above would
+/// flake.
+#[test]
+fn disassembly_is_deterministic() {
+    for kind in ModelKind::ALL {
+        let a = render(kind, PassSet::all());
+        let b = render(kind, PassSet::all());
+        assert_eq!(a, b, "{}: disassembly must be deterministic", kind.name());
+    }
+}

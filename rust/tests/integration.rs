@@ -24,6 +24,7 @@ fn run_cfg(model: &str, dataset: &str) -> RunConfig {
             threads: 1,
         },
         e2v: true,
+        passes: Default::default(),
         functional: false,
         seed: 11,
         layers: 1,
@@ -189,6 +190,7 @@ mod properties {
                         threads: 1,
                     },
                     e2v: true,
+                    passes: Default::default(),
                     functional: true,
                     seed: 9,
                     layers: 1,
@@ -240,6 +242,7 @@ mod properties {
                             threads: 1,
                         },
                         e2v,
+                        passes: Default::default(),
                         functional: true,
                         seed: 3,
                         layers: 1,

@@ -45,6 +45,7 @@ fn run_cfg(model: &str, layers: u32, mode: TilingMode, kernels: KernelPolicy) ->
             threads: 1,
         },
         e2v: true,
+        passes: Default::default(),
         functional: true,
         seed: 3,
         serving: Default::default(),

@@ -33,6 +33,7 @@ fn run_cfg(model: &str, layers: u32, hidden: Vec<u32>) -> RunConfig {
             threads: 1,
         },
         e2v: true,
+        passes: Default::default(),
         functional: true,
         seed: 3,
         serving: Default::default(),

@@ -1,0 +1,174 @@
+//! Differential fuzzing for the pipeline optimizer (DESIGN.md §3.7).
+//!
+//! The optimizer's contract is *bit-exactness*: for every model × depth
+//! × pass subset, an optimized plan must produce byte-identical outputs
+//! to the plain `OptLevel::E2v` plan on BOTH executors — the cycle
+//! engine (`simulate_with`, functional) and the batched tile-parallel
+//! path (`execute_batch_with`) at 1 and 4 exec threads. On top of that,
+//! per-pass instruction counts must be monotonically non-increasing (no
+//! pass may grow the pipeline).
+//!
+//! The sweep is seeded: `OPT_FUZZ_SEED=<n>` re-randomizes the dataset
+//! seed and input seeds (CI runs one fixed-seed pass and one randomized
+//! soak); unset, the seed is fixed so failures reproduce exactly.
+
+use zipper::compiler::PassSet;
+use zipper::config::{ArchConfig, RunConfig};
+use zipper::plan::ExecPlan;
+use zipper::sim::parallel::BatchScratch;
+use zipper::tiling::{Reorder, TilingConfig, TilingMode};
+
+const MODELS: [&str; 5] = ["gcn", "gat", "sage", "ggnn", "rgcn"];
+
+fn fuzz_seed() -> u64 {
+    std::env::var("OPT_FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3)
+}
+
+fn run_cfg(model: &str, layers: u32, passes: PassSet, seed: u64) -> RunConfig {
+    RunConfig {
+        model: model.into(),
+        dataset: "CR".into(),
+        scale: 32,
+        feat_in: 8,
+        feat_out: 8,
+        layers,
+        hidden: Vec::new(),
+        tiling: TilingConfig {
+            dst_part: 64,
+            src_part: 64,
+            mode: TilingMode::Sparse,
+            reorder: Reorder::InDegree,
+            threads: 1,
+        },
+        e2v: true,
+        passes,
+        functional: true,
+        seed,
+        serving: Default::default(),
+        kernels: Default::default(),
+    }
+}
+
+/// The full differential sweep: {gcn,gat,sage,ggnn,rgcn} × depths
+/// {1,2,3} × all 16 pass subsets, each pinned bit-exact against the
+/// `PassSet::none()` (plain E2v) plan on both executors.
+#[test]
+fn every_pass_subset_is_bit_exact_on_both_executors() {
+    let arch = ArchConfig::default();
+    let seed = fuzz_seed();
+    for model in MODELS {
+        for depth in [1u32, 2, 3] {
+            let baseline =
+                ExecPlan::compile(&run_cfg(model, depth, PassSet::none(), seed)).unwrap();
+            let inputs: Vec<Vec<f32>> =
+                (0..2u64).map(|l| baseline.make_input(seed ^ (l + 11))).collect();
+            let lanes: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+            let engine_ref: Vec<Vec<f32>> = inputs
+                .iter()
+                .map(|x| {
+                    baseline.simulate(&arch, true, Some(x), 0).unwrap().output.unwrap()
+                })
+                .collect();
+            let base_instrs: usize = baseline
+                .stages
+                .iter()
+                .map(|s| s.program.instruction_count())
+                .sum();
+
+            for passes in PassSet::every_subset() {
+                let tag = format!("{model} depth={depth} passes={passes} seed={seed}");
+                let plan =
+                    ExecPlan::compile(&run_cfg(model, depth, passes, seed)).unwrap();
+
+                // engine path: bit-exact per lane
+                for (x, want) in inputs.iter().zip(&engine_ref) {
+                    let got =
+                        plan.simulate(&arch, true, Some(x), 0).unwrap().output.unwrap();
+                    assert_eq!(&got, want, "{tag}: engine output diverged");
+                }
+
+                // batched path: bit-exact at 1 and 4 exec threads
+                for threads in [1usize, 4] {
+                    let mut scratch = BatchScratch::new();
+                    let got =
+                        plan.execute_batch_with(&lanes, threads, &mut scratch).unwrap();
+                    for (lane, (g, want)) in got.iter().zip(&engine_ref).enumerate() {
+                        assert_eq!(
+                            g, want,
+                            "{tag}: run_batch threads={threads} lane={lane} diverged"
+                        );
+                    }
+                }
+
+                // per-pass instruction counts monotonically non-increasing
+                if passes.is_empty() {
+                    assert!(plan.opt_report.is_none(), "{tag}");
+                } else {
+                    let rep = plan.opt_report.as_ref().expect(&tag);
+                    assert_eq!(rep.instructions_before, base_instrs, "{tag}");
+                    let mut prev = rep.instructions_before;
+                    for p in &rep.passes {
+                        assert!(
+                            p.instructions_after <= prev,
+                            "{tag}: pass {} grew the pipeline ({} -> {})",
+                            p.pass,
+                            prev,
+                            p.instructions_after
+                        );
+                        prev = p.instructions_after;
+                    }
+                    let total: usize = plan
+                        .stages
+                        .iter()
+                        .map(|s| s.program.instruction_count())
+                        .sum();
+                    assert_eq!(rep.instructions_after(), total, "{tag}");
+                }
+            }
+        }
+    }
+}
+
+/// The ISSUE acceptance shape, pinned under the fuzz seed too: all
+/// passes on a depth-3 GCN strictly shrink the pipeline, and the
+/// attribution names every pass in its fixed execution order.
+#[test]
+fn all_passes_depth3_gcn_strictly_shrinks() {
+    let seed = fuzz_seed();
+    let baseline = ExecPlan::compile(&run_cfg("gcn", 3, PassSet::none(), seed)).unwrap();
+    let optimized = ExecPlan::compile(&run_cfg("gcn", 3, PassSet::all(), seed)).unwrap();
+    let count = |p: &ExecPlan| {
+        p.stages.iter().map(|s| s.program.instruction_count()).sum::<usize>()
+    };
+    assert!(count(&optimized) < count(&baseline));
+    let rep = optimized.opt_report.as_ref().unwrap();
+    let order: Vec<&str> = rep.passes.iter().map(|p| p.pass).collect();
+    assert_eq!(order, ["load_elim", "fuse", "hoist", "dbe"]);
+    let sum = |f: fn(&zipper::compiler::OptReport) -> usize| {
+        rep.passes.iter().map(|p| f(&p.report)).sum::<usize>()
+    };
+    assert!(sum(|r| r.removed) >= 2, "cross-layer LD.EDGE elimination must fire");
+    assert!(sum(|r| r.fused) >= 2, "both hidden-layer ReLUs must fuse");
+    assert!(sum(|r| r.freed) >= 2, "fusion orphans must be swept");
+}
+
+/// Pass-subset plans must never alias in the plan cache: 16 subsets ×
+/// one model/depth = 16 distinct entries.
+#[test]
+fn pass_subsets_never_alias_in_the_cache() {
+    use zipper::plan::PlanCache;
+    let cache = PlanCache::new();
+    let seed = fuzz_seed();
+    for passes in PassSet::every_subset() {
+        let (_, hit) = cache.get_or_compile(&run_cfg("gcn", 2, passes, seed)).unwrap();
+        assert!(!hit, "passes={passes} aliased a previous subset");
+    }
+    assert_eq!(cache.stats().entries, 16);
+    for passes in PassSet::every_subset() {
+        let (_, hit) = cache.get_or_compile(&run_cfg("gcn", 2, passes, seed)).unwrap();
+        assert!(hit, "passes={passes} must be warm on the second pass");
+    }
+}

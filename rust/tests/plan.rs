@@ -26,6 +26,7 @@ fn run_cfg(model: &str, seed: u64) -> RunConfig {
             threads: 1,
         },
         e2v: true,
+        passes: Default::default(),
         functional: true,
         seed,
         serving: Default::default(),

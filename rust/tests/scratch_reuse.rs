@@ -25,6 +25,7 @@ fn run_cfg(model: &str) -> RunConfig {
             threads: 1,
         },
         e2v: true,
+        passes: Default::default(),
         functional: true,
         seed: 3,
         layers: 1,

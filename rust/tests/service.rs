@@ -31,6 +31,7 @@ fn small_run(model: &str, functional: bool) -> RunConfig {
             threads: 1,
         },
         e2v: true,
+        passes: Default::default(),
         functional,
         seed: 3,
         serving: Default::default(),
