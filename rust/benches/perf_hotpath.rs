@@ -117,6 +117,7 @@ fn small_run(model: &str) -> RunConfig {
         hidden: Vec::new(),
         serving: Default::default(),
         kernels: Default::default(),
+        shards: 1,
     }
 }
 

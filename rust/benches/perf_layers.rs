@@ -52,6 +52,7 @@ fn request(model: &str, dataset: &str, scale: u64, depth: u32, id: u64) -> Infer
         seed: 7,
         serving: Default::default(),
         kernels: Default::default(),
+        shards: 1,
     };
     InferenceRequest { id, run, input_seed: id % 4 }
 }

@@ -72,6 +72,7 @@ fn request(i: u64) -> InferenceRequest {
         hidden: Vec::new(),
         serving: Default::default(),
         kernels: Default::default(),
+        shards: 1,
     };
     InferenceRequest { id: i, run, input_seed: i }
 }

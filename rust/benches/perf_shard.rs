@@ -1,0 +1,174 @@
+//! Multi-chip shard-count sweep (DESIGN.md §3.8): one RMAT graph, one
+//! depth-2 GCN plan per shard count K ∈ {1, 2, 4, 8}, cycle scaling vs
+//! the K=1 baseline, and the halo-exchange share of traffic and time.
+//! Asserts the acceptance bar: K=4 cycles within 1.35× of linear
+//! scaling on the full-size (2^20-vertex) graph — the cut is cheap
+//! enough that chips, not halos, dominate. Smoke mode shrinks the graph
+//! to CI size, drops K=8, and additionally proves the sharded stitch is
+//! bit-exact against the unsharded functional output on both execution
+//! paths. Emits `BENCH_shard.json`.
+//!
+//! ```bash
+//! cargo bench --bench perf_shard            # RMAT 2^20, ~8M edges
+//! cargo bench --bench perf_shard -- --smoke # tiny CI-sized run
+//! ```
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+use zipper::config::{ArchConfig, RunConfig};
+use zipper::graph::generators;
+use zipper::metrics::Table;
+use zipper::models::ModelKind;
+use zipper::plan::ExecPlan;
+use zipper::sim::parallel::BatchScratch;
+use zipper::tiling::{Reorder, TilingConfig, TilingMode};
+use zipper::util::json::Json;
+
+fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn run_cfg(scale_log2: u32, shards: u32) -> RunConfig {
+    RunConfig {
+        model: "gcn".into(),
+        dataset: format!("rmat{scale_log2}"),
+        scale: 1,
+        feat_in: 16,
+        feat_out: 16,
+        layers: 2,
+        hidden: Vec::new(),
+        tiling: TilingConfig {
+            dst_part: 256,
+            src_part: 256,
+            mode: TilingMode::Sparse,
+            reorder: Reorder::InDegree,
+            threads: 1,
+        },
+        e2v: true,
+        passes: Default::default(),
+        functional: false,
+        seed: 7,
+        serving: Default::default(),
+        kernels: Default::default(),
+        shards,
+    }
+}
+
+fn main() {
+    let (scale_log2, num_edges, ks): (u32, u64, &[u32]) =
+        if smoke() { (10, 4_096, &[1, 2, 4]) } else { (20, 8_388_608, &[1, 2, 4, 8]) };
+    let arch = ArchConfig::default();
+    let graph = generators::rmat(scale_log2, num_edges, 7);
+    println!(
+        "== shard sweep: RMAT 2^{scale_log2} (|V|={} |E|={}), depth-2 GCN ==",
+        graph.num_vertices(),
+        graph.num_edges()
+    );
+
+    let mut table = Table::new(&[
+        "K", "cycles", "speedup", "cut %", "halo vertices", "halo traffic", "halo share %",
+        "compile s",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut base_cycles = 0u64;
+
+    for &k in ks {
+        let t0 = Instant::now();
+        let plan = ExecPlan::from_graph(ModelKind::Gcn, graph.clone(), &run_cfg(scale_log2, k))
+            .expect("plan compiles");
+        let compile_s = t0.elapsed().as_secs_f64();
+        let res = plan.simulate(&arch, false, None, 0).expect("timing run");
+        if k == 1 {
+            base_cycles = res.cycles;
+        }
+        let speedup = base_cycles as f64 / res.cycles as f64;
+        let halo_share = res.halo.cycles as f64 / res.cycles as f64;
+        let cut = plan
+            .sharding
+            .as_ref()
+            .map(|s| s.partition.cut_fraction())
+            .unwrap_or(0.0);
+        table.row(&[
+            k.to_string(),
+            res.cycles.to_string(),
+            format!("{speedup:.2}x"),
+            format!("{:.1}", 100.0 * cut),
+            res.halo.vertices.to_string(),
+            zipper::util::fmt_bytes(res.halo.bytes),
+            format!("{:.1}", 100.0 * halo_share),
+            format!("{compile_s:.2}"),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("shards".to_string(), num(k as f64));
+        row.insert("cycles".to_string(), num(res.cycles as f64));
+        row.insert("speedup".to_string(), num(speedup));
+        row.insert("cut_fraction".to_string(), num(cut));
+        row.insert("halo_vertices".to_string(), num(res.halo.vertices as f64));
+        row.insert("halo_bytes".to_string(), num(res.halo.bytes as f64));
+        row.insert("halo_cycle_share".to_string(), num(halo_share));
+        row.insert("compile_seconds".to_string(), num(compile_s));
+        rows.push(Json::Obj(row));
+
+        // the acceptance bar: K=4 within 1.35x of linear on the full graph
+        if k == 4 && !smoke() {
+            let linear = base_cycles as f64 / 4.0;
+            assert!(
+                (res.cycles as f64) <= 1.35 * linear,
+                "K=4 cycles {} exceed 1.35x linear ({:.0})",
+                res.cycles,
+                linear
+            );
+        }
+    }
+
+    if smoke() {
+        // bit-exact stitch: K in {2, 4} must reproduce the unsharded
+        // functional output on BOTH execution paths
+        let mut frun = run_cfg(scale_log2, 1);
+        frun.functional = true;
+        let base = ExecPlan::from_graph(ModelKind::Gcn, graph.clone(), &frun)
+            .expect("baseline compiles");
+        let x = base.make_input(11);
+        let want = base
+            .simulate(&arch, true, Some(&x), 0)
+            .expect("baseline run")
+            .output
+            .expect("baseline output");
+        for k in [2u32, 4] {
+            let mut srun = run_cfg(scale_log2, k);
+            srun.functional = true;
+            let plan = ExecPlan::from_graph(ModelKind::Gcn, graph.clone(), &srun)
+                .expect("sharded plan compiles");
+            let got = plan
+                .simulate(&arch, true, Some(&x), 0)
+                .expect("sharded run")
+                .output
+                .expect("sharded output");
+            assert_eq!(got, want, "K={k}: sharded engine stitch must be bit-exact");
+            let mut scratch = BatchScratch::new();
+            let outs = plan
+                .execute_batch_with(&[&x], 2, &mut scratch)
+                .expect("sharded batched run");
+            assert_eq!(outs[0], want, "K={k}: sharded batched stitch must be bit-exact");
+        }
+        println!("smoke: sharded stitch bit-exact for K in {{2, 4}} on both paths");
+    }
+
+    print!("{}", table.render());
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("perf_shard".to_string()));
+    root.insert("graph".to_string(), Json::Str(format!("rmat{scale_log2}")));
+    root.insert("num_vertices".to_string(), num((1u64 << scale_log2) as f64));
+    root.insert("num_edges".to_string(), num(graph.num_edges() as f64));
+    root.insert("model".to_string(), Json::Str("gcn".to_string()));
+    root.insert("depth".to_string(), num(2.0));
+    root.insert("sweep".to_string(), Json::Arr(rows));
+    let path = "BENCH_shard.json";
+    std::fs::write(path, Json::Obj(root).to_string_pretty()).expect("write BENCH_shard.json");
+    println!("wrote {path}");
+}

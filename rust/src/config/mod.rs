@@ -276,6 +276,11 @@ pub struct RunConfig {
     /// Execute functionally (compute embeddings) as well as timing.
     pub functional: bool,
     pub seed: u64,
+    /// Multi-chip shard count (DESIGN.md §3.8): 1 = single-chip (the
+    /// default, no partitioning); K ≥ 2 splits the graph into K shards
+    /// that execute concurrently with per-layer halo exchange. Part of
+    /// the plan identity — see `plan::PlanKey`.
+    pub shards: u32,
     /// Coordinator serving knobs (never part of the plan identity).
     pub serving: ServingConfig,
     /// Kernel policy (part of the plan identity — see `plan::PlanKey`).
@@ -297,6 +302,7 @@ impl Default for RunConfig {
             passes: crate::compiler::PassSet::none(),
             functional: false,
             seed: 42,
+            shards: 1,
             serving: ServingConfig::default(),
             kernels: KernelPolicy::default(),
         }
@@ -405,6 +411,12 @@ pub fn apply(
             }
             ("run", "functional") => run.functional = boolean()?,
             ("run", "seed") => run.seed = num()? as u64,
+            ("run", "shards") => {
+                run.shards = num()? as u32;
+                if run.shards == 0 {
+                    return Err(ConfigError("shards must be >= 1".into()));
+                }
+            }
             ("serving", "exec_threads") => run.serving.exec_threads = num()? as u32,
             ("serving", "max_batch") => run.serving.max_batch = num()? as u32,
             ("serving", "max_wait_us") => run.serving.max_wait_us = num()? as u64,
@@ -470,7 +482,7 @@ pub fn show(arch: &ArchConfig, run: &RunConfig) -> String {
          streams = 1d/{}s/{}e\npeak = {:.2} TFLOP/s\n\n\
          [run]\nmodel = {}\ndataset = {}\nscale = 1/{}\nfeat = {}x{}\n\
          layers = {}\nhidden = {}\n\
-         e2v = {}\npasses = {}\nfunctional = {}\nseed = {}\n\n\
+         e2v = {}\npasses = {}\nfunctional = {}\nseed = {}\nshards = {}\n\n\
          [serving]\nexec_threads = {}\nmax_batch = {}\nmax_wait_us = {}\n\
          queue_cap = {}\noverflow = {}\ndefault_deadline_us = {}\n\n\
          [kernels]\nsimd = {}\nsparse_skip = {}\ndtype = {}\n\n\
@@ -501,6 +513,7 @@ pub fn show(arch: &ArchConfig, run: &RunConfig) -> String {
         run.passes,
         run.functional,
         run.seed,
+        run.shards,
         run.serving.exec_threads,
         run.serving.max_batch,
         run.serving.max_wait_us,
@@ -643,6 +656,17 @@ mod tests {
     }
 
     #[test]
+    fn shards_parse_or_reject() {
+        let mut arch = ArchConfig::default();
+        let mut run = RunConfig::default();
+        assert_eq!(run.shards, 1);
+        apply("[run]\nshards = 4\n", &mut arch, &mut run).unwrap();
+        assert_eq!(run.shards, 4);
+        let err = apply("[run]\nshards = 0\n", &mut arch, &mut run).unwrap_err();
+        assert!(err.to_string().contains("shards must be >= 1"), "{err}");
+    }
+
+    #[test]
     fn unknown_key_rejected() {
         let mut arch = ArchConfig::default();
         let mut run = RunConfig::default();
@@ -662,6 +686,7 @@ mod tests {
         assert!(s.contains("[kernels]") && s.contains("dtype = f32"));
         assert!(s.contains("layers = 1") && s.contains("hidden = (default)"));
         assert!(s.contains("passes = none"));
+        assert!(s.contains("shards = 1"));
         let run = RunConfig { layers: 3, hidden: vec![64, 32], ..RunConfig::default() };
         let s = show(&ArchConfig::default(), &run);
         assert!(s.contains("layers = 3") && s.contains("hidden = 64,32"));

@@ -250,6 +250,9 @@ pub struct InferenceResponse {
     pub prepare_seconds: f64,
     /// How many requests shared this request's batched pass (≥ 1).
     pub batch_size: usize,
+    /// Chip-to-chip halo-exchange bytes billed to this request's timing
+    /// run (sharded plans only, 0 otherwise — DESIGN.md §3.8).
+    pub halo_bytes: u64,
     /// Checksum of the output embeddings (functional runs).
     pub output_checksum: Option<f64>,
     /// Structured shed reason, if the runtime rejected this request
@@ -274,6 +277,7 @@ impl InferenceResponse {
             plan_cache_hit: false,
             prepare_seconds: 0.0,
             batch_size: 1,
+            halo_bytes: 0,
             output_checksum: None,
             reject: None,
             error: None,
@@ -514,6 +518,7 @@ mod tests {
             seed: 3,
             serving: Default::default(),
             kernels: Default::default(),
+            shards: 1,
         }
     }
 

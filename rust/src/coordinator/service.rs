@@ -829,6 +829,7 @@ fn execute_batch(
             plan_cache_hit: hit,
             prepare_seconds,
             batch_size: batch.len(),
+            halo_bytes: timing.halo.bytes,
             output_checksum,
             ..InferenceResponse::empty(p.req.id, &p.req.run.model, &p.req.run.dataset)
         })
@@ -863,6 +864,7 @@ mod tests {
             seed: 3,
             serving: Default::default(),
             kernels: Default::default(),
+            shards: 1,
         }
     }
 

@@ -189,6 +189,7 @@ pub fn validate_model_depth_with(
         seed,
         serving: Default::default(),
         kernels,
+        shards: 1,
     };
     let session = Session::from_graph(model, graph, &run).map_err(|e| format!("session: {e}"))?;
     let x = session.make_input(seed ^ 0x5eed);

@@ -5,6 +5,50 @@
 //! destination vertex, its in-edges (source ids), sorted. Edge types
 //! (R-GCN) ride along as a parallel array in edge order.
 
+use std::fmt;
+
+/// Structural errors from graph construction and relabeling.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GraphError {
+    /// An edge endpoint is outside `0..num_vertices`.
+    EdgeOutOfRange { src: u32, dst: u32, num_vertices: u32 },
+    /// A relabel permutation has the wrong length.
+    PermLength { len: usize, num_vertices: u32 },
+    /// A relabel permutation repeats or exceeds a target id, so it is not
+    /// a bijection on `0..num_vertices`. `value` is the first offender.
+    PermNotBijective { value: u32, num_vertices: u32 },
+    /// A streaming edge source emitted different edge counts on its two
+    /// passes (the closure must be deterministic and re-runnable).
+    StreamNondeterministic { pass1: u64, pass2: u64 },
+}
+
+impl fmt::Display for GraphError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            GraphError::EdgeOutOfRange { src, dst, num_vertices } => write!(
+                f,
+                "edge ({src} -> {dst}) out of range for graph with {num_vertices} vertices"
+            ),
+            GraphError::PermLength { len, num_vertices } => write!(
+                f,
+                "permutation has {len} entries but the graph has {num_vertices} vertices"
+            ),
+            GraphError::PermNotBijective { value, num_vertices } => write!(
+                f,
+                "permutation is not a bijection on 0..{num_vertices}: \
+                 target id {value} is repeated or out of range"
+            ),
+            GraphError::StreamNondeterministic { pass1, pass2 } => write!(
+                f,
+                "edge stream emitted {pass1} edges on the counting pass \
+                 but {pass2} on the placement pass"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
 /// Immutable directed graph in CSC (by destination) order.
 #[derive(Clone, Debug)]
 pub struct Graph {
@@ -65,29 +109,102 @@ impl Graph {
     }
 
     /// Relabel vertices: `perm[old] = new`. Preserves edge multiplicity
-    /// and per-edge types. Used by the Degree-Sort reordering (§5.3).
-    pub fn relabel(&self, perm: &[u32]) -> Graph {
-        assert_eq!(perm.len(), self.num_vertices as usize);
-        debug_assert!({
-            let mut seen = vec![false; perm.len()];
-            perm.iter().all(|&p| {
-                let fresh = !seen[p as usize];
-                seen[p as usize] = true;
-                fresh
-            })
-        }, "perm must be a permutation");
-        let mut b = GraphBuilder::new(self.num_vertices);
-        for d in 0..self.num_vertices {
+    /// and per-edge types. Used by the Degree-Sort reordering (§5.3) and
+    /// by sharding, which partitions the *relabeled* graph so shard-local
+    /// ids can stay order-preserving (DESIGN.md §3.8).
+    ///
+    /// Rejects non-permutation input: wrong length, a repeated target id,
+    /// or a target id ≥ |V| all return a structured [`GraphError`].
+    pub fn relabel(&self, perm: &[u32]) -> Result<Graph, GraphError> {
+        let n = self.num_vertices;
+        if perm.len() != n as usize {
+            return Err(GraphError::PermLength { len: perm.len(), num_vertices: n });
+        }
+        let mut seen = vec![false; n as usize];
+        for &p in perm {
+            if p >= n || seen[p as usize] {
+                return Err(GraphError::PermNotBijective { value: p, num_vertices: n });
+            }
+            seen[p as usize] = true;
+        }
+        let mut b = GraphBuilder::with_capacity(n, self.srcs.len());
+        for d in 0..n {
             let range = self.in_edge_range(d);
             for (k, &s) in self.srcs[range.clone()].iter().enumerate() {
                 let et = self.etypes.as_ref().map(|t| t[range.start + k]);
-                b.add_edge_typed(perm[s as usize], perm[d as usize], et.unwrap_or(0));
+                b.add_edge_typed(perm[s as usize], perm[d as usize], et.unwrap_or(0))?;
             }
         }
         if self.etypes.is_some() {
             b.with_etypes();
         }
-        b.build()
+        Ok(b.build())
+    }
+
+    /// Build a CSC graph from a re-runnable edge stream without ever
+    /// materializing the unsorted edge list. The closure is invoked
+    /// twice with an `emit(src, dst, etype)` sink and must produce the
+    /// identical edge sequence both times (recreate your RNG from its
+    /// seed inside the closure). Pass 1 counts in-degrees to size the
+    /// column pointers; pass 2 places each edge directly into its final
+    /// destination slice — peak memory is the finished CSC arrays plus
+    /// one cursor vector, instead of `build()`'s extra 9 bytes/edge.
+    pub fn from_edge_stream<F>(
+        num_vertices: u32,
+        keep_etypes: bool,
+        mut stream: F,
+    ) -> Result<Graph, GraphError>
+    where
+        F: FnMut(&mut dyn FnMut(u32, u32, u8)),
+    {
+        let n = num_vertices as usize;
+        // pass 1: per-destination counts + eager range validation
+        let mut col_ptr = vec![0u64; n + 1];
+        let mut bad: Option<GraphError> = None;
+        let mut pass1 = 0u64;
+        stream(&mut |s, d, _t| {
+            pass1 += 1;
+            if s >= num_vertices || d >= num_vertices {
+                if bad.is_none() {
+                    bad = Some(GraphError::EdgeOutOfRange { src: s, dst: d, num_vertices });
+                }
+                return;
+            }
+            col_ptr[d as usize + 1] += 1;
+        });
+        if let Some(e) = bad {
+            return Err(e);
+        }
+        for i in 0..n {
+            col_ptr[i + 1] += col_ptr[i];
+        }
+        let m = col_ptr[n] as usize;
+        // pass 2: place edges at their cursor positions
+        let mut srcs = vec![0u32; m];
+        let mut types = if keep_etypes { vec![0u8; m] } else { Vec::new() };
+        let mut cursor: Vec<u64> = col_ptr[..n].to_vec();
+        let mut pass2 = 0u64;
+        let mut overflow = false;
+        stream(&mut |s, d, t| {
+            pass2 += 1;
+            let di = d as usize;
+            if s >= num_vertices || di >= n || cursor[di] >= col_ptr[di + 1] {
+                overflow = true;
+                return;
+            }
+            let at = cursor[di] as usize;
+            cursor[di] += 1;
+            srcs[at] = s;
+            if keep_etypes {
+                types[at] = t;
+            }
+        });
+        if overflow || pass2 != pass1 {
+            return Err(GraphError::StreamNondeterministic { pass1, pass2 });
+        }
+        sort_within_dst(&col_ptr, &mut srcs, &mut types, keep_etypes);
+        let etypes = keep_etypes.then_some(types);
+        Ok(Graph { num_vertices, col_ptr, srcs, etypes })
     }
 
     /// Total bytes of the graph structure itself (for the Fig 2 memory
@@ -95,6 +212,33 @@ impl Graph {
     pub fn structure_bytes(&self) -> u64 {
         (self.col_ptr.len() * 8 + self.srcs.len() * 4) as u64
             + self.etypes.as_ref().map_or(0, |t| t.len() as u64)
+    }
+}
+
+/// Sort each destination's in-neighbour slice by source id, carrying
+/// edge types along. Shared by `GraphBuilder::build` and the streaming
+/// constructor so both produce the identical canonical edge order.
+fn sort_within_dst(col_ptr: &[u64], srcs: &mut [u32], types: &mut [u8], keep_etypes: bool) {
+    let n = col_ptr.len() - 1;
+    for d in 0..n {
+        let lo = col_ptr[d] as usize;
+        let hi = col_ptr[d + 1] as usize;
+        if hi - lo > 1 {
+            if keep_etypes {
+                let mut pairs: Vec<(u32, u8)> = srcs[lo..hi]
+                    .iter()
+                    .copied()
+                    .zip(types[lo..hi].iter().copied())
+                    .collect();
+                pairs.sort_unstable_by_key(|&(s, _)| s);
+                for (i, (s, t)) in pairs.into_iter().enumerate() {
+                    srcs[lo + i] = s;
+                    types[lo + i] = t;
+                }
+            } else {
+                srcs[lo..hi].sort_unstable();
+            }
+        }
     }
 }
 
@@ -119,13 +263,23 @@ impl GraphBuilder {
         }
     }
 
-    pub fn add_edge(&mut self, src: u32, dst: u32) {
-        self.add_edge_typed(src, dst, 0);
+    /// Add an untyped edge. Endpoints are validated eagerly: an
+    /// out-of-range id fails here with the offending edge, not later
+    /// inside `build()`'s counting sort.
+    pub fn add_edge(&mut self, src: u32, dst: u32) -> Result<(), GraphError> {
+        self.add_edge_typed(src, dst, 0)
     }
 
-    pub fn add_edge_typed(&mut self, src: u32, dst: u32, etype: u8) {
-        debug_assert!(src < self.num_vertices && dst < self.num_vertices);
+    pub fn add_edge_typed(&mut self, src: u32, dst: u32, etype: u8) -> Result<(), GraphError> {
+        if src >= self.num_vertices || dst >= self.num_vertices {
+            return Err(GraphError::EdgeOutOfRange {
+                src,
+                dst,
+                num_vertices: self.num_vertices,
+            });
+        }
         self.edges.push((src, dst, etype));
+        Ok(())
     }
 
     /// Keep per-edge relation types in the built graph (R-GCN).
@@ -163,27 +317,7 @@ impl GraphBuilder {
                 types[at] = t;
             }
         }
-        // per-destination source ordering
-        for d in 0..n {
-            let lo = col_ptr[d] as usize;
-            let hi = col_ptr[d + 1] as usize;
-            if hi - lo > 1 {
-                if self.keep_etypes {
-                    let mut pairs: Vec<(u32, u8)> = srcs[lo..hi]
-                        .iter()
-                        .copied()
-                        .zip(types[lo..hi].iter().copied())
-                        .collect();
-                    pairs.sort_unstable_by_key(|&(s, _)| s);
-                    for (i, (s, t)) in pairs.into_iter().enumerate() {
-                        srcs[lo + i] = s;
-                        types[lo + i] = t;
-                    }
-                } else {
-                    srcs[lo..hi].sort_unstable();
-                }
-            }
-        }
+        sort_within_dst(&col_ptr, &mut srcs, &mut types, self.keep_etypes);
         let etypes = self.keep_etypes.then_some(types);
         Graph { num_vertices: self.num_vertices, col_ptr, srcs, etypes }
     }
@@ -196,10 +330,10 @@ mod tests {
     fn diamond() -> Graph {
         // 0→1, 0→2, 1→3, 2→3
         let mut b = GraphBuilder::new(4);
-        b.add_edge(0, 1);
-        b.add_edge(0, 2);
-        b.add_edge(1, 3);
-        b.add_edge(2, 3);
+        b.add_edge(0, 1).unwrap();
+        b.add_edge(0, 2).unwrap();
+        b.add_edge(1, 3).unwrap();
+        b.add_edge(2, 3).unwrap();
         b.build()
     }
 
@@ -221,11 +355,28 @@ mod tests {
     }
 
     #[test]
+    fn add_edge_rejects_out_of_range() {
+        let mut b = GraphBuilder::new(4);
+        assert_eq!(
+            b.add_edge(0, 4),
+            Err(GraphError::EdgeOutOfRange { src: 0, dst: 4, num_vertices: 4 })
+        );
+        assert_eq!(
+            b.add_edge_typed(7, 1, 3),
+            Err(GraphError::EdgeOutOfRange { src: 7, dst: 1, num_vertices: 4 })
+        );
+        // the rejected edges left no residue
+        assert_eq!(b.num_pending_edges(), 0);
+        b.add_edge(3, 0).unwrap();
+        assert_eq!(b.build().num_edges(), 1);
+    }
+
+    #[test]
     fn relabel_preserves_structure() {
         let g = diamond();
         // reverse permutation
         let perm: Vec<u32> = vec![3, 2, 1, 0];
-        let r = g.relabel(&perm);
+        let r = g.relabel(&perm).unwrap();
         assert_eq!(r.num_edges(), 4);
         // old 3 (in-deg 2) is now vertex 0
         assert_eq!(r.in_degree(0), 2);
@@ -233,10 +384,50 @@ mod tests {
     }
 
     #[test]
+    fn relabel_rejects_non_permutations() {
+        let g = diamond();
+        assert_eq!(
+            g.relabel(&[0, 1, 2]).unwrap_err(),
+            GraphError::PermLength { len: 3, num_vertices: 4 }
+        );
+        assert_eq!(
+            g.relabel(&[0, 1, 2, 2]).unwrap_err(),
+            GraphError::PermNotBijective { value: 2, num_vertices: 4 }
+        );
+        assert_eq!(
+            g.relabel(&[0, 1, 2, 9]).unwrap_err(),
+            GraphError::PermNotBijective { value: 9, num_vertices: 4 }
+        );
+    }
+
+    #[test]
+    fn relabel_inverse_round_trips() {
+        // property: relabel(perm) then relabel(inverse) is the identity,
+        // for seeded random permutations over a skewed graph
+        let g = super::super::generators::power_law(64, 400, 1.2, 1.2, 3, 9);
+        for seed in 0..5u64 {
+            let mut perm: Vec<u32> = (0..64).collect();
+            crate::util::Rng::new(seed).shuffle(&mut perm);
+            let mut inv = vec![0u32; 64];
+            for (old, &new) in perm.iter().enumerate() {
+                inv[new as usize] = old as u32;
+            }
+            let back = g.relabel(&perm).unwrap().relabel(&inv).unwrap();
+            for v in 0..64u32 {
+                assert_eq!(g.in_neighbors(v), back.in_neighbors(v), "seed {seed} vertex {v}");
+                assert_eq!(
+                    &g.etypes().unwrap()[g.in_edge_range(v)],
+                    &back.etypes().unwrap()[back.in_edge_range(v)],
+                );
+            }
+        }
+    }
+
+    #[test]
     fn etypes_sorted_with_edges() {
         let mut b = GraphBuilder::new(3);
-        b.add_edge_typed(2, 0, 7);
-        b.add_edge_typed(1, 0, 5);
+        b.add_edge_typed(2, 0, 7).unwrap();
+        b.add_edge_typed(1, 0, 5).unwrap();
         b.with_etypes();
         let g = b.build();
         assert_eq!(g.in_neighbors(0), &[1, 2]);
@@ -252,10 +443,64 @@ mod tests {
     #[test]
     fn parallel_edges_kept() {
         let mut b = GraphBuilder::new(2);
-        b.add_edge(0, 1);
-        b.add_edge(0, 1);
+        b.add_edge(0, 1).unwrap();
+        b.add_edge(0, 1).unwrap();
         let g = b.build();
         assert_eq!(g.num_edges(), 2);
         assert_eq!(g.in_neighbors(1), &[0, 0]);
+    }
+
+    #[test]
+    fn edge_stream_matches_builder() {
+        // same edges through both constructors → identical CSC layout
+        let edges: &[(u32, u32, u8)] = &[(2, 0, 7), (1, 0, 5), (0, 1, 1), (2, 1, 2), (2, 1, 0)];
+        let mut b = GraphBuilder::new(3);
+        for &(s, d, t) in edges {
+            b.add_edge_typed(s, d, t).unwrap();
+        }
+        b.with_etypes();
+        let a = b.build();
+        let g = Graph::from_edge_stream(3, true, |emit| {
+            for &(s, d, t) in edges {
+                emit(s, d, t);
+            }
+        })
+        .unwrap();
+        assert_eq!(a.num_edges(), g.num_edges());
+        for v in 0..3u32 {
+            assert_eq!(a.in_neighbors(v), g.in_neighbors(v));
+            assert_eq!(
+                &a.etypes().unwrap()[a.in_edge_range(v)],
+                &g.etypes().unwrap()[g.in_edge_range(v)]
+            );
+        }
+    }
+
+    #[test]
+    fn edge_stream_rejects_out_of_range() {
+        let r = Graph::from_edge_stream(2, false, |emit| {
+            emit(0, 1, 0);
+            emit(5, 1, 0);
+        });
+        assert_eq!(
+            r.unwrap_err(),
+            GraphError::EdgeOutOfRange { src: 5, dst: 1, num_vertices: 2 }
+        );
+    }
+
+    #[test]
+    fn edge_stream_rejects_nondeterminism() {
+        let mut calls = 0u32;
+        let r = Graph::from_edge_stream(4, false, |emit| {
+            calls += 1;
+            // second pass emits one extra edge
+            for _ in 0..calls {
+                emit(0, 1, 0);
+            }
+        });
+        assert_eq!(
+            r.unwrap_err(),
+            GraphError::StreamNondeterministic { pass1: 1, pass2: 2 }
+        );
     }
 }

@@ -46,9 +46,54 @@ pub fn power_law(
         } else {
             0
         };
-        b.add_edge_typed(s, d, t);
+        b.add_edge_typed(s, d, t).expect("zipf ranks stay in range");
     }
     b.build()
+}
+
+/// R-MAT recursive-quadrant power-law digraph (Chakrabarti et al.),
+/// scaled for the sharding benches: 2^scale_log2 vertices, built through
+/// the streaming two-pass constructor so the 1M-vertex × 8M-edge graph
+/// never materializes an unsorted edge list (saves ~9 bytes/edge peak).
+///
+/// Quadrant probabilities (a,b,c,d) = (0.57, 0.19, 0.19, 0.05) — the
+/// canonical social-network setting. Deterministic in `seed`: the RNG is
+/// recreated inside the stream closure, so both passes see the identical
+/// edge sequence.
+pub fn rmat(scale_log2: u32, num_edges: u64, seed: u64) -> Graph {
+    rmat_typed(scale_log2, num_edges, 0, seed)
+}
+
+pub fn rmat_typed(scale_log2: u32, num_edges: u64, num_etypes: u8, seed: u64) -> Graph {
+    assert!((1..=31).contains(&scale_log2), "scale_log2 must be in 1..=31");
+    let n = 1u32 << scale_log2;
+    Graph::from_edge_stream(n, num_etypes > 0, |emit| {
+        let mut rng = Rng::new(seed);
+        for _ in 0..num_edges {
+            let (mut s, mut d) = (0u32, 0u32);
+            for _ in 0..scale_log2 {
+                let r = rng.below(100);
+                let (bs, bd) = if r < 57 {
+                    (0, 0)
+                } else if r < 76 {
+                    (0, 1)
+                } else if r < 95 {
+                    (1, 0)
+                } else {
+                    (1, 1)
+                };
+                s = (s << 1) | bs;
+                d = (d << 1) | bd;
+            }
+            let t = if num_etypes > 0 {
+                rng.below(num_etypes as u64) as u8
+            } else {
+                0
+            };
+            emit(s, d, t);
+        }
+    })
+    .expect("rmat quadrant descent stays in 0..2^scale")
 }
 
 /// Street-network-like mesh: a ring + nearest-neighbour lattice with a
@@ -83,7 +128,8 @@ pub fn street_mesh_typed(
     let backbone = n.min(num_edges);
     for v in 0..backbone {
         let t = etype(&mut rng);
-        b.add_edge_typed(v as u32, ((v + 1) % n) as u32, t);
+        b.add_edge_typed(v as u32, ((v + 1) % n) as u32, t)
+            .expect("ring endpoints wrap in range");
         added += 1;
     }
     // local chords: distance ≤ 8 hops, uniform endpoints
@@ -91,7 +137,8 @@ pub fn street_mesh_typed(
         let v = rng.below(n);
         let hop = 2 + rng.below(7);
         let t = etype(&mut rng);
-        b.add_edge_typed(v as u32, ((v + hop) % n) as u32, t);
+        b.add_edge_typed(v as u32, ((v + hop) % n) as u32, t)
+            .expect("chord endpoints wrap in range");
         added += 1;
     }
     b.build()
@@ -117,7 +164,7 @@ pub fn uniform_typed(
         let s = rng.below(num_vertices as u64) as u32;
         let d = rng.below(num_vertices as u64) as u32;
         let t = if num_etypes > 0 { rng.below(num_etypes as u64) as u8 } else { 0 };
-        b.add_edge_typed(s, d, t);
+        b.add_edge_typed(s, d, t).expect("uniform draws stay below |V|");
     }
     b.build()
 }
@@ -171,5 +218,26 @@ mod tests {
     fn etypes_within_bound() {
         let g = power_law(200, 1_000, 1.0, 1.0, 3, 5);
         assert!(g.etypes().unwrap().iter().all(|&t| t < 3));
+    }
+
+    #[test]
+    fn rmat_counts_and_skew() {
+        let g = rmat(12, 40_000, 17); // 4096 vertices
+        assert_eq!(g.num_vertices(), 4096);
+        assert_eq!(g.num_edges(), 40_000);
+        let s = g.degree_stats();
+        // recursive quadrant bias concentrates edges on low ids
+        assert!(s.in_degree_gini > 0.45, "gini {}", s.in_degree_gini);
+        assert!(s.max_in_degree > 100, "max {}", s.max_in_degree);
+    }
+
+    #[test]
+    fn rmat_deterministic_in_seed() {
+        let a = rmat_typed(8, 2_000, 4, 99);
+        let b = rmat_typed(8, 2_000, 4, 99);
+        assert_eq!(a.in_degrees(), b.in_degrees());
+        assert_eq!(a.etypes().unwrap(), b.etypes().unwrap());
+        let c = rmat(8, 2_000, 100);
+        assert_ne!(a.in_degrees(), c.in_degrees());
     }
 }

@@ -10,8 +10,9 @@
 mod csr;
 pub mod datasets;
 pub mod generators;
+pub mod partition;
 
-pub use csr::{Graph, GraphBuilder};
+pub use csr::{Graph, GraphBuilder, GraphError};
 
 /// Degree-distribution summary used to sanity-check generated graphs.
 #[derive(Clone, Debug, PartialEq)]
@@ -63,9 +64,9 @@ mod tests {
     #[test]
     fn degree_stats_triangle() {
         let mut b = GraphBuilder::new(3);
-        b.add_edge(0, 1);
-        b.add_edge(1, 2);
-        b.add_edge(2, 0);
+        b.add_edge(0, 1).unwrap();
+        b.add_edge(1, 2).unwrap();
+        b.add_edge(2, 0).unwrap();
         let g = b.build();
         let s = g.degree_stats();
         assert_eq!(s.num_edges, 3);
@@ -78,7 +79,7 @@ mod tests {
     fn gini_detects_skew() {
         let mut b = GraphBuilder::new(10);
         for s in 0..9u32 {
-            b.add_edge(s, 9); // star: everything points at vertex 9
+            b.add_edge(s, 9).unwrap(); // star: everything points at vertex 9
         }
         let g = b.build();
         assert!(g.degree_stats().in_degree_gini > 0.8);

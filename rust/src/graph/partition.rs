@@ -1,0 +1,381 @@
+//! K-way vertex sharding for multi-chip execution (DESIGN.md §3.8).
+//!
+//! A shard *owns* (is "core" for) a disjoint set of destination vertices
+//! and carries **every** in-edge of those destinations. Sources that live
+//! on another shard appear locally as *halo* vertices: present in the
+//! shard's vertex list, but with zero local in-edges — their activations
+//! are imported from the owning shard at each layer boundary. Because a
+//! core destination sees its complete in-neighbourhood locally, per-layer
+//! shard outputs for core rows equal the unsharded computation exactly;
+//! halo rows are imports and their locally-computed values are discarded.
+//!
+//! The partitioner is a degree-balanced greedy (LPT over in-degree
+//! weights) followed by a seeded local-refinement sweep that moves a
+//! vertex to the shard holding the plurality of its neighbours when that
+//! strictly reduces the edge cut and keeps loads within a slack band.
+//! Everything is deterministic in (graph, num_shards, seed).
+
+use super::Graph;
+use crate::util::Rng;
+
+/// Load-balance slack for refinement moves: a vertex may move into a
+/// shard only while that shard's weight stays ≤ (1 + slack) × average.
+const BALANCE_SLACK: f64 = 0.10;
+/// Refinement sweeps over all vertices (each in a fresh seeded order).
+const REFINE_PASSES: usize = 2;
+
+/// One shard of a [`Partitioning`]: an induced subgraph plus the maps
+/// back to the input graph's vertex ids.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub id: u32,
+    /// Induced subgraph over `locals`: every in-edge of every core
+    /// vertex, endpoints renumbered to shard-local ids. Halo vertices
+    /// have zero in-edges here by construction.
+    pub graph: Graph,
+    /// Shard-local id → input-graph vertex id, **strictly ascending** —
+    /// shard-local order preserves input order, which is what makes
+    /// sharded reductions bit-exact with the unsharded plan (§3.8).
+    pub locals: Vec<u32>,
+    /// `is_core[local]`: owned vertex (true) vs imported halo (false).
+    pub is_core: Vec<bool>,
+    pub core_vertices: u64,
+    pub halo_vertices: u64,
+    pub edges: u64,
+}
+
+impl Shard {
+    /// Shard-local id of input-graph vertex `v`, if present here.
+    pub fn local_of(&self, v: u32) -> Option<u32> {
+        self.locals.binary_search(&v).ok().map(|i| i as u32)
+    }
+}
+
+/// Result of [`partition`]: shard list plus the global assignment map.
+#[derive(Clone, Debug)]
+pub struct Partitioning {
+    pub num_shards: usize,
+    /// Input-graph vertex → owning shard id.
+    pub assign: Vec<u32>,
+    pub shards: Vec<Shard>,
+    /// Edges whose source and destination live on different shards.
+    pub cut_edges: u64,
+    pub num_edges: u64,
+}
+
+impl Partitioning {
+    /// Total halo slots across shards (= per-boundary activation copies).
+    pub fn halo_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.halo_vertices).sum()
+    }
+
+    pub fn cut_fraction(&self) -> f64 {
+        if self.num_edges == 0 {
+            0.0
+        } else {
+            self.cut_edges as f64 / self.num_edges as f64
+        }
+    }
+}
+
+/// Split `graph` into `num_shards` disjoint-core shards with explicit
+/// halo sets. Deterministic in all three arguments.
+pub fn partition(graph: &Graph, num_shards: usize, seed: u64) -> Result<Partitioning, String> {
+    let n = graph.num_vertices() as usize;
+    if num_shards == 0 {
+        return Err("num_shards must be >= 1".into());
+    }
+    if num_shards > n {
+        return Err(format!(
+            "cannot cut a {n}-vertex graph into {num_shards} shards"
+        ));
+    }
+    let k = num_shards;
+
+    // ---- greedy LPT assignment on weight = 1 + in_degree -------------
+    // The +1 keeps vertex counts balanced on near-edgeless graphs (EO).
+    let weight = |v: u32| 1u64 + graph.in_degree(v) as u64;
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_by_key(|&v| (std::cmp::Reverse(weight(v)), v));
+    let mut assign = vec![0u32; n];
+    let mut load = vec![0u64; k];
+    let mut core_count = vec![0u64; k];
+    for &v in &order {
+        let mut best = 0usize;
+        for s in 1..k {
+            if load[s] < load[best] {
+                best = s;
+            }
+        }
+        assign[v as usize] = best as u32;
+        load[best] += weight(v);
+        core_count[best] += 1;
+    }
+
+    // ---- seeded refinement: plurality-neighbour moves ----------------
+    if k > 1 && graph.num_edges() > 0 {
+        // out-adjacency (CSR by source) so a vertex sees both edge
+        // directions when counting neighbour shards
+        let out_deg = graph.out_degrees();
+        let mut out_ptr = vec![0u64; n + 1];
+        for v in 0..n {
+            out_ptr[v + 1] = out_ptr[v] + out_deg[v] as u64;
+        }
+        let mut out_dst = vec![0u32; graph.num_edges() as usize];
+        let mut cursor: Vec<u64> = out_ptr[..n].to_vec();
+        for d in 0..n as u32 {
+            for &s in graph.in_neighbors(d) {
+                let at = cursor[s as usize] as usize;
+                cursor[s as usize] += 1;
+                out_dst[at] = d;
+            }
+        }
+
+        let total_w: u64 = load.iter().sum();
+        let cap = ((total_w as f64 / k as f64) * (1.0 + BALANCE_SLACK)).ceil() as u64;
+        let mut rng = Rng::new(seed);
+        let mut counts = vec![0u64; k];
+        let mut touched: Vec<usize> = Vec::new();
+        for _ in 0..REFINE_PASSES {
+            let mut visit: Vec<u32> = (0..n as u32).collect();
+            rng.shuffle(&mut visit);
+            for &v in &visit {
+                let cur = assign[v as usize] as usize;
+                if core_count[cur] <= 1 {
+                    continue; // never drain a shard empty
+                }
+                for &s in graph.in_neighbors(v) {
+                    let sh = assign[s as usize] as usize;
+                    if counts[sh] == 0 {
+                        touched.push(sh);
+                    }
+                    counts[sh] += 1;
+                }
+                let lo = out_ptr[v as usize] as usize;
+                let hi = out_ptr[v as usize + 1] as usize;
+                for &d in &out_dst[lo..hi] {
+                    let sh = assign[d as usize] as usize;
+                    if counts[sh] == 0 {
+                        touched.push(sh);
+                    }
+                    counts[sh] += 1;
+                }
+                let mut best = cur;
+                for &sh in &touched {
+                    let better = counts[sh] > counts[best];
+                    let tie_lower = counts[sh] == counts[best] && best != cur && sh < best;
+                    if better || tie_lower {
+                        best = sh;
+                    }
+                }
+                let w = weight(v);
+                if best != cur && counts[best] > counts[cur] && load[best] + w <= cap {
+                    assign[v as usize] = best as u32;
+                    load[cur] -= w;
+                    load[best] += w;
+                    core_count[cur] -= 1;
+                    core_count[best] += 1;
+                }
+                for sh in touched.drain(..) {
+                    counts[sh] = 0;
+                }
+            }
+        }
+    }
+
+    build_shards(graph, k, assign)
+}
+
+/// Materialize per-shard induced subgraphs + maps from an assignment.
+fn build_shards(graph: &Graph, k: usize, assign: Vec<u32>) -> Result<Partitioning, String> {
+    let n = graph.num_vertices() as usize;
+    let keep_etypes = graph.has_etypes();
+
+    // halo candidates: sources of cross-shard edges, recorded per
+    // destination shard — dedup by sort below. Also count the cut.
+    let mut halos: Vec<Vec<u32>> = vec![Vec::new(); k];
+    let mut cut_edges = 0u64;
+    for d in 0..n as u32 {
+        let ds = assign[d as usize] as usize;
+        for &s in graph.in_neighbors(d) {
+            if assign[s as usize] as usize != ds {
+                cut_edges += 1;
+                halos[ds].push(s);
+            }
+        }
+    }
+
+    let mut shards = Vec::with_capacity(k);
+    // scratch global→local map, reset after each shard via its locals
+    let mut to_local = vec![u32::MAX; n];
+    for sid in 0..k {
+        let mut halo = std::mem::take(&mut halos[sid]);
+        halo.sort_unstable();
+        halo.dedup();
+        // merge ascending core ids with ascending halo ids
+        let mut locals: Vec<u32> = Vec::new();
+        let mut is_core: Vec<bool> = Vec::new();
+        let mut hi = 0usize;
+        for v in 0..n as u32 {
+            let core_here = assign[v as usize] as usize == sid;
+            let halo_here = hi < halo.len() && halo[hi] == v;
+            if halo_here {
+                hi += 1;
+            }
+            if core_here || halo_here {
+                locals.push(v);
+                is_core.push(core_here);
+            }
+        }
+        for (l, &v) in locals.iter().enumerate() {
+            to_local[v as usize] = l as u32;
+        }
+        let mut edges = 0u64;
+        for (&v, &core) in locals.iter().zip(&is_core) {
+            if core {
+                edges += graph.in_degree(v) as u64;
+            }
+        }
+        let sg = Graph::from_edge_stream(locals.len() as u32, keep_etypes, |emit| {
+            for (&v, &core) in locals.iter().zip(&is_core) {
+                if !core {
+                    continue;
+                }
+                let range = graph.in_edge_range(v);
+                let et = graph.etypes();
+                for (i, &s) in graph.in_neighbors(v).iter().enumerate() {
+                    let t = et.map_or(0, |ts| ts[range.start + i]);
+                    emit(to_local[s as usize], to_local[v as usize], t);
+                }
+            }
+        })
+        .map_err(|e| format!("shard {sid} subgraph: {e}"))?;
+        for &v in &locals {
+            to_local[v as usize] = u32::MAX;
+        }
+        let core_vertices = is_core.iter().filter(|&&c| c).count() as u64;
+        let halo_vertices = locals.len() as u64 - core_vertices;
+        shards.push(Shard {
+            id: sid as u32,
+            graph: sg,
+            locals,
+            is_core,
+            core_vertices,
+            halo_vertices,
+            edges,
+        });
+    }
+
+    Ok(Partitioning {
+        num_shards: k,
+        assign,
+        shards,
+        cut_edges,
+        num_edges: graph.num_edges(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn check_invariants(g: &Graph, p: &Partitioning) {
+        let n = g.num_vertices() as usize;
+        // every vertex is core in exactly one shard — its assigned one
+        assert_eq!(p.assign.len(), n);
+        let total_core: u64 = p.shards.iter().map(|s| s.core_vertices).sum();
+        assert_eq!(total_core, n as u64);
+        for sh in &p.shards {
+            assert!(sh.core_vertices >= 1, "shard {} drained empty", sh.id);
+            // locals strictly ascending (order preservation)
+            assert!(sh.locals.windows(2).all(|w| w[0] < w[1]));
+            for (l, (&v, &core)) in sh.locals.iter().zip(&sh.is_core).enumerate() {
+                assert_eq!(core, p.assign[v as usize] == sh.id);
+                // halo vertices have zero local in-edges; core vertices
+                // carry their full input-graph in-neighbourhood
+                let local_deg = sh.graph.in_degree(l as u32);
+                if core {
+                    assert_eq!(local_deg, g.in_degree(v));
+                } else {
+                    assert_eq!(local_deg, 0);
+                    // halo minimality: ≥1 cross-shard in-edge from v to a
+                    // core destination of this shard
+                    let feeds = sh
+                        .locals
+                        .iter()
+                        .zip(&sh.is_core)
+                        .filter(|&(_, &c)| c)
+                        .any(|(&d, _)| g.in_neighbors(d).contains(&v));
+                    assert!(feeds, "halo {} never feeds shard {}", v, sh.id);
+                }
+            }
+        }
+        // every edge covered exactly once (by its destination's shard)
+        let total_edges: u64 = p.shards.iter().map(|s| s.edges).sum();
+        assert_eq!(total_edges, g.num_edges());
+        let placed: u64 = p.shards.iter().map(|s| s.graph.num_edges()).sum();
+        assert_eq!(placed, g.num_edges());
+    }
+
+    #[test]
+    fn invariants_power_law() {
+        let g = generators::power_law(500, 4_000, 1.2, 1.2, 0, 3);
+        for k in [1usize, 2, 3, 8] {
+            let p = partition(&g, k, 7).unwrap();
+            check_invariants(&g, &p);
+            if k == 1 {
+                assert_eq!(p.cut_edges, 0);
+                assert_eq!(p.halo_total(), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn invariants_rmat_with_etypes() {
+        let g = generators::rmat_typed(9, 3_000, 4, 11);
+        let p = partition(&g, 4, 5).unwrap();
+        check_invariants(&g, &p);
+        // shard subgraphs keep edge types
+        assert!(p.shards.iter().all(|s| s.graph.has_etypes()));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let g = generators::power_law(300, 2_000, 1.1, 1.1, 0, 1);
+        let a = partition(&g, 4, 42).unwrap();
+        let b = partition(&g, 4, 42).unwrap();
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.cut_edges, b.cut_edges);
+    }
+
+    #[test]
+    fn loads_balanced() {
+        let g = generators::power_law(1_000, 8_000, 1.2, 1.2, 0, 9);
+        let p = partition(&g, 4, 3).unwrap();
+        let loads: Vec<u64> = p
+            .shards
+            .iter()
+            .map(|s| {
+                s.locals
+                    .iter()
+                    .zip(&s.is_core)
+                    .filter(|&(_, &c)| c)
+                    .map(|(&v, _)| 1 + g.in_degree(v) as u64)
+                    .sum()
+            })
+            .collect();
+        let avg = loads.iter().sum::<u64>() as f64 / 4.0;
+        for &l in &loads {
+            assert!((l as f64) < avg * 1.25, "loads {loads:?} vs avg {avg}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_shard_counts() {
+        let g = generators::uniform(10, 20, 1);
+        assert!(partition(&g, 0, 1).is_err());
+        assert!(partition(&g, 11, 1).is_err());
+        assert!(partition(&g, 10, 1).is_ok());
+    }
+}

@@ -101,6 +101,12 @@ fn build_configs(args: &Args) -> Result<(ArchConfig, RunConfig), String> {
     if let Some(v) = args.get("threads") {
         run.tiling.threads = v.parse().map_err(|_| "bad --threads")?;
     }
+    if let Some(v) = args.get("shards") {
+        run.shards = v.parse().map_err(|_| "bad --shards")?;
+        if run.shards == 0 {
+            return Err("bad --shards (must be >= 1)".into());
+        }
+    }
     if let Some(v) = args.get("exec-threads") {
         run.serving.exec_threads = v.parse().map_err(|_| "bad --exec-threads")?;
     }
@@ -273,17 +279,31 @@ fn real_main(argv: &[String]) -> Result<(), String> {
                 util::fmt_time_at(res.cycles, arch.freq_hz),
                 res.instructions
             );
+            // sharded runs sum busy counters over K chips
+            let chips = run.shards.max(1) as f64;
             println!(
                 "busy: MU {:.1}%  VU {:.1}%  MEM {:.1}%",
-                100.0 * res.mu_busy as f64 / (res.cycles.max(1) as f64 * arch.mu_count as f64),
-                100.0 * res.vu_busy as f64 / (res.cycles.max(1) as f64 * arch.vu_count as f64),
-                100.0 * res.mem_busy as f64 / res.cycles.max(1) as f64,
+                100.0 * res.mu_busy as f64
+                    / (res.cycles.max(1) as f64 * arch.mu_count as f64 * chips),
+                100.0 * res.vu_busy as f64
+                    / (res.cycles.max(1) as f64 * arch.vu_count as f64 * chips),
+                100.0 * res.mem_busy as f64 / (res.cycles.max(1) as f64 * chips),
             );
             println!(
                 "dram: read {} write {}",
                 util::fmt_bytes(res.dram_read_bytes),
                 util::fmt_bytes(res.dram_write_bytes)
             );
+            if res.halo.exchanges > 0 {
+                println!(
+                    "halo: {} shards  {} exchanges  {} vertex-copies  {} chip-to-chip  (+{} cycles)",
+                    run.shards,
+                    res.halo.exchanges,
+                    res.halo.vertices,
+                    util::fmt_bytes(res.halo.bytes),
+                    res.halo.cycles,
+                );
+            }
             println!(
                 "energy: {:.6} J (hbm {:.1}%)",
                 e.total_j(),
@@ -478,6 +498,10 @@ fn real_main(argv: &[String]) -> Result<(), String> {
                  compiled layer stack: all | none | comma\n                       \
                  list of load_elim,fuse,hoist,dbe\n                       \
                  (requires e2v; default none)         [run]\n  \
+                 --shards K           multi-chip sharded execution: partition the\n                       \
+                 graph across K chips with per-layer halo\n                       \
+                 exchange; outputs stay bit-exact\n                       \
+                 (default 1 = unsharded)              [run]\n  \
                  --functional         also execute on f32 embeddings (checksums)\n  \
                  --simd / --no-simd   force the SIMD kernel variants on or off\n                       \
                  (default: on when built with the `simd`\n                       \

@@ -18,9 +18,10 @@
 
 use crate::compiler::{compile, optimize_pipeline, OptLevel, PassSet, PipelineOptReport, Program};
 use crate::config::{ArchConfig, KernelPolicy, RunConfig};
+use crate::graph::partition::{partition, Partitioning};
 use crate::graph::{datasets, Graph};
 use crate::models::{ModelKind, ModelSpec, WeightStore, NUM_RELATIONS};
-use crate::sim::parallel::{BatchScratch, StageWl};
+use crate::sim::parallel::{run_batch, BatchScratch, StageWl};
 use crate::sim::{ExecScratch, LayerMetrics, SimOptions, SimResult, Simulator, Workload};
 use crate::tiling::{tile, Reorder, Tiling, TilingConfig, TilingMode};
 use crate::util::Rng;
@@ -60,6 +61,10 @@ pub struct PlanKey {
     /// weights are quantized at plan build and both executors read the
     /// policy from the plan — variants must never alias in the cache.
     pub kernels: KernelPolicy,
+    /// Multi-chip shard count (1 = unsharded). Part of the key because a
+    /// sharded plan carries K per-shard sub-plans plus halo maps —
+    /// sharded and unsharded plans must never alias in the cache.
+    pub shards: u32,
 }
 
 impl PlanKey {
@@ -79,6 +84,7 @@ impl PlanKey {
             passes: run.passes,
             seed: run.seed,
             kernels: run.kernels,
+            shards: run.shards.max(1),
         }
     }
 }
@@ -122,7 +128,7 @@ impl fmt::Display for PlanKey {
             .join(",");
         write!(
             f,
-            "model={};dataset={};scale={};feat={}x{};layers={};dst_part={};src_part={};mode={};reorder={};e2v={};passes={};seed={};simd={};skip={};dtype={}",
+            "model={};dataset={};scale={};feat={}x{};layers={};dst_part={};src_part={};mode={};reorder={};e2v={};passes={};seed={};simd={};skip={};dtype={};shards={}",
             self.model,
             self.dataset,
             self.scale,
@@ -139,7 +145,51 @@ impl fmt::Display for PlanKey {
             self.kernels.simd,
             self.kernels.sparse_skip,
             self.kernels.dtype.name(),
+            self.shards,
         )
+    }
+}
+
+/// One inbound halo-activation copy of a sharded plan: at each layer
+/// boundary, the consumer shard's local row `dst_local` is overwritten
+/// with the producing (home) shard's freshly-computed row `src_local`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HaloCopy {
+    pub src_shard: u32,
+    pub src_local: u32,
+    pub dst_local: u32,
+}
+
+/// The sharded half of an [`ExecPlan`] (DESIGN.md §3.8): K per-shard
+/// sub-plans compiled with the shared machinery, plus the vertex maps
+/// that scatter inputs, exchange halos, and stitch outputs back to
+/// original vertex order.
+///
+/// Built over the *globally relabeled* graph (the top-level tiling's
+/// permutation), with shard-local ids assigned in ascending relabeled
+/// order and shard tilings compiled with `Reorder::None` — so every
+/// destination's gather left-fold visits sources in exactly the order
+/// the unsharded plan uses, making sharded outputs bit-exact.
+pub struct ShardedPlan {
+    /// The K-way cut of the relabeled graph (shard graphs + halo sets).
+    pub partition: Partitioning,
+    /// One full sub-plan per shard (own tiling + stages; weights and
+    /// programs are graph-independent, hence identical across shards).
+    pub shards: Vec<ExecPlan>,
+    /// Per shard: inbound halo copies applied at every layer boundary.
+    pub halo_in: Vec<Vec<HaloCopy>>,
+    /// Per shard: local id → ORIGINAL (pre-relabel) vertex id.
+    pub local_to_orig: Vec<Vec<u32>>,
+    /// Per shard: (local, original) pairs of core vertices — the
+    /// output-stitch map.
+    pub core_out: Vec<Vec<(u32, u32)>>,
+    /// Total halo copies per layer boundary (= Σ `halo_in` lengths).
+    pub halo_copies: u64,
+}
+
+impl ShardedPlan {
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
     }
 }
 
@@ -194,6 +244,9 @@ pub struct ExecPlan {
     /// Per-pass attribution from the pipeline optimizer, when the run
     /// selected a non-empty [`PassSet`] (`None` = no optimizer run).
     pub opt_report: Option<PipelineOptReport>,
+    /// Multi-chip sharding (DESIGN.md §3.8): `Some` iff `key.shards ≥ 2`.
+    /// Unsharded plans carry `None` and execute exactly as before.
+    pub sharding: Option<ShardedPlan>,
 }
 
 impl ExecPlan {
@@ -275,8 +328,14 @@ impl ExecPlan {
             input_len: tiling.num_vertices as usize * feat_in as usize,
             output_len: tiling.num_vertices as usize * feat_out as usize,
         };
+        let key = PlanKey::of(run);
+        let sharding = if key.shards >= 2 {
+            Some(build_sharding(model, &graph, &tiling, run, key.shards as usize)?)
+        } else {
+            None
+        };
         Ok(ExecPlan {
-            key: PlanKey::of(run),
+            key,
             model,
             spec,
             graph,
@@ -286,6 +345,7 @@ impl ExecPlan {
             feat_out,
             dims,
             opt_report,
+            sharding,
         })
     }
 
@@ -352,6 +412,9 @@ impl ExecPlan {
         trace_window: u64,
         scratch: &mut ExecScratch,
     ) -> Result<SimResult, String> {
+        if self.sharding.is_some() {
+            return self.simulate_sharded(arch, functional, x, trace_window, scratch);
+        }
         if self.stages.len() == 1 {
             // depth-1 fast path: one engine run, no chaining
             let wl = self.stage_workload(0, x);
@@ -478,6 +541,9 @@ impl ExecPlan {
         exec_threads: usize,
         scratch: &mut BatchScratch,
     ) -> Result<Vec<Vec<f32>>, String> {
+        if self.sharding.is_some() {
+            return self.execute_batch_sharded(inputs, exec_threads, scratch);
+        }
         let stages: Vec<StageWl> = self
             .stages
             .iter()
@@ -490,6 +556,270 @@ impl ExecPlan {
             })
             .collect();
         crate::sim::parallel::run_pipeline(&self.tiling, &stages, inputs, exec_threads, scratch)
+    }
+
+    /// Sharded engine path (DESIGN.md §3.8): each layer runs one engine
+    /// per shard across a scoped thread pool (K chips in parallel), the
+    /// layer's cycle cost is the slowest shard plus the halo exchange,
+    /// and additive metrics (instructions, DRAM, energy events) sum over
+    /// shards. At every layer boundary the halo rows of each shard's
+    /// activation image are overwritten with the owning shard's freshly
+    /// computed rows; the final layer's core rows are stitched back to
+    /// ORIGINAL vertex order — bit-exactly equal to the unsharded plan's
+    /// output, because shard-local gather folds visit sources in the
+    /// same order (see [`ShardedPlan`]).
+    fn simulate_sharded(
+        &self,
+        arch: &ArchConfig,
+        functional: bool,
+        x: Option<&[f32]>,
+        trace_window: u64,
+        scratch: &mut ExecScratch,
+    ) -> Result<SimResult, String> {
+        let sh = self.sharding.as_ref().expect("sharded path requires sharding");
+        let k = sh.shards.len();
+        let depth = self.stages.len();
+        let dtype = self.key.kernels.dtype;
+        // scatter the global input into per-shard local images
+        let mut cur: Vec<Vec<f32>> = Vec::new();
+        if functional {
+            let x = x.ok_or("functional sharded run needs input embeddings")?;
+            if x.len() != self.dims.input_len {
+                return Err(format!(
+                    "input length {} != |V| * feat_in = {}",
+                    x.len(),
+                    self.dims.input_len
+                ));
+            }
+            let f = self.feat_in as usize;
+            for map in &sh.local_to_orig {
+                let mut xi = vec![0.0f32; map.len() * f];
+                for (l, &orig) in map.iter().enumerate() {
+                    xi[l * f..(l + 1) * f].copy_from_slice(&x[orig as usize * f..][..f]);
+                }
+                cur.push(xi);
+            }
+        }
+        let scratches = scratch.ensure_shards(k);
+        let mut acc = SimResult::default();
+        let mut shard_layers: Vec<Vec<LayerMetrics>> = vec![Vec::new(); k];
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        for l in 0..depth {
+            let last = l + 1 == depth;
+            let stage = &self.stages[l];
+            let results: Vec<Result<SimResult, String>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = sh
+                    .shards
+                    .iter()
+                    .zip(scratches.iter_mut())
+                    .enumerate()
+                    .map(|(s, (sp, ss))| {
+                        let xs = if functional { Some(cur[s].as_slice()) } else { None };
+                        // the windowed trace covers shard 0's first layer
+                        let tw = if l == 0 && s == 0 { trace_window } else { 0 };
+                        scope.spawn(move || {
+                            let wl = sp.stage_workload(l, xs);
+                            let opts = SimOptions {
+                                functional,
+                                trace_window: tw,
+                                emit_output: functional,
+                            };
+                            Simulator::new(arch, &wl, opts).run_with(ss)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap_or_else(|_| Err("shard worker panicked".into())))
+                    .collect()
+            });
+            let mut layer = LayerMetrics {
+                feat_in: stage.feat_in,
+                feat_out: stage.feat_out,
+                ..Default::default()
+            };
+            if functional {
+                outs.clear();
+            }
+            for (s, r) in results.into_iter().enumerate() {
+                let mut res = r.map_err(|e| format!("shard {s} layer {l}: {e}"))?;
+                // K chips run concurrently: the layer takes as long as
+                // its slowest shard; event counts stay additive
+                layer.cycles = layer.cycles.max(res.cycles);
+                layer.instructions += res.instructions;
+                layer.dram_read_bytes += res.dram_read_bytes;
+                layer.dram_write_bytes += res.dram_write_bytes;
+                layer.peak_uem_bytes = layer.peak_uem_bytes.max(res.peak_uem_bytes);
+                layer.counters += res.counters;
+                acc.mu_busy += res.mu_busy;
+                acc.vu_busy += res.vu_busy;
+                acc.mem_busy += res.mem_busy;
+                if l == 0 && s == 0 {
+                    acc.trace = std::mem::take(&mut res.trace);
+                }
+                shard_layers[s].push(layer_metrics(stage, &res));
+                if functional {
+                    outs.push(
+                        res.output
+                            .take()
+                            .ok_or_else(|| format!("shard {s} layer {l} produced no output"))?,
+                    );
+                }
+            }
+            if !last && sh.halo_copies > 0 {
+                let (bytes, cycles) =
+                    halo_exchange_cost(arch, sh.halo_copies, stage.feat_out, dtype);
+                layer.cycles += cycles;
+                layer.dram_read_bytes += bytes / 2;
+                layer.dram_write_bytes += bytes / 2;
+                layer.counters.hbm_bytes += bytes;
+                layer.counters.cycles += cycles;
+                acc.halo.exchanges += 1;
+                acc.halo.vertices += sh.halo_copies;
+                acc.halo.bytes += bytes;
+                acc.halo.cycles += cycles;
+            }
+            if functional && !last {
+                // hidden activations round-trip through the storage
+                // dtype at the boundary (the same point the unsharded
+                // chain quantizes), THEN halo rows are imported
+                for o in outs.iter_mut() {
+                    crate::sim::tensor::quantize_slice(dtype, o);
+                }
+                exchange_halos(sh, stage.feat_out as usize, &mut outs);
+                std::mem::swap(&mut cur, &mut outs);
+            }
+            acc.cycles += layer.cycles;
+            acc.instructions += layer.instructions;
+            acc.dram_read_bytes += layer.dram_read_bytes;
+            acc.dram_write_bytes += layer.dram_write_bytes;
+            acc.counters += layer.counters;
+            acc.layers.push(layer);
+        }
+        if functional {
+            let f = self.feat_out as usize;
+            let mut out = vec![0.0f32; self.dims.output_len];
+            for (s, pairs) in sh.core_out.iter().enumerate() {
+                for &(local, orig) in pairs {
+                    out[orig as usize * f..][..f]
+                        .copy_from_slice(&outs[s][local as usize * f..][..f]);
+                }
+            }
+            acc.output = Some(out);
+        }
+        // per-chip footprint: the busiest shard's aggregate peak
+        acc.peak_uem_bytes = sh
+            .shards
+            .iter()
+            .zip(&shard_layers)
+            .map(|(sp, ls)| sp.aggregate_peak(ls))
+            .max()
+            .unwrap_or(0);
+        Ok(acc)
+    }
+
+    /// Sharded tile-parallel batched path: per layer, every shard runs
+    /// the full [`run_batch`] machinery concurrently (the exec-thread
+    /// budget is split across shards), halos are exchanged per lane at
+    /// each boundary, and the final core rows are stitched back to
+    /// ORIGINAL vertex order. Bit-identical to the sharded engine path
+    /// and to the unsharded plan for every thread count, because
+    /// `run_batch` itself is thread-count-invariant.
+    fn execute_batch_sharded(
+        &self,
+        inputs: &[&[f32]],
+        exec_threads: usize,
+        scratch: &mut BatchScratch,
+    ) -> Result<Vec<Vec<f32>>, String> {
+        let sh = self.sharding.as_ref().expect("sharded path requires sharding");
+        let k = sh.shards.len();
+        let nlanes = inputs.len();
+        if nlanes == 0 {
+            return Ok(Vec::new());
+        }
+        for (i, x) in inputs.iter().enumerate() {
+            if x.len() != self.dims.input_len {
+                return Err(format!(
+                    "lane {i}: input length {} != |V| * feat_in = {}",
+                    x.len(),
+                    self.dims.input_len
+                ));
+            }
+        }
+        let depth = self.stages.len();
+        let dtype = self.key.kernels.dtype;
+        let f_in = self.feat_in as usize;
+        // per-shard, per-lane local input images
+        let mut cur: Vec<Vec<Vec<f32>>> = sh
+            .local_to_orig
+            .iter()
+            .map(|map| {
+                inputs
+                    .iter()
+                    .map(|x| {
+                        let mut xi = vec![0.0f32; map.len() * f_in];
+                        for (l, &orig) in map.iter().enumerate() {
+                            xi[l * f_in..(l + 1) * f_in]
+                                .copy_from_slice(&x[orig as usize * f_in..][..f_in]);
+                        }
+                        xi
+                    })
+                    .collect()
+            })
+            .collect();
+        let scratches = scratch.ensure_shards(k);
+        let inner_threads = (exec_threads.max(1) / k).max(1);
+        for l in 0..depth {
+            let last = l + 1 == depth;
+            let cur_ref = &cur;
+            let results: Vec<Result<Vec<Vec<f32>>, String>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = sh
+                    .shards
+                    .iter()
+                    .zip(scratches.iter_mut())
+                    .enumerate()
+                    .map(|(s, (sp, ss))| {
+                        scope.spawn(move || {
+                            let wl = sp.stage_workload(l, None);
+                            let lanes: Vec<&[f32]> =
+                                cur_ref[s].iter().map(|v| v.as_slice()).collect();
+                            run_batch(&wl, &lanes, inner_threads, ss)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap_or_else(|_| Err("shard worker panicked".into())))
+                    .collect()
+            });
+            let mut outs: Vec<Vec<Vec<f32>>> = Vec::with_capacity(k);
+            for (s, r) in results.into_iter().enumerate() {
+                outs.push(r.map_err(|e| format!("shard {s} layer {l}: {e}"))?);
+            }
+            if last {
+                let f = self.feat_out as usize;
+                let mut stitched: Vec<Vec<f32>> =
+                    (0..nlanes).map(|_| vec![0.0f32; self.dims.output_len]).collect();
+                for (s, pairs) in sh.core_out.iter().enumerate() {
+                    for (lane, dst) in stitched.iter_mut().enumerate() {
+                        for &(local, orig) in pairs {
+                            dst[orig as usize * f..][..f]
+                                .copy_from_slice(&outs[s][lane][local as usize * f..][..f]);
+                        }
+                    }
+                }
+                return Ok(stitched);
+            }
+            let f = self.stages[l].feat_out as usize;
+            for lane_out in outs.iter_mut().flatten() {
+                crate::sim::tensor::quantize_slice(dtype, lane_out);
+            }
+            for lane in 0..nlanes {
+                exchange_halos_lane(sh, f, lane, &mut outs);
+            }
+            cur = outs;
+        }
+        unreachable!("the final stage returns from the loop")
     }
 }
 
@@ -504,6 +834,116 @@ fn layer_metrics(stage: &LayerStage, res: &SimResult) -> LayerMetrics {
         dram_write_bytes: res.dram_write_bytes,
         peak_uem_bytes: res.peak_uem_bytes,
         counters: res.counters,
+    }
+}
+
+/// Build the sharded half of a plan: cut the *globally relabeled* graph
+/// (the top-level tiling's permutation already applied), compile one
+/// sub-plan per shard with `Reorder::None`, and derive the scatter /
+/// halo / stitch maps. Shard-local ids ascend in relabeled order, so
+/// every destination's gather left-fold visits sources exactly as the
+/// unsharded plan does — the bit-exactness argument of DESIGN.md §3.8.
+fn build_sharding(
+    model: ModelKind,
+    graph: &Graph,
+    tiling: &Tiling,
+    run: &RunConfig,
+    k: usize,
+) -> Result<ShardedPlan, String> {
+    let relabeled = graph.relabel(&tiling.perm).map_err(|e| e.to_string())?;
+    let part = partition(&relabeled, k, run.seed)?;
+    let mut shard_run = run.clone();
+    shard_run.shards = 1;
+    // the global degree order is already baked into the relabeled ids;
+    // shard tilings must NOT reorder again or the fold order would drift
+    shard_run.tiling.reorder = Reorder::None;
+    let mut shards = Vec::with_capacity(k);
+    for sh in &part.shards {
+        shards.push(ExecPlan::from_graph(model, sh.graph.clone(), &shard_run)?);
+    }
+    let mut halo_in: Vec<Vec<HaloCopy>> = Vec::with_capacity(k);
+    let mut local_to_orig: Vec<Vec<u32>> = Vec::with_capacity(k);
+    let mut core_out: Vec<Vec<(u32, u32)>> = Vec::with_capacity(k);
+    let mut halo_copies = 0u64;
+    for sh in &part.shards {
+        let l2o: Vec<u32> = sh.locals.iter().map(|&g| tiling.inv_perm[g as usize]).collect();
+        let mut copies = Vec::with_capacity(sh.halo_vertices as usize);
+        let mut core = Vec::with_capacity(sh.core_vertices as usize);
+        for (l, (&g, &is_core)) in sh.locals.iter().zip(&sh.is_core).enumerate() {
+            if is_core {
+                core.push((l as u32, l2o[l]));
+            } else {
+                let home = part.assign[g as usize];
+                let src_local = part.shards[home as usize]
+                    .local_of(g)
+                    .ok_or_else(|| format!("halo vertex {g} missing from home shard {home}"))?;
+                copies.push(HaloCopy { src_shard: home, src_local, dst_local: l as u32 });
+            }
+        }
+        halo_copies += copies.len() as u64;
+        halo_in.push(copies);
+        local_to_orig.push(l2o);
+        core_out.push(core);
+    }
+    Ok(ShardedPlan { partition: part, shards, halo_in, local_to_orig, core_out, halo_copies })
+}
+
+/// Cost model for one inter-shard halo exchange (DESIGN.md §3.8): every
+/// halo copy moves one `feat_out` activation row at the storage dtype;
+/// bytes cross the chip fabric twice (producer write + consumer read)
+/// at HBM-class aggregate bandwidth, plus one link latency per boundary
+/// (the per-pair transfers overlap). Returns `(bytes, cycles)`.
+fn halo_exchange_cost(
+    arch: &ArchConfig,
+    copies: u64,
+    feat_out: u32,
+    dtype: crate::config::StorageDtype,
+) -> (u64, u64) {
+    let bytes = 2 * copies * feat_out as u64 * dtype.bytes();
+    let cycles =
+        (bytes as f64 / arch.hbm_bytes_per_cycle()).ceil() as u64 + arch.hbm_latency_cycles;
+    (bytes, cycles)
+}
+
+/// Overwrite every shard's halo rows with the owning shard's freshly
+/// computed activation rows. Reads are staged before writes; halo
+/// sources are always *core* rows of their home shard and core rows are
+/// never patched, so the exchange is exact regardless of shard order.
+fn exchange_halos(sh: &ShardedPlan, f: usize, outs: &mut [Vec<f32>]) {
+    for s in 0..outs.len() {
+        if sh.halo_in[s].is_empty() {
+            continue;
+        }
+        let staged: Vec<f32> = sh.halo_in[s]
+            .iter()
+            .flat_map(|hc| {
+                outs[hc.src_shard as usize][hc.src_local as usize * f..][..f].iter().copied()
+            })
+            .collect();
+        for (i, hc) in sh.halo_in[s].iter().enumerate() {
+            outs[s][hc.dst_local as usize * f..][..f].copy_from_slice(&staged[i * f..][..f]);
+        }
+    }
+}
+
+/// Per-lane variant of [`exchange_halos`] for the batched path
+/// (`outs[shard][lane]` layout).
+fn exchange_halos_lane(sh: &ShardedPlan, f: usize, lane: usize, outs: &mut [Vec<Vec<f32>>]) {
+    for s in 0..outs.len() {
+        if sh.halo_in[s].is_empty() {
+            continue;
+        }
+        let staged: Vec<f32> = sh.halo_in[s]
+            .iter()
+            .flat_map(|hc| {
+                outs[hc.src_shard as usize][lane][hc.src_local as usize * f..][..f]
+                    .iter()
+                    .copied()
+            })
+            .collect();
+        for (i, hc) in sh.halo_in[s].iter().enumerate() {
+            outs[s][lane][hc.dst_local as usize * f..][..f].copy_from_slice(&staged[i * f..][..f]);
+        }
     }
 }
 
@@ -644,6 +1084,7 @@ mod tests {
             seed: 3,
             serving: Default::default(),
             kernels: Default::default(),
+            shards: 1,
         }
     }
 
@@ -875,6 +1316,49 @@ mod tests {
         let b = optimized.simulate(&arch, true, Some(&x), 0).unwrap();
         assert_eq!(a.output, b.output, "optimized plan must be bit-exact");
         assert!(b.cycles <= a.cycles, "optimizer must not cost cycles");
+    }
+
+    #[test]
+    fn cache_never_aliases_shard_counts() {
+        let cache = PlanCache::new();
+        cache.get_or_compile(&run_cfg("gcn")).unwrap();
+        let mut sharded = run_cfg("gcn");
+        sharded.shards = 2;
+        let (plan, hit) = cache.get_or_compile(&sharded).unwrap();
+        assert!(!hit, "a sharded run must not reuse the unsharded plan");
+        let sh = plan.sharding.as_ref().expect("shards=2 plan carries a ShardedPlan");
+        assert_eq!(sh.num_shards(), 2);
+        assert_eq!(cache.stats().entries, 2);
+        let key = PlanKey::of(&sharded);
+        assert!(key.to_string().contains("shards=2"), "{key}");
+        // shards=1 normalizes into the unsharded key and plan
+        let mut one = run_cfg("gcn");
+        one.shards = 1;
+        let (p1, hit) = cache.get_or_compile(&one).unwrap();
+        assert!(hit);
+        assert!(p1.sharding.is_none());
+    }
+
+    #[test]
+    fn sharded_plan_is_bit_exact_on_both_paths() {
+        let mut base = run_cfg("gat");
+        base.layers = 2;
+        let unsharded = ExecPlan::compile(&base).unwrap();
+        let mut sharded_run = base.clone();
+        sharded_run.shards = 3;
+        let sharded = ExecPlan::compile(&sharded_run).unwrap();
+        let x = unsharded.make_input(9);
+        let arch = ArchConfig::default();
+        let a = unsharded.simulate(&arch, true, Some(&x), 0).unwrap();
+        let b = sharded.simulate(&arch, true, Some(&x), 0).unwrap();
+        assert_eq!(a.output, b.output, "sharded engine output must be bit-exact");
+        assert_eq!(b.halo.exchanges, 1, "depth-2 run has one halo boundary");
+        assert!(b.halo.bytes > 0 && b.halo.cycles > 0);
+        assert_eq!(b.cycles, b.layers.iter().map(|l| l.cycles).sum::<u64>());
+        // batched path agrees too
+        let mut scratch = BatchScratch::new();
+        let outs = sharded.execute_batch_with(&[&x], 2, &mut scratch).unwrap();
+        assert_eq!(Some(&outs[0]), a.output.as_ref());
     }
 
     #[test]

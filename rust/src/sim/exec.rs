@@ -60,11 +60,25 @@ pub struct ExecScratch {
     /// layers, runs, and plans, so warm multi-layer requests allocate
     /// nothing (`alloc_events` counts its growth).
     pub(crate) chain: Vec<f32>,
+    /// Per-shard child scratches for sharded plans (DESIGN.md §3.8):
+    /// shard *s* of a K-way plan runs its engine on `shard_pool[s]`.
+    /// Empty for unsharded runs; grows once to K and then persists, so
+    /// warm sharded requests reuse the children like any other pool.
+    pub(crate) shard_pool: Vec<ExecScratch>,
 }
 
 impl ExecScratch {
     pub fn new() -> ExecScratch {
-        ExecScratch { func: FuncState::new(), chain: Vec::new() }
+        ExecScratch { func: FuncState::new(), chain: Vec::new(), shard_pool: Vec::new() }
+    }
+
+    /// Grow (never shrink) the shard pool to `k` children and hand the
+    /// caller disjoint mutable borrows, one per shard worker thread.
+    pub(crate) fn ensure_shards(&mut self, k: usize) -> &mut [ExecScratch] {
+        while self.shard_pool.len() < k {
+            self.shard_pool.push(ExecScratch::new());
+        }
+        &mut self.shard_pool[..k]
     }
 
     /// Un-permute the last functional run's (still-tiled, `emit_output:
@@ -80,9 +94,10 @@ impl ExecScratch {
     /// Monotonic across runs; a warm request on a reused scratch should
     /// add ≈0 (the returned output embedding vector is caller-owned and
     /// deliberately excluded). `perf_hotpath` asserts the warm delta is
-    /// zero for all five models.
+    /// zero for all five models. Includes shard-pool children.
     pub fn alloc_events(&self) -> u64 {
         self.func.alloc_events()
+            + self.shard_pool.iter().map(|s| s.alloc_events()).sum::<u64>()
     }
 }
 

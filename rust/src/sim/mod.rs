@@ -48,4 +48,4 @@ mod units;
 pub use engine::Simulator;
 pub use exec::ExecScratch;
 pub use tensor::Tensor;
-pub use types::{LayerMetrics, SimOptions, SimResult, Workload};
+pub use types::{HaloMetrics, LayerMetrics, SimOptions, SimResult, Workload};

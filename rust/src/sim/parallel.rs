@@ -198,12 +198,28 @@ pub struct BatchScratch {
     /// at zero.
     chain_prev: Vec<Vec<f32>>,
     chain_next: Vec<Vec<f32>>,
+    /// Per-shard child scratches for sharded plans (DESIGN.md §3.8):
+    /// shard *s* of a K-way plan runs its per-layer [`run_batch`] on
+    /// `shard_pool[s]`. Empty for unsharded plans; grows once to K.
+    shard_pool: Vec<BatchScratch>,
     allocs: u64,
 }
 
 impl BatchScratch {
     pub fn new() -> BatchScratch {
         BatchScratch::default()
+    }
+
+    /// Grow (never shrink) the shard pool to `k` children and hand the
+    /// caller disjoint mutable borrows, one per shard worker thread.
+    pub(crate) fn ensure_shards(&mut self, k: usize) -> &mut [BatchScratch] {
+        if k > self.shard_pool.capacity() {
+            self.allocs += 1;
+        }
+        while self.shard_pool.len() < k {
+            self.shard_pool.push(BatchScratch::default());
+        }
+        &mut self.shard_pool[..k]
     }
 
     /// Pool-growth events since this scratch was created, summed over
@@ -213,6 +229,7 @@ impl BatchScratch {
         self.allocs
             + self.lanes.iter().map(|l| l.alloc_events()).sum::<u64>()
             + self.workers.iter().map(|w| w.alloc_events()).sum::<u64>()
+            + self.shard_pool.iter().map(|s| s.alloc_events()).sum::<u64>()
     }
 
     /// Per-exec-thread pool-growth events (index = worker id). Warm

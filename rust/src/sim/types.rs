@@ -56,6 +56,23 @@ pub struct LayerMetrics {
     pub counters: EnergyCounters,
 }
 
+/// Inter-shard halo-exchange accounting for sharded (multi-chip) runs
+/// (DESIGN.md §3.8). All-zero for unsharded plans.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HaloMetrics {
+    /// Layer boundaries at which an exchange happened (K>1 runs only).
+    pub exchanges: u64,
+    /// Halo vertex activations copied across shards, summed over
+    /// boundaries (one copy = one vertex row into one consumer shard).
+    pub vertices: u64,
+    /// Bytes moved chip-to-chip, counting both the producer write and
+    /// the consumer read (2× the activation payload).
+    pub bytes: u64,
+    /// Cycles the exchange added to the critical path, already folded
+    /// into `SimResult::cycles` and the producing layer's metrics.
+    pub cycles: u64,
+}
+
 /// Simulation result: timing, utilization, energy events, output.
 #[derive(Clone, Debug, Default)]
 pub struct SimResult {
@@ -79,6 +96,8 @@ pub struct SimResult {
     /// `plan::ExecPlan` (one entry per layer, depth-1 included). Empty
     /// when the engine is driven directly with a single `Workload`.
     pub layers: Vec<LayerMetrics>,
+    /// Inter-shard boundary-exchange totals (sharded plans only).
+    pub halo: HaloMetrics,
 }
 
 impl SimResult {

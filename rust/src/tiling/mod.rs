@@ -449,7 +449,7 @@ pub fn tile(graph: &Graph, cfg: TilingConfig) -> Tiling {
     let g: &Graph = if matches!(cfg.reorder, Reorder::None) {
         graph
     } else {
-        owned = graph.relabel(&perm);
+        owned = graph.relabel(&perm).expect("degree_perm builds a valid permutation");
         &owned
     };
 
@@ -481,10 +481,10 @@ mod tests {
         // 8 vertices; edges concentrate on dsts 0,1
         let mut b = GraphBuilder::new(8);
         for s in 0..6u32 {
-            b.add_edge(s, 0);
+            b.add_edge(s, 0).unwrap();
         }
-        b.add_edge(6, 1);
-        b.add_edge(7, 5);
+        b.add_edge(6, 1).unwrap();
+        b.add_edge(7, 5).unwrap();
         b.build()
     }
 

@@ -31,6 +31,7 @@ fn run_cfg(model: &str, dataset: &str) -> RunConfig {
         hidden: Vec::new(),
         serving: Default::default(),
         kernels: Default::default(),
+        shards: 1,
     }
 }
 
@@ -197,6 +198,7 @@ mod properties {
                     hidden: Vec::new(),
                     serving: Default::default(),
                     kernels: Default::default(),
+                    shards: 1,
                 };
                 let session =
                     Session::from_graph(ModelKind::Gcn, g.clone(), &cfg).unwrap();
@@ -249,6 +251,7 @@ mod properties {
                         hidden: Vec::new(),
                         serving: Default::default(),
                         kernels: Default::default(),
+                        shards: 1,
                     };
                     let s = Session::from_graph(m, g.clone(), &cfg).unwrap();
                     let x = s.make_input(21);

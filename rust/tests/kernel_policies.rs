@@ -50,6 +50,7 @@ fn run_cfg(model: &str, layers: u32, mode: TilingMode, kernels: KernelPolicy) ->
         seed: 3,
         serving: Default::default(),
         kernels,
+        shards: 1,
     }
 }
 

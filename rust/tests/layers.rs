@@ -38,6 +38,7 @@ fn run_cfg(model: &str, layers: u32, hidden: Vec<u32>) -> RunConfig {
         seed: 3,
         serving: Default::default(),
         kernels: Default::default(),
+        shards: 1,
     }
 }
 

@@ -49,6 +49,7 @@ fn run_cfg(model: &str, layers: u32, passes: PassSet, seed: u64) -> RunConfig {
         seed,
         serving: Default::default(),
         kernels: Default::default(),
+        shards: 1,
     }
 }
 

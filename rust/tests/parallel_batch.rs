@@ -46,6 +46,7 @@ fn run_cfg(model: &str) -> RunConfig {
         hidden: Vec::new(),
         serving: Default::default(),
         kernels: Default::default(),
+        shards: 1,
     }
 }
 

@@ -31,6 +31,7 @@ fn run_cfg(model: &str, seed: u64) -> RunConfig {
         seed,
         serving: Default::default(),
         kernels: Default::default(),
+        shards: 1,
     }
 }
 

@@ -36,6 +36,7 @@ fn small_run(model: &str, functional: bool) -> RunConfig {
         seed: 3,
         serving: Default::default(),
         kernels: Default::default(),
+        shards: 1,
     }
 }
 
