@@ -118,6 +118,7 @@ fn small_run(model: &str) -> RunConfig {
         serving: Default::default(),
         kernels: Default::default(),
         shards: 1,
+        overlap: false,
     }
 }
 

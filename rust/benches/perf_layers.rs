@@ -53,6 +53,7 @@ fn request(model: &str, dataset: &str, scale: u64, depth: u32, id: u64) -> Infer
         serving: Default::default(),
         kernels: Default::default(),
         shards: 1,
+        overlap: false,
     };
     InferenceRequest { id, run, input_seed: id % 4 }
 }

@@ -73,6 +73,7 @@ fn request(i: u64) -> InferenceRequest {
         serving: Default::default(),
         kernels: Default::default(),
         shards: 1,
+        overlap: false,
     };
     InferenceRequest { id: i, run, input_seed: i }
 }

@@ -1,12 +1,16 @@
-//! Multi-chip shard-count sweep (DESIGN.md §3.8): one RMAT graph, one
-//! depth-2 GCN plan per shard count K ∈ {1, 2, 4, 8}, cycle scaling vs
-//! the K=1 baseline, and the halo-exchange share of traffic and time.
-//! Asserts the acceptance bar: K=4 cycles within 1.35× of linear
-//! scaling on the full-size (2^20-vertex) graph — the cut is cheap
-//! enough that chips, not halos, dominate. Smoke mode shrinks the graph
-//! to CI size, drops K=8, and additionally proves the sharded stitch is
-//! bit-exact against the unsharded functional output on both execution
-//! paths. Emits `BENCH_shard.json`.
+//! Multi-chip shard-count sweep (DESIGN.md §3.8–3.9): one RMAT graph,
+//! one depth-2 GCN plan per shard count K ∈ {1, 2, 4, 8} — compiled
+//! both serial and with operator-level overlap — cycle scaling vs the
+//! K=1 baseline, the halo-exchange share of traffic and time, and how
+//! much of the exchange the overlap schedule hides. Asserts the
+//! acceptance bars on the full-size (2^20-vertex) graph: K=4 cycles
+//! within 1.35× of linear scaling, monotone non-increasing cycles
+//! across the whole K sweep, and overlap speedup > 1.0 at every K ≥ 2.
+//! Overlap may never be slower than serial at any size. Smoke mode
+//! shrinks the graph to CI size, drops K=8, and additionally proves the
+//! sharded stitch is bit-exact against the unsharded functional output
+//! on both execution paths, overlap on AND off. Emits
+//! `BENCH_shard.json`.
 //!
 //! ```bash
 //! cargo bench --bench perf_shard            # RMAT 2^20, ~8M edges
@@ -32,7 +36,7 @@ fn num(v: f64) -> Json {
     Json::Num(v)
 }
 
-fn run_cfg(scale_log2: u32, shards: u32) -> RunConfig {
+fn run_cfg(scale_log2: u32, shards: u32, overlap: bool) -> RunConfig {
     RunConfig {
         model: "gcn".into(),
         dataset: format!("rmat{scale_log2}"),
@@ -55,6 +59,7 @@ fn run_cfg(scale_log2: u32, shards: u32) -> RunConfig {
         serving: Default::default(),
         kernels: Default::default(),
         shards,
+        overlap,
     }
 }
 
@@ -70,15 +75,16 @@ fn main() {
     );
 
     let mut table = Table::new(&[
-        "K", "cycles", "speedup", "cut %", "halo vertices", "halo traffic", "halo share %",
-        "compile s",
+        "K", "cycles", "speedup", "ovl cycles", "ovl speedup", "hidden %", "cut %",
+        "halo vertices", "halo traffic", "halo share %", "compile s",
     ]);
     let mut rows: Vec<Json> = Vec::new();
     let mut base_cycles = 0u64;
+    let mut prev_cycles = u64::MAX;
 
     for &k in ks {
         let t0 = Instant::now();
-        let plan = ExecPlan::from_graph(ModelKind::Gcn, graph.clone(), &run_cfg(scale_log2, k))
+        let plan = ExecPlan::from_graph(ModelKind::Gcn, graph.clone(), &run_cfg(scale_log2, k, false))
             .expect("plan compiles");
         let compile_s = t0.elapsed().as_secs_f64();
         let res = plan.simulate(&arch, false, None, 0).expect("timing run");
@@ -92,10 +98,44 @@ fn main() {
             .as_ref()
             .map(|s| s.partition.cut_fraction())
             .unwrap_or(0.0);
+
+        // the overlap variant of the same cut (K ≥ 2 only): exchange
+        // cycles hidden behind halo-independent tiles
+        let ovl = (k >= 2).then(|| {
+            let plan =
+                ExecPlan::from_graph(ModelKind::Gcn, graph.clone(), &run_cfg(scale_log2, k, true))
+                    .expect("overlap plan compiles");
+            plan.simulate(&arch, false, None, 0).expect("overlap timing run")
+        });
+        let (ovl_cycles, ovl_speedup, hidden_share) = match &ovl {
+            Some(o) => {
+                assert!(
+                    o.cycles <= res.cycles,
+                    "K={k}: overlap ({}) must never be slower than serial ({})",
+                    o.cycles,
+                    res.cycles
+                );
+                assert_eq!(
+                    o.halo.hidden_cycles + o.halo.exposed_cycles,
+                    o.halo.cycles,
+                    "K={k}: hidden + exposed must equal the total exchange cost"
+                );
+                let share = if o.halo.cycles > 0 {
+                    o.halo.hidden_cycles as f64 / o.halo.cycles as f64
+                } else {
+                    0.0
+                };
+                (Some(o.cycles), Some(res.cycles as f64 / o.cycles as f64), Some(share))
+            }
+            None => (None, None, None),
+        };
         table.row(&[
             k.to_string(),
             res.cycles.to_string(),
             format!("{speedup:.2}x"),
+            ovl_cycles.map_or("-".into(), |c| c.to_string()),
+            ovl_speedup.map_or("-".into(), |s| format!("{s:.3}x")),
+            hidden_share.map_or("-".into(), |h| format!("{:.1}", 100.0 * h)),
             format!("{:.1}", 100.0 * cut),
             res.halo.vertices.to_string(),
             zipper::util::fmt_bytes(res.halo.bytes),
@@ -110,25 +150,41 @@ fn main() {
         row.insert("halo_vertices".to_string(), num(res.halo.vertices as f64));
         row.insert("halo_bytes".to_string(), num(res.halo.bytes as f64));
         row.insert("halo_cycle_share".to_string(), num(halo_share));
+        row.insert("overlap_cycles".to_string(), ovl_cycles.map_or(Json::Null, |c| num(c as f64)));
+        row.insert("overlap_speedup".to_string(), ovl_speedup.map_or(Json::Null, num));
+        row.insert("hidden_cycle_share".to_string(), hidden_share.map_or(Json::Null, num));
         row.insert("compile_seconds".to_string(), num(compile_s));
         rows.push(Json::Obj(row));
 
-        // the acceptance bar: K=4 within 1.35x of linear on the full graph
-        if k == 4 && !smoke() {
-            let linear = base_cycles as f64 / 4.0;
+        if !smoke() {
+            // acceptance: K=4 within 1.35x of linear on the full graph
+            if k == 4 {
+                let linear = base_cycles as f64 / 4.0;
+                assert!(
+                    (res.cycles as f64) <= 1.35 * linear,
+                    "K=4 cycles {} exceed 1.35x linear ({:.0})",
+                    res.cycles,
+                    linear
+                );
+            }
+            // acceptance: adding chips never costs cycles at this size
             assert!(
-                (res.cycles as f64) <= 1.35 * linear,
-                "K=4 cycles {} exceed 1.35x linear ({:.0})",
-                res.cycles,
-                linear
+                res.cycles <= prev_cycles,
+                "K={k}: cycles {} regressed over the previous shard count ({prev_cycles})",
+                res.cycles
             );
+            // acceptance: the overlap schedule hides real exchange time
+            if let Some(s) = ovl_speedup {
+                assert!(s > 1.0, "K={k}: overlap speedup {s:.4} must exceed 1.0");
+            }
         }
+        prev_cycles = res.cycles;
     }
 
     if smoke() {
-        // bit-exact stitch: K in {2, 4} must reproduce the unsharded
-        // functional output on BOTH execution paths
-        let mut frun = run_cfg(scale_log2, 1);
+        // bit-exact stitch: K in {2, 4}, overlap on AND off, must
+        // reproduce the unsharded functional output on BOTH paths
+        let mut frun = run_cfg(scale_log2, 1, false);
         frun.functional = true;
         let base = ExecPlan::from_graph(ModelKind::Gcn, graph.clone(), &frun)
             .expect("baseline compiles");
@@ -139,23 +195,31 @@ fn main() {
             .output
             .expect("baseline output");
         for k in [2u32, 4] {
-            let mut srun = run_cfg(scale_log2, k);
-            srun.functional = true;
-            let plan = ExecPlan::from_graph(ModelKind::Gcn, graph.clone(), &srun)
-                .expect("sharded plan compiles");
-            let got = plan
-                .simulate(&arch, true, Some(&x), 0)
-                .expect("sharded run")
-                .output
-                .expect("sharded output");
-            assert_eq!(got, want, "K={k}: sharded engine stitch must be bit-exact");
-            let mut scratch = BatchScratch::new();
-            let outs = plan
-                .execute_batch_with(&[&x], 2, &mut scratch)
-                .expect("sharded batched run");
-            assert_eq!(outs[0], want, "K={k}: sharded batched stitch must be bit-exact");
+            for overlap in [false, true] {
+                let mut srun = run_cfg(scale_log2, k, overlap);
+                srun.functional = true;
+                let plan = ExecPlan::from_graph(ModelKind::Gcn, graph.clone(), &srun)
+                    .expect("sharded plan compiles");
+                let got = plan
+                    .simulate(&arch, true, Some(&x), 0)
+                    .expect("sharded run")
+                    .output
+                    .expect("sharded output");
+                assert_eq!(
+                    got, want,
+                    "K={k} overlap={overlap}: sharded engine stitch must be bit-exact"
+                );
+                let mut scratch = BatchScratch::new();
+                let outs = plan
+                    .execute_batch_with(&[&x], 2, &mut scratch)
+                    .expect("sharded batched run");
+                assert_eq!(
+                    outs[0], want,
+                    "K={k} overlap={overlap}: sharded batched stitch must be bit-exact"
+                );
+            }
         }
-        println!("smoke: sharded stitch bit-exact for K in {{2, 4}} on both paths");
+        println!("smoke: sharded stitch bit-exact for K in {{2, 4}} x overlap on/off, both paths");
     }
 
     print!("{}", table.render());

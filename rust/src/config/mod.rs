@@ -281,6 +281,14 @@ pub struct RunConfig {
     /// that execute concurrently with per-layer halo exchange. Part of
     /// the plan identity — see `plan::PlanKey`.
     pub shards: u32,
+    /// Operator-level overlap (DESIGN.md §3.9): when true and `shards`
+    /// ≥ 2, each layer boundary fires the halo exchange concurrently
+    /// with the next layer's halo-independent tiles, billing
+    /// `max(exchange, independent) + dependent` instead of the serial
+    /// sum. Functional outputs are bit-exact either way; only the
+    /// timing model changes. Part of the plan identity — see
+    /// `plan::PlanKey`. No effect on unsharded plans.
+    pub overlap: bool,
     /// Coordinator serving knobs (never part of the plan identity).
     pub serving: ServingConfig,
     /// Kernel policy (part of the plan identity — see `plan::PlanKey`).
@@ -303,6 +311,7 @@ impl Default for RunConfig {
             functional: false,
             seed: 42,
             shards: 1,
+            overlap: false,
             serving: ServingConfig::default(),
             kernels: KernelPolicy::default(),
         }
@@ -417,6 +426,7 @@ pub fn apply(
                     return Err(ConfigError("shards must be >= 1".into()));
                 }
             }
+            ("run", "overlap") => run.overlap = boolean()?,
             ("serving", "exec_threads") => run.serving.exec_threads = num()? as u32,
             ("serving", "max_batch") => run.serving.max_batch = num()? as u32,
             ("serving", "max_wait_us") => run.serving.max_wait_us = num()? as u64,
@@ -482,7 +492,7 @@ pub fn show(arch: &ArchConfig, run: &RunConfig) -> String {
          streams = 1d/{}s/{}e\npeak = {:.2} TFLOP/s\n\n\
          [run]\nmodel = {}\ndataset = {}\nscale = 1/{}\nfeat = {}x{}\n\
          layers = {}\nhidden = {}\n\
-         e2v = {}\npasses = {}\nfunctional = {}\nseed = {}\nshards = {}\n\n\
+         e2v = {}\npasses = {}\nfunctional = {}\nseed = {}\nshards = {}\noverlap = {}\n\n\
          [serving]\nexec_threads = {}\nmax_batch = {}\nmax_wait_us = {}\n\
          queue_cap = {}\noverflow = {}\ndefault_deadline_us = {}\n\n\
          [kernels]\nsimd = {}\nsparse_skip = {}\ndtype = {}\n\n\
@@ -514,6 +524,7 @@ pub fn show(arch: &ArchConfig, run: &RunConfig) -> String {
         run.functional,
         run.seed,
         run.shards,
+        run.overlap,
         run.serving.exec_threads,
         run.serving.max_batch,
         run.serving.max_wait_us,
@@ -561,6 +572,8 @@ mod tests {
             scale = 16
             layers = 3
             hidden = "64, 32"
+            shards = 2
+            overlap = true
             [serving]
             exec_threads = 4
             max_batch = 8
@@ -585,6 +598,8 @@ mod tests {
         assert_eq!(run.scale, 16);
         assert_eq!(run.layers, 3);
         assert_eq!(run.hidden, vec![64, 32]);
+        assert_eq!(run.shards, 2);
+        assert!(run.overlap);
         assert_eq!(
             run.serving,
             ServingConfig {
@@ -687,6 +702,7 @@ mod tests {
         assert!(s.contains("layers = 1") && s.contains("hidden = (default)"));
         assert!(s.contains("passes = none"));
         assert!(s.contains("shards = 1"));
+        assert!(s.contains("overlap = false"));
         let run = RunConfig { layers: 3, hidden: vec![64, 32], ..RunConfig::default() };
         let s = show(&ArchConfig::default(), &run);
         assert!(s.contains("layers = 3") && s.contains("hidden = 64,32"));

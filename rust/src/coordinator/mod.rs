@@ -253,6 +253,13 @@ pub struct InferenceResponse {
     /// Chip-to-chip halo-exchange bytes billed to this request's timing
     /// run (sharded plans only, 0 otherwise — DESIGN.md §3.8).
     pub halo_bytes: u64,
+    /// Halo-exchange cycles hidden behind halo-independent compute by
+    /// the operator-level overlap schedule (DESIGN.md §3.9; 0 unless
+    /// the plan was compiled with `overlap`).
+    pub halo_hidden_cycles: u64,
+    /// Halo-exchange cycles left on the simulated critical path
+    /// (equals the full exchange cost for overlap-off sharded plans).
+    pub halo_exposed_cycles: u64,
     /// Checksum of the output embeddings (functional runs).
     pub output_checksum: Option<f64>,
     /// Structured shed reason, if the runtime rejected this request
@@ -278,6 +285,8 @@ impl InferenceResponse {
             prepare_seconds: 0.0,
             batch_size: 1,
             halo_bytes: 0,
+            halo_hidden_cycles: 0,
+            halo_exposed_cycles: 0,
             output_checksum: None,
             reject: None,
             error: None,
@@ -519,6 +528,7 @@ mod tests {
             serving: Default::default(),
             kernels: Default::default(),
             shards: 1,
+            overlap: false,
         }
     }
 

@@ -830,6 +830,8 @@ fn execute_batch(
             prepare_seconds,
             batch_size: batch.len(),
             halo_bytes: timing.halo.bytes,
+            halo_hidden_cycles: timing.halo.hidden_cycles,
+            halo_exposed_cycles: timing.halo.exposed_cycles,
             output_checksum,
             ..InferenceResponse::empty(p.req.id, &p.req.run.model, &p.req.run.dataset)
         })
@@ -865,6 +867,7 @@ mod tests {
             serving: Default::default(),
             kernels: Default::default(),
             shards: 1,
+            overlap: false,
         }
     }
 

@@ -190,6 +190,7 @@ pub fn validate_model_depth_with(
         serving: Default::default(),
         kernels,
         shards: 1,
+        overlap: false,
     };
     let session = Session::from_graph(model, graph, &run).map_err(|e| format!("session: {e}"))?;
     let x = session.make_input(seed ^ 0x5eed);

@@ -107,6 +107,12 @@ fn build_configs(args: &Args) -> Result<(ArchConfig, RunConfig), String> {
             return Err("bad --shards (must be >= 1)".into());
         }
     }
+    if args.flag("overlap") {
+        run.overlap = true;
+    }
+    if args.flag("no-overlap") {
+        run.overlap = false;
+    }
     if let Some(v) = args.get("exec-threads") {
         run.serving.exec_threads = v.parse().map_err(|_| "bad --exec-threads")?;
     }
@@ -296,12 +302,15 @@ fn real_main(argv: &[String]) -> Result<(), String> {
             );
             if res.halo.exchanges > 0 {
                 println!(
-                    "halo: {} shards  {} exchanges  {} vertex-copies  {} chip-to-chip  (+{} cycles)",
+                    "halo: {} shards  {} exchanges  {} vertex-copies  {} chip-to-chip  \
+                     ({} cycles: {} exposed, {} hidden)",
                     run.shards,
                     res.halo.exchanges,
                     res.halo.vertices,
                     util::fmt_bytes(res.halo.bytes),
                     res.halo.cycles,
+                    res.halo.exposed_cycles,
+                    res.halo.hidden_cycles,
                 );
             }
             println!(
@@ -502,6 +511,9 @@ fn real_main(argv: &[String]) -> Result<(), String> {
                  graph across K chips with per-layer halo\n                       \
                  exchange; outputs stay bit-exact\n                       \
                  (default 1 = unsharded)              [run]\n  \
+                 --overlap            hide the halo exchange behind the next\n                       \
+                 layer's halo-independent tiles (K >= 2;\n                       \
+                 timing only, outputs stay bit-exact)  [run]\n  \
                  --functional         also execute on f32 embeddings (checksums)\n  \
                  --simd / --no-simd   force the SIMD kernel variants on or off\n                       \
                  (default: on when built with the `simd`\n                       \

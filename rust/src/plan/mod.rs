@@ -30,6 +30,9 @@ use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+mod pool;
+use pool::{with_shard_pool, ShardWorker};
+
 /// Structured, stable cache key: every input that changes the compiled
 /// artifact. (The old string key formatted `TilingConfig` with `{:?}`
 /// and omitted the dataset seed — two different graphs could collide.)
@@ -65,6 +68,13 @@ pub struct PlanKey {
     /// sharded plan carries K per-shard sub-plans plus halo maps —
     /// sharded and unsharded plans must never alias in the cache.
     pub shards: u32,
+    /// Operator-level overlap (DESIGN.md §3.9): hide the boundary halo
+    /// exchange behind halo-independent tile compute. Part of the key
+    /// because the timing model differs — overlapped and serial plans
+    /// must never alias in the cache. Normalized to `false` for
+    /// unsharded runs (no boundary to overlap), so the knob cannot
+    /// fragment the single-chip cache population.
+    pub overlap: bool,
 }
 
 impl PlanKey {
@@ -85,6 +95,7 @@ impl PlanKey {
             seed: run.seed,
             kernels: run.kernels,
             shards: run.shards.max(1),
+            overlap: run.overlap && run.shards >= 2,
         }
     }
 }
@@ -128,7 +139,7 @@ impl fmt::Display for PlanKey {
             .join(",");
         write!(
             f,
-            "model={};dataset={};scale={};feat={}x{};layers={};dst_part={};src_part={};mode={};reorder={};e2v={};passes={};seed={};simd={};skip={};dtype={};shards={}",
+            "model={};dataset={};scale={};feat={}x{};layers={};dst_part={};src_part={};mode={};reorder={};e2v={};passes={};seed={};simd={};skip={};dtype={};shards={};overlap={}",
             self.model,
             self.dataset,
             self.scale,
@@ -146,6 +157,7 @@ impl fmt::Display for PlanKey {
             self.kernels.sparse_skip,
             self.kernels.dtype.name(),
             self.shards,
+            self.overlap,
         )
     }
 }
@@ -158,6 +170,36 @@ pub struct HaloCopy {
     pub src_shard: u32,
     pub src_local: u32,
     pub dst_local: u32,
+}
+
+/// Plan-time operator-overlap schedule of a sharded plan (DESIGN.md
+/// §3.9): every tile of every shard classified as **halo-independent**
+/// (its occupied source rows gather only core-local vertices, so it can
+/// execute while the boundary exchange is still in flight) or
+/// **halo-dependent** (it reads at least one imported halo row and must
+/// wait for the exchange). The classification is sound because shard
+/// tilings are compiled with `Reorder::None`: tile source ids ARE
+/// shard-local ids, indexing straight into the partition's core mask,
+/// and `Tile::src_occ` masks out block rows that carry no edge.
+///
+/// The schedule is always computed at plan build (it is cheap and
+/// useful for inspection); whether the executors *bill* the overlapped
+/// timing is selected by `PlanKey::overlap`.
+pub struct OverlapSchedule {
+    /// Per shard: one flag per tile in canonical (partition, tile)
+    /// order — `true` = halo-independent.
+    pub independent: Vec<Vec<bool>>,
+    /// Per shard: number of halo-independent tiles.
+    pub independent_tiles: Vec<u32>,
+    /// Per shard: number of halo-dependent tiles.
+    pub dependent_tiles: Vec<u32>,
+    /// Per shard, per layer: the work-weighted fraction of the layer's
+    /// compute carried by halo-independent tiles, in [0, 1]. Tile work
+    /// is modeled as `rows·feat_in·feat_out + edges·feat_out` (dense
+    /// transform + gather), the same first-order shape the engine's
+    /// cycle model follows. Shards with no tiles report 1.0 (nothing
+    /// reads a halo row).
+    pub independent_work_frac: Vec<Vec<f64>>,
 }
 
 /// The sharded half of an [`ExecPlan`] (DESIGN.md §3.8): K per-shard
@@ -185,6 +227,8 @@ pub struct ShardedPlan {
     pub core_out: Vec<Vec<(u32, u32)>>,
     /// Total halo copies per layer boundary (= Σ `halo_in` lengths).
     pub halo_copies: u64,
+    /// Tile-level halo-independence schedule (DESIGN.md §3.9).
+    pub overlap: OverlapSchedule,
 }
 
 impl ShardedPlan {
@@ -558,16 +602,30 @@ impl ExecPlan {
         crate::sim::parallel::run_pipeline(&self.tiling, &stages, inputs, exec_threads, scratch)
     }
 
-    /// Sharded engine path (DESIGN.md §3.8): each layer runs one engine
-    /// per shard across a scoped thread pool (K chips in parallel), the
-    /// layer's cycle cost is the slowest shard plus the halo exchange,
-    /// and additive metrics (instructions, DRAM, energy events) sum over
-    /// shards. At every layer boundary the halo rows of each shard's
-    /// activation image are overwritten with the owning shard's freshly
-    /// computed rows; the final layer's core rows are stitched back to
-    /// ORIGINAL vertex order — bit-exactly equal to the unsharded plan's
-    /// output, because shard-local gather folds visit sources in the
-    /// same order (see [`ShardedPlan`]).
+    /// Sharded engine path (DESIGN.md §3.8–3.9): one engine per shard
+    /// per layer, run on a *persistent* per-run worker pool — K workers
+    /// spawn once, park on a condvar between layers, and serve every
+    /// round, so a layer boundary costs a wake instead of K thread
+    /// spawns. The layer's cycle cost is the slowest shard; additive
+    /// metrics (instructions, DRAM, energy events) sum over shards.
+    ///
+    /// Boundary exchange billing depends on `PlanKey::overlap`:
+    /// - serial (default): the full exchange cost lands on the
+    ///   producing layer's critical path (`exposed_cycles`);
+    /// - overlap: the exchange is billed against the *consuming*
+    ///   layer's halo-independent tile phase —
+    ///   `max(exchange, independent) + dependent` per shard, max over
+    ///   shards — and only the exposed remainder reaches the critical
+    ///   path. Functional execution is unchanged either way (exchange
+    ///   still completes before the next layer's folds run), so outputs
+    ///   are bit-exact across both settings.
+    ///
+    /// At every layer boundary the halo rows of each shard's activation
+    /// image are overwritten with the owning shard's freshly computed
+    /// rows; the final layer's core rows are stitched back to ORIGINAL
+    /// vertex order — bit-exactly equal to the unsharded plan's output,
+    /// because shard-local gather folds visit sources in the same order
+    /// (see [`ShardedPlan`]).
     fn simulate_sharded(
         &self,
         arch: &ArchConfig,
@@ -580,6 +638,7 @@ impl ExecPlan {
         let k = sh.shards.len();
         let depth = self.stages.len();
         let dtype = self.key.kernels.dtype;
+        let overlap = self.key.overlap;
         // scatter the global input into per-shard local images
         let mut cur: Vec<Vec<f32>> = Vec::new();
         if functional {
@@ -604,98 +663,133 @@ impl ExecPlan {
         let mut acc = SimResult::default();
         let mut shard_layers: Vec<Vec<LayerMetrics>> = vec![Vec::new(); k];
         let mut outs: Vec<Vec<f32>> = Vec::new();
-        for l in 0..depth {
-            let last = l + 1 == depth;
-            let stage = &self.stages[l];
-            let results: Vec<Result<SimResult, String>> = std::thread::scope(|scope| {
-                let handles: Vec<_> = sh
-                    .shards
-                    .iter()
-                    .zip(scratches.iter_mut())
-                    .enumerate()
-                    .map(|(s, (sp, ss))| {
-                        let xs = if functional { Some(cur[s].as_slice()) } else { None };
+        // one persistent worker per shard; each owns its sub-plan ref +
+        // scratch and serves (layer, input) jobs for the whole run
+        let workers: Vec<ShardWorker<'_, Option<Vec<f32>>, SimResult>> = sh
+            .shards
+            .iter()
+            .zip(scratches.iter_mut())
+            .enumerate()
+            .map(|(s, (sp, ss))| {
+                let w: ShardWorker<'_, Option<Vec<f32>>, SimResult> =
+                    Box::new(move |l: usize, x: Option<Vec<f32>>| {
                         // the windowed trace covers shard 0's first layer
                         let tw = if l == 0 && s == 0 { trace_window } else { 0 };
-                        scope.spawn(move || {
-                            let wl = sp.stage_workload(l, xs);
-                            let opts = SimOptions {
-                                functional,
-                                trace_window: tw,
-                                emit_output: functional,
-                            };
-                            Simulator::new(arch, &wl, opts).run_with(ss)
-                        })
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.join().unwrap_or_else(|_| Err("shard worker panicked".into())))
-                    .collect()
-            });
-            let mut layer = LayerMetrics {
-                feat_in: stage.feat_in,
-                feat_out: stage.feat_out,
-                ..Default::default()
-            };
-            if functional {
+                        let wl = sp.stage_workload(l, x.as_deref());
+                        let opts = SimOptions {
+                            functional,
+                            trace_window: tw,
+                            emit_output: functional,
+                        };
+                        Simulator::new(arch, &wl, opts).run_with(ss)
+                    });
+                w
+            })
+            .collect();
+        let run: Result<(), String> = with_shard_pool(workers, |pool| {
+            // exchange cycles staged at the previous boundary, still to
+            // be billed against this layer's independent phase
+            let mut pending = 0u64;
+            for l in 0..depth {
+                let last = l + 1 == depth;
+                let stage = &self.stages[l];
+                let round_inputs: Vec<Option<Vec<f32>>> = if functional {
+                    std::mem::take(&mut cur).into_iter().map(Some).collect()
+                } else {
+                    (0..k).map(|_| None).collect()
+                };
+                let results = pool.run_round(l, round_inputs);
+                let mut layer = LayerMetrics {
+                    feat_in: stage.feat_in,
+                    feat_out: stage.feat_out,
+                    ..Default::default()
+                };
                 outs.clear();
-            }
-            for (s, r) in results.into_iter().enumerate() {
-                let mut res = r.map_err(|e| format!("shard {s} layer {l}: {e}"))?;
-                // K chips run concurrently: the layer takes as long as
-                // its slowest shard; event counts stay additive
-                layer.cycles = layer.cycles.max(res.cycles);
-                layer.instructions += res.instructions;
-                layer.dram_read_bytes += res.dram_read_bytes;
-                layer.dram_write_bytes += res.dram_write_bytes;
-                layer.peak_uem_bytes = layer.peak_uem_bytes.max(res.peak_uem_bytes);
-                layer.counters += res.counters;
-                acc.mu_busy += res.mu_busy;
-                acc.vu_busy += res.vu_busy;
-                acc.mem_busy += res.mem_busy;
-                if l == 0 && s == 0 {
-                    acc.trace = std::mem::take(&mut res.trace);
+                // raw compute: max over concurrent chips
+                let mut raw_max = 0u64;
+                // overlapped: max over chips of max(E, independent) + dependent
+                let mut overlapped_max = 0u64;
+                for (s, r) in results.into_iter().enumerate() {
+                    let mut res = r.map_err(|e| format!("shard {s} layer {l}: {e}"))?;
+                    raw_max = raw_max.max(res.cycles);
+                    if pending > 0 {
+                        let frac = sh.overlap.independent_work_frac[s][l];
+                        let ind = ((res.cycles as f64 * frac) as u64).min(res.cycles);
+                        let dep = res.cycles - ind;
+                        overlapped_max = overlapped_max.max(pending.max(ind) + dep);
+                    }
+                    layer.instructions += res.instructions;
+                    layer.dram_read_bytes += res.dram_read_bytes;
+                    layer.dram_write_bytes += res.dram_write_bytes;
+                    layer.peak_uem_bytes = layer.peak_uem_bytes.max(res.peak_uem_bytes);
+                    layer.counters += res.counters;
+                    acc.mu_busy += res.mu_busy;
+                    acc.vu_busy += res.vu_busy;
+                    acc.mem_busy += res.mem_busy;
+                    if l == 0 && s == 0 {
+                        acc.trace = std::mem::take(&mut res.trace);
+                    }
+                    shard_layers[s].push(layer_metrics(stage, &res));
+                    if functional {
+                        outs.push(res.output.take().ok_or_else(|| {
+                            format!("shard {s} layer {l} produced no output")
+                        })?);
+                    }
                 }
-                shard_layers[s].push(layer_metrics(stage, &res));
-                if functional {
-                    outs.push(
-                        res.output
-                            .take()
-                            .ok_or_else(|| format!("shard {s} layer {l} produced no output"))?,
-                    );
+                layer.cycles = if pending > 0 { overlapped_max } else { raw_max };
+                if pending > 0 {
+                    // max(E, ind) + dep is ≥ the raw layer (dep + ind)
+                    // and ≤ raw + E, so exposed ∈ [0, E] by construction
+                    let exposed = layer.cycles - raw_max;
+                    layer.counters.cycles += exposed;
+                    acc.halo.exposed_cycles += exposed;
+                    acc.halo.hidden_cycles += pending - exposed;
+                    pending = 0;
                 }
-            }
-            if !last && sh.halo_copies > 0 {
-                let (bytes, cycles) =
-                    halo_exchange_cost(arch, sh.halo_copies, stage.feat_out, dtype);
-                layer.cycles += cycles;
-                layer.dram_read_bytes += bytes / 2;
-                layer.dram_write_bytes += bytes / 2;
-                layer.counters.hbm_bytes += bytes;
-                layer.counters.cycles += cycles;
-                acc.halo.exchanges += 1;
-                acc.halo.vertices += sh.halo_copies;
-                acc.halo.bytes += bytes;
-                acc.halo.cycles += cycles;
-            }
-            if functional && !last {
-                // hidden activations round-trip through the storage
-                // dtype at the boundary (the same point the unsharded
-                // chain quantizes), THEN halo rows are imported
-                for o in outs.iter_mut() {
-                    crate::sim::tensor::quantize_slice(dtype, o);
+                if !last && sh.halo_copies > 0 {
+                    let (bytes, cycles) =
+                        halo_exchange_cost(arch, sh.halo_copies, stage.feat_out, dtype);
+                    // fabric traffic always bills to the producing layer
+                    layer.dram_read_bytes += bytes / 2;
+                    layer.dram_write_bytes += bytes / 2;
+                    layer.counters.hbm_bytes += bytes;
+                    acc.halo.exchanges += 1;
+                    acc.halo.vertices += sh.halo_copies;
+                    acc.halo.bytes += bytes;
+                    acc.halo.cycles += cycles;
+                    if overlap {
+                        // defer: billed against the next layer's
+                        // independent phase at the top of the loop
+                        pending = cycles;
+                    } else {
+                        layer.cycles += cycles;
+                        layer.counters.cycles += cycles;
+                        acc.halo.exposed_cycles += cycles;
+                    }
                 }
-                exchange_halos(sh, stage.feat_out as usize, &mut outs);
-                std::mem::swap(&mut cur, &mut outs);
+                if functional && !last {
+                    // hidden activations round-trip through the storage
+                    // dtype at the boundary (the same point the
+                    // unsharded chain quantizes), THEN halo rows are
+                    // imported; a zero-copy boundary skips the exchange
+                    for o in outs.iter_mut() {
+                        crate::sim::tensor::quantize_slice(dtype, o);
+                    }
+                    if sh.halo_copies > 0 {
+                        exchange_halos(&sh.halo_in, stage.feat_out as usize, &mut outs);
+                    }
+                    std::mem::swap(&mut cur, &mut outs);
+                }
+                acc.cycles += layer.cycles;
+                acc.instructions += layer.instructions;
+                acc.dram_read_bytes += layer.dram_read_bytes;
+                acc.dram_write_bytes += layer.dram_write_bytes;
+                acc.counters += layer.counters;
+                acc.layers.push(layer);
             }
-            acc.cycles += layer.cycles;
-            acc.instructions += layer.instructions;
-            acc.dram_read_bytes += layer.dram_read_bytes;
-            acc.dram_write_bytes += layer.dram_write_bytes;
-            acc.counters += layer.counters;
-            acc.layers.push(layer);
-        }
+            Ok(())
+        });
+        run?;
         if functional {
             let f = self.feat_out as usize;
             let mut out = vec![0.0f32; self.dims.output_len];
@@ -719,12 +813,15 @@ impl ExecPlan {
     }
 
     /// Sharded tile-parallel batched path: per layer, every shard runs
-    /// the full [`run_batch`] machinery concurrently (the exec-thread
-    /// budget is split across shards), halos are exchanged per lane at
-    /// each boundary, and the final core rows are stitched back to
-    /// ORIGINAL vertex order. Bit-identical to the sharded engine path
-    /// and to the unsharded plan for every thread count, because
-    /// `run_batch` itself is thread-count-invariant.
+    /// the full [`run_batch`] machinery concurrently on the persistent
+    /// shard worker pool (the exec-thread budget is split across
+    /// shards), halos are exchanged per lane at each boundary, and the
+    /// final core rows are stitched back to ORIGINAL vertex order.
+    /// Bit-identical to the sharded engine path and to the unsharded
+    /// plan for every thread count, because `run_batch` itself is
+    /// thread-count-invariant — and for every `overlap` setting,
+    /// because overlap only changes the cycle model, never the
+    /// functional schedule (DESIGN.md §3.9).
     fn execute_batch_sharded(
         &self,
         inputs: &[&[f32]],
@@ -769,57 +866,58 @@ impl ExecPlan {
             .collect();
         let scratches = scratch.ensure_shards(k);
         let inner_threads = (exec_threads.max(1) / k).max(1);
-        for l in 0..depth {
-            let last = l + 1 == depth;
-            let cur_ref = &cur;
-            let results: Vec<Result<Vec<Vec<f32>>, String>> = std::thread::scope(|scope| {
-                let handles: Vec<_> = sh
-                    .shards
-                    .iter()
-                    .zip(scratches.iter_mut())
-                    .enumerate()
-                    .map(|(s, (sp, ss))| {
-                        scope.spawn(move || {
-                            let wl = sp.stage_workload(l, None);
-                            let lanes: Vec<&[f32]> =
-                                cur_ref[s].iter().map(|v| v.as_slice()).collect();
-                            run_batch(&wl, &lanes, inner_threads, ss)
-                        })
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.join().unwrap_or_else(|_| Err("shard worker panicked".into())))
-                    .collect()
-            });
-            let mut outs: Vec<Vec<Vec<f32>>> = Vec::with_capacity(k);
-            for (s, r) in results.into_iter().enumerate() {
-                outs.push(r.map_err(|e| format!("shard {s} layer {l}: {e}"))?);
-            }
-            if last {
-                let f = self.feat_out as usize;
-                let mut stitched: Vec<Vec<f32>> =
-                    (0..nlanes).map(|_| vec![0.0f32; self.dims.output_len]).collect();
-                for (s, pairs) in sh.core_out.iter().enumerate() {
-                    for (lane, dst) in stitched.iter_mut().enumerate() {
-                        for &(local, orig) in pairs {
-                            dst[orig as usize * f..][..f]
-                                .copy_from_slice(&outs[s][lane][local as usize * f..][..f]);
+        // persistent workers: jobs carry the shard's owned lane images,
+        // results are the shard's per-lane outputs
+        let workers: Vec<ShardWorker<'_, Vec<Vec<f32>>, Vec<Vec<f32>>>> = sh
+            .shards
+            .iter()
+            .zip(scratches.iter_mut())
+            .map(|(sp, ss)| {
+                let w: ShardWorker<'_, Vec<Vec<f32>>, Vec<Vec<f32>>> =
+                    Box::new(move |l: usize, lanes: Vec<Vec<f32>>| {
+                        let wl = sp.stage_workload(l, None);
+                        let refs: Vec<&[f32]> = lanes.iter().map(|v| v.as_slice()).collect();
+                        run_batch(&wl, &refs, inner_threads, ss)
+                    });
+                w
+            })
+            .collect();
+        with_shard_pool(workers, |pool| {
+            for l in 0..depth {
+                let last = l + 1 == depth;
+                let results = pool.run_round(l, std::mem::take(&mut cur));
+                let mut outs: Vec<Vec<Vec<f32>>> = Vec::with_capacity(k);
+                for (s, r) in results.into_iter().enumerate() {
+                    outs.push(r.map_err(|e| format!("shard {s} layer {l}: {e}"))?);
+                }
+                if last {
+                    let f = self.feat_out as usize;
+                    let mut stitched: Vec<Vec<f32>> =
+                        (0..nlanes).map(|_| vec![0.0f32; self.dims.output_len]).collect();
+                    for (s, pairs) in sh.core_out.iter().enumerate() {
+                        for (lane, dst) in stitched.iter_mut().enumerate() {
+                            for &(local, orig) in pairs {
+                                dst[orig as usize * f..][..f]
+                                    .copy_from_slice(&outs[s][lane][local as usize * f..][..f]);
+                            }
                         }
                     }
+                    return Ok(stitched);
                 }
-                return Ok(stitched);
+                let f = self.stages[l].feat_out as usize;
+                for lane_out in outs.iter_mut().flatten() {
+                    crate::sim::tensor::quantize_slice(dtype, lane_out);
+                }
+                // zero-copy boundaries skip the staged exchange outright
+                if sh.halo_copies > 0 {
+                    for lane in 0..nlanes {
+                        exchange_halos_lane(&sh.halo_in, f, lane, &mut outs);
+                    }
+                }
+                cur = outs;
             }
-            let f = self.stages[l].feat_out as usize;
-            for lane_out in outs.iter_mut().flatten() {
-                crate::sim::tensor::quantize_slice(dtype, lane_out);
-            }
-            for lane in 0..nlanes {
-                exchange_halos_lane(sh, f, lane, &mut outs);
-            }
-            cur = outs;
-        }
-        unreachable!("the final stage returns from the loop")
+            unreachable!("the final stage returns from the loop")
+        })
     }
 }
 
@@ -885,7 +983,77 @@ fn build_sharding(
         local_to_orig.push(l2o);
         core_out.push(core);
     }
-    Ok(ShardedPlan { partition: part, shards, halo_in, local_to_orig, core_out, halo_copies })
+    let overlap = build_overlap_schedule(&part, &shards);
+    Ok(ShardedPlan {
+        partition: part,
+        shards,
+        halo_in,
+        local_to_orig,
+        core_out,
+        halo_copies,
+        overlap,
+    })
+}
+
+/// Classify every tile of every shard as halo-independent vs
+/// halo-dependent and derive the per-layer independent-work fractions
+/// the overlap timing model bills against (DESIGN.md §3.9). Sound
+/// because shard tilings use `Reorder::None`: `Tile::src_vertices` hold
+/// shard-local ids that index the partition's core mask directly, and
+/// `Tile::occupied_sources_within` ignores block rows that carry no
+/// edge (a halo vertex inside an untouched row creates no dependence).
+fn build_overlap_schedule(part: &Partitioning, shards: &[ExecPlan]) -> OverlapSchedule {
+    let mut independent = Vec::with_capacity(shards.len());
+    let mut independent_tiles = Vec::with_capacity(shards.len());
+    let mut dependent_tiles = Vec::with_capacity(shards.len());
+    let mut work_frac = Vec::with_capacity(shards.len());
+    for (s, sp) in shards.iter().enumerate() {
+        let is_core = &part.shards[s].is_core;
+        let mut flags = Vec::with_capacity(sp.dims.num_tiles);
+        // (rows, edges) per tile, for the per-layer work weighting
+        let mut shape = Vec::with_capacity(sp.dims.num_tiles);
+        for p in &sp.tiling.partitions {
+            for t in &p.tiles {
+                flags.push(t.occupied_sources_within(is_core));
+                shape.push((t.num_src() as u64, t.num_edges() as u64));
+            }
+        }
+        let n_ind = flags.iter().filter(|&&i| i).count() as u32;
+        // per-layer fractions: tile work ≈ rows·fi·fo (dense transform)
+        // + edges·fo (gather/reduce), the engine's first-order shape
+        let per_layer: Vec<f64> = sp
+            .stages
+            .iter()
+            .map(|stage| {
+                let (fi, fo) = (stage.feat_in as u128, stage.feat_out as u128);
+                let mut ind_w = 0u128;
+                let mut tot_w = 0u128;
+                for (&(rows, edges), &ind) in shape.iter().zip(&flags) {
+                    let w = rows as u128 * fi * fo + edges as u128 * fo;
+                    tot_w += w;
+                    if ind {
+                        ind_w += w;
+                    }
+                }
+                if tot_w == 0 {
+                    // a shard with no work reads no halo rows at all
+                    1.0
+                } else {
+                    ind_w as f64 / tot_w as f64
+                }
+            })
+            .collect();
+        dependent_tiles.push(flags.len() as u32 - n_ind);
+        independent_tiles.push(n_ind);
+        independent.push(flags);
+        work_frac.push(per_layer);
+    }
+    OverlapSchedule {
+        independent,
+        independent_tiles,
+        dependent_tiles,
+        independent_work_frac: work_frac,
+    }
 }
 
 /// Cost model for one inter-shard halo exchange (DESIGN.md §3.8): every
@@ -909,18 +1077,21 @@ fn halo_exchange_cost(
 /// computed activation rows. Reads are staged before writes; halo
 /// sources are always *core* rows of their home shard and core rows are
 /// never patched, so the exchange is exact regardless of shard order.
-fn exchange_halos(sh: &ShardedPlan, f: usize, outs: &mut [Vec<f32>]) {
+/// A shard with an empty copy list is skipped outright (no staging, no
+/// writes) — a one-directional cut pays only for the direction that
+/// actually moves rows.
+fn exchange_halos(halo_in: &[Vec<HaloCopy>], f: usize, outs: &mut [Vec<f32>]) {
     for s in 0..outs.len() {
-        if sh.halo_in[s].is_empty() {
+        if halo_in[s].is_empty() {
             continue;
         }
-        let staged: Vec<f32> = sh.halo_in[s]
+        let staged: Vec<f32> = halo_in[s]
             .iter()
             .flat_map(|hc| {
                 outs[hc.src_shard as usize][hc.src_local as usize * f..][..f].iter().copied()
             })
             .collect();
-        for (i, hc) in sh.halo_in[s].iter().enumerate() {
+        for (i, hc) in halo_in[s].iter().enumerate() {
             outs[s][hc.dst_local as usize * f..][..f].copy_from_slice(&staged[i * f..][..f]);
         }
     }
@@ -928,12 +1099,12 @@ fn exchange_halos(sh: &ShardedPlan, f: usize, outs: &mut [Vec<f32>]) {
 
 /// Per-lane variant of [`exchange_halos`] for the batched path
 /// (`outs[shard][lane]` layout).
-fn exchange_halos_lane(sh: &ShardedPlan, f: usize, lane: usize, outs: &mut [Vec<Vec<f32>>]) {
+fn exchange_halos_lane(halo_in: &[Vec<HaloCopy>], f: usize, lane: usize, outs: &mut [Vec<Vec<f32>>]) {
     for s in 0..outs.len() {
-        if sh.halo_in[s].is_empty() {
+        if halo_in[s].is_empty() {
             continue;
         }
-        let staged: Vec<f32> = sh.halo_in[s]
+        let staged: Vec<f32> = halo_in[s]
             .iter()
             .flat_map(|hc| {
                 outs[hc.src_shard as usize][lane][hc.src_local as usize * f..][..f]
@@ -941,7 +1112,7 @@ fn exchange_halos_lane(sh: &ShardedPlan, f: usize, lane: usize, outs: &mut [Vec<
                     .copied()
             })
             .collect();
-        for (i, hc) in sh.halo_in[s].iter().enumerate() {
+        for (i, hc) in halo_in[s].iter().enumerate() {
             outs[s][lane][hc.dst_local as usize * f..][..f].copy_from_slice(&staged[i * f..][..f]);
         }
     }
@@ -1085,6 +1256,7 @@ mod tests {
             serving: Default::default(),
             kernels: Default::default(),
             shards: 1,
+            overlap: false,
         }
     }
 
@@ -1337,6 +1509,74 @@ mod tests {
         let (p1, hit) = cache.get_or_compile(&one).unwrap();
         assert!(hit);
         assert!(p1.sharding.is_none());
+    }
+
+    #[test]
+    fn cache_never_aliases_overlap() {
+        let cache = PlanCache::new();
+        let mut serial = run_cfg("gcn");
+        serial.shards = 2;
+        cache.get_or_compile(&serial).unwrap();
+        let mut overlapped = serial.clone();
+        overlapped.overlap = true;
+        let (_, hit) = cache.get_or_compile(&overlapped).unwrap();
+        assert!(!hit, "overlapped and serial sharded plans must not alias");
+        assert_eq!(cache.stats().entries, 2);
+        let key = PlanKey::of(&overlapped);
+        assert!(key.to_string().contains("overlap=true"), "{key}");
+        // …but on an unsharded run the knob is inert and normalizes away
+        let mut unsharded = run_cfg("gcn");
+        unsharded.overlap = true;
+        assert_eq!(PlanKey::of(&unsharded), PlanKey::of(&run_cfg("gcn")));
+        cache.get_or_compile(&run_cfg("gcn")).unwrap();
+        let (_, hit) = cache.get_or_compile(&unsharded).unwrap();
+        assert!(hit, "overlap must not fragment the unsharded cache population");
+    }
+
+    #[test]
+    fn overlap_schedule_matches_brute_force_classification() {
+        let mut run = run_cfg("gcn");
+        run.layers = 2;
+        run.shards = 2;
+        let plan = ExecPlan::compile(&run).unwrap();
+        let sh = plan.sharding.as_ref().unwrap();
+        for (s, sp) in sh.shards.iter().enumerate() {
+            let is_core = &sh.partition.shards[s].is_core;
+            let mut i = 0usize;
+            let (mut n_ind, mut n_dep) = (0u32, 0u32);
+            for p in &sp.tiling.partitions {
+                for t in &p.tiles {
+                    // brute force: any edge whose source is a halo row
+                    // makes the tile dependent
+                    let dep = t
+                        .edges
+                        .iter()
+                        .any(|&(ls, _)| !is_core[t.src_vertices[ls as usize] as usize]);
+                    assert_eq!(
+                        sh.overlap.independent[s][i], !dep,
+                        "shard {s} tile {i} misclassified"
+                    );
+                    if dep {
+                        n_dep += 1;
+                    } else {
+                        n_ind += 1;
+                    }
+                    i += 1;
+                }
+            }
+            assert_eq!(sh.overlap.independent_tiles[s], n_ind);
+            assert_eq!(sh.overlap.dependent_tiles[s], n_dep);
+            assert_eq!(sh.overlap.independent_work_frac[s].len(), 2);
+            for &f in &sh.overlap.independent_work_frac[s] {
+                assert!((0.0..=1.0).contains(&f), "work fraction {f} out of range");
+            }
+            // a shard that imports halo rows must have ≥1 dependent
+            // tile: every halo vertex exists because some core dst
+            // reads it, and that edge lives in exactly one tile
+            if !sh.halo_in[s].is_empty() {
+                assert!(n_dep > 0, "shard {s} imports halos but has no dependent tile");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,251 @@
+//! Persistent per-run shard worker pool (DESIGN.md §3.9).
+//!
+//! Both sharded executors used to respawn a fresh `std::thread::scope`
+//! per layer — K thread spawns plus K joins per layer of every request.
+//! [`with_shard_pool`] spawns the K workers exactly ONCE per sharded
+//! execution: between layers the workers park on a condvar, the driver
+//! publishes one *round* (the layer index plus one owned job input per
+//! shard), and each worker hands its result back through a per-shard
+//! slot before parking again. Worker panics are caught and surfaced as
+//! `Err("shard worker panicked")`, matching the old per-scope join
+//! behavior, and a drop guard stops the pool even if the driver
+//! unwinds, so the enclosing scope can always join.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// One worker job: `FnMut(layer, input) -> Result<output, error>`.
+/// Boxed so each worker can capture its own shard plan and `&mut`
+/// scratch; `'env` ties those borrows to the caller's stack frame.
+pub(crate) type ShardWorker<'env, I, O> =
+    Box<dyn FnMut(usize, I) -> Result<O, String> + Send + 'env>;
+
+struct RoundState<I, O> {
+    /// Monotone round counter; workers run one job per round.
+    round: u64,
+    /// Layer index published with the current round.
+    layer: usize,
+    stop: bool,
+    /// One owned job input per shard, taken by its worker.
+    inputs: Vec<Option<I>>,
+    /// One result slot per shard, filled before the worker parks.
+    outputs: Vec<Option<Result<O, String>>>,
+    /// Workers that have completed the current round.
+    done: usize,
+}
+
+/// The shared driver/worker rendezvous. Created and owned by
+/// [`with_shard_pool`]; the driver closure talks to it via
+/// [`ShardPool::run_round`].
+pub(crate) struct ShardPool<I, O> {
+    k: usize,
+    state: Mutex<RoundState<I, O>>,
+    /// Signaled by the driver when a new round (or stop) is published.
+    work: Condvar,
+    /// Signaled by the last worker to finish a round.
+    idle: Condvar,
+}
+
+impl<I: Send, O: Send> ShardPool<I, O> {
+    fn new(k: usize) -> Self {
+        ShardPool {
+            k,
+            state: Mutex::new(RoundState {
+                round: 0,
+                layer: 0,
+                stop: false,
+                inputs: Vec::new(),
+                outputs: Vec::new(),
+                done: 0,
+            }),
+            work: Condvar::new(),
+            idle: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, RoundState<I, O>> {
+        // a worker can only poison the mutex by panicking between the
+        // catch_unwind boundary and its unlock — the state is still a
+        // plain value either way, so recover rather than cascade
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Driver side: publish one job per shard for `layer`, wake every
+    /// worker, block until all K results are in, and return them in
+    /// shard order.
+    pub(crate) fn run_round(&self, layer: usize, inputs: Vec<I>) -> Vec<Result<O, String>> {
+        assert_eq!(inputs.len(), self.k, "one job per shard per round");
+        let mut st = self.lock();
+        st.layer = layer;
+        st.inputs.clear();
+        st.inputs.extend(inputs.into_iter().map(Some));
+        st.outputs.clear();
+        st.outputs.resize_with(self.k, || None);
+        st.done = 0;
+        st.round += 1;
+        self.work.notify_all();
+        while st.done < self.k {
+            st = self.idle.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+        st.outputs
+            .iter_mut()
+            .map(|o| o.take().expect("every worker stored a result"))
+            .collect()
+    }
+
+    fn stop(&self) {
+        let mut st = self.lock();
+        st.stop = true;
+        drop(st);
+        self.work.notify_all();
+    }
+
+    fn worker_loop(&self, shard: usize, f: &mut (dyn FnMut(usize, I) -> Result<O, String> + Send)) {
+        let mut seen = 0u64;
+        loop {
+            let (layer, job) = {
+                let mut st = self.lock();
+                loop {
+                    if st.stop {
+                        return;
+                    }
+                    if st.round != seen {
+                        break;
+                    }
+                    st = self.work.wait(st).unwrap_or_else(|p| p.into_inner());
+                }
+                seen = st.round;
+                let job = st.inputs[shard].take().expect("round carries one job per shard");
+                (st.layer, job)
+            };
+            let out = catch_unwind(AssertUnwindSafe(|| f(layer, job)))
+                .unwrap_or_else(|_| Err("shard worker panicked".into()));
+            let mut st = self.lock();
+            st.outputs[shard] = Some(out);
+            st.done += 1;
+            if st.done == self.k {
+                self.idle.notify_one();
+            }
+        }
+    }
+}
+
+/// Guarantees the workers are released even if `drive` unwinds, so the
+/// enclosing `thread::scope` never deadlocks at join.
+struct StopGuard<'a, I: Send, O: Send>(&'a ShardPool<I, O>);
+
+impl<I: Send, O: Send> Drop for StopGuard<'_, I, O> {
+    fn drop(&mut self) {
+        self.0.stop();
+    }
+}
+
+/// Spawn one persistent worker per shard, run `drive` on the calling
+/// thread (it schedules layers via [`ShardPool::run_round`]), then park
+/// the pool and join. Workers live for the whole execution — layer
+/// boundaries cost a condvar wake, not a thread spawn.
+pub(crate) fn with_shard_pool<'env, I, O, R>(
+    mut workers: Vec<ShardWorker<'env, I, O>>,
+    drive: impl FnOnce(&ShardPool<I, O>) -> R,
+) -> R
+where
+    I: Send + 'env,
+    O: Send + 'env,
+{
+    let pool = ShardPool::new(workers.len());
+    std::thread::scope(|scope| {
+        for (shard, mut f) in workers.drain(..).enumerate() {
+            let p = &pool;
+            scope.spawn(move || p.worker_loop(shard, &mut *f));
+        }
+        let _guard = StopGuard(&pool);
+        drive(&pool)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn adders(k: usize) -> Vec<ShardWorker<'static, u64, u64>> {
+        (0..k)
+            .map(|s| {
+                let b: ShardWorker<'static, u64, u64> =
+                    Box::new(move |layer, x| Ok(x + layer as u64 * 100 + s as u64));
+                b
+            })
+            .collect()
+    }
+
+    #[test]
+    fn rounds_return_in_shard_order_and_workers_persist() {
+        let sums = with_shard_pool(adders(4), |pool| {
+            let mut sums = vec![0u64; 4];
+            // many rounds through the SAME four workers
+            for layer in 0..50 {
+                let outs = pool.run_round(layer, vec![1, 2, 3, 4]);
+                for (s, o) in outs.into_iter().enumerate() {
+                    assert_eq!(o.unwrap(), 1 + s as u64 + layer as u64 * 100 + s as u64);
+                    sums[s] += 1;
+                }
+            }
+            sums
+        });
+        assert_eq!(sums, vec![50; 4]);
+    }
+
+    #[test]
+    fn worker_state_is_retained_across_rounds() {
+        // each worker accumulates into captured &mut state, proving the
+        // same closure instance (not a respawn) serves every round
+        let mut accs = vec![0u64; 3];
+        {
+            let workers: Vec<ShardWorker<'_, u64, u64>> = accs
+                .iter_mut()
+                .map(|acc| {
+                    let b: ShardWorker<'_, u64, u64> = Box::new(move |_, x| {
+                        *acc += x;
+                        Ok(*acc)
+                    });
+                    b
+                })
+                .collect();
+            let last = with_shard_pool(workers, |pool| {
+                let mut last = Vec::new();
+                for _ in 0..10 {
+                    last = pool.run_round(0, vec![1, 2, 3]);
+                }
+                last
+            });
+            let got: Vec<u64> = last.into_iter().map(|r| r.unwrap()).collect();
+            assert_eq!(got, vec![10, 20, 30]);
+        }
+        assert_eq!(accs, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn errors_and_panics_surface_per_shard() {
+        let workers: Vec<ShardWorker<'static, u64, u64>> = vec![
+            Box::new(|_, x| Ok(x)),
+            Box::new(|_, _| Err("boom".into())),
+            Box::new(|_, _| panic!("worker dies")),
+        ];
+        let outs = with_shard_pool(workers, |pool| pool.run_round(0, vec![7, 7, 7]));
+        assert_eq!(outs[0], Ok(7));
+        assert_eq!(outs[1], Err("boom".to_string()));
+        assert_eq!(outs[2], Err("shard worker panicked".to_string()));
+    }
+
+    #[test]
+    fn driver_unwind_releases_workers() {
+        // the StopGuard must stop the pool when drive panics, or the
+        // scope would deadlock joining parked workers
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            with_shard_pool(adders(2), |pool| {
+                let _ = pool.run_round(0, vec![1, 2]);
+                panic!("driver bails mid-run");
+            })
+        }));
+        assert!(r.is_err());
+    }
+}

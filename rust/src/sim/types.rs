@@ -68,9 +68,17 @@ pub struct HaloMetrics {
     /// Bytes moved chip-to-chip, counting both the producer write and
     /// the consumer read (2× the activation payload).
     pub bytes: u64,
-    /// Cycles the exchange added to the critical path, already folded
-    /// into `SimResult::cycles` and the producing layer's metrics.
+    /// Total modeled exchange cycles across all boundaries, hidden or
+    /// not: `cycles == hidden_cycles + exposed_cycles`.
     pub cycles: u64,
+    /// Exchange cycles hidden behind halo-independent tile compute by
+    /// the operator-level overlap schedule (DESIGN.md §3.9). Always 0
+    /// for overlap-off plans.
+    pub hidden_cycles: u64,
+    /// Exchange cycles left on the critical path, folded into
+    /// `SimResult::cycles` and the layer breakdown. Equals `cycles`
+    /// for overlap-off plans.
+    pub exposed_cycles: u64,
 }
 
 /// Simulation result: timing, utilization, energy events, output.

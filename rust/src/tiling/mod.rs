@@ -157,6 +157,21 @@ impl Tile {
         rows
     }
 
+    /// True iff every *occupied* source row (see `src_occ`) maps to a
+    /// vertex flagged `true` in `ok`, indexed by the tile's source
+    /// vertex ids. The sharded overlap scheduler (DESIGN.md §3.9) calls
+    /// this with a shard's core mask to classify tiles as
+    /// halo-independent: such a tile's gathers never read an imported
+    /// halo row, so it can execute while the boundary exchange is still
+    /// in flight. Unoccupied rows are ignored — a halo vertex that
+    /// merely falls inside a regular-mode block without contributing an
+    /// edge creates no dependence.
+    pub fn occupied_sources_within(&self, ok: &[bool]) -> bool {
+        self.src_vertices.iter().enumerate().all(|(r, &v)| {
+            self.src_occ[r / 64] >> (r % 64) & 1 == 0 || ok[v as usize]
+        })
+    }
+
     /// Bytes of tile metadata held in the Tile Hub: COO pairs (+types).
     pub fn hub_bytes(&self) -> u64 {
         self.edges.len() as u64 * 8 + self.etypes.as_ref().map_or(0, |t| t.len() as u64)
@@ -686,6 +701,25 @@ mod tests {
         assert_eq!(t.occupied_block_rows(1), 2);
         assert_eq!(t.occupied_block_rows(0), 20, "0 disables skipping");
         assert_eq!(t.occupied_block_rows(64), 20);
+    }
+
+    #[test]
+    fn occupied_sources_within_ignores_untouched_rows() {
+        // 20 src rows (vertices 0..20), edges touch rows 0 and 17 only
+        let t = Tile::new(0, 0, (0..20).collect(), vec![(0, 0), (17, 1)], None);
+        let mut ok = vec![true; 20];
+        assert!(t.occupied_sources_within(&ok));
+        ok[5] = false; // untouched row: no dependence
+        assert!(t.occupied_sources_within(&ok));
+        ok[17] = false; // touched row outside the mask: dependent
+        assert!(!t.occupied_sources_within(&ok));
+        // sparse-style tile: every row occupied, so every source counts
+        let s = Tile::new(0, 1, vec![3, 9], vec![(0, 0), (1, 0)], None);
+        assert!(s.fully_occupied());
+        let mut ok = vec![true; 10];
+        assert!(s.occupied_sources_within(&ok));
+        ok[9] = false;
+        assert!(!s.occupied_sources_within(&ok));
     }
 
     #[test]

@@ -32,6 +32,7 @@ fn run_cfg(model: &str, dataset: &str) -> RunConfig {
         serving: Default::default(),
         kernels: Default::default(),
         shards: 1,
+        overlap: false,
     }
 }
 
@@ -199,6 +200,7 @@ mod properties {
                     serving: Default::default(),
                     kernels: Default::default(),
                     shards: 1,
+                    overlap: false,
                 };
                 let session =
                     Session::from_graph(ModelKind::Gcn, g.clone(), &cfg).unwrap();
@@ -252,6 +254,7 @@ mod properties {
                         serving: Default::default(),
                         kernels: Default::default(),
                         shards: 1,
+                        overlap: false,
                     };
                     let s = Session::from_graph(m, g.clone(), &cfg).unwrap();
                     let x = s.make_input(21);

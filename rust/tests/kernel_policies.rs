@@ -51,6 +51,7 @@ fn run_cfg(model: &str, layers: u32, mode: TilingMode, kernels: KernelPolicy) ->
         serving: Default::default(),
         kernels,
         shards: 1,
+        overlap: false,
     }
 }
 

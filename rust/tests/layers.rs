@@ -39,6 +39,7 @@ fn run_cfg(model: &str, layers: u32, hidden: Vec<u32>) -> RunConfig {
         serving: Default::default(),
         kernels: Default::default(),
         shards: 1,
+        overlap: false,
     }
 }
 

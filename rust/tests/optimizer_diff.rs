@@ -50,6 +50,7 @@ fn run_cfg(model: &str, layers: u32, passes: PassSet, seed: u64) -> RunConfig {
         serving: Default::default(),
         kernels: Default::default(),
         shards: 1,
+        overlap: false,
     }
 }
 

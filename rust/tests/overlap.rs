@@ -1,0 +1,249 @@
+//! Operator-level overlap tests (DESIGN.md §3.9): hiding the halo
+//! exchange behind halo-independent tiles is a *timing-only* transform.
+//! Functional outputs must stay bit-exact with both the serial sharded
+//! schedule and the unsharded plan on both execution paths, while the
+//! overlapped cycle count obeys the model's bounds: never slower than
+//! serial, never faster than dropping the exchange outright, and every
+//! post-boundary layer still pays at least the exchange latency.
+
+use zipper::config::{ArchConfig, RunConfig};
+use zipper::graph::GraphBuilder;
+use zipper::models::ModelKind;
+use zipper::plan::ExecPlan;
+use zipper::sim::parallel::BatchScratch;
+use zipper::tiling::{Reorder, TilingConfig, TilingMode};
+
+const MODELS: [&str; 5] = ["gcn", "gat", "sage", "ggnn", "rgcn"];
+
+fn run_cfg(model: &str, layers: u32, shards: u32, overlap: bool) -> RunConfig {
+    RunConfig {
+        model: model.into(),
+        dataset: "CR".into(),
+        scale: 16,
+        feat_in: 16,
+        feat_out: 16,
+        layers,
+        hidden: Vec::new(),
+        tiling: TilingConfig {
+            dst_part: 64,
+            src_part: 64,
+            mode: TilingMode::Sparse,
+            reorder: Reorder::InDegree,
+            threads: 1,
+        },
+        e2v: true,
+        passes: Default::default(),
+        functional: true,
+        seed: 3,
+        serving: Default::default(),
+        kernels: Default::default(),
+        shards,
+        overlap,
+    }
+}
+
+/// The acceptance matrix: overlap {off, on} × all five models × depths
+/// {2, 3} × K ∈ {2, 3}, engine path plus the batched path at inner
+/// thread counts {1, 4} — every combination bit-exact with the
+/// unsharded plan.
+#[test]
+fn overlap_outputs_are_bit_exact_across_models_depths_k_and_threads() {
+    let arch = ArchConfig::default();
+    for model in MODELS {
+        for depth in [2u32, 3] {
+            let base = ExecPlan::compile(&run_cfg(model, depth, 1, false)).unwrap();
+            let x = base.make_input(23);
+            let want = base
+                .simulate(&arch, true, Some(&x), 0)
+                .unwrap()
+                .output
+                .unwrap();
+            for k in [2u32, 3] {
+                for overlap in [false, true] {
+                    let tag = format!("{model} depth={depth} k={k} overlap={overlap}");
+                    let plan = ExecPlan::compile(&run_cfg(model, depth, k, overlap)).unwrap();
+                    let res = plan.simulate(&arch, true, Some(&x), 0).unwrap();
+                    assert_eq!(res.output.as_ref(), Some(&want), "{tag}: engine path diverged");
+                    for threads in [1usize, 4] {
+                        let mut scratch = BatchScratch::new();
+                        let outs =
+                            plan.execute_batch_with(&[&x, &x], threads, &mut scratch).unwrap();
+                        assert_eq!(outs[0], want, "{tag} threads={threads}: batched diverged");
+                        assert_eq!(outs[1], want, "{tag} threads={threads}: lanes diverged");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The timing model's provable bounds, on a depth-3 K=2 run with a real
+/// cut: serial and overlapped plans agree on every event count and on
+/// the exchange cost itself; the overlapped total is bounded below by
+/// serial-minus-exchange (perfect hiding) and above by serial (no
+/// hiding); hidden + exposed partitions the exchange; each
+/// post-boundary layer still pays at least the boundary latency; and
+/// the per-layer breakdown still sums to the total.
+#[test]
+fn overlap_timing_obeys_model_bounds() {
+    let arch = ArchConfig::default();
+    let serial = ExecPlan::compile(&run_cfg("gcn", 3, 2, false))
+        .unwrap()
+        .simulate(&arch, false, None, 0)
+        .unwrap();
+    let ovl = ExecPlan::compile(&run_cfg("gcn", 3, 2, true))
+        .unwrap()
+        .simulate(&arch, false, None, 0)
+        .unwrap();
+
+    // same plan, same cut, same exchange model — only billing differs
+    assert_eq!(serial.instructions, ovl.instructions);
+    assert_eq!(serial.halo.exchanges, 2);
+    assert_eq!(ovl.halo.exchanges, 2);
+    assert_eq!(serial.halo.vertices, ovl.halo.vertices);
+    assert_eq!(serial.halo.bytes, ovl.halo.bytes);
+    assert_eq!(serial.halo.cycles, ovl.halo.cycles);
+    assert!(ovl.halo.cycles > 0, "CR cut must produce a real exchange");
+
+    // serial billing: everything on the critical path, nothing hidden
+    assert_eq!(serial.halo.hidden_cycles, 0);
+    assert_eq!(serial.halo.exposed_cycles, serial.halo.cycles);
+
+    // overlap billing: hidden + exposed partitions the exchange cost
+    assert_eq!(ovl.halo.hidden_cycles + ovl.halo.exposed_cycles, ovl.halo.cycles);
+
+    // never slower than serial, never faster than a free exchange
+    assert!(
+        ovl.cycles <= serial.cycles,
+        "overlap ({}) must not exceed serial ({})",
+        ovl.cycles,
+        serial.cycles
+    );
+    assert!(
+        ovl.cycles >= serial.cycles - serial.halo.cycles,
+        "overlap ({}) cannot hide more than the whole exchange ({} - {})",
+        ovl.cycles,
+        serial.cycles,
+        serial.halo.cycles
+    );
+    // equivalently: the cycles saved are exactly the hidden cycles
+    assert_eq!(serial.cycles - ovl.cycles, ovl.halo.hidden_cycles);
+
+    // each post-boundary layer is billed max(E, independent) + dependent
+    // >= E: the exchange latency can never disappear from a layer that
+    // consumes halo activations
+    let per_boundary = ovl.halo.cycles / ovl.halo.exchanges;
+    for (l, layer) in ovl.layers.iter().enumerate().skip(1) {
+        assert!(
+            layer.cycles >= per_boundary,
+            "layer {l} cycles {} below the boundary latency {per_boundary}",
+            layer.cycles
+        );
+    }
+
+    // the invariant every other timing test leans on survives overlap
+    assert_eq!(ovl.cycles, ovl.layers.iter().map(|l| l.cycles).sum::<u64>());
+    assert_eq!(
+        ovl.dram_read_bytes,
+        ovl.layers.iter().map(|l| l.dram_read_bytes).sum::<u64>()
+    );
+}
+
+/// A star graph (every edge points at one hub) cut in two: the shard
+/// that owns the hub imports every remote leaf, the other shard imports
+/// nothing — its per-boundary copy list is empty and the exchange walk
+/// skips it. Outputs stay bit-exact on both paths, overlap on and off.
+#[test]
+fn one_directional_halo_skips_the_empty_direction() {
+    let arch = ArchConfig::default();
+    let n = 64u32;
+    let mut b = GraphBuilder::new(n);
+    for v in 1..n {
+        b.add_edge(v, 0).unwrap();
+    }
+    let graph = b.build();
+
+    let base = ExecPlan::from_graph(ModelKind::Gcn, graph.clone(), &run_cfg("gcn", 2, 1, false))
+        .unwrap();
+    let x = base.make_input(29);
+    let want = base
+        .simulate(&arch, true, Some(&x), 0)
+        .unwrap()
+        .output
+        .unwrap();
+
+    for overlap in [false, true] {
+        let plan =
+            ExecPlan::from_graph(ModelKind::Gcn, graph.clone(), &run_cfg("gcn", 2, 2, overlap))
+                .unwrap();
+        let sh = plan.sharding.as_ref().unwrap();
+
+        // exactly one direction carries copies
+        let nonempty: Vec<usize> =
+            (0..2).filter(|&s| !sh.halo_in[s].is_empty()).collect();
+        assert_eq!(nonempty.len(), 1, "star cut must have a one-directional halo");
+        let hub_shard = nonempty[0];
+        assert_eq!(
+            sh.halo_copies,
+            sh.halo_in[hub_shard].len() as u64,
+            "all copies flow toward the hub's shard"
+        );
+        // the hub's gather reads imported leaves → at least one
+        // dependent tile there; the leaf-only shard reads no halo at
+        // all → fully independent
+        assert!(sh.overlap.dependent_tiles[hub_shard] >= 1);
+        assert_eq!(sh.overlap.dependent_tiles[1 - hub_shard], 0);
+        assert_eq!(
+            sh.overlap.independent_tiles[1 - hub_shard] as usize,
+            sh.overlap.independent[1 - hub_shard].len()
+        );
+
+        let res = plan.simulate(&arch, true, Some(&x), 0).unwrap();
+        assert_eq!(res.output.as_ref(), Some(&want), "overlap={overlap}: engine diverged");
+        assert_eq!(res.halo.exchanges, 1);
+        assert_eq!(res.halo.vertices, sh.halo_copies, "only the hub direction is billed");
+
+        let mut scratch = BatchScratch::new();
+        let outs = plan.execute_batch_with(&[&x], 2, &mut scratch).unwrap();
+        assert_eq!(outs[0], want, "overlap={overlap}: batched diverged");
+    }
+}
+
+/// A self-loop-only graph partitions with an empty cut (every edge's
+/// endpoints share a shard by construction): the boundary has zero
+/// copies, so the staged exchange is skipped entirely — no exchanges
+/// billed, no halo cycles, overlap a no-op — while the functional
+/// result still matches the unsharded plan.
+#[test]
+fn empty_cut_skips_the_boundary_exchange_entirely() {
+    let arch = ArchConfig::default();
+    let mut b = GraphBuilder::new(32);
+    for v in 0..32 {
+        b.add_edge(v, v).unwrap();
+    }
+    let graph = b.build();
+    let base = ExecPlan::from_graph(ModelKind::Gcn, graph.clone(), &run_cfg("gcn", 2, 1, false))
+        .unwrap();
+    let x = base.make_input(31);
+    let want = base
+        .simulate(&arch, true, Some(&x), 0)
+        .unwrap()
+        .output
+        .unwrap();
+    for overlap in [false, true] {
+        let plan =
+            ExecPlan::from_graph(ModelKind::Gcn, graph.clone(), &run_cfg("gcn", 2, 2, overlap))
+                .unwrap();
+        let sh = plan.sharding.as_ref().unwrap();
+        assert_eq!(sh.halo_copies, 0, "edgeless graph has no cut");
+        let res = plan.simulate(&arch, true, Some(&x), 0).unwrap();
+        assert_eq!(res.halo.exchanges, 0, "empty copy list must skip the exchange");
+        assert_eq!(res.halo.cycles, 0);
+        assert_eq!(res.halo.hidden_cycles, 0);
+        assert_eq!(res.halo.exposed_cycles, 0);
+        assert_eq!(res.output.as_ref(), Some(&want), "overlap={overlap}: engine diverged");
+        let mut scratch = BatchScratch::new();
+        let outs = plan.execute_batch_with(&[&x], 1, &mut scratch).unwrap();
+        assert_eq!(outs[0], want, "overlap={overlap}: batched diverged");
+    }
+}

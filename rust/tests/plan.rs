@@ -32,6 +32,7 @@ fn run_cfg(model: &str, seed: u64) -> RunConfig {
         serving: Default::default(),
         kernels: Default::default(),
         shards: 1,
+        overlap: false,
     }
 }
 

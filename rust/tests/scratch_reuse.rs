@@ -33,6 +33,7 @@ fn run_cfg(model: &str) -> RunConfig {
         serving: Default::default(),
         kernels: Default::default(),
         shards: 1,
+        overlap: false,
     }
 }
 

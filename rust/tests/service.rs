@@ -37,6 +37,7 @@ fn small_run(model: &str, functional: bool) -> RunConfig {
         serving: Default::default(),
         kernels: Default::default(),
         shards: 1,
+        overlap: false,
     }
 }
 

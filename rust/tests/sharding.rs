@@ -35,6 +35,7 @@ fn run_cfg(model: &str, layers: u32, shards: u32) -> RunConfig {
         serving: Default::default(),
         kernels: Default::default(),
         shards,
+        overlap: false,
     }
 }
 
